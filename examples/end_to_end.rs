@@ -1,0 +1,117 @@
+//! End-to-end driver (DESIGN.md §7): proves all three layers compose on a
+//! realistic workload.
+//!
+//!   1. generate a MiCo-class graph, load it through `PIMLoadGraph`;
+//!   2. run `PIMPatternCount` (4-CC) on the HBM-PIM simulator with the
+//!      full optimization ladder (the Fig. 9 experiment);
+//!   3. cross-check the embedding count against (a) the multithreaded CPU
+//!      executor and (b) the AOT Pallas artifact executed via PJRT from
+//!      Rust (triangle closure over the level-2 frontier) — all three
+//!      mechanisms must agree exactly;
+//!   4. report throughput for the batched kernel path.
+//!
+//! Requires `make artifacts` (skips step 3 politely if missing).
+//! Run: `cargo run --release --example end_to_end`
+
+use pimminer::coordinator::PimMiner;
+use pimminer::exec::cpu::{self, CpuFlavor};
+use pimminer::graph::{gen, sort_by_degree_desc};
+use pimminer::pattern::plan::application;
+use pimminer::pim::{simulate_app, PimConfig, SimOptions};
+use pimminer::report::{self, Table};
+use pimminer::runtime::{artifacts_available, artifacts_dir, Runtime, SetOpRequest, SetOpsKernel};
+
+const KERNEL_B: usize = 64;
+const KERNEL_L: usize = 256;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. workload: MiCo-scaled graph, degree capped to the kernel tile
+    let raw = gen::power_law(15_000, 220_000, KERNEL_L - 2, 2023);
+    let capped = gen::cap_degree(&raw, KERNEL_L); // respect the AOT tile bound
+    let graph = sort_by_degree_desc(&capped).graph;
+    assert!(graph.max_degree() <= KERNEL_L);
+    let roots: Vec<u32> = (0..graph.num_vertices() as u32).collect();
+    println!(
+        "end-to-end graph: |V|={} |E|={} max-degree={}",
+        graph.num_vertices(),
+        graph.num_edges(),
+        graph.max_degree()
+    );
+
+    let mut miner = PimMiner::new(PimConfig::default(), SimOptions::all());
+    miner.load_graph(graph.clone())?;
+    miner.verify_device_contents()?;
+
+    // ---- 2. Fig. 9 ladder on 4-CC
+    let app = application("4-CC").unwrap();
+    let cfg = PimConfig::default();
+    let mut ladder = Table::new(
+        "optimization ladder (4-CC, Fig. 9 reproduction)",
+        &["Config", "Total", "AvgCore", "Near%", "Speedup"],
+    );
+    let mut base = None;
+    let mut pim_count = 0;
+    for (name, opts) in SimOptions::ladder() {
+        let r = simulate_app(&graph, &app, &roots, &opts, &cfg);
+        let b = *base.get_or_insert(r.seconds);
+        pim_count = r.count;
+        ladder.row(vec![
+            name.to_string(),
+            report::s(r.seconds),
+            report::s(r.avg_unit_seconds),
+            report::pct(r.access.near_frac()),
+            report::x(b / r.seconds),
+        ]);
+    }
+    ladder.print();
+    assert!(pim_count > 0, "workload must contain 4-cliques");
+
+    // ---- 3a. CPU cross-check
+    let t = std::time::Instant::now();
+    let cpu_r = cpu::run_application(&graph, &app, &roots, CpuFlavor::AutoMineOpt);
+    println!(
+        "CPU check: count={} in {} — {}",
+        cpu_r.count,
+        report::s(t.elapsed().as_secs_f64()),
+        if cpu_r.count == pim_count { "MATCHES PIM" } else { "MISMATCH!" }
+    );
+    assert_eq!(cpu_r.count, pim_count, "CPU and PIM disagree");
+
+    // ---- 3b. AOT/PJRT cross-check: 3-CC via the Pallas artifact.
+    if !artifacts_available() {
+        println!("artifacts missing — run `make artifacts` for the PJRT cross-check");
+        return Ok(());
+    }
+    let tri_app = application("3-CC").unwrap();
+    let tri_pim = simulate_app(&graph, &tri_app, &roots, &SimOptions::all(), &cfg).count;
+
+    let rt = Runtime::cpu()?;
+    let kernel = SetOpsKernel::load(&rt, &artifacts_dir().join("setops.hlo.txt"), KERNEL_B, KERNEL_L)?;
+    let mut requests = Vec::new();
+    for u in 0..graph.num_vertices() as u32 {
+        for &v in graph.neighbors(u) {
+            if v < u {
+                requests.push(SetOpRequest {
+                    a: graph.neighbors(u).to_vec(),
+                    b: graph.neighbors(v).to_vec(),
+                    th: v,
+                });
+            }
+        }
+    }
+    let t = std::time::Instant::now();
+    let counts = kernel.run(&requests)?;
+    let elapsed = t.elapsed().as_secs_f64();
+    let aot_total: u64 = counts.iter().map(|&(i, _)| i as u64).sum();
+    println!(
+        "AOT/PJRT check: {} edge tiles in {} ({:.0} pairs/s) → triangles={} — {}",
+        requests.len(),
+        report::s(elapsed),
+        requests.len() as f64 / elapsed,
+        aot_total,
+        if aot_total == tri_pim { "MATCHES PIM" } else { "MISMATCH!" }
+    );
+    assert_eq!(aot_total, tri_pim, "AOT artifact and PIM simulator disagree");
+    println!("all three layers agree — end-to-end OK");
+    Ok(())
+}

@@ -1,0 +1,73 @@
+"""AOT lowering: JAX → HLO text artifacts for the Rust runtime.
+
+Interchange is HLO **text**, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which this image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md and
+gen_hlo.py there).
+
+Artifacts (shapes are static; the Rust tiler pads to them):
+  * ``setops.hlo.txt`` — the Pallas-kernel path (Layer 1 inside Layer 2).
+  * ``model.hlo.txt``  — the pure-jnp reference path (Layer 2 only).
+
+Tile shape defaults to B=64, L=256; override with PIMMINER_KERNEL_B /
+PIMMINER_KERNEL_L at build time (the Rust side reads the same envs).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered):
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def tile_shape():
+    b = int(os.environ.get("PIMMINER_KERNEL_B", "64"))
+    length = int(os.environ.get("PIMMINER_KERNEL_L", "256"))
+    return b, length
+
+
+def lower_artifacts():
+    """Lower both artifacts; returns {name: hlo_text}."""
+    b, length = tile_shape()
+    lists = jax.ShapeDtypeStruct((b, length), jnp.int32)
+    ths = jax.ShapeDtypeStruct((b,), jnp.int32)
+    arts = {}
+    arts["setops.hlo.txt"] = to_hlo_text(
+        jax.jit(model.setops_model).lower(lists, lists, ths)
+    )
+    arts["model.hlo.txt"] = to_hlo_text(
+        jax.jit(model.setops_reference_model).lower(lists, lists, ths)
+    )
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    b, length = tile_shape()
+    for name, text in lower_artifacts().items():
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars, tile B={b} L={length})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Layer-1 Pallas kernel: batched filtered set intersection/subtraction.
+
+This is the compute hot-spot of pattern enumeration (§2.1.2's I/S
+operations) with the paper's in-bank filter (§4.2) fused in: elements
+failing ``x < th`` are masked before they contribute to any count, the
+software analogue of dropping them at the sense amplifiers.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's PIM unit
+streams a neighbor list from its near bank; on TPU the analogue is a VMEM
+tile processed by the VPU. Instead of a sequential sorted-merge (great on
+an in-order PIM core, terrible on a vector unit), the kernel does a
+blocked broadcast-compare: each grid step holds one ``(BB, L)`` tile pair
+in VMEM and evaluates the ``(BB, LA_BLOCK, L)`` equality cube with vector
+ops. ``BlockSpec`` expresses the HBM→VMEM schedule that the paper
+expresses with bank-group placement.
+
+Always lowered with ``interpret=True``: the CPU PJRT client cannot execute
+Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import PAD
+
+# Default VMEM batch block: 8 rows × L=256 → the compare cube is
+# 8·64·256·4B = 512 KiB, comfortably inside a TPU core's ~16 MiB VMEM
+# alongside the operand tiles. (interpret=True on CPU ignores VMEM, but
+# the BlockSpec is written for the real schedule.)
+DEFAULT_BLOCK_B = 8
+# Inner blocking of the `a` axis keeps the compare cube bounded for
+# larger L without spilling: the cube is (BB, A_BLOCK, L).
+DEFAULT_BLOCK_A = 64
+
+
+def _setops_kernel(a_ref, b_ref, th_ref, inter_ref, sub_ref, *, block_a):
+    """One grid step: full rows for a block of the batch dimension."""
+    a = a_ref[...]          # (BB, L) int32
+    b = b_ref[...]          # (BB, L) int32
+    th = th_ref[...]        # (BB,)   int32
+    bb, length = a.shape
+
+    inter_acc = jnp.zeros((bb,), jnp.int32)
+    sub_acc = jnp.zeros((bb,), jnp.int32)
+    # Statically-unrolled blocking over the `a` axis: LA_BLOCK columns of
+    # `a` are compared against all of `b` per step.
+    for start in range(0, length, block_a):
+        a_blk = a[:, start : start + block_a]            # (BB, A)
+        valid = (a_blk != PAD) & (a_blk < th[:, None])   # (BB, A)
+        member = (a_blk[:, :, None] == b[:, None, :]).any(axis=-1)  # (BB, A)
+        inter_acc = inter_acc + jnp.sum(valid & member, axis=-1, dtype=jnp.int32)
+        sub_acc = sub_acc + jnp.sum(valid & ~member, axis=-1, dtype=jnp.int32)
+    inter_ref[...] = inter_acc
+    sub_ref[...] = sub_acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_a"))
+def filtered_setops(a, b, th, block_b=DEFAULT_BLOCK_B, block_a=DEFAULT_BLOCK_A):
+    """Batched filtered intersection/subtraction counts via Pallas.
+
+    Args / returns: identical to ``ref.filtered_setops_ref``.
+    The batch dimension must be divisible by ``block_b`` (aot.py and the
+    Rust tiler always send full tiles).
+    """
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    th = jnp.asarray(th, jnp.int32)
+    batch, length = a.shape
+    assert b.shape == (batch, length), (a.shape, b.shape)
+    assert th.shape == (batch,), th.shape
+    bb = min(block_b, batch)
+    assert batch % bb == 0, f"batch {batch} not divisible by block {bb}"
+    ba = min(block_a, length)
+
+    grid = (batch // bb,)
+    kernel = functools.partial(_setops_kernel, block_a=ba)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, length), lambda i: (i, 0)),
+            pl.BlockSpec((bb, length), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+            jax.ShapeDtypeStruct((batch,), jnp.int32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, b, th)
+
+
+def vmem_bytes_estimate(block_b, length, block_a):
+    """Static VMEM footprint estimate for one grid step (DESIGN.md §Perf):
+    operand tiles + compare cube + accumulators, in bytes."""
+    operands = 2 * block_b * length * 4 + block_b * 4
+    cube = block_b * block_a * length * 4
+    accs = 2 * block_b * 4
+    return operands + cube + accs

@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for the Layer-1 kernels.
+
+Semantics (shared with the Pallas kernel and the Rust ``exec::setops``
+implementation):
+
+* ``a``, ``b`` are ``(B, L)`` int32 tiles; each row is a strictly-ascending
+  sorted list (a vertex neighbor list) padded at the tail with ``PAD``.
+* ``th`` is ``(B,)`` int32: the exclusive symmetry-breaking upper bound the
+  paper's in-bank filter applies (``cmp='<'``).
+* outputs: per-row filtered intersection and subtraction counts,
+
+      inter[i] = |{x in a[i] ∩ b[i] : x < th[i]}|
+      sub[i]   = |{x in a[i] \\ b[i] : x < th[i]}|
+
+The O(L²) broadcast-compare here is the correctness reference; pytest
+checks the Pallas kernel (and, transitively, the Rust runtime path)
+against it.
+"""
+
+import jax.numpy as jnp
+
+PAD = jnp.iinfo(jnp.int32).max
+
+
+def filtered_setops_ref(a, b, th):
+    """Reference filtered intersection/subtraction counts.
+
+    Args:
+      a: (B, L) int32, sorted ascending rows, PAD-padded.
+      b: (B, L) int32, sorted ascending rows, PAD-padded.
+      th: (B,) int32 exclusive upper bound per row.
+
+    Returns:
+      (inter, sub): two (B,) int32 arrays.
+    """
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    th = jnp.asarray(th, jnp.int32)
+    valid = (a != PAD) & (a < th[:, None])
+    member = (a[:, :, None] == b[:, None, :]).any(axis=-1)
+    inter = jnp.sum(valid & member, axis=-1).astype(jnp.int32)
+    sub = jnp.sum(valid & ~member, axis=-1).astype(jnp.int32)
+    return inter, sub
+
+
+def filtered_setops_py(a_row, b_row, th):
+    """Plain-Python scalar reference for a single pair of lists (a second,
+    jnp-free opinion used by the tests)."""
+    pad = int(PAD)
+    bs = set(int(x) for x in b_row if int(x) != pad)
+    inter = 0
+    sub = 0
+    for x in a_row:
+        x = int(x)
+        if x == pad or x >= th:
+            continue
+        if x in bs:
+            inter += 1
+        else:
+            sub += 1
+    return inter, sub

@@ -1,0 +1,38 @@
+"""Layer-2 JAX compute graph.
+
+The PIMMiner "model" is the batched set-operation engine the PIM units
+execute: given a tile of candidate neighbor-list pairs and per-pair
+symmetry-breaking thresholds, produce filtered intersection/subtraction
+counts. ``setops_model`` routes through the Layer-1 Pallas kernel;
+``setops_reference_model`` is the pure-jnp equivalent, exported as its own
+artifact so the Rust integration tests can cross-check the two lowered
+paths against each other *and* against the native Rust implementation.
+
+``triangle_tile_count`` composes the kernel the way `PIMPatternCount`
+uses it for 3-CC: for edge (u, v) with v < u, triangles though that edge
+= |{w ∈ N(u) ∩ N(v) : w < v}| (the paper's Fig. 2 restriction chain).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import filtered_intersect
+from .kernels import ref
+
+
+def setops_model(a, b, th):
+    """(B,L),(B,L),(B,) -> ((B,), (B,)) via the Pallas kernel."""
+    return filtered_intersect.filtered_setops(a, b, th)
+
+
+def setops_reference_model(a, b, th):
+    """Same contract, pure jnp (no Pallas) — the L2 reference artifact."""
+    return ref.filtered_setops_ref(a, b, th)
+
+
+def triangle_tile_count(a, b, th):
+    """Triangles across a tile of edges: sum of filtered intersections.
+
+    Returns (total, per_edge) so callers can either reduce or inspect.
+    """
+    inter, _ = setops_model(a, b, th)
+    return jnp.sum(inter, dtype=jnp.int32), inter

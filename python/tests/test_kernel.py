@@ -1,0 +1,143 @@
+"""Layer-1 correctness: the Pallas kernel vs the pure-jnp oracle vs a
+plain-Python scalar reference. Hypothesis sweeps shapes, paddings, and
+thresholds — this is the core correctness signal for the compute layer."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.filtered_intersect import (
+    filtered_setops,
+    vmem_bytes_estimate,
+    DEFAULT_BLOCK_B,
+)
+from compile.kernels.ref import PAD, filtered_setops_ref, filtered_setops_py
+
+PADI = int(PAD)
+
+
+def make_tile(rng, batch, length, max_id, fill=0.7):
+    """Random (batch, length) tile of strictly-ascending PAD-padded rows."""
+    out = np.full((batch, length), PADI, dtype=np.int32)
+    for i in range(batch):
+        n = int(rng.integers(0, int(length * fill) + 1))
+        if n:
+            # unique ascending sample without materializing range(max_id)
+            vals = np.unique(rng.integers(0, max_id, size=2 * n))[:n]
+            out[i, : len(vals)] = vals.astype(np.int32)
+    return out
+
+
+def assert_kernel_matches(a, b, th, block_b=DEFAULT_BLOCK_B, block_a=64):
+    got_i, got_s = filtered_setops(a, b, th, block_b=block_b, block_a=block_a)
+    ref_i, ref_s = filtered_setops_ref(a, b, th)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(ref_i))
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(ref_s))
+    # spot-check rows against the jnp-free reference
+    for i in range(min(len(th), 4)):
+        pi, ps = filtered_setops_py(a[i], b[i], int(th[i]))
+        assert int(got_i[i]) == pi
+        assert int(got_s[i]) == ps
+
+
+def test_simple_known_case():
+    a = np.full((8, 16), PADI, np.int32)
+    b = np.full((8, 16), PADI, np.int32)
+    a[0, :5] = [1, 3, 5, 7, 9]
+    b[0, :4] = [3, 4, 5, 10]
+    th = np.full((8,), 8, np.int32)
+    inter, sub = filtered_setops(a, b, th)
+    assert int(inter[0]) == 2  # {3, 5}
+    assert int(sub[0]) == 2    # {1, 7}
+    # empty rows
+    assert int(inter[1]) == 0 and int(sub[1]) == 0
+
+
+def test_threshold_edges():
+    a = np.full((8, 8), PADI, np.int32)
+    b = np.full((8, 8), PADI, np.int32)
+    a[:, :3] = [10, 20, 30]
+    b[:, :2] = [20, 40]
+    # th=0 filters everything; th=MAX keeps everything
+    th = np.array([0, 10, 11, 20, 21, 31, PADI, PADI - 1], np.int32)
+    inter, sub = filtered_setops(a, b, th)
+    exp = [filtered_setops_py(a[i], b[i], int(th[i])) for i in range(8)]
+    assert [int(x) for x in inter] == [e[0] for e in exp]
+    assert [int(x) for x in sub] == [e[1] for e in exp]
+
+
+def test_identical_lists_all_intersect():
+    rng = np.random.default_rng(0)
+    a = make_tile(rng, 8, 32, 1000)
+    th = np.full((8,), PADI, np.int32)
+    inter, sub = filtered_setops(a, a, th)
+    lens = (a != PADI).sum(axis=1)
+    np.testing.assert_array_equal(np.asarray(inter), lens.astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(sub), np.zeros(8, np.int32))
+
+
+def test_disjoint_lists_all_subtract():
+    a = np.full((8, 8), PADI, np.int32)
+    b = np.full((8, 8), PADI, np.int32)
+    a[:, :4] = [0, 2, 4, 6]
+    b[:, :4] = [1, 3, 5, 7]
+    th = np.full((8,), 100, np.int32)
+    inter, sub = filtered_setops(a, b, th)
+    assert all(int(x) == 0 for x in inter)
+    assert all(int(x) == 4 for x in sub)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    batch_blocks=st.integers(1, 4),
+    length=st.sampled_from([8, 64, 128, 256]),
+    max_id=st.sampled_from([50, 1000, 2**31 - 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_property(batch_blocks, length, max_id, seed):
+    rng = np.random.default_rng(seed)
+    batch = DEFAULT_BLOCK_B * batch_blocks
+    a = make_tile(rng, batch, length, max_id)
+    b = make_tile(rng, batch, length, max_id)
+    th = rng.integers(0, max_id + 1, size=batch).astype(np.int32)
+    assert_kernel_matches(a, b, th)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    block_a=st.sampled_from([8, 32, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_a_invariance(block_a, seed):
+    """Counts must be independent of the inner a-axis blocking."""
+    rng = np.random.default_rng(seed)
+    a = make_tile(rng, 8, 256, 5000)
+    b = make_tile(rng, 8, 256, 5000)
+    th = rng.integers(0, 5000, size=8).astype(np.int32)
+    assert_kernel_matches(a, b, th, block_a=block_a)
+
+
+def test_block_b_invariance():
+    rng = np.random.default_rng(7)
+    a = make_tile(rng, 16, 64, 500)
+    b = make_tile(rng, 16, 64, 500)
+    th = rng.integers(0, 500, size=16).astype(np.int32)
+    r1 = filtered_setops(a, b, th, block_b=8)
+    r2 = filtered_setops(a, b, th, block_b=16)
+    r4 = filtered_setops(a, b, th, block_b=4)
+    for x, y in [(r1, r2), (r1, r4)]:
+        np.testing.assert_array_equal(np.asarray(x[0]), np.asarray(y[0]))
+        np.testing.assert_array_equal(np.asarray(x[1]), np.asarray(y[1]))
+
+
+def test_indivisible_batch_rejected():
+    a = np.full((3, 8), PADI, np.int32)
+    th = np.zeros((3,), np.int32)
+    with pytest.raises(AssertionError):
+        filtered_setops(a, a, th, block_b=2)
+
+
+def test_vmem_estimate_within_budget():
+    # The default BlockSpec must fit a TPU core's VMEM with ample slack.
+    est = vmem_bytes_estimate(DEFAULT_BLOCK_B, 256, 64)
+    assert est < 4 * 2**20, f"VMEM estimate {est} too large"

@@ -1,0 +1,45 @@
+//! Fig. 4 reproduction: per-core load distribution on baseline PIM
+//! (4-CC). The paper shows MI/YT/PA/LJ with pronounced skew; the bench
+//! renders the sorted per-core busy-time profile as ASCII bars plus the
+//! Exe/Avg and CV summary statistics.
+
+use pimminer::bench::{workloads, Bench};
+use pimminer::exec::cpu;
+use pimminer::pattern::plan::application;
+use pimminer::pim::{simulate_app, PimConfig, SimOptions};
+use pimminer::report::{load_bars, Table};
+use pimminer::util::stats;
+
+fn main() {
+    let bench = Bench::new("fig4_load_distribution");
+    let app = application("4-CC").unwrap();
+    let cfg = PimConfig::default();
+    let mut summary = Table::new(
+        "Fig. 4 summary — load imbalance on baseline PIM (4-CC)",
+        &["Graph", "Exe/Avg", "CV", "max busy", "min busy"],
+    );
+    for inst in workloads::graphs(&["MI", "YT", "PA", "LJ"]) {
+        let g = &inst.graph;
+        let roots = cpu::sampled_roots(g.num_vertices(), inst.sample_ratio);
+        let r = bench.fixture(inst.spec.abbrev, || {
+            simulate_app(g, &app, &roots, &SimOptions::BASELINE, &cfg)
+        });
+        let busy: Vec<f64> = r.unit_busy.iter().map(|&b| b as f64).collect();
+        print!(
+            "{}",
+            load_bars(
+                &format!("Fig. 4 — {} per-core load (sorted)", inst.spec.abbrev),
+                &r.unit_busy,
+                16,
+            )
+        );
+        summary.row(vec![
+            inst.spec.abbrev.to_string(),
+            format!("{:.2}", r.exe_over_avg()),
+            format!("{:.2}", stats::cv(&busy)),
+            format!("{:.2e}", busy.iter().cloned().fold(0.0, f64::max)),
+            format!("{:.2e}", busy.iter().cloned().fold(f64::MAX, f64::min)),
+        ]);
+    }
+    summary.print();
+}

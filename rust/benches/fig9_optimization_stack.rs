@@ -1,0 +1,91 @@
+//! Fig. 9 reproduction: the cumulative optimization stack
+//! (base → +Filter → +Remap → +Duplication → +Stealing) per application ×
+//! graph, reporting total execution time (bar top), average per-core time
+//! (solid line), and the §6.1.1 summary: per-optimization average and
+//! maximum incremental speedups across all cells.
+//!
+//! Default: 3 apps × 4 graphs; `PIMMINER_FULL=1` runs all 6 × 7 at the
+//! published sizes with the paper's sampling.
+
+use pimminer::bench::{workloads, Bench};
+use pimminer::exec::cpu;
+use pimminer::pattern::plan::application;
+use pimminer::pim::{simulate_app, PimConfig, SimOptions};
+use pimminer::report::{self, Table};
+use pimminer::util::stats;
+
+fn main() {
+    let bench = Bench::new("fig9_optimization_stack");
+    let cfg = PimConfig::default();
+    let full = pimminer::datasets::full_scale();
+    let apps: Vec<&str> = if full {
+        vec!["3-CC", "4-CC", "5-CC", "3-MC", "4-DI", "4-CL"]
+    } else {
+        vec!["3-CC", "4-CC", "4-CL"]
+    };
+    let graphs = workloads::graphs(&["CI", "AS", "MI", "YT"]);
+
+    // incremental speedups per ladder step, across all (app, graph) cells
+    let mut increments: [Vec<f64>; 4] = Default::default();
+    let step_names = ["Filter", "Remap", "Duplication", "Stealing"];
+
+    for inst in &graphs {
+        let g = &inst.graph;
+        let mut table = Table::new(
+            &format!("Fig. 9 — {} (|V|={}, |E|={})", inst.spec.abbrev, g.num_vertices(), g.num_edges()),
+            &["App", "Base", "+Filter", "+Remap", "+Dup", "+Steal", "Total spd", "Avg/Total"],
+        );
+        for app_name in &apps {
+            let app = application(app_name).unwrap();
+            let sample = workloads::sample_for(app_name, inst.sample_ratio);
+            let roots = cpu::sampled_roots(g.num_vertices(), sample);
+            let results: Vec<_> = bench.fixture(&format!("{}-{}", app_name, inst.spec.abbrev), || {
+                SimOptions::ladder()
+                    .into_iter()
+                    .map(|(_, opts)| simulate_app(g, &app, &roots, &opts, &cfg))
+                    .collect::<Vec<_>>()
+            });
+            for (i, name) in step_names.iter().enumerate() {
+                let s = results[i].seconds / results[i + 1].seconds;
+                increments[i].push(s);
+                let _ = name;
+            }
+            let last = results.last().unwrap();
+            table.row(vec![
+                app_name.to_string(),
+                report::s(results[0].seconds),
+                report::s(results[1].seconds),
+                report::s(results[2].seconds),
+                report::s(results[3].seconds),
+                report::s(results[4].seconds),
+                report::x(results[0].seconds / last.seconds),
+                format!("{:.2}", last.avg_unit_seconds / last.seconds),
+            ]);
+        }
+        table.print();
+    }
+
+    // §6.1.1 summary numbers (paper: filter 2.01x avg/17.57x max, remap
+    // 1.38x/2.74x, duplication 1.84x/3.05x, stealing 3.01x/26.87x;
+    // overall 12.74x avg / 113.76x max).
+    let mut summary = Table::new(
+        "§6.1.1 per-optimization incremental speedup",
+        &["Step", "avg", "max", "paper avg", "paper max"],
+    );
+    let paper = [(2.01, 17.57), (1.38, 2.74), (1.84, 3.05), (3.01, 26.87)];
+    let mut overall_avg = 1.0;
+    for (i, name) in step_names.iter().enumerate() {
+        let avg = stats::mean(&increments[i]);
+        let max = increments[i].iter().cloned().fold(0.0, f64::max);
+        overall_avg *= avg;
+        summary.row(vec![
+            name.to_string(),
+            report::x(avg),
+            report::x(max),
+            report::x(paper[i].0),
+            report::x(paper[i].1),
+        ]);
+    }
+    summary.print();
+    println!("overall stacked average ≈ {} (paper: 12.74x avg)", report::x(overall_avg));
+}

@@ -1,0 +1,102 @@
+//! Performance microbenchmarks — the §Perf instrumentation of
+//! EXPERIMENTS.md: enumerator throughput, set-op kernels, simulator
+//! profiling rate, scheduler event rate, and (when artifacts exist) the
+//! PJRT batched-kernel path.
+
+use pimminer::bench::Bench;
+use pimminer::exec::cpu::{self, CpuFlavor};
+use pimminer::exec::setops::{count_intersect, intersect_into, subtract_into, NO_BOUND};
+use pimminer::exec::{Enumerator, NullSink};
+use pimminer::graph::{gen, sort_by_degree_desc};
+use pimminer::pattern::plan::{application, Plan};
+use pimminer::pattern::pattern::clique;
+use pimminer::pim::stealing::{schedule, Piece};
+use pimminer::pim::{simulate_app, PimConfig, SimOptions};
+use pimminer::runtime::{artifacts_available, artifacts_dir, Runtime, SetOpRequest, SetOpsKernel};
+use pimminer::util::rng::Rng;
+use std::collections::VecDeque;
+
+fn main() {
+    let bench = Bench::new("perf_micro");
+
+    // --- set-op kernels ---
+    let mut rng = Rng::new(1);
+    let mk = |rng: &mut Rng, n: usize| {
+        let mut v: Vec<u32> = (0..n).map(|_| rng.below(1 << 20) as u32).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    let a = mk(&mut rng, 4096);
+    let b = mk(&mut rng, 4096);
+    let mut out = Vec::with_capacity(4096);
+    let t = bench.measure("intersect_4k", 3, 50, || {
+        intersect_into(&a, &b, NO_BOUND, &mut out)
+    });
+    println!("  → {:.0}M elem/s", (a.len() + b.len()) as f64 / t / 1e6);
+    bench.measure("subtract_4k", 3, 50, || subtract_into(&a, &b, NO_BOUND, &mut out));
+    bench.measure("count_intersect_4k", 3, 50, || count_intersect(&a, &b, NO_BOUND));
+
+    // --- enumerator ---
+    let g = sort_by_degree_desc(&gen::power_law(20_000, 160_000, 800, 3)).graph;
+    let plan = Plan::build(&clique(4));
+    let mut e = Enumerator::new(&g, &plan);
+    let t = bench.measure("enumerate_4cc_20k_serial", 1, 5, || {
+        let mut total = 0u64;
+        for v in 0..g.num_vertices() as u32 {
+            total += e.count_root(v, &mut NullSink);
+        }
+        total
+    });
+    println!("  → {:.0} roots/s serial", g.num_vertices() as f64 / t);
+    let app = application("4-CC").unwrap();
+    let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    let t = bench.measure("enumerate_4cc_20k_parallel", 1, 5, || {
+        cpu::count_plan(&g, &plan, &roots, CpuFlavor::AutoMineOpt)
+    });
+    println!("  → {:.0} roots/s parallel", g.num_vertices() as f64 / t);
+
+    // --- simulator (profiling + scheduling, full ladder config) ---
+    let cfg = PimConfig::default();
+    let count_t = t;
+    let t = bench.measure("simulate_4cc_20k_fullstack", 1, 5, || {
+        simulate_app(&g, &app, &roots, &SimOptions::all(), &cfg)
+    });
+    println!(
+        "  → simulation overhead {:.2}x over the raw parallel count",
+        t / count_t
+    );
+
+    // --- stealing scheduler event rate ---
+    let mut queues: Vec<VecDeque<Piece>> = vec![VecDeque::new(); cfg.num_units()];
+    let mut srng = Rng::new(7);
+    for i in 0..50_000usize {
+        queues[i % cfg.num_units()].push_back(Piece {
+            cycles: srng.range(100, 10_000),
+            chunks: srng.range(1, 64),
+        });
+    }
+    let t = bench.measure("scheduler_50k_pieces", 1, 10, || {
+        schedule(&cfg, queues.clone(), true)
+    });
+    println!("  → {:.1}M pieces/s", 50_000.0 / t / 1e6);
+
+    // --- PJRT batched kernel path ---
+    if artifacts_available() {
+        let rt = Runtime::cpu().unwrap();
+        let kernel =
+            SetOpsKernel::load(&rt, &artifacts_dir().join("setops.hlo.txt"), 64, 256).unwrap();
+        let mut krng = Rng::new(5);
+        let reqs: Vec<SetOpRequest> = (0..512)
+            .map(|_| SetOpRequest {
+                a: mk(&mut krng, 200),
+                b: mk(&mut krng, 200),
+                th: krng.below(1 << 20) as u32,
+            })
+            .collect();
+        let t = bench.measure("pjrt_setops_512pairs", 1, 5, || kernel.run(&reqs).unwrap());
+        println!("  → {:.0} pairs/s through the AOT artifact", 512.0 / t);
+    } else {
+        println!("pjrt kernel bench skipped (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,58 @@
+//! Table 1 reproduction: 96-thread CPU vs 128-core baseline PIM, 4-CC.
+//!
+//! CPU times are measured on this host (AM(OPT) executor, all host
+//! threads); PIM times come from the simulator at Table 4 parameters with
+//! no PIMMiner optimizations (the paper's baseline characterization).
+//! Shapes, not absolute seconds, are the target (DESIGN.md §2): the small
+//! graphs favor PIM (thread-launch overhead dominates the CPU), while the
+//! skewed YT/LJ-class graphs erode the PIM advantage via load imbalance.
+
+use pimminer::baselines::published;
+use pimminer::bench::{workloads, Bench};
+use pimminer::exec::cpu::{self, CpuFlavor};
+use pimminer::pattern::plan::application;
+use pimminer::pim::{simulate_app, PimConfig, SimOptions};
+use pimminer::report::{self, Table};
+
+fn main() {
+    let bench = Bench::new("table1_cpu_vs_pim");
+    let app = application("4-CC").unwrap();
+    let cfg = PimConfig::default();
+    let mut table = Table::new(
+        "Table 1 — CPU vs baseline PIM (4-CC)",
+        &[
+            "Graph", "CPU(s)", "PIM(s)", "Speedup",
+            "paper CPU", "paper PIM", "paper Spd",
+        ],
+    );
+    for inst in workloads::graphs(&["CI", "PP", "AS", "MI", "YT", "PA", "LJ"]) {
+        let g = &inst.graph;
+        let roots = cpu::sampled_roots(g.num_vertices(), inst.sample_ratio);
+        let (cpu_s, pim_s, count_cpu, count_pim) = bench.fixture(inst.spec.abbrev, || {
+            let c = cpu::run_application(g, &app, &roots, CpuFlavor::AutoMineOpt);
+            let p = simulate_app(g, &app, &roots, &SimOptions::BASELINE, &cfg);
+            (c.seconds, p.seconds, c.count, p.count)
+        });
+        assert_eq!(count_cpu, count_pim, "{}", inst.spec.abbrev);
+        let idx = published::GRAPHS
+            .iter()
+            .position(|&a| a == inst.spec.abbrev)
+            .unwrap();
+        let (pc, pp) = published::TABLE1_CPU_VS_PIM[idx];
+        table.row(vec![
+            inst.spec.abbrev.to_string(),
+            report::s(cpu_s),
+            report::s(pim_s),
+            report::x(cpu_s / pim_s),
+            report::s(pc),
+            report::s(pp),
+            report::x(pc / pp),
+        ]);
+    }
+    table.print();
+    println!(
+        "note: our host CPU and the instruction-level detail of the PIM cores\n\
+         differ from the paper's testbed; compare the cross-graph *ordering* of\n\
+         the speedup column, not its magnitude (see EXPERIMENTS.md)."
+    );
+}

@@ -1,0 +1,52 @@
+//! Table 2 reproduction: PIM memory-access class distribution under the
+//! default (host-optimized) address mapping, 4-CC. The paper's headline
+//! observation — >95% of accesses are inter-channel remote — must emerge
+//! from the interleaved mapping for every graph.
+
+use pimminer::baselines::published;
+use pimminer::bench::{workloads, Bench};
+use pimminer::exec::cpu;
+use pimminer::pattern::plan::application;
+use pimminer::pim::{simulate_app, PimConfig, SimOptions};
+use pimminer::report::{pct, Table};
+
+fn main() {
+    let bench = Bench::new("table2_access_distribution");
+    let app = application("4-CC").unwrap();
+    let cfg = PimConfig::default();
+    let mut table = Table::new(
+        "Table 2 — access distribution, default mapping (4-CC)",
+        &[
+            "Graph", "Near", "Intra", "Inter",
+            "paper Near", "paper Intra", "paper Inter",
+        ],
+    );
+    for inst in workloads::graphs(&["CI", "PP", "AS", "MI", "YT", "PA", "LJ"]) {
+        let g = &inst.graph;
+        let roots = cpu::sampled_roots(g.num_vertices(), inst.sample_ratio);
+        let r = bench.fixture(inst.spec.abbrev, || {
+            simulate_app(g, &app, &roots, &SimOptions::BASELINE, &cfg)
+        });
+        assert!(
+            r.access.inter_frac() > 0.9,
+            "{}: inter fraction {} below the paper's >95% regime",
+            inst.spec.abbrev,
+            r.access.inter_frac()
+        );
+        let idx = published::GRAPHS
+            .iter()
+            .position(|&a| a == inst.spec.abbrev)
+            .unwrap();
+        let (pn, pi, pr) = published::TABLE2_ACCESS_DIST[idx];
+        table.row(vec![
+            inst.spec.abbrev.to_string(),
+            pct(r.access.near_frac()),
+            pct(r.access.intra_frac()),
+            pct(r.access.inter_frac()),
+            format!("{pn:.2}%"),
+            format!("{pi:.2}%"),
+            format!("{pr:.2}%"),
+        ]);
+    }
+    table.print();
+}

@@ -1,0 +1,57 @@
+//! Table 8 reproduction: the workload-stealing scheduler's effect on the
+//! Exe/Avg load-imbalance ratio and execution time (4-CC), on top of
+//! filter + remap + duplication.
+
+use pimminer::baselines::published;
+use pimminer::bench::{workloads, Bench};
+use pimminer::exec::cpu;
+use pimminer::pattern::plan::application;
+use pimminer::pim::{simulate_app, PimConfig, SimOptions};
+use pimminer::report::{self, Table};
+
+fn main() {
+    let bench = Bench::new("table8_stealing");
+    let app = application("4-CC").unwrap();
+    let cfg = PimConfig::default();
+    let mut table = Table::new(
+        "Table 8 — workload stealing (4-CC)",
+        &[
+            "Graph", "Exe/Avg (no steal)", "Exe/Avg (steal)", "Steals", "Speedup",
+            "paper no-steal", "paper steal", "paper Spd",
+        ],
+    );
+    for inst in workloads::graphs(&["CI", "PP", "AS", "MI", "YT", "PA", "LJ"]) {
+        let g = &inst.graph;
+        let roots = cpu::sampled_roots(g.num_vertices(), inst.sample_ratio);
+        let no_steal = SimOptions {
+            filter: true,
+            remap: true,
+            duplication: true,
+            ..SimOptions::BASELINE
+        };
+        let steal = SimOptions { stealing: true, ..no_steal };
+        let (a, b) = bench.fixture(inst.spec.abbrev, || {
+            (
+                simulate_app(g, &app, &roots, &no_steal, &cfg),
+                simulate_app(g, &app, &roots, &steal, &cfg),
+            )
+        });
+        assert_eq!(a.count, b.count);
+        let idx = published::GRAPHS
+            .iter()
+            .position(|&x| x == inst.spec.abbrev)
+            .unwrap();
+        let (pn, ps, pspd) = published::TABLE8_STEALING[idx];
+        table.row(vec![
+            inst.spec.abbrev.to_string(),
+            format!("{:.3}", a.exe_over_avg()),
+            format!("{:.3}", b.exe_over_avg()),
+            b.steals.to_string(),
+            report::x(a.seconds / b.seconds),
+            format!("{pn:.2}"),
+            format!("{ps:.3}"),
+            report::x(pspd),
+        ]);
+    }
+    table.print();
+}

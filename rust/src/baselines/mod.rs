@@ -1,0 +1,5 @@
+//! Comparator baselines: the CPU software systems are measured live
+//! (`exec::cpu`); the hardware accelerators (DIMMining, NDMiner) and the
+//! paper's own reported numbers are embedded constants.
+
+pub mod published;

@@ -1,0 +1,152 @@
+//! Criterion-style benchmark harness (criterion is unavailable offline —
+//! DESIGN.md §4). Each `[[bench]]` target is a plain binary that builds a
+//! [`Bench`] session; `measure` warms up, runs timed iterations, and
+//! prints mean ± stddev. `fixture` times a one-shot experiment (the
+//! table/figure reproductions, which are deterministic simulations rather
+//! than repeated microbenches).
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// One benchmark session (one binary).
+pub struct Bench {
+    name: String,
+    quick: bool,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        let quick = std::env::var("PIMMINER_BENCH_QUICK")
+            .map(|v| v == "1")
+            .unwrap_or(false);
+        println!("\n########## bench: {name} ##########");
+        Bench {
+            name: name.to_string(),
+            quick,
+        }
+    }
+
+    /// Quick mode (PIMMINER_BENCH_QUICK=1) trims iteration counts.
+    pub fn quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Time `f` over `iters` iterations (after `warmup` runs) and print
+    /// mean ± stddev. Returns mean seconds.
+    pub fn measure<T>(&self, label: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> f64 {
+        let iters = if self.quick { iters.clamp(1, 3) } else { iters.max(1) };
+        for _ in 0..warmup.min(if self.quick { 1 } else { warmup }) {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let mean = stats::mean(&samples);
+        let sd = stats::stddev(&samples);
+        println!(
+            "{:<48} {:>12} ± {:>10}  ({} iters)",
+            format!("{}/{}", self.name, label),
+            format_time(mean),
+            format_time(sd),
+            iters
+        );
+        mean
+    }
+
+    /// Run a one-shot experiment, reporting wall time.
+    pub fn fixture<T>(&self, label: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        println!(
+            "{:<48} completed in {}",
+            format!("{}/{}", self.name, label),
+            format_time(t.elapsed().as_secs_f64())
+        );
+        out
+    }
+}
+
+/// Human-format a duration in seconds.
+pub fn format_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.3}s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Shared workload setup for the table/figure benches.
+pub mod workloads {
+    use crate::datasets::{self, DatasetInstance};
+
+    /// Instantiate the benchmark graphs. Default: the given subset of
+    /// Table 3 abbreviations at scaled size; `PIMMINER_FULL=1` switches to
+    /// published sizes (+ paper sampling); `PIMMINER_GRAPHS=CI,PP,...`
+    /// overrides the subset.
+    pub fn graphs(default_subset: &[&str]) -> Vec<DatasetInstance> {
+        let full = datasets::full_scale();
+        let subset: Vec<String> = match std::env::var("PIMMINER_GRAPHS") {
+            Ok(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+            Err(_) => {
+                if full {
+                    datasets::DATASETS.iter().map(|d| d.abbrev.to_string()).collect()
+                } else {
+                    default_subset.iter().map(|s| s.to_string()).collect()
+                }
+            }
+        };
+        subset
+            .iter()
+            .filter_map(|a| datasets::by_abbrev(a))
+            .map(|spec| spec.generate(full))
+            .collect()
+    }
+
+    /// Extra sampling for combinatorially explosive apps at bench scale.
+    pub fn sample_for(app: &str, base: f64) -> f64 {
+        match app {
+            "5-CC" => (base * 0.2).max(0.0005),
+            _ => base,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_positive_mean() {
+        let b = Bench::new("self-test");
+        let mean = b.measure("spin", 1, 3, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(mean > 0.0);
+    }
+
+    #[test]
+    fn fixture_passes_through() {
+        let b = Bench::new("self-test");
+        let v = b.fixture("id", || 42);
+        assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(format_time(2.5), "2.500s");
+        assert_eq!(format_time(0.0025), "2.500ms");
+        assert_eq!(format_time(2.5e-6), "2.500µs");
+        assert_eq!(format_time(2.5e-8), "25.0ns");
+    }
+}

@@ -1,0 +1,291 @@
+//! The PIMMiner framework facade: `PIMLoadGraph` (Algorithm 1) and
+//! `PIMPatternCount` (§4.6.2), on top of the device model, placement,
+//! duplication, and the simulator.
+//!
+//! This is the public API an application uses (see `examples/`):
+//!
+//! ```no_run
+//! use pimminer::coordinator::PimMiner;
+//! use pimminer::pattern::application;
+//! use pimminer::pim::{PimConfig, SimOptions};
+//!
+//! let mut miner = PimMiner::new(PimConfig::default(), SimOptions::all());
+//! miner.load_graph_file(std::path::Path::new("graph.csr")).unwrap();
+//! let app = application("4-CC").unwrap();
+//! let result = miner.pattern_count(&app, 1.0);
+//! println!("4-CC count = {}, simulated {}s", result.count, result.seconds);
+//! ```
+
+use super::device::{PimDevice, PimPtr};
+use crate::exec::cpu::sampled_roots;
+use crate::graph::io::NeighborListReader;
+use crate::graph::{CsrGraph, VertexId};
+use crate::pattern::plan::Application;
+use crate::pim::config::PimConfig;
+use crate::pim::filter::Cmp;
+use crate::pim::placement::Placement;
+use crate::pim::sim::{simulate_app, SimOptions, SimResult};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// A graph resident in PIM memory.
+pub struct LoadedGraph {
+    pub graph: CsrGraph,
+    pub placement: Placement,
+    /// Per-vertex device allocation of the primary copy of `N(v)`.
+    pub lists: Vec<PimPtr>,
+    /// Replicated hot lists per unit: `replicas[u][v]` for `v < v_b[u]`.
+    pub replicas: Vec<Vec<PimPtr>>,
+}
+
+/// The framework handle (CPU-side leader).
+pub struct PimMiner {
+    cfg: PimConfig,
+    opts: SimOptions,
+    device: PimDevice,
+    loaded: Option<LoadedGraph>,
+}
+
+impl PimMiner {
+    pub fn new(cfg: PimConfig, opts: SimOptions) -> Self {
+        let device = match opts.capacity_per_unit {
+            Some(cap) => PimDevice::with_capacity(&cfg, cap),
+            None => PimDevice::new(&cfg),
+        };
+        PimMiner {
+            cfg,
+            opts,
+            device,
+            loaded: None,
+        }
+    }
+
+    pub fn config(&self) -> &PimConfig {
+        &self.cfg
+    }
+
+    pub fn options(&self) -> &SimOptions {
+        &self.opts
+    }
+
+    pub fn device(&self) -> &PimDevice {
+        &self.device
+    }
+
+    pub fn loaded(&self) -> Option<&LoadedGraph> {
+        self.loaded.as_ref()
+    }
+
+    /// `PIMLoadGraph` from a binary CSR file (Algorithm 1): stream RowPtr
+    /// to host memory, then DMA each neighbor list straight into its
+    /// round-robin owner unit; finally run the duplication pass
+    /// (Algorithm 2) copying hot lists into every unit's spare capacity.
+    pub fn load_graph_file(&mut self, path: &Path) -> Result<()> {
+        let mut reader = NeighborListReader::open(path)?;
+        let n = reader.num_vertices();
+        let row_ptr = reader.row_ptr().to_vec();
+        let mut col_idx: Vec<VertexId> = Vec::with_capacity(row_ptr[n] as usize);
+        let mut lists: Vec<PimPtr> = Vec::with_capacity(n);
+        // Lines 2–6: per vertex, pick the owner, allocate, stream from file.
+        while let Some((v, list)) = reader.next_list()? {
+            let owner = self.cfg.round_robin_unit(v as usize);
+            let ptr = self.device.pim_malloc(owner, list.len())?;
+            self.device.write(ptr, &list)?;
+            col_idx.extend_from_slice(&list);
+            lists.push(ptr);
+        }
+        let graph = CsrGraph { row_ptr, col_idx };
+        graph.check_invariants().map_err(|e| anyhow::anyhow!(e))?;
+        self.finish_load(graph, lists)
+    }
+
+    /// `PIMLoadGraph` from an in-memory CSR (used by generators/benches —
+    /// same placement and duplication path, no file staging).
+    pub fn load_graph(&mut self, graph: CsrGraph) -> Result<()> {
+        let n = graph.num_vertices();
+        let mut lists = Vec::with_capacity(n);
+        for v in 0..n {
+            let owner = self.cfg.round_robin_unit(v);
+            let ptr = self.device.pim_malloc(owner, graph.degree(v as VertexId))?;
+            self.device.write(ptr, graph.neighbors(v as VertexId))?;
+            lists.push(ptr);
+        }
+        self.finish_load(graph, lists)
+    }
+
+    fn finish_load(&mut self, graph: CsrGraph, lists: Vec<PimPtr>) -> Result<()> {
+        let mut placement = Placement::round_robin(&graph, &self.cfg);
+        let mut replicas: Vec<Vec<PimPtr>> = vec![Vec::new(); self.cfg.num_units()];
+        if self.opts.duplication && self.opts.remap {
+            placement =
+                placement.with_duplication(&graph, &self.cfg, self.opts.capacity_per_unit);
+            // Algorithm 1 lines 7–12: copy each hot list into unit u via
+            // MemoryCopy. (Unfiltered copies — replicas must be complete.)
+            for u in 0..self.cfg.num_units() {
+                for v in 0..placement.v_b[u] {
+                    let src = lists[v as usize];
+                    if src.unit == u {
+                        replicas[u].push(src); // already local: reuse primary
+                        continue;
+                    }
+                    // Replicas live outside the capacity model tracked by
+                    // Algorithm 2 (v_b already accounted for them), so a
+                    // failed malloc here means v_b was computed against a
+                    // different capacity — surface it.
+                    let dst = self.device.memory_copy(u, src, None)?;
+                    replicas[u].push(dst);
+                }
+            }
+        }
+        self.loaded = Some(LoadedGraph {
+            graph,
+            placement,
+            lists,
+            replicas,
+        });
+        Ok(())
+    }
+
+    /// `MemoryCopy` with the access-filter arguments (§4.5): reads `N(v)`
+    /// filtered by `(cmp, th)` from wherever it lives, as PIM unit
+    /// `requester` would.
+    pub fn memory_copy_filtered(
+        &mut self,
+        requester: usize,
+        v: VertexId,
+        cmp: Cmp,
+        th: VertexId,
+    ) -> Result<Vec<VertexId>> {
+        let loaded = self.loaded.as_ref().ok_or_else(|| anyhow::anyhow!("no graph loaded"))?;
+        let src = if loaded.placement.is_local(requester, v) && (v as usize) < loaded.lists.len()
+        {
+            // near-core: primary or replica — same contents
+            loaded.lists[v as usize]
+        } else {
+            loaded.lists[v as usize]
+        };
+        let dst = self.device.memory_copy(requester, src, Some((cmp, th)))?;
+        let data = self.device.read(dst)?.to_vec();
+        self.device.pim_free(dst)?;
+        Ok(data)
+    }
+
+    /// `PIMPatternCount` (§4.6.2): set up stealing parameters and launch
+    /// `PIMFunction` on all units; returns counts plus the full simulated
+    /// timing breakdown. `sample_ratio` follows §5's root sampling.
+    pub fn pattern_count(&self, app: &Application, sample_ratio: f64) -> SimResult {
+        let loaded = self
+            .loaded
+            .as_ref()
+            .expect("PIMPatternCount requires PIMLoadGraph first");
+        let roots = sampled_roots(loaded.graph.num_vertices(), sample_ratio);
+        simulate_app(&loaded.graph, app, &roots, &self.opts, &self.cfg)
+    }
+
+    /// `LaunchPIMKernel`-style generic launch over explicit roots.
+    pub fn launch(&self, app: &Application, roots: &[VertexId]) -> SimResult {
+        let loaded = self.loaded.as_ref().expect("load a graph first");
+        simulate_app(&loaded.graph, app, roots, &self.opts, &self.cfg)
+    }
+
+    /// Verify device-resident lists match the CSR (used by tests and the
+    /// quickstart example as a loading self-check).
+    pub fn verify_device_contents(&self) -> Result<()> {
+        let loaded = self.loaded.as_ref().ok_or_else(|| anyhow::anyhow!("no graph loaded"))?;
+        for v in 0..loaded.graph.num_vertices() {
+            let data = self.device.read(loaded.lists[v])?;
+            if data != loaded.graph.neighbors(v as VertexId) {
+                bail!("device list for vertex {v} diverges from CSR");
+            }
+            let owner = loaded.lists[v].unit;
+            if owner != loaded.placement.owner[v] as usize {
+                bail!("vertex {v} allocated on unit {owner}, placement says {}", loaded.placement.owner[v]);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen, io, sort_by_degree_desc};
+    use crate::pattern::plan::application;
+
+    fn tiny_cfg() -> PimConfig {
+        PimConfig::tiny()
+    }
+
+    fn graph() -> CsrGraph {
+        sort_by_degree_desc(&gen::power_law(600, 3000, 100, 5)).graph
+    }
+
+    #[test]
+    fn load_and_count() {
+        let mut m = PimMiner::new(tiny_cfg(), SimOptions::all());
+        m.load_graph(graph()).unwrap();
+        m.verify_device_contents().unwrap();
+        let app = application("3-CC").unwrap();
+        let r = m.pattern_count(&app, 1.0);
+        assert!(r.count > 0);
+        assert!(r.seconds > 0.0);
+    }
+
+    #[test]
+    fn file_and_memory_loads_agree() {
+        let g = graph();
+        let dir = std::env::temp_dir().join("pimminer_api_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("api.csr");
+        io::write_csr(&g, &path).unwrap();
+
+        let mut a = PimMiner::new(tiny_cfg(), SimOptions::all());
+        a.load_graph_file(&path).unwrap();
+        let mut b = PimMiner::new(tiny_cfg(), SimOptions::all());
+        b.load_graph(g).unwrap();
+
+        a.verify_device_contents().unwrap();
+        let app = application("4-CL").unwrap();
+        let ra = a.pattern_count(&app, 1.0);
+        let rb = b.pattern_count(&app, 1.0);
+        assert_eq!(ra.count, rb.count);
+        assert_eq!(ra.total_cycles, rb.total_cycles);
+    }
+
+    #[test]
+    fn duplication_creates_replicas() {
+        let mut m = PimMiner::new(tiny_cfg(), SimOptions::all());
+        m.load_graph(graph()).unwrap();
+        let loaded = m.loaded().unwrap();
+        // tiny cfg = 8 MB/unit: the whole 600-vertex graph duplicates
+        assert!(loaded.placement.v_b.iter().all(|&vb| vb == 600));
+        for u in 0..m.config().num_units() {
+            assert_eq!(loaded.replicas[u].len(), 600);
+        }
+    }
+
+    #[test]
+    fn filtered_memory_copy_matches_prefix() {
+        let mut m = PimMiner::new(tiny_cfg(), SimOptions::all());
+        let g = graph();
+        let expected: Vec<u32> = g
+            .neighbors(0)
+            .iter()
+            .copied()
+            .filter(|&x| x < 50)
+            .collect();
+        m.load_graph(g).unwrap();
+        let got = m.memory_copy_filtered(3, 0, Cmp::Lt, 50).unwrap();
+        assert_eq!(got, expected);
+    }
+
+    #[test]
+    fn pattern_count_without_load_panics() {
+        let m = PimMiner::new(tiny_cfg(), SimOptions::BASELINE);
+        let app = application("3-CC").unwrap();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            m.pattern_count(&app, 1.0)
+        }));
+        assert!(r.is_err());
+    }
+}

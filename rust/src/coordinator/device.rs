@@ -1,0 +1,209 @@
+//! Functional model of the HBM-PIM memory device behind the Fig. 8
+//! interfaces: per-unit allocation (`PIM_malloc`/`PIM_free`), file DMA
+//! (`PIM_readFile`/`PIM_writeFile`), and filtered `MemoryCopy`.
+//!
+//! The device stores real data so the programming interfaces can be
+//! verified end-to-end (the integration tests check that `PIMLoadGraph`
+//! materializes byte-identical neighbor lists in the owner units). The
+//! *timing* of these operations is the simulator's job (`pim::sim`); the
+//! device model is purely functional.
+
+use crate::graph::VertexId;
+use crate::pim::config::PimConfig;
+use crate::pim::filter::{Cmp, FilterUnit};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// An allocation in one PIM unit's bank group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PimPtr {
+    pub unit: usize,
+    pub handle: u64,
+}
+
+struct UnitMemory {
+    capacity: u64,
+    used: u64,
+    segments: HashMap<u64, Vec<u32>>,
+}
+
+/// The whole HBM-PIM stack's memory.
+pub struct PimDevice {
+    units: Vec<UnitMemory>,
+    next_handle: u64,
+}
+
+impl PimDevice {
+    /// Create with the config's per-unit bank-group capacity.
+    pub fn new(cfg: &PimConfig) -> Self {
+        Self::with_capacity(cfg, cfg.capacity_per_unit())
+    }
+
+    /// Create with an explicit per-unit capacity (scaled benches).
+    pub fn with_capacity(cfg: &PimConfig, capacity_per_unit: u64) -> Self {
+        PimDevice {
+            units: (0..cfg.num_units())
+                .map(|_| UnitMemory {
+                    capacity: capacity_per_unit,
+                    used: 0,
+                    segments: HashMap::new(),
+                })
+                .collect(),
+            next_handle: 1,
+        }
+    }
+
+    pub fn num_units(&self) -> usize {
+        self.units.len()
+    }
+
+    /// `PIM_malloc(nitems, nmemb, PIMunitID)` — allocate `nelems` 32-bit
+    /// words in `unit`'s bank group.
+    pub fn pim_malloc(&mut self, unit: usize, nelems: usize) -> Result<PimPtr> {
+        let bytes = nelems as u64 * 4;
+        let mem = self
+            .units
+            .get_mut(unit)
+            .ok_or_else(|| anyhow::anyhow!("unit {unit} out of range"))?;
+        if mem.used + bytes > mem.capacity {
+            bail!(
+                "PIM_malloc: unit {unit} out of memory ({} + {} > {})",
+                mem.used,
+                bytes,
+                mem.capacity
+            );
+        }
+        mem.used += bytes;
+        let handle = self.next_handle;
+        self.next_handle += 1;
+        mem.segments.insert(handle, vec![0u32; nelems]);
+        Ok(PimPtr { unit, handle })
+    }
+
+    /// `PIM_free(ptr)`.
+    pub fn pim_free(&mut self, ptr: PimPtr) -> Result<()> {
+        let mem = &mut self.units[ptr.unit];
+        match mem.segments.remove(&ptr.handle) {
+            Some(seg) => {
+                mem.used -= seg.len() as u64 * 4;
+                Ok(())
+            }
+            None => bail!("PIM_free: dangling pointer {ptr:?}"),
+        }
+    }
+
+    /// `PIM_readFile`-style fill: write `data` into the allocation.
+    pub fn write(&mut self, ptr: PimPtr, data: &[u32]) -> Result<()> {
+        let seg = self.segment_mut(ptr)?;
+        if data.len() != seg.len() {
+            bail!(
+                "write: length mismatch ({} into {})",
+                data.len(),
+                seg.len()
+            );
+        }
+        seg.copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Read an allocation's contents.
+    pub fn read(&self, ptr: PimPtr) -> Result<&[u32]> {
+        self.units[ptr.unit]
+            .segments
+            .get(&ptr.handle)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow::anyhow!("read: dangling pointer {ptr:?}"))
+    }
+
+    /// `MemoryCopy(dst_unit, src, cmp, th)` — copy `src` into a fresh
+    /// allocation in `dst_unit`, applying the in-bank filter when
+    /// `filter` is given. Returns the (possibly shorter) destination.
+    pub fn memory_copy(
+        &mut self,
+        dst_unit: usize,
+        src: PimPtr,
+        filter: Option<(Cmp, VertexId)>,
+    ) -> Result<PimPtr> {
+        let data: Vec<u32> = match filter {
+            Some((cmp, th)) => FilterUnit::new(cmp, th).apply(self.read(src)?),
+            None => self.read(src)?.to_vec(),
+        };
+        let dst = self.pim_malloc(dst_unit, data.len())?;
+        self.write(dst, &data)?;
+        Ok(dst)
+    }
+
+    /// Bytes allocated in `unit`.
+    pub fn used_bytes(&self, unit: usize) -> u64 {
+        self.units[unit].used
+    }
+
+    /// Remaining capacity of `unit`.
+    pub fn free_bytes(&self, unit: usize) -> u64 {
+        self.units[unit].capacity - self.units[unit].used
+    }
+
+    fn segment_mut(&mut self, ptr: PimPtr) -> Result<&mut Vec<u32>> {
+        self.units[ptr.unit]
+            .segments
+            .get_mut(&ptr.handle)
+            .ok_or_else(|| anyhow::anyhow!("dangling pointer {ptr:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn device() -> PimDevice {
+        PimDevice::with_capacity(&PimConfig::tiny(), 1024) // 256 words/unit
+    }
+
+    #[test]
+    fn malloc_write_read_free() {
+        let mut d = device();
+        let p = d.pim_malloc(2, 4).unwrap();
+        d.write(p, &[5, 6, 7, 8]).unwrap();
+        assert_eq!(d.read(p).unwrap(), &[5, 6, 7, 8]);
+        assert_eq!(d.used_bytes(2), 16);
+        d.pim_free(p).unwrap();
+        assert_eq!(d.used_bytes(2), 0);
+        assert!(d.read(p).is_err());
+    }
+
+    #[test]
+    fn out_of_memory_rejected() {
+        let mut d = device();
+        assert!(d.pim_malloc(0, 256).is_ok());
+        assert!(d.pim_malloc(0, 1).is_err());
+        // other units unaffected
+        assert!(d.pim_malloc(1, 256).is_ok());
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let mut d = device();
+        let p = d.pim_malloc(0, 2).unwrap();
+        d.pim_free(p).unwrap();
+        assert!(d.pim_free(p).is_err());
+    }
+
+    #[test]
+    fn memory_copy_plain_and_filtered() {
+        let mut d = device();
+        let src = d.pim_malloc(0, 5).unwrap();
+        d.write(src, &[1, 10, 20, 30, 40]).unwrap();
+        let plain = d.memory_copy(3, src, None).unwrap();
+        assert_eq!(d.read(plain).unwrap(), &[1, 10, 20, 30, 40]);
+        let filtered = d.memory_copy(3, src, Some((Cmp::Lt, 25))).unwrap();
+        assert_eq!(d.read(filtered).unwrap(), &[1, 10, 20]);
+        assert_eq!(filtered.unit, 3);
+    }
+
+    #[test]
+    fn write_length_mismatch_rejected() {
+        let mut d = device();
+        let p = d.pim_malloc(0, 3).unwrap();
+        assert!(d.write(p, &[1, 2]).is_err());
+    }
+}

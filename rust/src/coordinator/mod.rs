@@ -1,0 +1,9 @@
+//! The PIMMiner framework layer: the Fig. 8 programming interfaces over a
+//! functional device model, plus the GPMI-level `PIMLoadGraph` /
+//! `PIMPatternCount` facade.
+
+pub mod api;
+pub mod device;
+
+pub use api::{LoadedGraph, PimMiner};
+pub use device::{PimDevice, PimPtr};

@@ -1,0 +1,181 @@
+//! The paper's evaluation datasets (Table 3) and their synthetic stand-ins.
+//!
+//! Each entry records the published (|V|, |E|, max-degree) plus a scaled
+//! profile so `cargo bench` finishes in minutes. `PIMMINER_FULL=1` switches
+//! the benches to the published sizes with the paper's root-vertex sampling
+//! ratios (§5 footnote 1: MI 10%, YT/PA 1%, LJ 0.1%).
+
+use crate::graph::{gen, sort_by_degree_desc, CsrGraph};
+
+/// One evaluation dataset.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DatasetSpec {
+    /// Paper abbreviation (CI, PP, AS, MI, YT, PA, LJ).
+    pub abbrev: &'static str,
+    /// Full name as in Table 3.
+    pub name: &'static str,
+    /// Published vertex count.
+    pub vertices: usize,
+    /// Published undirected edge count.
+    pub edges: usize,
+    /// Published max degree.
+    pub max_degree: usize,
+    /// Paper's root-vertex sampling ratio for cycle-accurate simulation.
+    pub sample_ratio: f64,
+    /// Scaled profile used by default benches: (V, E, max-degree, sample).
+    pub scaled: (usize, usize, usize, f64),
+    /// Generator seed (fixed per dataset for reproducibility).
+    pub seed: u64,
+}
+
+/// All seven Table 3 datasets, in paper order.
+pub const DATASETS: [DatasetSpec; 7] = [
+    DatasetSpec {
+        abbrev: "CI",
+        name: "CiteSeer",
+        vertices: 3_264,
+        edges: 4_536,
+        max_degree: 99,
+        sample_ratio: 1.0,
+        scaled: (3_264, 4_536, 99, 1.0),
+        seed: 0xC1,
+    },
+    DatasetSpec {
+        abbrev: "PP",
+        name: "P2P",
+        vertices: 10_900,
+        edges: 40_000,
+        max_degree: 103,
+        sample_ratio: 1.0,
+        scaled: (10_900, 40_000, 103, 1.0),
+        seed: 0xBB,
+    },
+    DatasetSpec {
+        abbrev: "AS",
+        name: "Astro",
+        vertices: 18_800,
+        edges: 198_000,
+        max_degree: 504,
+        sample_ratio: 1.0,
+        scaled: (18_800, 198_000, 504, 0.3),
+        seed: 0xA5,
+    },
+    DatasetSpec {
+        abbrev: "MI",
+        name: "MiCo",
+        vertices: 100_000,
+        edges: 1_080_000,
+        max_degree: 1_359,
+        sample_ratio: 0.10,
+        scaled: (30_000, 324_000, 700, 0.05),
+        seed: 0x31,
+    },
+    DatasetSpec {
+        abbrev: "YT",
+        name: "com-Youtube",
+        vertices: 1_130_000,
+        edges: 2_990_000,
+        max_degree: 28_754,
+        sample_ratio: 0.01,
+        scaled: (60_000, 160_000, 4_000, 0.05),
+        seed: 0x47,
+    },
+    DatasetSpec {
+        abbrev: "PA",
+        name: "cit-Patents",
+        vertices: 3_770_000,
+        edges: 16_520_000,
+        max_degree: 793,
+        sample_ratio: 0.01,
+        scaled: (90_000, 400_000, 200, 0.05),
+        seed: 0xDA,
+    },
+    DatasetSpec {
+        abbrev: "LJ",
+        name: "soc-LiveJournal1",
+        vertices: 4_850_000,
+        edges: 43_110_000,
+        max_degree: 20_334,
+        sample_ratio: 0.001,
+        scaled: (80_000, 720_000, 3_000, 0.02),
+        seed: 0x17,
+    },
+];
+
+/// Look up a dataset by its paper abbreviation (case-insensitive).
+pub fn by_abbrev(abbrev: &str) -> Option<&'static DatasetSpec> {
+    DATASETS
+        .iter()
+        .find(|d| d.abbrev.eq_ignore_ascii_case(abbrev))
+}
+
+/// Whether full-scale mode is requested (`PIMMINER_FULL=1`).
+pub fn full_scale() -> bool {
+    std::env::var("PIMMINER_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// A generated, degree-sorted instance of a dataset plus the sampling
+/// ratio the benches should apply to root vertices.
+pub struct DatasetInstance {
+    pub spec: &'static DatasetSpec,
+    pub graph: CsrGraph,
+    pub sample_ratio: f64,
+}
+
+impl DatasetSpec {
+    /// Generate the synthetic stand-in at the given scale and relabel by
+    /// descending degree (the paper's preprocessing).
+    pub fn generate(&'static self, full: bool) -> DatasetInstance {
+        let (v, e, md, sample) = if full {
+            (self.vertices, self.edges, self.max_degree, self.sample_ratio)
+        } else {
+            self.scaled
+        };
+        let raw = gen::power_law(v, e, md, self.seed);
+        let graph = sort_by_degree_desc(&raw).graph;
+        DatasetInstance {
+            spec: self,
+            graph,
+            sample_ratio: sample,
+        }
+    }
+
+    /// Generate at default scale (honoring `PIMMINER_FULL`).
+    pub fn generate_default(&'static self) -> DatasetInstance {
+        self.generate(full_scale())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_abbrev() {
+        assert_eq!(by_abbrev("mi").unwrap().name, "MiCo");
+        assert_eq!(by_abbrev("LJ").unwrap().abbrev, "LJ");
+        assert!(by_abbrev("zz").is_none());
+    }
+
+    #[test]
+    fn small_datasets_generate_to_spec() {
+        let ci = by_abbrev("CI").unwrap().generate(false);
+        assert_eq!(ci.graph.num_vertices(), 3_264);
+        let e = ci.graph.num_edges() as f64;
+        assert!((e - 4_536.0).abs() / 4_536.0 < 0.2, "CI edges {e}");
+        // degree-sorted: id 0 is the hottest vertex
+        assert_eq!(
+            ci.graph.degree(0),
+            ci.graph.max_degree(),
+            "vertex 0 must be max-degree after sort"
+        );
+    }
+
+    #[test]
+    fn scaled_profiles_are_smaller_or_equal() {
+        for d in &DATASETS {
+            assert!(d.scaled.0 <= d.vertices);
+            assert!(d.scaled.1 <= d.edges);
+        }
+    }
+}

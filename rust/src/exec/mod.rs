@@ -1,0 +1,8 @@
+//! Pattern-enumeration execution: sorted-set operations, the generic
+//! instrumentable enumerator, and the multithreaded CPU baselines.
+
+pub mod cpu;
+pub mod enumerate;
+pub mod setops;
+
+pub use enumerate::{brute_force_count, EnumSink, Enumerator, FetchSpec, NullSink};

@@ -1,0 +1,210 @@
+//! CSR graph representation.
+//!
+//! The paper stipulates (§4.6.1) that graphs are stored in CSR with vertices
+//! sorted by descending degree (highest-degree vertex gets id 0) and each
+//! neighbor list sorted ascending by (new) vertex id — the sortedness is
+//! what makes the in-bank `(cmp, th)` filter a prefix operation and the
+//! set intersections a linear merge.
+
+pub type VertexId = u32;
+
+/// Undirected graph in CSR form. Edges are stored in both directions
+/// (`col_idx` holds each undirected edge twice).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CsrGraph {
+    /// `row_ptr[v]..row_ptr[v+1]` delimits `N(v)` in `col_idx`.
+    pub row_ptr: Vec<u64>,
+    /// Concatenated neighbor lists, each sorted ascending.
+    pub col_idx: Vec<VertexId>,
+}
+
+impl CsrGraph {
+    /// Build from an undirected edge list. Deduplicates parallel edges and
+    /// drops self-loops. `n` is the vertex count; edge endpoints must be
+    /// `< n`.
+    pub fn from_edges(n: usize, edges: &[(VertexId, VertexId)]) -> Self {
+        let mut deg = vec![0u64; n];
+        let mut clean: Vec<(VertexId, VertexId)> = Vec::with_capacity(edges.len());
+        for &(a, b) in edges {
+            assert!((a as usize) < n && (b as usize) < n, "edge endpoint out of range");
+            if a == b {
+                continue;
+            }
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            clean.push((lo, hi));
+        }
+        clean.sort_unstable();
+        clean.dedup();
+        for &(a, b) in &clean {
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        let mut row_ptr = vec![0u64; n + 1];
+        for v in 0..n {
+            row_ptr[v + 1] = row_ptr[v] + deg[v];
+        }
+        let mut col_idx = vec![0 as VertexId; row_ptr[n] as usize];
+        let mut cursor: Vec<u64> = row_ptr[..n].to_vec();
+        for &(a, b) in &clean {
+            col_idx[cursor[a as usize] as usize] = b;
+            cursor[a as usize] += 1;
+            col_idx[cursor[b as usize] as usize] = a;
+            cursor[b as usize] += 1;
+        }
+        // Each neighbor list is already ascending because `clean` is sorted
+        // by (lo, hi): for a fixed lower endpoint the upper endpoints arrive
+        // ascending, and for a fixed upper endpoint the lower endpoints also
+        // arrive ascending. Assert in debug builds.
+        let g = CsrGraph { row_ptr, col_idx };
+        debug_assert!(g.check_invariants().is_ok());
+        g
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.col_idx.len() / 2
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        (self.row_ptr[v as usize + 1] - self.row_ptr[v as usize]) as usize
+    }
+
+    /// Neighbor list of `v` (sorted ascending).
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        let lo = self.row_ptr[v as usize] as usize;
+        let hi = self.row_ptr[v as usize + 1] as usize;
+        &self.col_idx[lo..hi]
+    }
+
+    /// O(log d) adjacency test.
+    #[inline]
+    pub fn has_edge(&self, a: VertexId, b: VertexId) -> bool {
+        self.neighbors(a).binary_search(&b).is_ok()
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices())
+            .map(|v| self.degree(v as VertexId))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Validate the CSR invariants the rest of the system depends on:
+    /// monotone row_ptr, sorted + deduplicated neighbor lists, no
+    /// self-loops, and symmetry (b ∈ N(a) ⇔ a ∈ N(b)).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let n = self.num_vertices();
+        if self.row_ptr[0] != 0 {
+            return Err("row_ptr[0] != 0".into());
+        }
+        if *self.row_ptr.last().unwrap() as usize != self.col_idx.len() {
+            return Err("row_ptr end mismatch".into());
+        }
+        for v in 0..n {
+            if self.row_ptr[v + 1] < self.row_ptr[v] {
+                return Err(format!("row_ptr not monotone at {v}"));
+            }
+            let ns = self.neighbors(v as VertexId);
+            for w in ns.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("neighbors of {v} not strictly ascending"));
+                }
+            }
+            for &u in ns {
+                if u as usize >= n {
+                    return Err(format!("neighbor {u} of {v} out of range"));
+                }
+                if u == v as VertexId {
+                    return Err(format!("self-loop at {v}"));
+                }
+                if !self.has_edge(u, v as VertexId) {
+                    return Err(format!("asymmetric edge ({v},{u})"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Bytes occupied by the neighbor list of `v` (4 bytes per entry — the
+    /// paper's 32-bit vertex ids, matching the 32-bit filter datapath).
+    #[inline]
+    pub fn neighbor_bytes(&self, v: VertexId) -> u64 {
+        self.degree(v) as u64 * 4
+    }
+
+    /// Total payload bytes (CSR arrays) — the paper's "graph size" column.
+    pub fn total_bytes(&self) -> u64 {
+        (self.row_ptr.len() * 8 + self.col_idx.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> CsrGraph {
+        // 0-1, 0-2, 1-2, 1-3, 2-3 (diamond = K4 minus edge 0-3)
+        CsrGraph::from_edges(4, &[(0, 1), (0, 2), (1, 2), (1, 3), (2, 3)])
+    }
+
+    #[test]
+    fn builds_and_validates() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 5);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[0, 2, 3]);
+        assert_eq!(g.neighbors(3), &[1, 2]);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dedup_and_self_loops() {
+        let g = CsrGraph::from_edges(3, &[(0, 1), (1, 0), (0, 1), (2, 2), (1, 2)]);
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(2), &[1]);
+    }
+
+    #[test]
+    fn has_edge_symmetric() {
+        let g = diamond();
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 3) && !g.has_edge(3, 0));
+    }
+
+    #[test]
+    fn degrees_and_max() {
+        let g = diamond();
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(1), 3);
+        assert_eq!(g.max_degree(), 3);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = CsrGraph::from_edges(0, &[]);
+        assert_eq!(g.num_vertices(), 0);
+        assert_eq!(g.num_edges(), 0);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn isolated_vertices() {
+        let g = CsrGraph::from_edges(5, &[(0, 1)]);
+        assert_eq!(g.degree(4), 0);
+        assert_eq!(g.neighbors(4), &[] as &[VertexId]);
+        g.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,256 @@
+//! Seeded synthetic graph generators.
+//!
+//! The paper evaluates on SNAP/GraMi datasets (Table 3) which are not
+//! shipped in this environment; DESIGN.md §2 documents the substitution:
+//! a Chung–Lu power-law generator calibrated to each dataset's
+//! (|V|, |E|, max-degree), so the degree skew that drives the paper's
+//! locality and load-imbalance results is preserved. Structured generators
+//! (clique, cycle, star, complete bipartite, Erdős–Rényi) back the unit and
+//! property tests where exact pattern counts are known in closed form.
+
+use super::csr::{CsrGraph, VertexId};
+use crate::util::rng::{AliasTable, Rng};
+use crate::util::threads;
+
+/// Chung–Lu power-law graph calibrated to hit a target edge count and
+/// maximum degree.
+///
+/// Weights follow `w_i = wmax * (i+1)^(-alpha)` where `alpha` is solved by
+/// bisection so that `sum(w) ≈ 2 * target_edges`. Endpoints are drawn from
+/// the weight distribution via an alias table; duplicates and self-loops
+/// are discarded at CSR construction (we oversample to compensate).
+pub fn power_law(n: usize, target_edges: usize, max_degree: usize, seed: u64) -> CsrGraph {
+    assert!(n >= 2);
+    let wmax = (max_degree as f64).min((n - 1) as f64);
+    let target_sum = 2.0 * target_edges as f64;
+
+    // Weight sum as a function of alpha is monotonically decreasing.
+    let weight_sum = |alpha: f64| -> f64 {
+        // sum_{i=1..n} wmax * i^-alpha, computed coarsely for large n via
+        // integral approximation to keep generation O(n) not O(n * iters).
+        if n <= 1 << 16 {
+            (1..=n).map(|i| wmax * (i as f64).powf(-alpha)).sum()
+        } else {
+            // integral of x^-alpha from 1 to n (+ first term correction)
+            let integral = if (alpha - 1.0).abs() < 1e-9 {
+                (n as f64).ln()
+            } else {
+                ((n as f64).powf(1.0 - alpha) - 1.0) / (1.0 - alpha)
+            };
+            wmax * (1.0 + integral)
+        }
+    };
+
+    // Bisect alpha in [0, 4]: alpha=0 gives sum = wmax*n (max possible),
+    // alpha=4 gives nearly wmax alone.
+    let (mut lo, mut hi) = (0.0f64, 4.0f64);
+    let alpha = if weight_sum(0.0) > target_sum {
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if weight_sum(mid) > target_sum {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    } else {
+        0.0 // target denser than wmax allows; degrade gracefully
+    };
+
+    let weights: Vec<f64> = (0..n)
+        .map(|i| (wmax * ((i + 1) as f64).powf(-alpha)).max(1e-3))
+        .collect();
+    let table = AliasTable::new(&weights);
+
+    // Oversample to compensate for dedup/self-loop losses (heavier tails
+    // collide more; 1.25x is enough at the calibration tolerance).
+    let draws = (target_edges as f64 * 1.25) as usize;
+    let shards = threads::num_threads().max(1);
+    let per_shard = draws / shards + 1;
+    let shard_edges: Vec<Vec<(VertexId, VertexId)>> = threads::par_map(shards, 1, |s| {
+        let mut rng = Rng::new(seed ^ (s as u64).wrapping_mul(0xA24B_AED4_963E_E407));
+        let mut edges = Vec::with_capacity(per_shard);
+        for _ in 0..per_shard {
+            let a = table.sample(&mut rng) as VertexId;
+            let b = table.sample(&mut rng) as VertexId;
+            if a != b {
+                edges.push((a, b));
+            }
+        }
+        edges
+    });
+    let mut edges: Vec<(VertexId, VertexId)> = shard_edges.into_iter().flatten().collect();
+    edges.truncate(draws);
+    let g = CsrGraph::from_edges(n, &edges);
+    // Trim to target_edges if oversampling overshot after dedup: drop the
+    // excess from the lowest-weight endpoints' edges deterministically.
+    trim_to_edges(g, target_edges, seed)
+}
+
+fn trim_to_edges(g: CsrGraph, target_edges: usize, seed: u64) -> CsrGraph {
+    if g.num_edges() <= target_edges {
+        return g;
+    }
+    let n = g.num_vertices();
+    let mut all: Vec<(VertexId, VertexId)> = Vec::with_capacity(g.num_edges());
+    for v in 0..n as VertexId {
+        for &u in g.neighbors(v) {
+            if u > v {
+                all.push((v, u));
+            }
+        }
+    }
+    let mut rng = Rng::new(seed ^ 0xDEAD_BEEF);
+    rng.shuffle(&mut all);
+    all.truncate(target_edges);
+    CsrGraph::from_edges(n, &all)
+}
+
+/// Cap every vertex's degree at `cap` by greedily keeping edges whose both
+/// endpoints still have headroom (deterministic, edge order = CSR order).
+/// Used when a workload must respect a kernel tile bound (e.g. the AOT
+/// set-ops tile length).
+pub fn cap_degree(g: &CsrGraph, cap: usize) -> CsrGraph {
+    let n = g.num_vertices();
+    let mut kept_deg = vec![0usize; n];
+    let mut edges = Vec::with_capacity(g.num_edges());
+    for v in 0..n as VertexId {
+        for &u in g.neighbors(v) {
+            if u > v && kept_deg[v as usize] < cap && kept_deg[u as usize] < cap {
+                kept_deg[v as usize] += 1;
+                kept_deg[u as usize] += 1;
+                edges.push((v, u));
+            }
+        }
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Erdős–Rényi G(n, m): exactly `m` distinct edges drawn uniformly.
+pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> CsrGraph {
+    let max_m = n * (n - 1) / 2;
+    assert!(m <= max_m, "too many edges requested");
+    let mut rng = Rng::new(seed);
+    let mut set = std::collections::HashSet::with_capacity(m * 2);
+    let mut edges = Vec::with_capacity(m);
+    while edges.len() < m {
+        let a = rng.below_usize(n) as VertexId;
+        let b = rng.below_usize(n) as VertexId;
+        if a == b {
+            continue;
+        }
+        let key = if a < b { (a, b) } else { (b, a) };
+        if set.insert(key) {
+            edges.push(key);
+        }
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Complete graph K_n.
+pub fn clique(n: usize) -> CsrGraph {
+    let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+    for a in 0..n as VertexId {
+        for b in (a + 1)..n as VertexId {
+            edges.push((a, b));
+        }
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Cycle C_n.
+pub fn cycle(n: usize) -> CsrGraph {
+    assert!(n >= 3);
+    let edges: Vec<(VertexId, VertexId)> = (0..n)
+        .map(|i| (i as VertexId, ((i + 1) % n) as VertexId))
+        .collect();
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Star S_n: vertex 0 connected to 1..n.
+pub fn star(n: usize) -> CsrGraph {
+    let edges: Vec<(VertexId, VertexId)> = (1..n).map(|i| (0, i as VertexId)).collect();
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Complete bipartite K_{a,b} (vertices 0..a on the left, a..a+b right).
+pub fn complete_bipartite(a: usize, b: usize) -> CsrGraph {
+    let mut edges = Vec::with_capacity(a * b);
+    for l in 0..a as VertexId {
+        for r in 0..b as VertexId {
+            edges.push((l, a as VertexId + r));
+        }
+    }
+    CsrGraph::from_edges(a + b, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_law_hits_targets_roughly() {
+        let g = power_law(10_000, 50_000, 500, 42);
+        g.check_invariants().unwrap();
+        assert_eq!(g.num_vertices(), 10_000);
+        let e = g.num_edges() as f64;
+        assert!(
+            (e - 50_000.0).abs() / 50_000.0 < 0.15,
+            "edge count {e} too far from 50k"
+        );
+        let md = g.max_degree() as f64;
+        assert!(
+            md > 150.0 && md < 1_000.0,
+            "max degree {md} not in the calibrated band"
+        );
+    }
+
+    #[test]
+    fn power_law_is_deterministic() {
+        let a = power_law(2_000, 8_000, 120, 7);
+        let b = power_law(2_000, 8_000, 120, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn power_law_is_skewed() {
+        let g = power_law(5_000, 25_000, 400, 3);
+        // degree-0 vertex after sort should be much hotter than the median.
+        let mut degs: Vec<usize> = (0..g.num_vertices()).map(|v| g.degree(v as u32)).collect();
+        degs.sort_unstable();
+        let median = degs[degs.len() / 2];
+        let max = *degs.last().unwrap();
+        assert!(max > 10 * median.max(1), "max {max} vs median {median}");
+    }
+
+    #[test]
+    fn cap_degree_enforces_bound() {
+        let g = power_law(2_000, 14_000, 600, 9);
+        let capped = cap_degree(&g, 100);
+        capped.check_invariants().unwrap();
+        assert!(capped.max_degree() <= 100);
+        assert!(capped.num_edges() > g.num_edges() / 2, "cap dropped too much");
+        // idempotent
+        assert_eq!(cap_degree(&capped, 100), capped);
+    }
+
+    #[test]
+    fn erdos_renyi_exact_edges() {
+        let g = erdos_renyi(100, 500, 1);
+        assert_eq!(g.num_edges(), 500);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn structured_generators() {
+        assert_eq!(clique(5).num_edges(), 10);
+        assert_eq!(cycle(6).num_edges(), 6);
+        assert_eq!(star(10).num_edges(), 9);
+        assert_eq!(star(10).degree(0), 9);
+        let kb = complete_bipartite(3, 4);
+        assert_eq!(kb.num_edges(), 12);
+        assert_eq!(kb.degree(0), 4);
+        assert_eq!(kb.degree(3), 3);
+    }
+}

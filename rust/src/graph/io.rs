@@ -1,0 +1,251 @@
+//! Graph file I/O.
+//!
+//! Two formats:
+//!   * the paper's binary CSR interchange (§4.6.1 Algorithm 1): vertex
+//!     count, then `RowPtr`, then `ColIdx` — the format `PIMLoadGraph`
+//!     streams from disk into PIM memory without staging in main memory;
+//!   * plain text edge lists (`a b` per line, `#` comments) for
+//!     interoperability with SNAP-style files.
+
+use super::csr::{CsrGraph, VertexId};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"PIMCSR01";
+
+/// Write the binary CSR format: magic, u64 |V|, u64 |adj|, row_ptr (u64 LE),
+/// col_idx (u32 LE). Matches the layout Algorithm 1 expects: RowPtr can be
+/// read alone (header + row_ptr) before the neighbor lists stream in.
+pub fn write_csr(g: &CsrGraph, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
+    w.write_all(&(g.col_idx.len() as u64).to_le_bytes())?;
+    for &p in &g.row_ptr {
+        w.write_all(&p.to_le_bytes())?;
+    }
+    for &c in &g.col_idx {
+        w.write_all(&c.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read the whole binary CSR file.
+pub fn read_csr(path: &Path) -> Result<CsrGraph> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let (n, nnz) = read_csr_header(&mut r)?;
+    let row_ptr = read_u64s(&mut r, n + 1)?;
+    let col_idx = read_u32s(&mut r, nnz)?;
+    let g = CsrGraph { row_ptr, col_idx };
+    g.check_invariants().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(g)
+}
+
+/// Read just the header + RowPtr — the first phase of Algorithm 1 (the CPU
+/// keeps RowPtr in main memory and streams neighbor lists straight to PIM).
+pub fn read_csr_row_ptr(path: &Path) -> Result<(usize, Vec<u64>)> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let (n, _nnz) = read_csr_header(&mut r)?;
+    let row_ptr = read_u64s(&mut r, n + 1)?;
+    Ok((n, row_ptr))
+}
+
+/// Streaming reader over the ColIdx section of a binary CSR file: yields
+/// each vertex's neighbor list in order. Backs `PIM_readFile` in
+/// `PIMLoadGraph` (sequential disk reads, no whole-graph staging).
+pub struct NeighborListReader {
+    reader: BufReader<std::fs::File>,
+    row_ptr: Vec<u64>,
+    next_vertex: usize,
+}
+
+impl NeighborListReader {
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut reader = BufReader::new(file);
+        let (n, _) = read_csr_header(&mut reader)?;
+        let row_ptr = read_u64s(&mut reader, n + 1)?;
+        Ok(NeighborListReader {
+            reader,
+            row_ptr,
+            next_vertex: 0,
+        })
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    pub fn row_ptr(&self) -> &[u64] {
+        &self.row_ptr
+    }
+
+    /// Read the next vertex's neighbor list; `None` after the last vertex.
+    pub fn next_list(&mut self) -> Result<Option<(VertexId, Vec<VertexId>)>> {
+        if self.next_vertex + 1 >= self.row_ptr.len() {
+            return Ok(None);
+        }
+        let v = self.next_vertex;
+        let len = (self.row_ptr[v + 1] - self.row_ptr[v]) as usize;
+        let list = read_u32s(&mut self.reader, len)?;
+        self.next_vertex += 1;
+        Ok(Some((v as VertexId, list)))
+    }
+}
+
+/// Parse a text edge list (`a b` per line; `#`/`%` comment lines skipped).
+/// Vertex ids may be arbitrary u32s; the graph is sized to max id + 1.
+pub fn read_edge_list(path: &Path) -> Result<CsrGraph> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let reader = BufReader::new(file);
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut max_id: VertexId = 0;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let a: VertexId = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .with_context(|| format!("bad edge at line {}", lineno + 1))?;
+        let b: VertexId = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .with_context(|| format!("bad edge at line {}", lineno + 1))?;
+        max_id = max_id.max(a).max(b);
+        edges.push((a, b));
+    }
+    if edges.is_empty() {
+        bail!("no edges in {}", path.display());
+    }
+    Ok(CsrGraph::from_edges(max_id as usize + 1, &edges))
+}
+
+/// Write a text edge list (each undirected edge once, `a < b`).
+pub fn write_edge_list(g: &CsrGraph, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    for v in 0..g.num_vertices() as VertexId {
+        for &u in g.neighbors(v) {
+            if u > v {
+                writeln!(w, "{v} {u}")?;
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+fn read_csr_header(r: &mut impl Read) -> Result<(usize, usize)> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad magic: not a PIMCSR01 file");
+    }
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    let n = u64::from_le_bytes(buf) as usize;
+    r.read_exact(&mut buf)?;
+    let nnz = u64::from_le_bytes(buf) as usize;
+    Ok((n, nnz))
+}
+
+fn read_u64s(r: &mut impl Read, count: usize) -> Result<Vec<u64>> {
+    let mut bytes = vec![0u8; count * 8];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn read_u32s(r: &mut impl Read, count: usize) -> Result<Vec<u32>> {
+    let mut bytes = vec![0u8; count * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("pimminer_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let g = gen::erdos_renyi(200, 800, 5);
+        let p = tmp("roundtrip.csr");
+        write_csr(&g, &p).unwrap();
+        let g2 = read_csr(&p).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn row_ptr_only_read() {
+        let g = gen::clique(10);
+        let p = tmp("rowptr.csr");
+        write_csr(&g, &p).unwrap();
+        let (n, rp) = read_csr_row_ptr(&p).unwrap();
+        assert_eq!(n, 10);
+        assert_eq!(rp, g.row_ptr);
+    }
+
+    #[test]
+    fn streaming_reader_yields_all_lists() {
+        let g = gen::erdos_renyi(50, 200, 9);
+        let p = tmp("stream.csr");
+        write_csr(&g, &p).unwrap();
+        let mut r = NeighborListReader::open(&p).unwrap();
+        let mut count = 0;
+        while let Some((v, list)) = r.next_list().unwrap() {
+            assert_eq!(list.as_slice(), g.neighbors(v));
+            count += 1;
+        }
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let g = gen::cycle(12);
+        let p = tmp("edges.txt");
+        write_edge_list(&g, &p).unwrap();
+        let g2 = read_edge_list(&p).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn edge_list_skips_comments() {
+        let p = tmp("comments.txt");
+        std::fs::write(&p, "# hi\n% meta\n0 1\n\n1 2\n").unwrap();
+        let g = read_edge_list(&p).unwrap();
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("bad.csr");
+        std::fs::write(&p, b"NOTMAGIC________").unwrap();
+        assert!(read_csr(&p).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Graph substrate: CSR storage, degree sorting, file formats, and the
+//! seeded synthetic generators standing in for the paper's SNAP datasets.
+
+pub mod csr;
+pub mod gen;
+pub mod io;
+pub mod sort;
+
+pub use csr::{CsrGraph, VertexId};
+pub use sort::{relabel, sort_by_degree_desc, Relabeling};

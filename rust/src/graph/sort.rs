@@ -1,0 +1,102 @@
+//! Degree-descending relabeling (§5: "we sort the vertices based on their
+//! degree from largest to smallest (the id of the vertex with the highest
+//! degree is 0)").
+//!
+//! After relabeling, vertex id order is degree order, so the symmetry-
+//! breaking restrictions `f(u) < f(v)` that drive the in-bank filter are
+//! automatically biased toward high-degree vertices, and Algorithm 2's
+//! duplication boundary `v_b` is a simple prefix.
+
+use super::csr::{CsrGraph, VertexId};
+
+/// Result of a relabeling: the new graph plus old→new / new→old maps.
+#[derive(Clone, Debug)]
+pub struct Relabeling {
+    pub graph: CsrGraph,
+    /// `old_to_new[old] = new`
+    pub old_to_new: Vec<VertexId>,
+    /// `new_to_old[new] = old`
+    pub new_to_old: Vec<VertexId>,
+}
+
+/// Relabel so that ids are assigned in descending-degree order (stable on
+/// ties by old id, making the result deterministic).
+pub fn sort_by_degree_desc(g: &CsrGraph) -> Relabeling {
+    let n = g.num_vertices();
+    let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+    order.sort_by(|&a, &b| {
+        g.degree(b)
+            .cmp(&g.degree(a))
+            .then_with(|| a.cmp(&b))
+    });
+    relabel(g, &order)
+}
+
+/// Relabel with an explicit new-id order: `order[new] = old`.
+pub fn relabel(g: &CsrGraph, order: &[VertexId]) -> Relabeling {
+    let n = g.num_vertices();
+    assert_eq!(order.len(), n);
+    let mut old_to_new = vec![0 as VertexId; n];
+    for (new, &old) in order.iter().enumerate() {
+        old_to_new[old as usize] = new as VertexId;
+    }
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::with_capacity(g.num_edges());
+    for old_v in 0..n {
+        let nv = old_to_new[old_v];
+        for &old_u in g.neighbors(old_v as VertexId) {
+            if (old_u as usize) > old_v {
+                edges.push((nv, old_to_new[old_u as usize]));
+            }
+        }
+    }
+    Relabeling {
+        graph: CsrGraph::from_edges(n, &edges),
+        old_to_new,
+        new_to_old: order.to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degrees_descend_after_sort() {
+        // star on 0..5 plus a pendant chain: degrees differ.
+        let g = CsrGraph::from_edges(
+            6,
+            &[(5, 0), (5, 1), (5, 2), (5, 3), (0, 1), (3, 4)],
+        );
+        let r = sort_by_degree_desc(&g);
+        let gs = &r.graph;
+        for v in 0..gs.num_vertices() - 1 {
+            assert!(gs.degree(v as VertexId) >= gs.degree(v as VertexId + 1));
+        }
+        // highest-degree old vertex (5, degree 4) must become id 0
+        assert_eq!(r.old_to_new[5], 0);
+        assert_eq!(r.new_to_old[0], 5);
+    }
+
+    #[test]
+    fn relabel_preserves_structure() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let r = sort_by_degree_desc(&g);
+        assert_eq!(r.graph.num_edges(), g.num_edges());
+        assert_eq!(r.graph.num_vertices(), g.num_vertices());
+        // adjacency preserved through the maps
+        for v in 0..4u32 {
+            for &u in g.neighbors(v) {
+                assert!(r.graph.has_edge(r.old_to_new[v as usize], r.old_to_new[u as usize]));
+            }
+        }
+    }
+
+    #[test]
+    fn maps_are_inverse_permutations() {
+        let g = CsrGraph::from_edges(5, &[(0, 1), (0, 2), (0, 3), (0, 4), (1, 2)]);
+        let r = sort_by_degree_desc(&g);
+        for old in 0..5usize {
+            assert_eq!(r.new_to_old[r.old_to_new[old] as usize] as usize, old);
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! # PIMMiner
+//!
+//! A reproduction of *"PIMMiner: A High-performance PIM Architecture-aware
+//! Graph Mining Framework"* (Su, Jiang, Wang — 2023): an HBM-PIM
+//! simulator, the AutoMine-style pattern-enumeration engine, and the
+//! paper's four co-design optimizations (in-bank access filter,
+//! PIM-friendly local-first address mapping, selective vertex duplication,
+//! and a PIM-side workload-stealing scheduler), plus CPU baselines and
+//! report generators for every table and figure in the evaluation.
+//!
+//! Architecture (DESIGN.md §3): Layer 3 is this Rust crate; Layer 2/1 are
+//! build-time JAX/Pallas set-operation kernels AOT-lowered to HLO text and
+//! executed through [`runtime`] via PJRT — Python is never on the request
+//! path.
+
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod datasets;
+pub mod exec;
+pub mod graph;
+pub mod pattern;
+pub mod pim;
+pub mod report;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,161 @@
+//! `pimminer` — CLI leader for the PIMMiner framework.
+//!
+//! Subcommands:
+//!   generate  --dataset MI [--full] --out g.csr     write a synthetic dataset
+//!   count     --dataset MI --app 4-CC [--system pim|cpu] [--sample 0.1]
+//!             [--no-filter --no-remap --no-dup --no-steal]
+//!   ladder    --dataset MI --app 4-CC               Fig. 9 optimization ladder
+//!   info                                            print the simulated config
+//!
+//! `--graph path.csr` may replace `--dataset` anywhere (binary CSR file,
+//! degree-sorted on load).
+
+use pimminer::coordinator::PimMiner;
+use pimminer::datasets;
+use pimminer::exec::cpu::{self, CpuFlavor};
+use pimminer::graph::{io, sort_by_degree_desc, CsrGraph};
+use pimminer::pattern::plan::application;
+use pimminer::pim::{PimConfig, SimOptions};
+use pimminer::report::{self, Table};
+use pimminer::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "generate" => generate(&args),
+        "count" => count(&args),
+        "ladder" => ladder(&args),
+        "info" => info(),
+        _ => help(),
+    }
+}
+
+fn help() {
+    println!(
+        "pimminer — PIM architecture-aware graph mining (paper reproduction)\n\
+         \n\
+         usage: pimminer <generate|count|ladder|info> [flags]\n\
+         \n\
+         generate --dataset <CI|PP|AS|MI|YT|PA|LJ> [--full] --out <file.csr>\n\
+         count    (--dataset <abbrev> | --graph <file.csr>) --app <3-CC|4-CC|5-CC|3-MC|4-DI|4-CL>\n\
+                  [--system pim|cpu] [--sample <ratio>] [--no-filter] [--no-remap]\n\
+                  [--no-dup] [--no-steal]\n\
+         ladder   (--dataset | --graph) --app <name> [--sample <ratio>]\n\
+         info"
+    );
+}
+
+fn load_graph(args: &Args) -> (CsrGraph, f64) {
+    if let Some(path) = args.get("graph") {
+        let g = io::read_csr(std::path::Path::new(path)).expect("read graph file");
+        let sample = args.get_f64("sample", 1.0);
+        (sort_by_degree_desc(&g).graph, sample)
+    } else {
+        let abbrev = args.get_or("dataset", "CI");
+        let spec = datasets::by_abbrev(abbrev).expect("unknown dataset abbreviation");
+        let inst = spec.generate(args.get_bool("full") || datasets::full_scale());
+        let sample = args.get_f64("sample", inst.sample_ratio);
+        (inst.graph, sample)
+    }
+}
+
+fn options(args: &Args) -> SimOptions {
+    SimOptions {
+        filter: !args.get_bool("no-filter"),
+        remap: !args.get_bool("no-remap"),
+        duplication: !args.get_bool("no-dup"),
+        stealing: !args.get_bool("no-steal"),
+        capacity_per_unit: args.get("capacity").and_then(|v| v.parse().ok()),
+    }
+}
+
+fn generate(args: &Args) {
+    let (g, _) = load_graph(args);
+    let out = args.get_or("out", "graph.csr");
+    io::write_csr(&g, std::path::Path::new(out)).expect("write graph");
+    println!(
+        "wrote {out}: |V|={} |E|={} max-degree={} ({})",
+        g.num_vertices(),
+        g.num_edges(),
+        g.max_degree(),
+        report::bytes(g.total_bytes())
+    );
+}
+
+fn count(args: &Args) {
+    let (g, sample) = load_graph(args);
+    let app = application(args.get_or("app", "4-CC")).expect("unknown application");
+    let system = args.get_or("system", "pim");
+    match system {
+        "cpu" => {
+            let roots = cpu::sampled_roots(g.num_vertices(), sample);
+            let r = cpu::run_application(&g, &app, &roots, CpuFlavor::AutoMineOpt);
+            println!(
+                "{} on CPU: count={} time={}",
+                app.name,
+                r.count,
+                report::s(r.seconds)
+            );
+        }
+        _ => {
+            let mut miner = PimMiner::new(PimConfig::default(), options(args));
+            miner.load_graph(g).expect("PIMLoadGraph");
+            let r = miner.pattern_count(&app, sample);
+            println!(
+                "{} on PIM: count={} time={} (avg core {}) near={} steals={}",
+                app.name,
+                r.count,
+                report::s(r.seconds),
+                report::s(r.avg_unit_seconds),
+                report::pct(r.access.near_frac()),
+                r.steals
+            );
+        }
+    }
+}
+
+fn ladder(args: &Args) {
+    let (g, sample) = load_graph(args);
+    let app = application(args.get_or("app", "4-CC")).expect("unknown application");
+    let roots = cpu::sampled_roots(g.num_vertices(), sample);
+    let cfg = PimConfig::default();
+    let mut t = Table::new(
+        &format!("Fig. 9 ladder — {} ({} roots)", app.name, roots.len()),
+        &["Config", "Total", "AvgCore", "Near%", "Steals", "Speedup"],
+    );
+    let mut base = None;
+    for (name, opts) in SimOptions::ladder() {
+        let r = pimminer::pim::simulate_app(&g, &app, &roots, &opts, &cfg);
+        let b = *base.get_or_insert(r.seconds);
+        t.row(vec![
+            name.to_string(),
+            report::s(r.seconds),
+            report::s(r.avg_unit_seconds),
+            report::pct(r.access.near_frac()),
+            r.steals.to_string(),
+            report::x(b / r.seconds),
+        ]);
+    }
+    t.print();
+}
+
+fn info() {
+    let c = PimConfig::default();
+    println!(
+        "HBM-PIM (Table 4): {} channels × {} units = {} cores, {} banks,\n\
+         latencies near/intra/inter = {}/{}/{} cycles, link {} B/cy,\n\
+         steal overhead {} cycles, capacity {} ({}/unit)",
+        c.channels,
+        c.units_per_channel,
+        c.num_units(),
+        c.num_banks(),
+        c.near_latency,
+        c.intra_latency,
+        c.inter_latency,
+        c.link_bytes_per_cycle,
+        c.steal_overhead,
+        report::bytes(c.capacity_bytes),
+        report::bytes(c.capacity_per_unit()),
+    );
+}

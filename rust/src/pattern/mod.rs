@@ -1,0 +1,9 @@
+//! Patterns, motif generation, and enumeration plans (the AutoMine /
+//! GraphPi algorithmic substrate of §2.1).
+
+pub mod motif;
+pub mod pattern;
+pub mod plan;
+
+pub use pattern::Pattern;
+pub use plan::{application, paper_applications, Application, LevelPlan, Plan};

@@ -1,0 +1,92 @@
+//! Motif generation: all connected unlabeled patterns of a given size,
+//! up to isomorphism — Step 1 of the AutoMine construction (Fig. 2) and
+//! the pattern set of the paper's motif-counting (k-MC) application.
+
+use super::pattern::Pattern;
+use std::collections::HashSet;
+
+/// Enumerate all connected non-isomorphic patterns with `k` vertices.
+/// Brute force over the 2^(k(k-1)/2) labeled graphs with canonical-form
+/// dedup; k ≤ 6 is instantaneous and the paper never exceeds 5.
+pub fn connected_motifs(k: usize) -> Vec<Pattern> {
+    assert!((2..=6).contains(&k), "motif size {k} unsupported");
+    let num_slots = k * (k - 1) / 2;
+    let slot_edges: Vec<(usize, usize)> = {
+        let mut v = Vec::with_capacity(num_slots);
+        for a in 0..k {
+            for b in (a + 1)..k {
+                v.push((a, b));
+            }
+        }
+        v
+    };
+    let mut seen = HashSet::new();
+    let mut motifs = Vec::new();
+    for mask in 0u64..(1 << num_slots) {
+        let edges: Vec<(usize, usize)> = slot_edges
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| mask & (1 << i) != 0)
+            .map(|(_, &e)| e)
+            .collect();
+        if edges.len() + 1 < k {
+            continue; // cannot be connected
+        }
+        let p = Pattern::new(k, &edges, "");
+        if !p.is_connected() {
+            continue;
+        }
+        let code = p.canonical_code();
+        if seen.insert(code) {
+            let named = Pattern::new(k, &edges, &format!("{k}-motif-{}", motifs.len()));
+            motifs.push(named);
+        }
+    }
+    motifs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::pattern as pat;
+
+    #[test]
+    fn motif_counts_match_oeis() {
+        // Number of connected graphs on n unlabeled nodes (OEIS A001349):
+        // n=2: 1, n=3: 2, n=4: 6, n=5: 21, n=6: 112
+        assert_eq!(connected_motifs(2).len(), 1);
+        assert_eq!(connected_motifs(3).len(), 2);
+        assert_eq!(connected_motifs(4).len(), 6);
+        assert_eq!(connected_motifs(5).len(), 21);
+        assert_eq!(connected_motifs(6).len(), 112);
+    }
+
+    #[test]
+    fn three_motifs_are_wedge_and_triangle() {
+        let m = connected_motifs(3);
+        assert!(m.iter().any(|p| p.is_isomorphic(&pat::wedge())));
+        assert!(m.iter().any(|p| p.is_isomorphic(&pat::clique(3))));
+    }
+
+    #[test]
+    fn four_motifs_include_paper_patterns() {
+        let m = connected_motifs(4);
+        for named in [pat::four_cycle(), pat::diamond(), pat::clique(4)] {
+            assert!(
+                m.iter().any(|p| p.is_isomorphic(&named)),
+                "missing {}",
+                named.name
+            );
+        }
+    }
+
+    #[test]
+    fn motifs_are_pairwise_non_isomorphic() {
+        let m = connected_motifs(4);
+        for i in 0..m.len() {
+            for j in (i + 1)..m.len() {
+                assert!(!m[i].is_isomorphic(&m[j]));
+            }
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! Pattern graphs (the templates of §2.1).
+//!
+//! A pattern is a small connected unlabeled graph (≤ 8 vertices; the paper
+//! evaluates sizes 3–5). Patterns are stored as per-vertex adjacency
+//! bitmasks, which makes isomorphism/automorphism enumeration and the
+//! black/red edge classification of the AutoMine construction (Fig. 2)
+//! trivial bit operations.
+
+/// Maximum pattern size supported.
+pub const MAX_PATTERN: usize = 8;
+
+/// A small unlabeled pattern graph.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Pattern {
+    n: usize,
+    /// `adj[i]` has bit `j` set iff edge (i, j) is present (black).
+    adj: [u8; MAX_PATTERN],
+    /// Human-readable name ("4-clique", "diamond", ...).
+    pub name: String,
+}
+
+impl Pattern {
+    /// Build from an edge list.
+    pub fn new(n: usize, edges: &[(usize, usize)], name: &str) -> Self {
+        assert!(n >= 1 && n <= MAX_PATTERN);
+        let mut adj = [0u8; MAX_PATTERN];
+        for &(a, b) in edges {
+            assert!(a < n && b < n && a != b, "bad pattern edge ({a},{b})");
+            adj[a] |= 1 << b;
+            adj[b] |= 1 << a;
+        }
+        Pattern {
+            n,
+            adj,
+            name: name.to_string(),
+        }
+    }
+
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        self.adj[a] & (1 << b) != 0
+    }
+
+    /// Degree of pattern vertex `v`.
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.adj[v].count_ones() as usize
+    }
+
+    /// Number of edges.
+    pub fn num_edges(&self) -> usize {
+        (0..self.n).map(|v| self.degree(v)).sum::<usize>() / 2
+    }
+
+    /// Edge list (a < b).
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut es = Vec::new();
+        for a in 0..self.n {
+            for b in (a + 1)..self.n {
+                if self.has_edge(a, b) {
+                    es.push((a, b));
+                }
+            }
+        }
+        es
+    }
+
+    /// Is the pattern connected? (Patterns must be; disconnected templates
+    /// make the nested-loop construction unsound.)
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return false;
+        }
+        let mut seen: u8 = 1;
+        let mut frontier: u8 = 1;
+        while frontier != 0 {
+            let mut next: u8 = 0;
+            let mut f = frontier;
+            while f != 0 {
+                let v = f.trailing_zeros() as usize;
+                f &= f - 1;
+                next |= self.adj[v] & !seen;
+            }
+            seen |= next;
+            frontier = next;
+        }
+        seen.count_ones() as usize == self.n
+    }
+
+    /// Apply a vertex permutation: `perm[old] = new`. Returns the
+    /// relabeled pattern.
+    pub fn permute(&self, perm: &[usize]) -> Pattern {
+        assert_eq!(perm.len(), self.n);
+        let mut edges = Vec::new();
+        for (a, b) in self.edges() {
+            edges.push((perm[a], perm[b]));
+        }
+        Pattern::new(self.n, &edges, &self.name)
+    }
+
+    /// All automorphisms, as permutations `perm[v] = image of v`.
+    /// Brute force over n! permutations — n ≤ 8 keeps this trivial, and it
+    /// runs once per pattern at plan time.
+    pub fn automorphisms(&self) -> Vec<Vec<usize>> {
+        let mut result = Vec::new();
+        let mut perm: Vec<usize> = (0..self.n).collect();
+        permute_all(&mut perm, 0, &mut |p| {
+            if self.is_automorphism(p) {
+                result.push(p.to_vec());
+            }
+        });
+        result
+    }
+
+    fn is_automorphism(&self, perm: &[usize]) -> bool {
+        for a in 0..self.n {
+            for b in (a + 1)..self.n {
+                if self.has_edge(a, b) != self.has_edge(perm[a], perm[b]) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Canonical form: the lexicographically-smallest upper-triangle
+    /// adjacency bitstring over all permutations. Two patterns are
+    /// isomorphic iff their canonical forms are equal.
+    pub fn canonical_code(&self) -> u64 {
+        let mut best = u64::MAX;
+        let mut perm: Vec<usize> = (0..self.n).collect();
+        permute_all(&mut perm, 0, &mut |p| {
+            let mut code: u64 = 0;
+            let mut bit = 0;
+            for a in 0..self.n {
+                for b in (a + 1)..self.n {
+                    if self.has_edge(p[a], p[b]) {
+                        code |= 1 << bit;
+                    }
+                    bit += 1;
+                }
+            }
+            best = best.min(code);
+        });
+        best
+    }
+
+    pub fn is_isomorphic(&self, other: &Pattern) -> bool {
+        self.n == other.n && self.canonical_code() == other.canonical_code()
+    }
+}
+
+fn permute_all(perm: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+    if k == perm.len() {
+        f(perm);
+        return;
+    }
+    for i in k..perm.len() {
+        perm.swap(k, i);
+        permute_all(perm, k + 1, f);
+        perm.swap(k, i);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Named patterns used in the paper's evaluation (Fig. 1).
+// ---------------------------------------------------------------------------
+
+/// k-clique (3-CC, 4-CC, 5-CC in the paper).
+pub fn clique(k: usize) -> Pattern {
+    let mut edges = Vec::new();
+    for a in 0..k {
+        for b in (a + 1)..k {
+            edges.push((a, b));
+        }
+    }
+    Pattern::new(k, &edges, &format!("{k}-clique"))
+}
+
+/// Wedge (3-path): the non-triangle 3-motif.
+pub fn wedge() -> Pattern {
+    Pattern::new(3, &[(0, 1), (0, 2)], "wedge")
+}
+
+/// 4-cycle (4-CL).
+pub fn four_cycle() -> Pattern {
+    Pattern::new(4, &[(0, 1), (1, 2), (2, 3), (3, 0)], "4-cycle")
+}
+
+/// Diamond (4-DI): K4 minus one edge.
+pub fn diamond() -> Pattern {
+    Pattern::new(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (2, 3)], "diamond")
+}
+
+/// Tailed triangle (used in motif census examples).
+pub fn tailed_triangle() -> Pattern {
+    Pattern::new(4, &[(0, 1), (0, 2), (1, 2), (2, 3)], "tailed-triangle")
+}
+
+/// 4-path.
+pub fn four_path() -> Pattern {
+    Pattern::new(4, &[(0, 1), (1, 2), (2, 3)], "4-path")
+}
+
+/// 4-star.
+pub fn four_star() -> Pattern {
+    Pattern::new(4, &[(0, 1), (0, 2), (0, 3)], "4-star")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clique_basics() {
+        let k4 = clique(4);
+        assert_eq!(k4.size(), 4);
+        assert_eq!(k4.num_edges(), 6);
+        assert!(k4.is_connected());
+        assert_eq!(k4.automorphisms().len(), 24); // S4
+    }
+
+    #[test]
+    fn wedge_automorphisms() {
+        // wedge 1-0-2: swap of the two leaves
+        assert_eq!(wedge().automorphisms().len(), 2);
+    }
+
+    #[test]
+    fn cycle_automorphisms() {
+        // dihedral group D4 has 8 elements
+        assert_eq!(four_cycle().automorphisms().len(), 8);
+    }
+
+    #[test]
+    fn diamond_automorphisms() {
+        // diamond: swap the two degree-3 vertices x swap the two degree-2 = 4
+        assert_eq!(diamond().automorphisms().len(), 4);
+    }
+
+    #[test]
+    fn isomorphism_detects_relabels() {
+        let a = Pattern::new(4, &[(0, 1), (1, 2), (2, 3), (3, 0)], "c4");
+        let b = Pattern::new(4, &[(0, 2), (2, 1), (1, 3), (3, 0)], "c4-relabel");
+        assert!(a.is_isomorphic(&b));
+        assert!(!a.is_isomorphic(&diamond()));
+    }
+
+    #[test]
+    fn permute_preserves_isomorphism() {
+        let d = diamond();
+        let p = d.permute(&[2, 0, 3, 1]);
+        assert!(d.is_isomorphic(&p));
+    }
+
+    #[test]
+    fn connectivity() {
+        assert!(clique(5).is_connected());
+        let disconnected = Pattern::new(4, &[(0, 1), (2, 3)], "2k2");
+        assert!(!disconnected.is_connected());
+    }
+}

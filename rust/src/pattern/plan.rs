@@ -1,0 +1,296 @@
+//! Pattern-enumeration plans — the AutoMine/GraphPi construction of §2.1.2
+//! (Fig. 2).
+//!
+//! A plan reorders the pattern's vertices into loop levels and records, for
+//! each level, which earlier levels' neighbor sets are intersected (black
+//! incoming edges), which are subtracted (red incoming edges — induced
+//! matching), and the symmetry-breaking restrictions that make each
+//! subgraph counted exactly once.
+//!
+//! Restrictions are generated with a stabilizer chain over the pattern's
+//! automorphism group, using the *max-canonical* convention `f(w) < f(v)`
+//! for orbit-mates `w > v` in level order. That makes every restriction an
+//! **upper bound** at the later level — exactly the `v_x < th` predicate
+//! the paper's in-bank access filter executes (§4.2), and a prefix of the
+//! ascending-sorted neighbor list.
+
+use super::pattern::{clique, diamond, four_cycle, wedge, Pattern};
+use super::motif::connected_motifs;
+
+/// Per-level enumeration recipe. Level indices refer to loop depth (level
+/// 0 is the root-vertex loop).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LevelPlan {
+    /// Earlier levels whose neighbor sets are intersected (black edges).
+    pub intersect: Vec<usize>,
+    /// Earlier levels whose neighbor sets are subtracted (red edges).
+    pub subtract: Vec<usize>,
+    /// Upper-bound restrictions: candidate id must be `< f(level)` for each
+    /// listed earlier level. The executor uses `min` of these as the filter
+    /// threshold `th` with `cmp = '<'`.
+    pub upper: Vec<usize>,
+}
+
+/// A complete enumeration plan for one pattern.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// The pattern with vertices relabeled so vertex `i` is loop level `i`.
+    pub pattern: Pattern,
+    /// One entry per level; `levels[0]` is empty (root loop).
+    pub levels: Vec<LevelPlan>,
+    /// |Aut(pattern)| — used by the validation path (unrestricted ordered
+    /// count must equal restricted count × aut_count).
+    pub aut_count: u64,
+    /// Whether red (absent) edges are enforced — induced matching. The
+    /// paper's AutoMine base algorithm is induced; non-induced is kept as
+    /// an ablation knob.
+    pub induced: bool,
+}
+
+impl Plan {
+    /// Build the plan for `pattern` with the degree-greedy connected order.
+    pub fn build(pattern: &Pattern) -> Plan {
+        Self::build_with(pattern, true)
+    }
+
+    /// Build with explicit induced/non-induced semantics.
+    pub fn build_with(pattern: &Pattern, induced: bool) -> Plan {
+        assert!(pattern.is_connected(), "plan requires a connected pattern");
+        let order = connected_order(pattern);
+        // perm[old] = level
+        let mut perm = vec![0usize; pattern.size()];
+        for (level, &old) in order.iter().enumerate() {
+            perm[old] = level;
+        }
+        let reordered = pattern.permute(&perm);
+
+        let n = reordered.size();
+        let mut levels = vec![LevelPlan::default(); n];
+        for j in 1..n {
+            for i in 0..j {
+                if reordered.has_edge(i, j) {
+                    levels[j].intersect.push(i);
+                } else if induced {
+                    levels[j].subtract.push(i);
+                }
+            }
+            assert!(
+                !levels[j].intersect.is_empty(),
+                "connected order must give every level a black predecessor"
+            );
+        }
+
+        // Symmetry breaking via stabilizer chain (max-canonical).
+        let mut auts = reordered.automorphisms();
+        let aut_count = auts.len() as u64;
+        for v in 0..n {
+            let mut orbit: Vec<usize> = auts.iter().map(|a| a[v]).collect();
+            orbit.sort_unstable();
+            orbit.dedup();
+            for &w in &orbit {
+                if w != v {
+                    debug_assert!(w > v, "orbit under stabilizer must be >= v");
+                    // restriction f(w) < f(v): upper bound at level w.
+                    levels[w].upper.push(v);
+                }
+            }
+            auts.retain(|a| a[v] == v);
+        }
+
+        Plan {
+            pattern: reordered,
+            levels,
+            aut_count,
+            induced,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.pattern.size()
+    }
+}
+
+/// Pick a loop order: first the max-degree vertex, then greedily the vertex
+/// with the most black edges into the chosen set (ties: higher pattern
+/// degree, then lower id). Guarantees every non-root level has a black
+/// predecessor when the pattern is connected.
+fn connected_order(p: &Pattern) -> Vec<usize> {
+    let n = p.size();
+    let first = (0..n).max_by_key(|&v| (p.degree(v), usize::MAX - v)).unwrap();
+    let mut order = vec![first];
+    let mut chosen = vec![false; n];
+    chosen[first] = true;
+    while order.len() < n {
+        let next = (0..n)
+            .filter(|&v| !chosen[v])
+            .max_by_key(|&v| {
+                let black = order.iter().filter(|&&u| p.has_edge(u, v)).count();
+                (black.min(1), black, p.degree(v), usize::MAX - v)
+            })
+            .unwrap();
+        let connected = order.iter().any(|&u| p.has_edge(u, next));
+        assert!(connected, "pattern must be connected");
+        chosen[next] = true;
+        order.push(next);
+    }
+    order
+}
+
+// ---------------------------------------------------------------------------
+// The paper's applications (§5): 3-MC, 3/4/5-CC, 4-DI, 4-CL.
+// ---------------------------------------------------------------------------
+
+/// A GPMI application = a set of patterns whose embeddings are counted.
+#[derive(Clone, Debug)]
+pub struct Application {
+    /// Paper abbreviation, e.g. "4-CC".
+    pub name: &'static str,
+    pub patterns: Vec<Pattern>,
+}
+
+impl Application {
+    pub fn plans(&self) -> Vec<Plan> {
+        self.patterns.iter().map(Plan::build).collect()
+    }
+}
+
+/// Look up a paper application by its abbreviation (case-insensitive;
+/// accepts "4-CC" or "4cc").
+pub fn application(name: &str) -> Option<Application> {
+    let norm: String = name
+        .chars()
+        .filter(|c| c.is_ascii_alphanumeric())
+        .collect::<String>()
+        .to_ascii_lowercase();
+    let app = match norm.as_str() {
+        "3mc" => Application {
+            name: "3-MC",
+            patterns: vec![wedge(), clique(3)],
+        },
+        "4mc" => Application {
+            name: "4-MC",
+            patterns: connected_motifs(4),
+        },
+        "3cc" => Application {
+            name: "3-CC",
+            patterns: vec![clique(3)],
+        },
+        "4cc" => Application {
+            name: "4-CC",
+            patterns: vec![clique(4)],
+        },
+        "5cc" => Application {
+            name: "5-CC",
+            patterns: vec![clique(5)],
+        },
+        "4di" => Application {
+            name: "4-DI",
+            patterns: vec![diamond()],
+        },
+        "4cl" => Application {
+            name: "4-CL",
+            patterns: vec![four_cycle()],
+        },
+        _ => return None,
+    };
+    Some(app)
+}
+
+/// The six applications evaluated in the paper, in Table 5 order.
+pub fn paper_applications() -> Vec<Application> {
+    ["3-CC", "4-CC", "5-CC", "3-MC", "4-DI", "4-CL"]
+        .iter()
+        .map(|n| application(n).unwrap())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clique_plan_shape() {
+        let plan = Plan::build(&clique(4));
+        assert_eq!(plan.size(), 4);
+        assert_eq!(plan.aut_count, 24);
+        // level j intersects all earlier levels, subtracts none
+        for j in 1..4 {
+            assert_eq!(plan.levels[j].intersect, (0..j).collect::<Vec<_>>());
+            assert!(plan.levels[j].subtract.is_empty());
+            // full symmetry: each level upper-bounded by its predecessor(s)
+            assert!(plan.levels[j].upper.contains(&(j - 1)));
+        }
+    }
+
+    #[test]
+    fn clique_restrictions_form_total_order() {
+        // product of orbit sizes must equal |Aut| = k!
+        let plan = Plan::build(&clique(5));
+        let total_restrictions: usize = plan.levels.iter().map(|l| l.upper.len()).sum();
+        // stabilizer chain on K5: orbits 5,4,3,2 → 4+3+2+1 = 10 pairs
+        assert_eq!(total_restrictions, 10);
+    }
+
+    #[test]
+    fn wedge_plan_has_subtraction() {
+        let plan = Plan::build(&wedge());
+        // order: center first (degree 2), then the two leaves.
+        assert_eq!(plan.levels[1].intersect, vec![0]);
+        // induced: leaf 2 must NOT be adjacent to leaf 1
+        assert_eq!(plan.levels[2].intersect, vec![0]);
+        assert_eq!(plan.levels[2].subtract, vec![1]);
+        // leaves are orbit-mates: f(2) < f(1)
+        assert_eq!(plan.levels[2].upper, vec![1]);
+        assert_eq!(plan.aut_count, 2);
+    }
+
+    #[test]
+    fn non_induced_plan_skips_subtraction() {
+        let plan = Plan::build_with(&wedge(), false);
+        assert!(plan.levels[2].subtract.is_empty());
+    }
+
+    #[test]
+    fn diamond_plan() {
+        let plan = Plan::build(&diamond());
+        assert_eq!(plan.aut_count, 4);
+        // every level needs a black predecessor
+        for j in 1..4 {
+            assert!(!plan.levels[j].intersect.is_empty());
+        }
+    }
+
+    #[test]
+    fn four_cycle_plan() {
+        let plan = Plan::build(&four_cycle());
+        assert_eq!(plan.aut_count, 8);
+        for j in 1..4 {
+            assert!(!plan.levels[j].intersect.is_empty());
+        }
+        // induced 4-cycle: two red (absent chord) constraints in total
+        let subtractions: usize = plan.levels.iter().map(|l| l.subtract.len()).sum();
+        assert_eq!(subtractions, 2);
+    }
+
+    #[test]
+    fn application_lookup() {
+        assert_eq!(application("4-CC").unwrap().patterns.len(), 1);
+        assert_eq!(application("3mc").unwrap().patterns.len(), 2);
+        assert_eq!(application("4MC").unwrap().patterns.len(), 6);
+        assert!(application("9zz").is_none());
+        assert_eq!(paper_applications().len(), 6);
+    }
+
+    #[test]
+    fn restrictions_are_upper_bounds_only() {
+        for app in paper_applications() {
+            for plan in app.plans() {
+                for (j, lvl) in plan.levels.iter().enumerate() {
+                    for &u in &lvl.upper {
+                        assert!(u < j, "upper refs must be earlier levels");
+                    }
+                }
+            }
+        }
+    }
+}

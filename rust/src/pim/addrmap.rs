@@ -1,0 +1,175 @@
+//! Address mapping (§4.3): how a neighbor list's bytes are distributed
+//! across channels/banks, and how an access is classified relative to the
+//! requesting PIM unit.
+//!
+//! * **Default interleave** (Fig. 6a): consecutive cache lines stripe
+//!   channel-first, then bank. Any list is smeared over the whole stack,
+//!   so a PIM unit sees `banks_per_unit / num_banks` of the bytes as
+//!   near-core, the rest of its channel as intra-channel, and everything
+//!   else (≈ 31/32) as inter-channel — reproducing Table 2's >95% remote
+//!   share.
+//! * **Local-first** (Fig. 6b, PIM-friendly): an allocation lives entirely
+//!   in its owner unit's bank group; classification is by the topological
+//!   distance between requester and owner.
+
+use super::config::PimConfig;
+
+/// Which address mapping the HBM-PIM memory controller uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AddrMap {
+    /// Channel-interleaved (the conventional host-optimized mapping).
+    DefaultInterleave,
+    /// PIM-friendly local-first mapping (§4.3.2).
+    LocalFirst,
+}
+
+/// Access classes of Fig. 3(b).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessClass {
+    NearCore,
+    IntraChannel,
+    InterChannel,
+}
+
+/// Byte split of one access across the three classes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AccessSplit {
+    pub near: u64,
+    pub intra: u64,
+    pub inter: u64,
+}
+
+impl AccessSplit {
+    pub fn total(&self) -> u64 {
+        self.near + self.intra + self.inter
+    }
+
+    /// Dominant class (used for the startup-latency charge).
+    pub fn dominant(&self) -> AccessClass {
+        if self.inter > 0 {
+            AccessClass::InterChannel
+        } else if self.intra > 0 {
+            AccessClass::IntraChannel
+        } else {
+            AccessClass::NearCore
+        }
+    }
+}
+
+/// Split `bytes` of an access by `requester` to a list owned by
+/// `owner` under `map`. `local_copy` forces near-core (the duplication
+/// optimization places a replica in the requester's own bank group).
+pub fn split_access(
+    cfg: &PimConfig,
+    map: AddrMap,
+    owner: usize,
+    requester: usize,
+    bytes: u64,
+    local_copy: bool,
+) -> AccessSplit {
+    if local_copy {
+        return AccessSplit {
+            near: bytes,
+            ..Default::default()
+        };
+    }
+    match map {
+        AddrMap::LocalFirst => {
+            if owner == requester {
+                AccessSplit {
+                    near: bytes,
+                    ..Default::default()
+                }
+            } else if cfg.channel_of(owner) == cfg.channel_of(requester) {
+                AccessSplit {
+                    intra: bytes,
+                    ..Default::default()
+                }
+            } else {
+                AccessSplit {
+                    inter: bytes,
+                    ..Default::default()
+                }
+            }
+        }
+        AddrMap::DefaultInterleave => {
+            // Striped over all banks: the requester's own bank group holds
+            // banks_per_unit/num_banks of the bytes; the rest of its channel
+            // (banks_per_channel - banks_per_unit)/num_banks; remainder is
+            // inter-channel.
+            let nb = cfg.num_banks() as u64;
+            let near = bytes * cfg.banks_per_unit() as u64 / nb;
+            let intra =
+                bytes * (cfg.banks_per_channel - cfg.banks_per_unit()) as u64 / nb;
+            let inter = bytes - near - intra;
+            AccessSplit { near, intra, inter }
+        }
+    }
+}
+
+/// Startup latency (cycles) for an access with the given dominant class.
+pub fn startup_latency(cfg: &PimConfig, class: AccessClass) -> u64 {
+    match class {
+        AccessClass::NearCore => cfg.near_latency,
+        AccessClass::IntraChannel => cfg.intra_latency,
+        AccessClass::InterChannel => cfg.inter_latency,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_first_classes() {
+        let cfg = PimConfig::default();
+        // same unit
+        let s = split_access(&cfg, AddrMap::LocalFirst, 5, 5, 1000, false);
+        assert_eq!(s.near, 1000);
+        assert_eq!(s.dominant(), AccessClass::NearCore);
+        // same channel (units 4..7 are channel 1)
+        let s = split_access(&cfg, AddrMap::LocalFirst, 4, 6, 1000, false);
+        assert_eq!(s.intra, 1000);
+        // different channel
+        let s = split_access(&cfg, AddrMap::LocalFirst, 4, 9, 1000, false);
+        assert_eq!(s.inter, 1000);
+        assert_eq!(s.dominant(), AccessClass::InterChannel);
+    }
+
+    #[test]
+    fn default_interleave_is_mostly_remote() {
+        let cfg = PimConfig::default();
+        let s = split_access(&cfg, AddrMap::DefaultInterleave, 0, 0, 256_000, false);
+        // 2/256 near, 6/256 intra, 248/256 inter
+        assert_eq!(s.near, 2_000);
+        assert_eq!(s.intra, 6_000);
+        assert_eq!(s.inter, 248_000);
+        let frac = s.inter as f64 / s.total() as f64;
+        assert!(frac > 0.95, "inter fraction {frac} should exceed 95%");
+    }
+
+    #[test]
+    fn duplication_forces_near() {
+        let cfg = PimConfig::default();
+        let s = split_access(&cfg, AddrMap::LocalFirst, 4, 100, 512, true);
+        assert_eq!(s.near, 512);
+        assert_eq!(s.total(), 512);
+    }
+
+    #[test]
+    fn split_is_conserving() {
+        let cfg = PimConfig::default();
+        for bytes in [0u64, 1, 7, 63, 64, 1000, 1_000_000] {
+            let s = split_access(&cfg, AddrMap::DefaultInterleave, 3, 77, bytes, false);
+            assert_eq!(s.total(), bytes);
+        }
+    }
+
+    #[test]
+    fn startup_latencies_match_table4() {
+        let cfg = PimConfig::default();
+        assert_eq!(startup_latency(&cfg, AccessClass::NearCore), 10);
+        assert_eq!(startup_latency(&cfg, AccessClass::IntraChannel), 40);
+        assert_eq!(startup_latency(&cfg, AccessClass::InterChannel), 140);
+    }
+}

@@ -1,0 +1,170 @@
+//! Simulated system configuration — Table 4 of the paper.
+//!
+//! All timing is expressed in **memory cycles** of the 1 GHz 3D stack
+//! (1 cycle = 1 ns). The 250 MHz 4-issue PIM cores scan 4 elements per
+//! core cycle, i.e. 1 element per memory cycle, which is how set-operation
+//! compute is charged.
+
+/// HBM-PIM system parameters (defaults = Table 4).
+#[derive(Clone, Debug)]
+pub struct PimConfig {
+    /// Memory channels (32).
+    pub channels: usize,
+    /// PIM units per channel (4) — 128 units total.
+    pub units_per_channel: usize,
+    /// Banks per channel (8) — 2 banks per PIM unit's bank group.
+    pub banks_per_channel: usize,
+    /// Memory clock in GHz (1.0); seconds = cycles / (ghz * 1e9).
+    pub mem_ghz: f64,
+    /// Near-core (own bank group, on-chip link) access latency, cycles.
+    pub near_latency: u64,
+    /// Intra-channel (other bank group, periphery I/O) latency, cycles.
+    pub intra_latency: u64,
+    /// Inter-channel (remote channel via TSVs) latency, cycles.
+    pub inter_latency: u64,
+    /// Link width: bytes transferred per cycle per link (8 B/cycle).
+    pub link_bytes_per_cycle: u64,
+    /// Workload-stealing overhead, cycles (2 × remote latency = 280, §5).
+    pub steal_overhead: u64,
+    /// In-bank filter throughput: elements scanned per cycle per bank
+    /// group (two 32-bit filters fill the 64-bit TSV → 2 elem/cycle, §4.2).
+    pub filter_elems_per_cycle: u64,
+    /// Row activation + column access overhead charged per neighbor-list
+    /// fetch at the serving bank (≈ tRCD + tCL = 28 cycles).
+    pub row_overhead: u64,
+    /// Total stack capacity in bytes (4 GB).
+    pub capacity_bytes: u64,
+    /// Elements the PIM core scans per memory cycle (4-issue @ 250 MHz
+    /// against a 1 GHz memory clock ⇒ 1).
+    pub scan_elems_per_cycle: u64,
+    /// Outstanding-miss overlap: the L1 caches have 16 MSHRs (Table 4), so
+    /// consecutive access startup latencies overlap. Effective startup
+    /// charged per access = latency / mshr_overlap (8 = conservative —
+    /// dependent accesses cannot fully overlap).
+    pub mshr_overlap: u64,
+    /// Per-core L1D capacity (32 KB, Table 4): repeated fetches of hot
+    /// neighbor lists within a task hit in cache.
+    pub l1d_bytes: u64,
+    /// L1 hit latency in memory cycles (4-cycle L1 @250 MHz ⇒ 16 ns; use
+    /// 16 memory cycles).
+    pub l1_hit_latency: u64,
+}
+
+impl Default for PimConfig {
+    fn default() -> Self {
+        PimConfig {
+            channels: 32,
+            units_per_channel: 4,
+            banks_per_channel: 8,
+            mem_ghz: 1.0,
+            near_latency: 10,
+            intra_latency: 40,
+            inter_latency: 140,
+            link_bytes_per_cycle: 8,
+            steal_overhead: 280,
+            filter_elems_per_cycle: 2,
+            row_overhead: 28,
+            capacity_bytes: 4 << 30,
+            scan_elems_per_cycle: 1,
+            mshr_overlap: 8,
+            l1d_bytes: 32 << 10,
+            l1_hit_latency: 16,
+        }
+    }
+}
+
+impl PimConfig {
+    /// Total PIM units (128 by default).
+    #[inline]
+    pub fn num_units(&self) -> usize {
+        self.channels * self.units_per_channel
+    }
+
+    /// Total banks (256 by default).
+    #[inline]
+    pub fn num_banks(&self) -> usize {
+        self.channels * self.banks_per_channel
+    }
+
+    /// Banks in one PIM unit's bank group (2 by default).
+    #[inline]
+    pub fn banks_per_unit(&self) -> usize {
+        self.banks_per_channel / self.units_per_channel
+    }
+
+    /// Channel of a unit.
+    #[inline]
+    pub fn channel_of(&self, unit: usize) -> usize {
+        unit / self.units_per_channel
+    }
+
+    /// Per-unit memory capacity (bank-group share of the stack).
+    #[inline]
+    pub fn capacity_per_unit(&self) -> u64 {
+        self.capacity_bytes / self.num_units() as u64
+    }
+
+    /// Convert memory cycles to seconds.
+    #[inline]
+    pub fn cycles_to_seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.mem_ghz * 1e9)
+    }
+
+    /// §4.3.2 round-robin unit sequence: consecutive allocations go to
+    /// different channels first, then to different bank groups within a
+    /// channel ("first assign PIM unit ID to different channels and then
+    /// to different bank groups in the same channel").
+    #[inline]
+    pub fn round_robin_unit(&self, i: usize) -> usize {
+        let ch = i % self.channels;
+        let slot = (i / self.channels) % self.units_per_channel;
+        ch * self.units_per_channel + slot
+    }
+
+    /// A scaled-down configuration for fast tests (8 units, 4 channels).
+    pub fn tiny() -> Self {
+        PimConfig {
+            channels: 4,
+            units_per_channel: 2,
+            banks_per_channel: 4,
+            capacity_bytes: 64 << 20,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table4() {
+        let c = PimConfig::default();
+        assert_eq!(c.num_units(), 128);
+        assert_eq!(c.num_banks(), 256);
+        assert_eq!(c.banks_per_unit(), 2);
+        assert_eq!(c.steal_overhead, 2 * c.inter_latency);
+        assert_eq!(c.capacity_per_unit(), 32 << 20);
+        assert!((c.cycles_to_seconds(1_000_000_000) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_robin_spreads_channels_first() {
+        let c = PimConfig::default();
+        // consecutive ids land in consecutive channels
+        assert_eq!(c.channel_of(c.round_robin_unit(0)), 0);
+        assert_eq!(c.channel_of(c.round_robin_unit(1)), 1);
+        assert_eq!(c.channel_of(c.round_robin_unit(31)), 31);
+        // wrap: 32nd goes back to channel 0, next bank group
+        let u32nd = c.round_robin_unit(32);
+        assert_eq!(c.channel_of(u32nd), 0);
+        assert_ne!(u32nd, c.round_robin_unit(0));
+        // the full period covers every unit exactly once
+        let mut seen = vec![false; c.num_units()];
+        for i in 0..c.num_units() {
+            let u = c.round_robin_unit(i);
+            assert!(!seen[u], "unit {u} assigned twice");
+            seen[u] = true;
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! The HBM-PIM architecture simulator: configuration (Table 4), address
+//! mappings (§4.3), the in-bank access filter (§4.2), graph placement +
+//! duplication (Algorithms 1–2), the workload-stealing scheduler (§4.4),
+//! and the two-phase simulation driver.
+
+pub mod addrmap;
+pub mod config;
+pub mod filter;
+pub mod placement;
+pub mod sim;
+pub mod stealing;
+
+pub use addrmap::{AccessClass, AddrMap};
+pub use config::PimConfig;
+pub use placement::Placement;
+pub use sim::{simulate_app, simulate_plan, AccessStats, SimOptions, SimResult};

@@ -1,0 +1,154 @@
+//! Graph placement over PIM units: round-robin neighbor-list allocation
+//! (Algorithm 1) and the selective vertex-duplication boundary
+//! (Algorithm 2).
+
+use super::config::PimConfig;
+use crate::graph::{CsrGraph, VertexId};
+
+/// Where every vertex's neighbor list lives, and (optionally) how far each
+/// unit's duplicated hot prefix extends.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// `owner[v]` = PIM unit whose bank group stores `N(v)`.
+    pub owner: Vec<u32>,
+    /// Bytes of neighbor lists owned by each unit.
+    pub owned_bytes: Vec<u64>,
+    /// Per-unit duplication boundary `v_b` (Algorithm 2): vertices
+    /// `v < v_b[u]` have a replica in unit `u`'s bank group. All zeros when
+    /// duplication is disabled.
+    pub v_b: Vec<VertexId>,
+}
+
+impl Placement {
+    /// Round-robin placement over the §4.3.2 channel-major unit sequence
+    /// (Algorithm 1 lines 2–6), without duplication.
+    pub fn round_robin(g: &CsrGraph, cfg: &PimConfig) -> Placement {
+        let units = cfg.num_units();
+        let n = g.num_vertices();
+        let mut owner = vec![0u32; n];
+        let mut owned_bytes = vec![0u64; units];
+        for v in 0..n {
+            let u = cfg.round_robin_unit(v) as u32;
+            owner[v] = u;
+            owned_bytes[u as usize] += g.neighbor_bytes(v as VertexId);
+        }
+        Placement {
+            owner,
+            owned_bytes,
+            v_b: vec![0; units],
+        }
+    }
+
+    /// Apply Algorithm 2: fill each unit's remaining capacity with the
+    /// highest-degree vertices' neighbor lists (ids are degree-sorted, so
+    /// the hot set is the prefix). `capacity_per_unit` defaults to the
+    /// config's bank-group share; tests and scaled benches may override.
+    pub fn with_duplication(
+        mut self,
+        g: &CsrGraph,
+        cfg: &PimConfig,
+        capacity_per_unit: Option<u64>,
+    ) -> Placement {
+        let cap = capacity_per_unit.unwrap_or_else(|| cfg.capacity_per_unit());
+        let n = g.num_vertices() as VertexId;
+        for u in 0..cfg.num_units() {
+            let free = cap.saturating_sub(self.owned_bytes[u]);
+            let mut used = 0u64;
+            let mut v_b: VertexId = 0;
+            // Algorithm 2: greedily take vertices 0, 1, 2, ... while they fit.
+            while v_b < n {
+                let sz = g.neighbor_bytes(v_b);
+                if used + sz <= free {
+                    used += sz;
+                    v_b += 1;
+                } else {
+                    break;
+                }
+            }
+            self.v_b[u] = v_b;
+        }
+        self
+    }
+
+    /// Is `v`'s list near-core for `unit` (owned or duplicated)?
+    #[inline]
+    pub fn is_local(&self, unit: usize, v: VertexId) -> bool {
+        self.owner[v as usize] as usize == unit || v < self.v_b[unit]
+    }
+
+    /// Fraction of vertices duplicated everywhere (min over units).
+    pub fn duplication_fraction(&self, n: usize) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        let min_vb = self.v_b.iter().copied().min().unwrap_or(0);
+        min_vb as f64 / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::graph::sort_by_degree_desc;
+
+    #[test]
+    fn round_robin_spreads_ownership() {
+        let cfg = PimConfig::tiny(); // 8 units
+        let g = gen::erdos_renyi(800, 2400, 3);
+        let p = Placement::round_robin(&g, &cfg);
+        // each unit owns 100 vertices
+        let mut counts = vec![0usize; cfg.num_units()];
+        for &o in &p.owner {
+            counts[o as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 100));
+        let total: u64 = p.owned_bytes.iter().sum();
+        assert_eq!(total, g.col_idx.len() as u64 * 4);
+    }
+
+    #[test]
+    fn duplication_full_for_small_graph() {
+        let cfg = PimConfig::tiny();
+        let g = gen::erdos_renyi(500, 1500, 4);
+        let p = Placement::round_robin(&g, &cfg).with_duplication(&g, &cfg, None);
+        // 64MB/8 units >> graph size → everything duplicates
+        assert!(p.v_b.iter().all(|&vb| vb == 500));
+        assert!((p.duplication_fraction(500) - 1.0).abs() < 1e-12);
+        assert!(p.is_local(3, 499));
+    }
+
+    #[test]
+    fn duplication_partial_when_capacity_tight() {
+        let cfg = PimConfig::tiny();
+        let raw = gen::power_law(2_000, 10_000, 300, 8);
+        let g = sort_by_degree_desc(&raw).graph;
+        let total = g.col_idx.len() as u64 * 4;
+        // capacity ≈ own share + 10% of graph for replicas
+        let cap = total / cfg.num_units() as u64 + total / 10;
+        let p = Placement::round_robin(&g, &cfg).with_duplication(&g, &cfg, Some(cap));
+        for u in 0..cfg.num_units() {
+            let vb = p.v_b[u];
+            assert!(vb > 0, "unit {u} should duplicate something");
+            assert!((vb as usize) < g.num_vertices(), "unit {u} should not fit all");
+            // boundary is maximal: the next vertex must not fit
+            let used: u64 = (0..vb).map(|v| g.neighbor_bytes(v)).sum();
+            let free = cap - p.owned_bytes[u];
+            assert!(used <= free);
+            assert!(used + g.neighbor_bytes(vb) > free);
+        }
+        // hot prefix duplicated ⇒ local for everyone
+        assert!(p.is_local(0, 0));
+        assert!(p.is_local(7, 0));
+    }
+
+    #[test]
+    fn is_local_respects_ownership() {
+        let cfg = PimConfig::tiny();
+        let g = gen::erdos_renyi(80, 200, 5);
+        let p = Placement::round_robin(&g, &cfg);
+        for v in 0..80u32 {
+            assert!(p.is_local(p.owner[v as usize] as usize, v));
+        }
+    }
+}

@@ -1,0 +1,377 @@
+//! The PIM-side workload-stealing scheduler (§4.4).
+//!
+//! Discrete-event simulation of the paper's protocol:
+//!   * each PIM unit executes the pieces in its Schedule Table in order;
+//!   * an idle unit (empty table) enters the stealing state (10B), scans
+//!     its own channel's scheduler for a unit in state 01B, then moves to
+//!     the next channel's scheduler, and so on (§4.4.3 "Find stealing
+//!     target");
+//!   * a successful steal takes one pending piece from the victim's
+//!     schedule table (the level-0 index steal of §4.4.4), or — when the
+//!     victim has no pending pieces — splits the victim's *in-progress*
+//!     piece at level-1 chunk granularity (the deeper-level index steal);
+//!   * every steal charges `steal_overhead` cycles to both thief and
+//!     victim (the victim suspends, runs Steal Source Code, resumes);
+//!   * a unit that finds no stealable work anywhere terminates (state 00B).
+//!
+//! The simulator is deterministic: ties are broken by unit id, and the
+//! event heap orders by (time, unit, sequence).
+
+use super::config::PimConfig;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// A schedulable piece of work. `chunks` is the number of level-1 loop
+/// iterations it contains — the granularity at which an in-progress piece
+/// can be split by a thief.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Piece {
+    pub cycles: u64,
+    pub chunks: u64,
+}
+
+/// Outcome of scheduling.
+#[derive(Clone, Debug)]
+pub struct ScheduleOutcome {
+    /// Completion time (max over units).
+    pub makespan: u64,
+    /// Busy cycles per unit (work + steal overheads).
+    pub unit_busy: Vec<u64>,
+    /// Successful steals.
+    pub steals: u64,
+    /// Steal attempts that found no work (the unit then terminated).
+    pub failed_steals: u64,
+}
+
+struct UnitState {
+    queue: VecDeque<Piece>,
+    /// (finish_time, executed_cycles_including_overhead, remaining_chunks)
+    current: Option<Current>,
+    busy: u64,
+    terminated: bool,
+    version: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Current {
+    finish: u64,
+    exec: u64,
+    chunks: u64,
+}
+
+/// Run the schedule. `queues[u]` is unit `u`'s initial Schedule Table.
+pub fn schedule(cfg: &PimConfig, queues: Vec<VecDeque<Piece>>, stealing: bool) -> ScheduleOutcome {
+    let n = queues.len();
+    assert_eq!(n, cfg.num_units());
+    let mut units: Vec<UnitState> = queues
+        .into_iter()
+        .map(|queue| UnitState {
+            queue,
+            current: None,
+            busy: 0,
+            terminated: false,
+            version: 0,
+        })
+        .collect();
+
+    // Event heap: Reverse((time, unit, version)).
+    let mut heap: BinaryHeap<Reverse<(u64, usize, u64)>> = BinaryHeap::new();
+    for u in 0..n {
+        start_next(&mut units[u], 0);
+        let v = units[u].version;
+        heap.push(Reverse((event_time(&units[u], 0), u, v)));
+    }
+
+    let mut makespan = 0u64;
+    let mut steals = 0u64;
+    let mut failed = 0u64;
+
+    while let Some(Reverse((t, u, ver))) = heap.pop() {
+        if units[u].version != ver || units[u].terminated {
+            continue; // stale event (unit was re-scheduled by a steal)
+        }
+        makespan = makespan.max(t);
+        // Complete the current piece, if any.
+        if let Some(cur) = units[u].current.take() {
+            debug_assert_eq!(cur.finish, t);
+            units[u].busy += cur.exec;
+        }
+        // Start the next queued piece.
+        if start_next(&mut units[u], t) {
+            units[u].version += 1;
+            let v = units[u].version;
+            heap.push(Reverse((event_time(&units[u], t), u, v)));
+            continue;
+        }
+        if !stealing {
+            units[u].terminated = true;
+            continue;
+        }
+        // Steal: scan own channel first, then subsequent channels (§4.4.3).
+        match find_victim(cfg, &units, u, t) {
+            Some(victim) => {
+                steals += 1;
+                let overhead = cfg.steal_overhead;
+                let mut stolen = take_work(&mut units, victim, t, overhead);
+                // Thief pays overhead, then executes the first stolen
+                // piece; any remainder lands in its schedule table.
+                let first = stolen.remove(0);
+                let thief = &mut units[u];
+                thief.queue.extend(stolen);
+                thief.current = Some(Current {
+                    finish: t + overhead + first.cycles,
+                    exec: overhead + first.cycles,
+                    chunks: first.chunks,
+                });
+                thief.version += 1;
+                let v = thief.version;
+                heap.push(Reverse((t + overhead + first.cycles, u, v)));
+                // Victim's current piece (if running) was perturbed:
+                // refresh its event.
+                let vic = &units[victim];
+                if vic.current.is_some() {
+                    let v = vic.version;
+                    let ft = vic.current.as_ref().unwrap().finish;
+                    heap.push(Reverse((ft, victim, v)));
+                }
+            }
+            None => {
+                failed += 1;
+                units[u].terminated = true;
+            }
+        }
+    }
+
+    ScheduleOutcome {
+        makespan,
+        unit_busy: units.iter().map(|s| s.busy).collect(),
+        steals,
+        failed_steals: failed,
+    }
+}
+
+fn event_time(s: &UnitState, now: u64) -> u64 {
+    s.current.as_ref().map(|c| c.finish).unwrap_or(now)
+}
+
+/// Pop the unit's next queued piece into execution. Returns false if the
+/// queue was empty.
+fn start_next(s: &mut UnitState, now: u64) -> bool {
+    if let Some(p) = s.queue.pop_front() {
+        s.current = Some(Current {
+            finish: now + p.cycles,
+            exec: p.cycles,
+            chunks: p.chunks,
+        });
+        true
+    } else {
+        false
+    }
+}
+
+/// Can `victim` give work to a thief at time `t`? A steal costs
+/// `2 × overhead` (thief wait + victim suspension), so it is only
+/// profitable when the victim's remaining work comfortably exceeds that.
+fn stealable(s: &UnitState, t: u64, overhead: u64) -> bool {
+    if s.terminated {
+        return false;
+    }
+    // Queue steal takes the tail half of the schedule table: profitable
+    // only when that half outweighs the round-trip overhead (prevents
+    // end-game steal storms on nearly-balanced loads).
+    let queued: u64 = s.queue.iter().map(|p| p.cycles).sum();
+    if !s.queue.is_empty() && queued / 2 > 2 * overhead {
+        return true;
+    }
+    if s.queue.is_empty() {
+        if let Some(c) = &s.current {
+            let remaining = c.finish.saturating_sub(t);
+            return c.chunks >= 2 && remaining > 2 * overhead;
+        }
+    }
+    false
+}
+
+/// §4.4.3 scan order: units of the thief's channel (ascending id), then
+/// each subsequent channel cyclically.
+fn find_victim(cfg: &PimConfig, units: &[UnitState], thief: usize, t: u64) -> Option<usize> {
+    let upc = cfg.units_per_channel;
+    let ch = cfg.channel_of(thief);
+    for dc in 0..cfg.channels {
+        let c = (ch + dc) % cfg.channels;
+        for slot in 0..upc {
+            let j = c * upc + slot;
+            if j != thief && stealable(&units[j], t, cfg.steal_overhead) {
+                return Some(j);
+            }
+        }
+    }
+    None
+}
+
+/// Remove work from the victim: the tail half of its schedule table if
+/// non-empty (the §4.4.4 level-0 index steal, taking the farthest
+/// indices), otherwise split the in-progress piece at level-1 chunk
+/// granularity. The victim is charged the steal overhead for suspending
+/// and running Steal Source Code.
+fn take_work(units: &mut [UnitState], victim: usize, t: u64, overhead: u64) -> Vec<Piece> {
+    let vic = &mut units[victim];
+    if !vic.queue.is_empty() {
+        let take = (vic.queue.len() + 1) / 2;
+        let at = vic.queue.len() - take;
+        let stolen: Vec<Piece> = vic.queue.split_off(at).into();
+        // Victim still pays the suspension overhead on its current piece.
+        if let Some(c) = vic.current.as_mut() {
+            c.finish += overhead;
+            c.exec += overhead;
+            vic.version += 1;
+        }
+        return stolen;
+    }
+    let c = vic.current.as_mut().expect("stealable() guaranteed work");
+    let remaining = c.finish - t;
+    let half_chunks = c.chunks / 2;
+    // Cycles proportional to chunks taken (uniform-chunk approximation).
+    let stolen_cycles = remaining * half_chunks / c.chunks;
+    c.finish = c.finish - stolen_cycles + overhead;
+    c.exec = c.exec - stolen_cycles + overhead;
+    c.chunks -= half_chunks;
+    vic.version += 1;
+    vec![Piece {
+        cycles: stolen_cycles,
+        chunks: half_chunks,
+    }]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> PimConfig {
+        PimConfig::tiny() // 8 units, 4 channels
+    }
+
+    fn queues_from(tasks: &[(usize, Piece)], n: usize) -> Vec<VecDeque<Piece>> {
+        let mut q = vec![VecDeque::new(); n];
+        for &(u, p) in tasks {
+            q[u].push_back(p);
+        }
+        q
+    }
+
+    #[test]
+    fn no_steal_makespan_is_max_sum() {
+        let cfg = tiny();
+        let mut q = vec![VecDeque::new(); 8];
+        q[0].extend([Piece { cycles: 100, chunks: 1 }, Piece { cycles: 50, chunks: 1 }]);
+        q[3].push_back(Piece { cycles: 40, chunks: 1 });
+        let out = schedule(&cfg, q, false);
+        assert_eq!(out.makespan, 150);
+        assert_eq!(out.unit_busy[0], 150);
+        assert_eq!(out.unit_busy[3], 40);
+        assert_eq!(out.steals, 0);
+    }
+
+    #[test]
+    fn steal_balances_pending_tasks() {
+        let cfg = tiny();
+        // all 16 equal tasks on unit 0; stealing should spread them.
+        let mut q = vec![VecDeque::new(); 8];
+        for _ in 0..16 {
+            q[0].push_back(Piece { cycles: 10_000, chunks: 1 });
+        }
+        let no = schedule(&cfg, q.clone(), false);
+        let yes = schedule(&cfg, q, true);
+        assert_eq!(no.makespan, 160_000);
+        assert!(yes.steals > 0);
+        assert!(
+            yes.makespan < no.makespan / 3,
+            "steal makespan {} should be far below {}",
+            yes.makespan,
+            no.makespan
+        );
+    }
+
+    #[test]
+    fn split_steals_giant_task() {
+        let cfg = tiny();
+        // one giant divisible task: only splitting can balance it.
+        let q = queues_from(
+            &[(2, Piece { cycles: 800_000, chunks: 1024 })],
+            8,
+        );
+        let out = schedule(&cfg, q, true);
+        assert!(out.steals >= 3, "expected repeated splits, got {}", out.steals);
+        assert!(
+            out.makespan < 500_000,
+            "makespan {} should be well under the serial 800k",
+            out.makespan
+        );
+    }
+
+    #[test]
+    fn indivisible_task_cannot_be_split() {
+        let cfg = tiny();
+        let q = queues_from(&[(0, Piece { cycles: 500_000, chunks: 1 })], 8);
+        let out = schedule(&cfg, q, true);
+        // nothing stealable: all other units fail and terminate, and the
+        // owner itself fails one final steal attempt after finishing.
+        assert_eq!(out.steals, 0);
+        assert_eq!(out.makespan, 500_000);
+        assert_eq!(out.failed_steals as usize, 8);
+    }
+
+    #[test]
+    fn steal_overhead_is_charged() {
+        let cfg = tiny();
+        // two tasks on unit 0: one is stolen; thief pays 280.
+        let mut q = vec![VecDeque::new(); 8];
+        q[0].push_back(Piece { cycles: 100_000, chunks: 1 });
+        q[0].push_back(Piece { cycles: 100_000, chunks: 1 });
+        let out = schedule(&cfg, q, true);
+        assert_eq!(out.steals, 1);
+        // the thief (unit 1: same channel, scanned first) runs 280 + 100k
+        assert_eq!(out.unit_busy[1], 100_000 + cfg.steal_overhead);
+        // victim pays suspension overhead on its running piece
+        assert_eq!(out.unit_busy[0], 100_000 + cfg.steal_overhead);
+        assert_eq!(out.makespan, 100_000 + cfg.steal_overhead);
+    }
+
+    #[test]
+    fn busy_conserves_work_plus_overheads() {
+        let cfg = tiny();
+        let mut q = vec![VecDeque::new(); 8];
+        for i in 0..32 {
+            q[i % 3].push_back(Piece { cycles: 1_000 + i as u64 * 97, chunks: 4 });
+        }
+        let total_work: u64 = q.iter().flatten().map(|p| p.cycles).sum();
+        let out = schedule(&cfg, q, true);
+        let busy: u64 = out.unit_busy.iter().sum();
+        assert_eq!(busy, total_work + 2 * cfg.steal_overhead * out.steals);
+    }
+
+    #[test]
+    fn empty_system_terminates() {
+        let cfg = tiny();
+        let out = schedule(&cfg, vec![VecDeque::new(); 8], true);
+        assert_eq!(out.makespan, 0);
+        assert_eq!(out.steals, 0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = tiny();
+        let mut q = vec![VecDeque::new(); 8];
+        for i in 0..100 {
+            q[i % 8].push_back(Piece {
+                cycles: (i as u64 * 7919) % 5000 + 100,
+                chunks: (i as u64 % 7) + 1,
+            });
+        }
+        let a = schedule(&cfg, q.clone(), true);
+        let b = schedule(&cfg, q, true);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.unit_busy, b.unit_busy);
+        assert_eq!(a.steals, b.steals);
+    }
+}

@@ -1,0 +1,160 @@
+//! Table/figure renderers: fixed-width text tables in the paper's format,
+//! used by the benches and the CLI so every experiment prints rows that
+//! can be compared against the paper side by side.
+
+use crate::util::stats;
+
+/// A simple fixed-width table builder.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with per-column auto width.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                if c > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:>width$}", cell, width = widths[c]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a seconds value the way the paper's tables do.
+pub fn s(x: f64) -> String {
+    stats::sci(x)
+}
+
+/// Format a speedup.
+pub fn x(v: f64) -> String {
+    stats::speedup(v)
+}
+
+/// Format a percentage with two decimals.
+pub fn pct(v: f64) -> String {
+    format!("{:.2}%", v * 100.0)
+}
+
+/// Format a byte count in the paper's human units.
+pub fn bytes(v: u64) -> String {
+    let v = v as f64;
+    if v >= 1e9 {
+        format!("{:.1}GB", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.1}MB", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.1}KB", v / 1e3)
+    } else {
+        format!("{v}B")
+    }
+}
+
+/// Render an ASCII bar chart of per-core load (Fig. 4-style): cores are
+/// sorted descending and bucketed; each line shows the bucket's mean as a
+/// bar scaled to the max.
+pub fn load_bars(title: &str, unit_busy: &[u64], buckets: usize) -> String {
+    let mut sorted: Vec<f64> = unit_busy.iter().map(|&c| c as f64).collect();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let max = sorted.first().copied().unwrap_or(0.0).max(1.0);
+    let per = sorted.len().div_ceil(buckets.max(1)).max(1);
+    let mut out = format!("== {title} ==\n");
+    for (b, chunk) in sorted.chunks(per).enumerate() {
+        let mean = stats::mean(chunk);
+        let width = ((mean / max) * 50.0).round() as usize;
+        out.push_str(&format!(
+            "cores {:>3}-{:<3} |{:<50}| {:.2e}\n",
+            b * per,
+            b * per + chunk.len() - 1,
+            "#".repeat(width),
+            mean
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["Graph", "Time"]);
+        t.row(vec!["CI".into(), "1.00E-3".into()]);
+        t.row(vec!["LongName".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        let lines: Vec<&str> = r.lines().collect();
+        // header + separator + 2 rows + title
+        assert_eq!(lines.len(), 5);
+        // columns right-aligned to the widest cell
+        assert!(lines[1].contains("Graph"));
+        assert!(lines[3].trim_start().starts_with("CI"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(pct(0.9636), "96.36%");
+        assert_eq!(bytes(1_300_000), "1.3MB");
+        assert_eq!(bytes(2_100_000_000), "2.1GB");
+        assert_eq!(bytes(512), "512B");
+        assert_eq!(x(12.739), "12.74x");
+    }
+
+    #[test]
+    fn load_bars_shape() {
+        let busy: Vec<u64> = (0..128).map(|i| (128 - i) * 1000).collect();
+        let s = load_bars("Fig4", &busy, 16);
+        assert_eq!(s.lines().count(), 17); // title + 16 buckets
+        assert!(s.contains("#"));
+    }
+}

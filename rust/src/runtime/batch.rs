@@ -1,0 +1,130 @@
+//! Batched filtered set-operation execution over the AOT artifact — the
+//! Layer-1/2 compute path driven from Rust.
+//!
+//! The artifact (`artifacts/setops.hlo.txt`, built by `make artifacts`)
+//! computes, for a tile of `B` padded sorted list pairs with per-pair
+//! thresholds: the filtered intersection count `|{x ∈ aᵢ ∩ bᵢ : x < thᵢ}|`
+//! and the filtered subtraction count `|{x ∈ aᵢ \ bᵢ : x < thᵢ}|` — the
+//! exact I/S primitives of pattern enumeration, with the paper's in-bank
+//! `(cmp=<, th)` filter fused in. The Rust side pads/chunks arbitrary
+//! request streams into `(B, L)` tiles.
+
+use super::client::{Artifact, Runtime};
+use crate::graph::VertexId;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Padding value for list tails (sorted ascending, so MAX sorts last and
+/// can never satisfy `x < th` with th ≤ i32::MAX).
+pub const PAD: i32 = i32::MAX;
+
+/// One set-op request: sorted lists `a`, `b` and exclusive threshold `th`
+/// (use `u32::MAX as th` ≈ unbounded; values must fit in i32).
+#[derive(Clone, Debug)]
+pub struct SetOpRequest {
+    pub a: Vec<VertexId>,
+    pub b: Vec<VertexId>,
+    pub th: VertexId,
+}
+
+/// Result: (intersection count, subtraction count).
+pub type SetOpCounts = (u32, u32);
+
+/// The compiled batched kernel with its static tile shape.
+pub struct SetOpsKernel {
+    artifact: Artifact,
+    batch: usize,
+    length: usize,
+}
+
+impl SetOpsKernel {
+    /// Tile shape must match what aot.py lowered (its defaults are
+    /// `B=64, L=256`, overridable at build time via env).
+    pub fn load(rt: &Runtime, path: &Path, batch: usize, length: usize) -> Result<Self> {
+        Ok(SetOpsKernel {
+            artifact: rt.load_artifact(path)?,
+            batch,
+            length,
+        })
+    }
+
+    pub fn tile_shape(&self) -> (usize, usize) {
+        (self.batch, self.length)
+    }
+
+    /// Run a stream of requests, chunking into `(B, L)` tiles. Lists
+    /// longer than `L` are rejected (callers chunk or choose a larger
+    /// build-time `L`).
+    pub fn run(&self, requests: &[SetOpRequest]) -> Result<Vec<SetOpCounts>> {
+        let mut out = Vec::with_capacity(requests.len());
+        for chunk in requests.chunks(self.batch) {
+            let counts = self.run_tile(chunk)?;
+            out.extend_from_slice(&counts[..chunk.len()]);
+        }
+        Ok(out)
+    }
+
+    fn run_tile(&self, chunk: &[SetOpRequest]) -> Result<Vec<SetOpCounts>> {
+        let (bsz, len) = (self.batch, self.length);
+        let mut a = vec![PAD; bsz * len];
+        let mut b = vec![PAD; bsz * len];
+        let mut th = vec![0i32; bsz];
+        for (i, req) in chunk.iter().enumerate() {
+            if req.a.len() > len || req.b.len() > len {
+                bail!(
+                    "list length {} exceeds kernel tile L={} — rebuild artifacts with a larger L",
+                    req.a.len().max(req.b.len()),
+                    len
+                );
+            }
+            for (j, &v) in req.a.iter().enumerate() {
+                a[i * len + j] = v as i32;
+            }
+            for (j, &v) in req.b.iter().enumerate() {
+                b[i * len + j] = v as i32;
+            }
+            th[i] = req.th.min(i32::MAX as u32) as i32;
+        }
+        let lit_a = xla::Literal::vec1(&a).reshape(&[bsz as i64, len as i64])?;
+        let lit_b = xla::Literal::vec1(&b).reshape(&[bsz as i64, len as i64])?;
+        let lit_th = xla::Literal::vec1(&th);
+        let outputs = self.artifact.execute(&[lit_a, lit_b, lit_th])?;
+        if outputs.len() != 2 {
+            bail!("setops artifact returned {} outputs, expected 2", outputs.len());
+        }
+        let inter = outputs[0].to_vec::<i32>()?;
+        let sub = outputs[1].to_vec::<i32>()?;
+        Ok(inter
+            .into_iter()
+            .zip(sub)
+            .map(|(i, s)| (i as u32, s as u32))
+            .collect())
+    }
+}
+
+/// Reference counts computed in pure Rust (for cross-checking the
+/// artifact path in tests and the end-to-end example).
+pub fn reference_counts(req: &SetOpRequest) -> SetOpCounts {
+    use crate::exec::setops::{count_intersect, prefix_len};
+    let (inter, _) = count_intersect(&req.a, &req.b, req.th);
+    let total = prefix_len(&req.a, req.th) as u32;
+    (inter as u32, total - inter as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_counts_basics() {
+        let req = SetOpRequest {
+            a: vec![1, 3, 5, 7, 9],
+            b: vec![3, 4, 5, 10],
+            th: 8,
+        };
+        // a∩b under 8 = {3,5}; a\b under 8 = {1,7}
+        assert_eq!(reference_counts(&req), (2, 2));
+        let unbounded = SetOpRequest { th: u32::MAX, ..req };
+        assert_eq!(reference_counts(&unbounded), (2, 3));
+    }
+}

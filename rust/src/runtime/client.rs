@@ -1,0 +1,81 @@
+//! PJRT runtime bridge: load AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust request path.
+//!
+//! Interchange is HLO **text**, not serialized `HloModuleProto` — jax ≥ 0.5
+//! emits 64-bit instruction ids that this image's xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client (CPU plugin) plus artifact loading.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load_artifact(&self, path: &Path) -> Result<Artifact> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Artifact { exe })
+    }
+}
+
+/// A compiled executable (one per model variant; compiled once, executed
+/// many times on the hot path).
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with the given input literals; returns the elements of the
+    /// output tuple (aot.py always lowers with `return_tuple=True`).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// Standard artifact directory (`artifacts/` at the repo root), honoring
+/// `PIMMINER_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("PIMMINER_ARTIFACTS") {
+        return p.into();
+    }
+    // Walk up from CWD looking for an `artifacts/` directory so tests,
+    // benches and examples work from any working directory in the repo.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}
+
+/// True when the AOT artifacts exist (integration tests skip otherwise,
+/// with a loud message — `make artifacts` builds them).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("setops.hlo.txt").exists()
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime: loads the AOT-compiled Layer-1/2 artifacts (HLO text) and
+//! executes them from the Rust coordinator. Python never runs here.
+
+pub mod batch;
+pub mod client;
+
+pub use batch::{reference_counts, SetOpCounts, SetOpRequest, SetOpsKernel, PAD};
+pub use client::{artifacts_available, artifacts_dir, Artifact, Runtime};

@@ -1,0 +1,114 @@
+//! Tiny command-line flag parser (no `clap` offline).
+//!
+//! Supports `--flag value`, `--flag=value`, bare boolean `--flag`, and
+//! positional arguments. Used by the `pimminer` binary and the examples.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an explicit iterator (used by tests).
+    pub fn parse(items: impl IntoIterator<Item = String>) -> Self {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut iter = items.into_iter().peekable();
+        while let Some(item) = iter.next() {
+            if let Some(stripped) = item.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--flag value` unless the next token is another flag.
+                    let takes_value = iter
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if takes_value {
+                        flags.insert(stripped.to_string(), iter.next().unwrap());
+                    } else {
+                        flags.insert(stripped.to_string(), "true".to_string());
+                    }
+                }
+            } else {
+                positional.push(item);
+            }
+        }
+        Args { flags, positional }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_eq_and_space_forms() {
+        let a = parse("--graph=mico --pattern 4cc run");
+        assert_eq!(a.get("graph"), Some("mico"));
+        assert_eq!(a.get("pattern"), Some("4cc"));
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn bare_flag_is_true() {
+        let a = parse("--steal --filter --out x");
+        assert!(a.get_bool("steal"));
+        assert!(a.get_bool("filter"));
+        assert_eq!(a.get("out"), Some("x"));
+    }
+
+    #[test]
+    fn typed_getters_fall_back() {
+        let a = parse("--n 32 --ratio 0.5");
+        assert_eq!(a.get_usize("n", 1), 32);
+        assert_eq!(a.get_f64("ratio", 1.0), 0.5);
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+}

@@ -1,0 +1,9 @@
+//! Infrastructure utilities: RNG, thread pool, CLI parsing, statistics,
+//! property-test driver. Everything here exists because the offline crate
+//! set is limited to `xla` + `anyhow`; see DESIGN.md §4.
+
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threads;

@@ -1,0 +1,66 @@
+//! Seeded property-test driver (no `proptest` offline).
+//!
+//! A property test runs a closure over `cases` independently-seeded RNGs and
+//! reports the failing seed on panic so failures are reproducible with
+//! `PIMMINER_PROP_SEED=<seed>`.
+
+use super::rng::Rng;
+
+/// Number of cases per property: `PIMMINER_PROP_CASES` env override, else 64.
+pub fn default_cases() -> u64 {
+    std::env::var("PIMMINER_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `body` for `cases` seeds derived from `base_seed`. If
+/// `PIMMINER_PROP_SEED` is set, run only that seed (replay mode).
+pub fn check(name: &str, base_seed: u64, cases: u64, body: impl Fn(&mut Rng)) {
+    if let Ok(replay) = std::env::var("PIMMINER_PROP_SEED") {
+        let seed: u64 = replay.parse().expect("PIMMINER_PROP_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        body(&mut rng);
+        return;
+    }
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            body(&mut rng);
+        }));
+        if let Err(panic) = result {
+            eprintln!(
+                "property `{name}` failed at case {case} — replay with PIMMINER_PROP_SEED={seed}"
+            );
+            std::panic::resume_unwind(panic);
+        }
+    }
+}
+
+/// Shorthand: run with `default_cases()` cases.
+pub fn check_default(name: &str, base_seed: u64, body: impl Fn(&mut Rng)) {
+    check(name, base_seed, default_cases(), body);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::sync::atomic::AtomicU64::new(0);
+        check("always-true", 1, 16, |_| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        check("always-false", 2, 4, |_| panic!("nope"));
+    }
+}

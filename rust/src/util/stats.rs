@@ -1,0 +1,122 @@
+//! Small statistics helpers used by the report renderers and benches.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Geometric mean of positive values; 0.0 for empty input. Values <= 0 are
+/// skipped (speedup tables occasionally contain unmeasured cells).
+pub fn geomean(xs: &[f64]) -> f64 {
+    let logs: Vec<f64> = xs.iter().filter(|&&x| x > 0.0).map(|x| x.ln()).collect();
+    if logs.is_empty() {
+        0.0
+    } else {
+        (logs.iter().sum::<f64>() / logs.len() as f64).exp()
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile with linear interpolation; `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Coefficient of variation (stddev / mean) — used as the load-imbalance
+/// summary statistic alongside the paper's max/avg ratio.
+pub fn cv(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        0.0
+    } else {
+        stddev(xs) / m
+    }
+}
+
+/// The paper's load-imbalance metric: max over cores / average over cores
+/// (Table 8's "Exe/Avg").
+pub fn max_over_avg(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        return 0.0;
+    }
+    xs.iter().cloned().fold(0.0f64, f64::max) / m
+}
+
+/// Format seconds in the paper's scientific style (e.g. `3.45E-05`).
+pub fn sci(x: f64) -> String {
+    if x == 0.0 {
+        return "0.00E+00".to_string();
+    }
+    format!("{:.2E}", x)
+}
+
+/// Format a speedup as `12.74x`.
+pub fn speedup(x: f64) -> String {
+    format!("{:.2}x", x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+        assert_eq!(geomean(&[]), 0.0);
+        // non-positive entries skipped
+        assert!((geomean(&[0.0, 10.0]) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_over_avg_detects_imbalance() {
+        assert!((max_over_avg(&[1.0, 1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert!((max_over_avg(&[0.0, 0.0, 0.0, 4.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sci_formats_like_paper() {
+        assert_eq!(sci(3.45e-5), "3.45E-5");
+        assert_eq!(sci(0.0), "0.00E+00");
+    }
+}

@@ -1,0 +1,129 @@
+//! Framework-level integration: `PIMLoadGraph` → device contents →
+//! `PIMPatternCount` → counts/timing, through the public `PimMiner` API,
+//! including the file-DMA path and capacity failure modes.
+
+use pimminer::coordinator::PimMiner;
+use pimminer::exec::cpu::{self, CpuFlavor};
+use pimminer::graph::{gen, io, sort_by_degree_desc, CsrGraph};
+use pimminer::pattern::plan::{application, paper_applications};
+use pimminer::pim::{PimConfig, SimOptions};
+
+fn graph() -> CsrGraph {
+    sort_by_degree_desc(&gen::power_law(1_200, 7_000, 180, 31)).graph
+}
+
+fn tmpdir() -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("pimminer_coord_tests");
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn full_pipeline_counts_match_cpu_for_every_app() {
+    let g = graph();
+    let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    let mut miner = PimMiner::new(PimConfig::default(), SimOptions::all());
+    miner.load_graph(g.clone()).unwrap();
+    miner.verify_device_contents().unwrap();
+    for app in paper_applications() {
+        let expected = cpu::run_application(&g, &app, &roots, CpuFlavor::AutoMineOpt).count;
+        let r = miner.pattern_count(&app, 1.0);
+        assert_eq!(r.count, expected, "{}", app.name);
+        assert!(r.seconds > 0.0);
+    }
+}
+
+#[test]
+fn algorithm1_file_dma_path() {
+    let g = graph();
+    let path = tmpdir().join("alg1.csr");
+    io::write_csr(&g, &path).unwrap();
+    let mut miner = PimMiner::new(PimConfig::default(), SimOptions::all());
+    miner.load_graph_file(&path).unwrap();
+    miner.verify_device_contents().unwrap();
+    let loaded = miner.loaded().unwrap();
+    assert_eq!(loaded.graph, g);
+    // Alg 1 round-robin: vertex v's list owned by the channel-major unit.
+    let cfg = miner.config();
+    for v in 0..g.num_vertices() {
+        assert_eq!(loaded.lists[v].unit, cfg.round_robin_unit(v));
+    }
+}
+
+#[test]
+fn duplication_replicas_hold_hot_prefix() {
+    let cfg = PimConfig::default();
+    let g = graph();
+    let total = g.total_bytes();
+    // tight capacity: partial duplication
+    let opts = SimOptions {
+        filter: true,
+        remap: true,
+        duplication: true,
+        stealing: true,
+        capacity_per_unit: Some(total / cfg.num_units() as u64 + total / 16),
+    };
+    let mut miner = PimMiner::new(cfg, opts);
+    miner.load_graph(g.clone()).unwrap();
+    let loaded = miner.loaded().unwrap();
+    for u in 0..miner.config().num_units() {
+        let vb = loaded.placement.v_b[u];
+        assert!(vb > 0 && (vb as usize) < g.num_vertices(), "unit {u} v_b {vb}");
+        assert_eq!(loaded.replicas[u].len(), vb as usize);
+        // replicas live in unit u (or are the primary when already local)
+        for (v, ptr) in loaded.replicas[u].iter().enumerate() {
+            if loaded.placement.owner[v] as usize != u {
+                assert_eq!(ptr.unit, u, "replica of {v} misplaced");
+            }
+            assert_eq!(
+                miner.device().read(*ptr).unwrap(),
+                g.neighbors(v as u32),
+                "replica contents diverge for {v}"
+            );
+        }
+    }
+}
+
+#[test]
+fn out_of_capacity_is_reported() {
+    let cfg = PimConfig::default();
+    let g = graph();
+    // capacity below the round-robin share: PIMLoadGraph must fail loudly.
+    let opts = SimOptions {
+        capacity_per_unit: Some(16), // 4 words per unit
+        ..SimOptions::BASELINE
+    };
+    let mut miner = PimMiner::new(cfg, opts);
+    assert!(miner.load_graph(g).is_err());
+}
+
+#[test]
+fn options_affect_timing_not_counts() {
+    let g = graph();
+    let app = application("4-DI").unwrap();
+    let mut results = Vec::new();
+    for (name, opts) in SimOptions::ladder() {
+        let mut miner = PimMiner::new(PimConfig::default(), opts);
+        miner.load_graph(g.clone()).unwrap();
+        let r = miner.pattern_count(&app, 1.0);
+        results.push((name, r));
+    }
+    let count0 = results[0].1.count;
+    for (name, r) in &results {
+        assert_eq!(r.count, count0, "{name} changed the count");
+    }
+    // the full ladder must beat the baseline
+    assert!(results[4].1.seconds < results[0].1.seconds);
+}
+
+#[test]
+fn sampled_pattern_count() {
+    let g = graph();
+    let app = application("3-CC").unwrap();
+    let mut miner = PimMiner::new(PimConfig::default(), SimOptions::all());
+    miner.load_graph(g).unwrap();
+    let full = miner.pattern_count(&app, 1.0);
+    let sampled = miner.pattern_count(&app, 0.2);
+    assert!(sampled.count < full.count);
+    assert!(sampled.count > 0);
+}

@@ -1,0 +1,140 @@
+//! Integration: the AOT artifacts (Layer 1/2, built by `make artifacts`)
+//! load and execute through PJRT from Rust, and their numerics agree with
+//! the native `exec::setops` implementation — proving the three layers
+//! compose.
+
+use pimminer::graph::gen;
+use pimminer::runtime::{
+    artifacts_available, artifacts_dir, reference_counts, Runtime, SetOpRequest, SetOpsKernel,
+};
+use pimminer::util::rng::Rng;
+
+const B: usize = 64;
+const L: usize = 256;
+
+fn require_artifacts() -> bool {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts` first");
+        return false;
+    }
+    true
+}
+
+fn load(rt: &Runtime, name: &str) -> SetOpsKernel {
+    SetOpsKernel::load(rt, &artifacts_dir().join(name), B, L).unwrap()
+}
+
+fn random_requests(seed: u64, count: usize, max_len: usize, max_id: u32) -> Vec<SetOpRequest> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            let mk = |rng: &mut Rng| {
+                let n = rng.below_usize(max_len + 1);
+                let mut v: Vec<u32> =
+                    (0..n).map(|_| rng.below(max_id as u64) as u32).collect();
+                v.sort_unstable();
+                v.dedup();
+                v
+            };
+            SetOpRequest {
+                a: mk(&mut rng),
+                b: mk(&mut rng),
+                th: rng.below(max_id as u64 + 1) as u32,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn pallas_artifact_matches_rust_reference() {
+    if !require_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let kernel = load(&rt, "setops.hlo.txt");
+    let reqs = random_requests(42, 200, L, 10_000);
+    let got = kernel.run(&reqs).unwrap();
+    for (i, (req, counts)) in reqs.iter().zip(&got).enumerate() {
+        let expected = reference_counts(req);
+        assert_eq!(*counts, expected, "request {i}");
+    }
+}
+
+#[test]
+fn pallas_and_jnp_artifacts_agree() {
+    if !require_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let pallas = load(&rt, "setops.hlo.txt");
+    let jnp = load(&rt, "model.hlo.txt");
+    let reqs = random_requests(7, 128, L, 1_000);
+    assert_eq!(pallas.run(&reqs).unwrap(), jnp.run(&reqs).unwrap());
+}
+
+#[test]
+fn unbounded_threshold_and_empty_lists() {
+    if !require_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let kernel = load(&rt, "setops.hlo.txt");
+    let reqs = vec![
+        SetOpRequest { a: vec![], b: vec![], th: u32::MAX },
+        SetOpRequest { a: vec![1, 2, 3], b: vec![], th: u32::MAX },
+        SetOpRequest { a: vec![], b: vec![1, 2, 3], th: u32::MAX },
+        SetOpRequest { a: (0..L as u32).collect(), b: (0..L as u32).collect(), th: u32::MAX },
+    ];
+    let got = kernel.run(&reqs).unwrap();
+    assert_eq!(got[0], (0, 0));
+    assert_eq!(got[1], (0, 3));
+    assert_eq!(got[2], (0, 0));
+    assert_eq!(got[3], (L as u32, 0));
+}
+
+#[test]
+fn triangle_count_via_artifact_matches_enumerator() {
+    if !require_artifacts() {
+        return;
+    }
+    use pimminer::exec::{Enumerator, NullSink};
+    use pimminer::pattern::plan::Plan;
+    use pimminer::pattern::pattern::clique;
+
+    // Bounded-degree graph so every list fits the kernel tile.
+    let g = gen::erdos_renyi(500, 3000, 11);
+    assert!(g.max_degree() <= L);
+
+    // Triangles via the AOT path: one request per directed edge (u, v),
+    // v < u, counting |{w ∈ N(u) ∩ N(v) : w < v}| (Fig. 2 restrictions).
+    let mut reqs = Vec::new();
+    for u in 0..g.num_vertices() as u32 {
+        for &v in g.neighbors(u) {
+            if v < u {
+                reqs.push(SetOpRequest {
+                    a: g.neighbors(u).to_vec(),
+                    b: g.neighbors(v).to_vec(),
+                    th: v,
+                });
+            }
+        }
+    }
+    let rt = Runtime::cpu().unwrap();
+    let kernel = load(&rt, "setops.hlo.txt");
+    let aot_total: u64 = kernel
+        .run(&reqs)
+        .unwrap()
+        .iter()
+        .map(|&(i, _)| i as u64)
+        .sum();
+
+    // Triangles via the native enumerator.
+    let plan = Plan::build(&clique(3));
+    let mut e = Enumerator::new(&g, &plan);
+    let native: u64 = (0..g.num_vertices() as u32)
+        .map(|v| e.count_root(v, &mut NullSink))
+        .sum();
+
+    assert_eq!(aot_total, native);
+    assert!(native > 0, "test graph should contain triangles");
+}

@@ -1,0 +1,142 @@
+//! Property tests over the graph substrate: CSR invariants, relabeling,
+//! I/O round-trips, and set-operation algebra under random inputs.
+
+use pimminer::exec::setops::{
+    bounded_copy_into, count_intersect, intersect_into, prefix_len, subtract_into, NO_BOUND,
+};
+use pimminer::graph::{gen, io, sort_by_degree_desc, CsrGraph, VertexId};
+use pimminer::util::prop;
+use pimminer::util::rng::Rng;
+
+fn random_graph(rng: &mut Rng) -> CsrGraph {
+    let n = rng.range(2, 400) as usize;
+    let max_m = n * (n - 1) / 2;
+    let m = rng.below(max_m as u64 + 1) as usize;
+    gen::erdos_renyi(n, m, rng.next_u64())
+}
+
+fn random_sorted_list(rng: &mut Rng, max_len: usize, max_id: u64) -> Vec<VertexId> {
+    let n = rng.below_usize(max_len + 1);
+    let mut v: Vec<VertexId> = (0..n).map(|_| rng.below(max_id) as VertexId).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+#[test]
+fn prop_csr_invariants_hold_for_all_generators() {
+    prop::check_default("csr-invariants", 0x11, |rng| {
+        let g = random_graph(rng);
+        g.check_invariants().unwrap();
+        let pl = gen::power_law(
+            rng.range(10, 800) as usize,
+            rng.range(10, 3000) as usize,
+            rng.range(2, 200) as usize,
+            rng.next_u64(),
+        );
+        pl.check_invariants().unwrap();
+    });
+}
+
+#[test]
+fn prop_degree_sort_is_permutation_preserving() {
+    prop::check_default("degree-sort", 0x22, |rng| {
+        let g = random_graph(rng);
+        let r = sort_by_degree_desc(&g);
+        r.graph.check_invariants().unwrap();
+        assert_eq!(r.graph.num_edges(), g.num_edges());
+        // degrees monotone non-increasing
+        for v in 1..r.graph.num_vertices() {
+            assert!(r.graph.degree(v as u32 - 1) >= r.graph.degree(v as u32));
+        }
+        // adjacency preserved through the maps
+        for v in 0..g.num_vertices() as u32 {
+            for &u in g.neighbors(v) {
+                assert!(r
+                    .graph
+                    .has_edge(r.old_to_new[v as usize], r.old_to_new[u as usize]));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_csr_file_roundtrip() {
+    let dir = std::env::temp_dir().join("pimminer_prop_io");
+    std::fs::create_dir_all(&dir).unwrap();
+    prop::check("csr-roundtrip", 0x33, 16, |rng| {
+        let g = random_graph(rng);
+        let path = dir.join(format!("g{}.csr", rng.next_u64()));
+        io::write_csr(&g, &path).unwrap();
+        let g2 = io::read_csr(&path).unwrap();
+        assert_eq!(g, g2);
+        std::fs::remove_file(path).ok();
+    });
+}
+
+#[test]
+fn prop_setops_algebra() {
+    prop::check_default("setops-algebra", 0x44, |rng| {
+        let a = random_sorted_list(rng, 100, 300);
+        let b = random_sorted_list(rng, 100, 300);
+        let ub = if rng.chance(0.3) {
+            NO_BOUND
+        } else {
+            rng.below(320) as VertexId
+        };
+        let mut inter = Vec::new();
+        let mut sub = Vec::new();
+        intersect_into(&a, &b, ub, &mut inter);
+        subtract_into(&a, &b, ub, &mut sub);
+
+        // partition: |a<ub| = |a∩b<ub| + |a\b<ub|
+        assert_eq!(prefix_len(&a, ub), inter.len() + sub.len());
+        // outputs sorted, deduped, within bound
+        for w in inter.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        for w in sub.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert!(inter.iter().all(|&x| x < ub));
+        assert!(sub.iter().all(|&x| x < ub));
+        // membership semantics
+        for &x in &inter {
+            assert!(a.binary_search(&x).is_ok() && b.binary_search(&x).is_ok());
+        }
+        for &x in &sub {
+            assert!(a.binary_search(&x).is_ok() && b.binary_search(&x).is_err());
+        }
+        // count-only agrees with materialized
+        let (c, _) = count_intersect(&a, &b, ub);
+        assert_eq!(c as usize, inter.len());
+        // commutativity of intersection
+        let mut inter_ba = Vec::new();
+        intersect_into(&b, &a, ub, &mut inter_ba);
+        assert_eq!(inter, inter_ba);
+        // bounded copy = subtract(empty)
+        let mut copy = Vec::new();
+        bounded_copy_into(&a, ub, &mut copy);
+        let mut sub_empty = Vec::new();
+        subtract_into(&a, &[], ub, &mut sub_empty);
+        assert_eq!(copy, sub_empty);
+    });
+}
+
+#[test]
+fn prop_power_law_determinism_and_calibration() {
+    prop::check("power-law", 0x55, 8, |rng| {
+        let n = rng.range(500, 3_000) as usize;
+        let e = rng.range(n as u64, (n * 6) as u64) as usize;
+        let md = rng.range(8, (n / 2) as u64) as usize;
+        let seed = rng.next_u64();
+        let a = gen::power_law(n, e, md, seed);
+        let b = gen::power_law(n, e, md, seed);
+        assert_eq!(a, b, "generator must be deterministic");
+        let got = a.num_edges() as f64;
+        assert!(
+            (got - e as f64).abs() / e as f64 <= 0.25,
+            "edges {got} vs target {e}"
+        );
+    });
+}

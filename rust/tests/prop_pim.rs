@@ -1,0 +1,165 @@
+//! Property tests over the PIM substrate: scheduler conservation laws,
+//! address-map conservation, placement/duplication invariants, and
+//! count-invariance of the simulator across random option sets.
+
+use std::collections::VecDeque;
+
+use pimminer::exec::cpu::{self, CpuFlavor};
+use pimminer::graph::{gen, sort_by_degree_desc};
+use pimminer::pattern::plan::application;
+use pimminer::pim::addrmap::{split_access, AddrMap};
+use pimminer::pim::placement::Placement;
+use pimminer::pim::stealing::{schedule, Piece};
+use pimminer::pim::{simulate_app, PimConfig, SimOptions};
+use pimminer::util::prop;
+use pimminer::util::rng::Rng;
+
+#[test]
+fn prop_scheduler_conservation_and_bounds() {
+    prop::check_default("sched-conservation", 0x71, |rng| {
+        let cfg = PimConfig::tiny();
+        let n = cfg.num_units();
+        let ntasks = rng.below_usize(200);
+        let mut queues: Vec<VecDeque<Piece>> = vec![VecDeque::new(); n];
+        let mut total_work = 0u64;
+        for _ in 0..ntasks {
+            let cycles = rng.range(1, 50_000);
+            let chunks = rng.range(1, 64);
+            total_work += cycles;
+            queues[rng.below_usize(n)].push_back(Piece { cycles, chunks });
+        }
+        for stealing in [false, true] {
+            let out = schedule(&cfg, queues.clone(), stealing);
+            let busy: u64 = out.unit_busy.iter().sum();
+            // conservation: busy = work + 2*overhead per successful steal
+            assert_eq!(busy, total_work + 2 * cfg.steal_overhead * out.steals);
+            // makespan bounds
+            assert!(out.makespan >= out.unit_busy.iter().copied().max().unwrap_or(0) .min(out.makespan));
+            assert!(out.makespan >= (total_work + n as u64 - 1) / n as u64 || total_work == 0 || !stealing);
+            let serial: u64 = total_work + 2 * cfg.steal_overhead * out.steals;
+            assert!(out.makespan <= serial, "makespan {} > serial {}", out.makespan, serial);
+            if !stealing {
+                assert_eq!(out.steals, 0);
+                // exact: makespan = max queue sum
+                let max_q: u64 = queues
+                    .iter()
+                    .map(|q| q.iter().map(|p| p.cycles).sum::<u64>())
+                    .max()
+                    .unwrap_or(0);
+                assert_eq!(out.makespan, max_q);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_stealing_never_hurts_much_and_helps_skew() {
+    prop::check("steal-helps", 0x72, 32, |rng| {
+        let cfg = PimConfig::tiny();
+        let n = cfg.num_units();
+        let mut queues: Vec<VecDeque<Piece>> = vec![VecDeque::new(); n];
+        // adversarial skew: dump everything on one unit
+        let victim = rng.below_usize(n);
+        let tasks = rng.range(4, 64);
+        for _ in 0..tasks {
+            queues[victim].push_back(Piece {
+                cycles: rng.range(10_000, 100_000),
+                chunks: rng.range(1, 128),
+            });
+        }
+        let no = schedule(&cfg, queues.clone(), false);
+        let yes = schedule(&cfg, queues, true);
+        assert!(yes.makespan <= no.makespan, "stealing regressed");
+        // with ≥4 sizeable tasks, stealing must find parallelism
+        assert!(
+            (yes.makespan as f64) < 0.8 * no.makespan as f64,
+            "no benefit: {} vs {}",
+            yes.makespan,
+            no.makespan
+        );
+    });
+}
+
+#[test]
+fn prop_address_split_conserves_bytes() {
+    prop::check_default("addr-conserve", 0x73, |rng| {
+        let cfg = PimConfig::default();
+        let bytes = rng.below(1 << 24);
+        let owner = rng.below_usize(cfg.num_units());
+        let req = rng.below_usize(cfg.num_units());
+        for map in [AddrMap::DefaultInterleave, AddrMap::LocalFirst] {
+            let s = split_access(&cfg, map, owner, req, bytes, false);
+            assert_eq!(s.total(), bytes, "{map:?}");
+        }
+        let dup = split_access(&cfg, AddrMap::LocalFirst, owner, req, bytes, true);
+        assert_eq!(dup.near, bytes);
+    });
+}
+
+#[test]
+fn prop_placement_invariants() {
+    prop::check("placement", 0x74, 24, |rng| {
+        let cfg = PimConfig::tiny();
+        let n = rng.range(50, 2_000) as usize;
+        let e = rng.range(n as u64, (n * 4) as u64) as usize;
+        let md = rng.range(4, 200) as usize;
+        let g = sort_by_degree_desc(&gen::power_law(n, e, md, rng.next_u64())).graph;
+        let total = g.total_bytes();
+        let cap = total / cfg.num_units() as u64 + rng.below(total.max(1));
+        let p = Placement::round_robin(&g, &cfg).with_duplication(&g, &cfg, Some(cap));
+        // ownership is total and within range
+        assert_eq!(p.owner.len(), n);
+        assert!(p.owner.iter().all(|&o| (o as usize) < cfg.num_units()));
+        // owned bytes account exactly for the adjacency payload
+        assert_eq!(p.owned_bytes.iter().sum::<u64>(), g.col_idx.len() as u64 * 4);
+        for u in 0..cfg.num_units() {
+            let vb = p.v_b[u];
+            // the duplicated prefix fits in the free capacity
+            let used: u64 = (0..vb).map(|v| g.neighbor_bytes(v)).sum();
+            assert!(used <= cap.saturating_sub(p.owned_bytes[u]));
+            // maximality
+            if (vb as usize) < n {
+                assert!(
+                    used + g.neighbor_bytes(vb) > cap.saturating_sub(p.owned_bytes[u]),
+                    "v_b not maximal for unit {u}"
+                );
+            }
+            // locality implications
+            if vb > 0 {
+                assert!(p.is_local(u, 0));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sim_count_invariance_across_random_options() {
+    prop::check("sim-count-invariance", 0x75, 10, |rng| {
+        let n = rng.range(200, 900) as usize;
+        let e = rng.range(n as u64, (n * 5) as u64) as usize;
+        let g = sort_by_degree_desc(&gen::power_law(n, e, 80, rng.next_u64())).graph;
+        let cfg = PimConfig::default();
+        let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+        let apps = ["3-CC", "4-CL", "4-DI"];
+        let app = application(apps[rng.below_usize(apps.len())]).unwrap();
+        let expected = cpu::run_application(&g, &app, &roots, CpuFlavor::AutoMineOpt).count;
+        let opts = SimOptions {
+            filter: rng.chance(0.5),
+            remap: rng.chance(0.5),
+            duplication: rng.chance(0.5),
+            stealing: rng.chance(0.5),
+            capacity_per_unit: if rng.chance(0.3) {
+                Some(g.total_bytes() / cfg.num_units() as u64 + rng.below(g.total_bytes()))
+            } else {
+                None
+            },
+        };
+        let r = simulate_app(&g, &app, &roots, &opts, &cfg);
+        assert_eq!(r.count, expected, "opts {opts:?}");
+        // basic sanity of the result fields
+        assert!(r.fm_bytes <= r.tm_bytes);
+        assert!(r.total_cycles >= r.bank_bound);
+        assert!(r.total_cycles >= r.sched_cycles.min(r.total_cycles));
+        assert_eq!(r.unit_busy.len(), cfg.num_units());
+    });
+}
