@@ -1,0 +1,32 @@
+# Convenience targets. `make artifacts` builds the AOT Layer-1/2 kernels
+# (requires a Python with jax installed); everything else is plain cargo.
+
+PYTHON ?= python3
+
+.PHONY: build test bench artifacts doc fmt verify
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Every [[bench]] target is a plain binary (no criterion offline);
+# PIMMINER_BENCH_QUICK=1 trims iteration counts.
+bench:
+	cargo bench
+
+# AOT-lower the Pallas/jnp set-operation kernels to HLO text under
+# artifacts/ at the repo root (where runtime::artifacts_dir finds them).
+artifacts:
+	cd python/compile && $(PYTHON) aot.py --out-dir ../../artifacts
+
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+fmt:
+	cargo fmt --check
+
+# Cross-check compiled pattern plans against the brute-force reference.
+verify: build
+	./target/release/pimminer verify

@@ -105,6 +105,22 @@ impl FetchSpec {
 /// Reusable enumeration state for one (graph, plan) pair. Construct once
 /// per worker; `count_root` / `count_root_range` may be called repeatedly
 /// without allocation.
+///
+/// Plans come from the fixed catalogue ([`Plan::build`]) or from the
+/// pattern compiler ([`crate::pattern::compile`]); the enumerator
+/// consumes either unchanged:
+///
+/// ```
+/// use pimminer::exec::enumerate::{Enumerator, NullSink};
+/// use pimminer::graph::gen;
+/// use pimminer::pattern::compile::compile_spec;
+///
+/// let g = gen::clique(6); // K6 as the data graph
+/// let plan = compile_spec("0-1,1-2,2-0").unwrap().plan; // triangle
+/// let mut e = Enumerator::new(&g, &plan);
+/// let total: u64 = (0..6).map(|v| e.count_root(v, &mut NullSink)).sum();
+/// assert_eq!(total, 20); // C(6,3)
+/// ```
 pub struct Enumerator<'g> {
     g: &'g CsrGraph,
     plan: &'g Plan,

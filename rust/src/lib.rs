@@ -8,10 +8,32 @@
 //! and a PIM-side workload-stealing scheduler), plus CPU baselines and
 //! report generators for every table and figure in the evaluation.
 //!
+//! Beyond the paper's fixed application set, [`pattern::compile`] is a
+//! general pattern compiler: any connected pattern up to 8 vertices —
+//! parsed from an edge-list spec — is lowered to an enumeration [`Plan`]
+//! (automorphism-based symmetry breaking, cost-driven matching order)
+//! that the CPU executors and the PIM simulator consume unchanged:
+//!
+//! ```
+//! use pimminer::exec::cpu::{count_plan, sampled_roots, CpuFlavor};
+//! use pimminer::graph::gen;
+//! use pimminer::pattern::compile::compile_spec;
+//!
+//! let g = gen::clique(6);
+//! let tailed = compile_spec("0-1,1-2,2-0,2-3").unwrap(); // tailed triangle
+//! let roots = sampled_roots(g.num_vertices(), 1.0);
+//! // K6 has no *induced* tailed triangle, but plenty of triangles:
+//! assert_eq!(count_plan(&g, &tailed.plan, &roots, CpuFlavor::AutoMineOpt), 0);
+//! let tri = compile_spec("triangle").unwrap();
+//! assert_eq!(count_plan(&g, &tri.plan, &roots, CpuFlavor::AutoMineOpt), 20);
+//! ```
+//!
 //! Architecture (DESIGN.md §3): Layer 3 is this Rust crate; Layer 2/1 are
 //! build-time JAX/Pallas set-operation kernels AOT-lowered to HLO text and
 //! executed through [`runtime`] via PJRT — Python is never on the request
 //! path.
+//!
+//! [`Plan`]: crate::pattern::plan::Plan
 
 pub mod baselines;
 pub mod bench;

@@ -2,20 +2,28 @@
 //!
 //! Subcommands:
 //!   generate  --dataset MI [--full] --out g.csr     write a synthetic dataset
-//!   count     --dataset MI --app 4-CC [--system pim|cpu] [--sample 0.1]
+//!   count     --dataset MI (--app 4-CC | --pattern "0-1,1-2,2-0,2-3")
+//!             [--system pim|cpu] [--sample 0.1] [--non-induced]
 //!             [--no-filter --no-remap --no-dup --no-steal]
-//!   ladder    --dataset MI --app 4-CC               Fig. 9 optimization ladder
+//!   plan      --pattern <edgelist|name>             print the compiled plan
+//!   verify    [--pattern <spec>] [--seeds 3]        compiled plans vs brute force
+//!   ladder    --dataset MI (--app 4-CC | --pattern <spec>)   Fig. 9 ladder
 //!   info                                            print the simulated config
 //!
 //! `--graph path.csr` may replace `--dataset` anywhere (binary CSR file,
-//! degree-sorted on load).
+//! degree-sorted on load). `--pattern` accepts an edge-list spec like
+//! `"0-1,1-2,2-0,2-3"` or a well-known name (`triangle`, `diamond`,
+//! `house`, ...) and routes it through the pattern compiler
+//! (`pattern::compile`) instead of the fixed application catalogue.
 
 use pimminer::coordinator::PimMiner;
 use pimminer::datasets;
+use pimminer::exec::brute_force_count;
 use pimminer::exec::cpu::{self, CpuFlavor};
-use pimminer::graph::{io, sort_by_degree_desc, CsrGraph};
+use pimminer::graph::{gen, io, sort_by_degree_desc, CsrGraph};
+use pimminer::pattern::compile::{compile_with, parse_pattern, Compiled, CostModel};
 use pimminer::pattern::plan::application;
-use pimminer::pim::{PimConfig, SimOptions};
+use pimminer::pim::{simulate_plan, PimConfig, SimOptions};
 use pimminer::report::{self, Table};
 use pimminer::util::cli::Args;
 
@@ -25,6 +33,8 @@ fn main() {
     match cmd {
         "generate" => generate(&args),
         "count" => count(&args),
+        "plan" => plan_cmd(&args),
+        "verify" => verify(&args),
         "ladder" => ladder(&args),
         "info" => info(),
         _ => help(),
@@ -35,14 +45,21 @@ fn help() {
     println!(
         "pimminer — PIM architecture-aware graph mining (paper reproduction)\n\
          \n\
-         usage: pimminer <generate|count|ladder|info> [flags]\n\
+         usage: pimminer <generate|count|plan|verify|ladder|info> [flags]\n\
          \n\
          generate --dataset <CI|PP|AS|MI|YT|PA|LJ> [--full] --out <file.csr>\n\
-         count    (--dataset <abbrev> | --graph <file.csr>) --app <3-CC|4-CC|5-CC|3-MC|4-DI|4-CL>\n\
-                  [--system pim|cpu] [--sample <ratio>] [--no-filter] [--no-remap]\n\
-                  [--no-dup] [--no-steal]\n\
-         ladder   (--dataset | --graph) --app <name> [--sample <ratio>]\n\
-         info"
+         count    (--dataset <abbrev> | --graph <file.csr>)\n\
+                  (--app <3-CC|4-CC|5-CC|3-MC|4-DI|4-CL> | --pattern <edgelist|name>)\n\
+                  [--system pim|cpu] [--sample <ratio>] [--non-induced]\n\
+                  [--no-filter] [--no-remap] [--no-dup] [--no-steal]\n\
+         plan     --pattern <edgelist|name> [--graph|--dataset ...] [--non-induced]\n\
+         verify   [--pattern <spec>] [--seeds <k>] [--n <verts>] [--edges <m>]\n\
+         ladder   (--dataset | --graph) (--app <name> | --pattern <spec>) [--sample <ratio>]\n\
+         info\n\
+         \n\
+         pattern specs: edge lists like \"0-1,1-2,2-0,2-3\" (a tailed triangle)\n\
+         or names: wedge triangle 4-path 4-star 4-cycle diamond tailed-triangle\n\
+         4-clique 5-clique 5-cycle house"
     );
 }
 
@@ -70,6 +87,16 @@ fn options(args: &Args) -> SimOptions {
     }
 }
 
+fn compile_or_exit(spec: &str, model: &CostModel, induced: bool) -> Compiled {
+    match parse_pattern(spec).and_then(|p| compile_with(&p, model, induced)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("pattern error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn generate(args: &Args) {
     let (g, _) = load_graph(args);
     let out = args.get_or("out", "graph.csr");
@@ -85,6 +112,10 @@ fn generate(args: &Args) {
 
 fn count(args: &Args) {
     let (g, sample) = load_graph(args);
+    if let Some(spec) = args.get("pattern") {
+        count_pattern(args, &g, sample, spec);
+        return;
+    }
     let app = application(args.get_or("app", "4-CC")).expect("unknown application");
     let system = args.get_or("system", "pim");
     match system {
@@ -115,18 +146,183 @@ fn count(args: &Args) {
     }
 }
 
+/// `count --pattern <spec>`: the generalized-pattern path. The compiled
+/// plan goes straight into the existing executors — `cpu::count_plan` or
+/// `pim::simulate_plan` — no application catalogue involved.
+fn count_pattern(args: &Args, g: &CsrGraph, sample: f64, spec: &str) {
+    let induced = !args.get_bool("non-induced");
+    let compiled = compile_or_exit(spec, &CostModel::for_graph(g), induced);
+    let name = compiled.plan.pattern.name.clone();
+    let roots = cpu::sampled_roots(g.num_vertices(), sample);
+    match args.get_or("system", "pim") {
+        "cpu" => {
+            let t = std::time::Instant::now();
+            let count = cpu::count_plan(g, &compiled.plan, &roots, CpuFlavor::AutoMineOpt);
+            println!(
+                "{name} on CPU: count={count} time={} (order {:?}, est cost {:.3e})",
+                report::s(t.elapsed().as_secs_f64()),
+                compiled.order,
+                compiled.est_cost
+            );
+        }
+        _ => {
+            let r = simulate_plan(g, &compiled.plan, &roots, &options(args), &PimConfig::default());
+            println!(
+                "{name} on PIM: count={} time={} (avg core {}) near={} steals={} (order {:?})",
+                r.count,
+                report::s(r.seconds),
+                report::s(r.avg_unit_seconds),
+                report::pct(r.access.near_frac()),
+                r.steals,
+                compiled.order
+            );
+        }
+    }
+}
+
+/// `plan --pattern <spec>`: compile and pretty-print without running.
+fn plan_cmd(args: &Args) {
+    let Some(spec) = args.get("pattern") else {
+        eprintln!("plan requires --pattern <edgelist|name>");
+        std::process::exit(2);
+    };
+    // Fit the cost model to a graph only when one was explicitly given.
+    let model = if args.get("graph").is_some() || args.get("dataset").is_some() {
+        CostModel::for_graph(&load_graph(args).0)
+    } else {
+        CostModel::default()
+    };
+    let induced = !args.get_bool("non-induced");
+    let c = compile_or_exit(spec, &model, induced);
+    print_compiled(&c, &model);
+}
+
+fn print_compiled(c: &Compiled, model: &CostModel) {
+    let p = &c.plan.pattern;
+    println!(
+        "pattern '{}': {} vertices, {} edges, |Aut| = {}, {} restrictions, {}",
+        p.name,
+        p.size(),
+        p.num_edges(),
+        c.plan.aut_count,
+        c.num_restrictions(),
+        if c.plan.induced { "induced" } else { "non-induced" }
+    );
+    println!(
+        "matching order (input vertex per level): {:?} — est cost {:.3e} under N={:.0} d={:.1} ({} orders searched)",
+        c.order, c.est_cost, model.vertices, model.avg_degree, c.orders_considered
+    );
+    for (j, lvl) in c.plan.levels.iter().enumerate() {
+        if j == 0 {
+            println!("  level 0: for v0 over all graph vertices");
+            continue;
+        }
+        let ints: Vec<String> = lvl.intersect.iter().map(|r| format!("N(v{r})")).collect();
+        let mut line = format!("  level {j}: v{j} in {}", ints.join(" & "));
+        for r in &lvl.subtract {
+            line.push_str(&format!(" - N(v{r})"));
+        }
+        if !lvl.upper.is_empty() {
+            let ups: Vec<String> = lvl.upper.iter().map(|r| format!("v{r}")).collect();
+            line.push_str(&format!("  where v{j} < min({})", ups.join(", ")));
+        }
+        println!("{line}");
+    }
+}
+
+/// `verify`: cross-check compiled-plan counts against the brute-force
+/// reference enumerator on seeded random graphs, through both the CPU
+/// path and the PIM `SimSink` path (baseline and full-stack options).
+/// Exits non-zero on any mismatch — CI and the acceptance criteria call
+/// this.
+fn verify(args: &Args) {
+    let suite: Vec<String> = match args.get("pattern") {
+        Some(s) => vec![s.to_string()],
+        None => [
+            "0-1,1-2,2-0",         // triangle, as a raw edge list
+            "0-1,1-2,2-0,2-3",     // tailed triangle (the acceptance spec)
+            "4-clique",
+            "diamond",
+            "4-cycle",
+            "house",
+            "5-cycle",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect(),
+    };
+    let seeds = args.get_u64("seeds", 3);
+    let n = args.get_usize("n", 14);
+    let m = args.get_usize("edges", 34);
+    let cfg = PimConfig::default();
+    let model = CostModel {
+        vertices: n as f64,
+        avg_degree: (2.0 * m as f64 / n as f64).max(1.0),
+    };
+    let mut t = Table::new(
+        &format!("verify — compiled plans vs brute force, ER({n},{m}) × {seeds} seeds"),
+        &["Pattern", "Order", "Seed", "Brute", "CPU", "PIM(base)", "PIM(all)", "OK"],
+    );
+    let mut failures = 0u64;
+    for spec in &suite {
+        let c = compile_or_exit(spec, &model, true);
+        for seed in 0..seeds {
+            let g = gen::erdos_renyi(n, m, seed);
+            let expected = brute_force_count(&g, &c.plan.pattern);
+            let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+            let cpu_count = cpu::count_plan(&g, &c.plan, &roots, CpuFlavor::AutoMineOpt);
+            let pim_base = simulate_plan(&g, &c.plan, &roots, &SimOptions::BASELINE, &cfg).count;
+            let pim_all = simulate_plan(&g, &c.plan, &roots, &SimOptions::all(), &cfg).count;
+            let ok = cpu_count == expected && pim_base == expected && pim_all == expected;
+            if !ok {
+                failures += 1;
+            }
+            t.row(vec![
+                c.plan.pattern.name.clone(),
+                format!("{:?}", c.order),
+                seed.to_string(),
+                expected.to_string(),
+                cpu_count.to_string(),
+                pim_base.to_string(),
+                pim_all.to_string(),
+                if ok { "yes".to_string() } else { "MISMATCH".to_string() },
+            ]);
+        }
+    }
+    t.print();
+    if failures > 0 {
+        eprintln!("verify FAILED: {failures} mismatching runs");
+        std::process::exit(1);
+    }
+    println!("verify OK: every compiled plan matches the brute-force reference");
+}
+
 fn ladder(args: &Args) {
     let (g, sample) = load_graph(args);
-    let app = application(args.get_or("app", "4-CC")).expect("unknown application");
     let roots = cpu::sampled_roots(g.num_vertices(), sample);
     let cfg = PimConfig::default();
+    let pattern_plan = args.get("pattern").map(|spec| {
+        compile_or_exit(spec, &CostModel::for_graph(&g), !args.get_bool("non-induced")).plan
+    });
+    let app = if pattern_plan.is_none() {
+        Some(application(args.get_or("app", "4-CC")).expect("unknown application"))
+    } else {
+        None
+    };
+    let title = match &pattern_plan {
+        Some(plan) => plan.pattern.name.clone(),
+        None => app.as_ref().unwrap().name.to_string(),
+    };
     let mut t = Table::new(
-        &format!("Fig. 9 ladder — {} ({} roots)", app.name, roots.len()),
+        &format!("Fig. 9 ladder — {title} ({} roots)", roots.len()),
         &["Config", "Total", "AvgCore", "Near%", "Steals", "Speedup"],
     );
     let mut base = None;
     for (name, opts) in SimOptions::ladder() {
-        let r = pimminer::pim::simulate_app(&g, &app, &roots, &opts, &cfg);
+        let r = match &pattern_plan {
+            Some(plan) => simulate_plan(&g, plan, &roots, &opts, &cfg),
+            None => pimminer::pim::simulate_app(&g, app.as_ref().unwrap(), &roots, &opts, &cfg),
+        };
         let b = *base.get_or_insert(r.seconds);
         t.row(vec![
             name.to_string(),

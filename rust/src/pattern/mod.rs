@@ -1,9 +1,30 @@
-//! Patterns, motif generation, and enumeration plans (the AutoMine /
-//! GraphPi algorithmic substrate of §2.1).
+//! Patterns, motif generation, enumeration plans, and the pattern
+//! compiler (the AutoMine / GraphPi / G2Miner algorithmic substrate of
+//! §2.1).
+//!
+//! [`compile`](crate::pattern::compile) turns an arbitrary connected
+//! pattern — parsed from an edge-list spec or a well-known name — into a
+//! [`Plan`] the enumeration engine and the PIM simulator consume
+//! unchanged; [`motif`] generates the exhaustive per-size pattern sets of
+//! the k-MC applications; [`plan`] holds the plan representation and the
+//! paper's fixed application catalogue.
 
+pub mod compile;
 pub mod motif;
 pub mod pattern;
 pub mod plan;
 
+/// Normalize a user-supplied pattern/application name for lookup: keep
+/// ASCII alphanumerics, lowercase. Shared by [`plan::application`] and
+/// the compiler's named-pattern table so `"4-CC"`/`"4cc"` and
+/// `"4-Clique"`/`"4clique"` resolve identically.
+pub(crate) fn normalize_name(name: &str) -> String {
+    name.chars()
+        .filter(|c| c.is_ascii_alphanumeric())
+        .collect::<String>()
+        .to_ascii_lowercase()
+}
+
+pub use compile::{compile_spec, parse_pattern, Compiled, CostModel};
 pub use pattern::Pattern;
 pub use plan::{application, paper_applications, Application, LevelPlan, Plan};

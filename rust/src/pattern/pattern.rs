@@ -46,6 +46,14 @@ impl Pattern {
         self.adj[a] & (1 << b) != 0
     }
 
+    /// Adjacency bitmask of `v`: bit `j` is set iff `v`–`j` is an edge.
+    /// Used by the compiler's order search (`pattern::compile`) to count
+    /// black predecessors of a candidate vertex in one `&`.
+    #[inline]
+    pub fn neighbors_mask(&self, v: usize) -> u8 {
+        self.adj[v]
+    }
+
     /// Degree of pattern vertex `v`.
     #[inline]
     pub fn degree(&self, v: usize) -> usize {
@@ -212,6 +220,22 @@ pub fn four_star() -> Pattern {
     Pattern::new(4, &[(0, 1), (0, 2), (0, 3)], "4-star")
 }
 
+/// 5-cycle (pentagon).
+pub fn five_cycle() -> Pattern {
+    Pattern::new(5, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 0)], "5-cycle")
+}
+
+/// House: a 4-cycle base (0-1-2-3) with a roof vertex 4 adjacent to the
+/// 0–1 edge — equivalently C5 plus one chord. The canonical 5-vertex
+/// pattern the fixed motif set does not name; used by the compiler tests.
+pub fn house() -> Pattern {
+    Pattern::new(
+        5,
+        &[(0, 1), (1, 2), (2, 3), (3, 0), (0, 4), (1, 4)],
+        "house",
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -256,6 +280,26 @@ mod tests {
         let d = diamond();
         let p = d.permute(&[2, 0, 3, 1]);
         assert!(d.is_isomorphic(&p));
+    }
+
+    #[test]
+    fn five_vertex_named_patterns() {
+        // house = one reflection; C5 = dihedral group D5
+        assert_eq!(house().automorphisms().len(), 2);
+        assert_eq!(five_cycle().automorphisms().len(), 10);
+        assert!(house().is_connected());
+        assert_eq!(house().num_edges(), 6);
+        assert!(!house().is_isomorphic(&five_cycle()));
+    }
+
+    #[test]
+    fn neighbors_mask_matches_has_edge() {
+        let d = diamond();
+        for v in 0..d.size() {
+            for u in 0..d.size() {
+                assert_eq!(d.neighbors_mask(v) & (1 << u) != 0, d.has_edge(v, u));
+            }
+        }
     }
 
     #[test]

@@ -53,13 +53,30 @@ impl Plan {
         Self::build_with(pattern, true)
     }
 
-    /// Build with explicit induced/non-induced semantics.
+    /// Build with explicit induced/non-induced semantics, using the
+    /// degree-greedy connected order.
     pub fn build_with(pattern: &Pattern, induced: bool) -> Plan {
         assert!(pattern.is_connected(), "plan requires a connected pattern");
-        let order = connected_order(pattern);
+        Self::build_with_order(pattern, &connected_order(pattern), induced)
+    }
+
+    /// Build the plan that binds pattern vertex `order[level]` at each loop
+    /// level. `order` must be a permutation of the pattern's vertices in
+    /// which every non-root vertex is adjacent to some earlier one (a
+    /// *connected order* — otherwise a level would have no black
+    /// predecessor and the nested-loop construction is unsound). The
+    /// symmetry-breaking restrictions are derived for the given order by
+    /// the stabilizer chain below; [`super::compile`] searches connected
+    /// orders with a cost model and calls this with the winner.
+    pub fn build_with_order(pattern: &Pattern, order: &[usize], induced: bool) -> Plan {
+        assert_eq!(order.len(), pattern.size(), "order must cover the pattern");
         // perm[old] = level
-        let mut perm = vec![0usize; pattern.size()];
+        let mut perm = vec![usize::MAX; pattern.size()];
         for (level, &old) in order.iter().enumerate() {
+            assert!(
+                old < pattern.size() && perm[old] == usize::MAX,
+                "order must be a permutation of the pattern vertices"
+            );
             perm[old] = level;
         }
         let reordered = pattern.permute(&perm);
@@ -157,12 +174,7 @@ impl Application {
 /// Look up a paper application by its abbreviation (case-insensitive;
 /// accepts "4-CC" or "4cc").
 pub fn application(name: &str) -> Option<Application> {
-    let norm: String = name
-        .chars()
-        .filter(|c| c.is_ascii_alphanumeric())
-        .collect::<String>()
-        .to_ascii_lowercase();
-    let app = match norm.as_str() {
+    let app = match super::normalize_name(name).as_str() {
         "3mc" => Application {
             name: "3-MC",
             patterns: vec![wedge(), clique(3)],
@@ -279,6 +291,29 @@ mod tests {
         assert_eq!(application("4MC").unwrap().patterns.len(), 6);
         assert!(application("9zz").is_none());
         assert_eq!(paper_applications().len(), 6);
+    }
+
+    #[test]
+    fn build_with_order_respects_given_order() {
+        use crate::pattern::pattern::tailed_triangle;
+        let p = tailed_triangle(); // triangle 0-1-2, tail 3 on vertex 2
+        // Bind the triangle first, the tail last: vertex 2 becomes level 0.
+        let plan = Plan::build_with_order(&p, &[2, 0, 1, 3], true);
+        assert_eq!(plan.aut_count, 2);
+        for j in 1..4 {
+            assert!(!plan.levels[j].intersect.is_empty(), "level {j}");
+        }
+        // The tail level intersects only the (relabeled) triangle apex.
+        assert_eq!(plan.levels[3].intersect, vec![0]);
+        // The two leaf triangle vertices are orbit mates: one restriction.
+        let total: usize = plan.levels.iter().map(|l| l.upper.len()).sum();
+        assert_eq!(total, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "permutation")]
+    fn build_with_order_rejects_non_permutations() {
+        let _ = Plan::build_with_order(&clique(3), &[0, 0, 1], true);
     }
 
     #[test]

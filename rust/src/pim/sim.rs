@@ -33,6 +33,17 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Which PIMMiner optimizations are enabled (the Fig. 9 ladder).
+///
+/// ```
+/// use pimminer::pim::SimOptions;
+///
+/// let all = SimOptions::all();
+/// assert!(all.filter && all.remap && all.duplication && all.stealing);
+/// // the five cumulative Fig. 9 configurations, baseline first
+/// let ladder = SimOptions::ladder();
+/// assert_eq!(ladder.len(), 5);
+/// assert!(!ladder[0].1.filter && ladder[4].1.stealing);
+/// ```
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SimOptions {
     /// §4.2 application-aware in-bank access filter.

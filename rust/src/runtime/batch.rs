@@ -14,6 +14,9 @@ use crate::graph::VertexId;
 use anyhow::{bail, Result};
 use std::path::Path;
 
+#[cfg(not(pimminer_pjrt))]
+use super::xla_stub as xla;
+
 /// Padding value for list tails (sorted ascending, so MAX sorts last and
 /// can never satisfy `x < th` with th ≤ i32::MAX).
 pub const PAD: i32 = i32::MAX;

@@ -8,6 +8,11 @@
 use anyhow::{Context, Result};
 use std::path::Path;
 
+// Offline/CI builds compile against the API-identical stub; a build with
+// `--cfg pimminer_pjrt` resolves `xla::` to the real bindings instead.
+#[cfg(not(pimminer_pjrt))]
+use super::xla_stub as xla;
+
 /// A PJRT client (CPU plugin) plus artifact loading.
 pub struct Runtime {
     client: xla::PjRtClient,
@@ -74,8 +79,15 @@ pub fn artifacts_dir() -> std::path::PathBuf {
     }
 }
 
-/// True when the AOT artifacts exist (integration tests skip otherwise,
-/// with a loud message — `make artifacts` builds them).
+/// True when the PJRT backend is linked into this build (see
+/// `runtime::xla_stub` for the offline stand-in).
+pub fn backend_linked() -> bool {
+    cfg!(pimminer_pjrt)
+}
+
+/// True when the AOT artifacts exist *and* the PJRT backend is linked
+/// (integration tests skip otherwise, with a loud message — `make
+/// artifacts` builds the artifacts; DESIGN.md §4 covers the backend).
 pub fn artifacts_available() -> bool {
-    artifacts_dir().join("setops.hlo.txt").exists()
+    backend_linked() && artifacts_dir().join("setops.hlo.txt").exists()
 }

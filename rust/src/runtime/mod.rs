@@ -1,8 +1,20 @@
 //! PJRT runtime: loads the AOT-compiled Layer-1/2 artifacts (HLO text) and
 //! executes them from the Rust coordinator. Python never runs here.
+//!
+//! The real `xla` PJRT bindings are not available in offline/CI builds, so
+//! by default the [`client`] module compiles against [`xla_stub`] — an
+//! API-identical stand-in whose entry points return a descriptive error
+//! and which reports the artifacts as unavailable, so every integration
+//! test and example skips the PJRT path politely (DESIGN.md §4). Building
+//! with `RUSTFLAGS="--cfg pimminer_pjrt"` plus the real `xla` dependency
+//! switches the same source to the live backend.
+
+#[cfg(not(pimminer_pjrt))]
+#[doc(hidden)]
+pub mod xla_stub;
 
 pub mod batch;
 pub mod client;
 
 pub use batch::{reference_counts, SetOpCounts, SetOpRequest, SetOpsKernel, PAD};
-pub use client::{artifacts_available, artifacts_dir, Artifact, Runtime};
+pub use client::{artifacts_available, artifacts_dir, backend_linked, Artifact, Runtime};

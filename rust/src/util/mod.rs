@@ -1,6 +1,7 @@
 //! Infrastructure utilities: RNG, thread pool, CLI parsing, statistics,
 //! property-test driver. Everything here exists because the offline crate
-//! set is limited to `xla` + `anyhow`; see DESIGN.md §4.
+//! set is limited to `anyhow` (the `xla` PJRT bindings are an opt-in
+//! source-level switch, stubbed by default); see DESIGN.md §4.
 
 pub mod cli;
 pub mod prop;

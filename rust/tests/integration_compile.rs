@@ -1,0 +1,179 @@
+//! Integration: the pattern compiler (`pattern::compile`) produces plans
+//! whose counts match the brute-force reference enumerator — through the
+//! plain CPU `Enumerator` path, the multithreaded CPU baseline, and the
+//! PIM `SimSink` path — and whose symmetry-breaking restriction sets
+//! eliminate exactly `|Aut(P)|`-fold overcounting.
+
+use pimminer::exec::cpu::{count_plan, CpuFlavor};
+use pimminer::exec::{brute_force_count, Enumerator, NullSink};
+use pimminer::graph::{gen, CsrGraph};
+use pimminer::pattern::compile::{compile, compile_spec, compile_with, CostModel};
+use pimminer::pattern::pattern as pat;
+use pimminer::pattern::plan::Plan;
+use pimminer::pim::{simulate_plan, PimConfig, SimOptions};
+
+const SEEDS: [u64; 3] = [3, 17, 91];
+
+/// The compiler's test suite: the five shapes the issue names.
+fn suite() -> Vec<pat::Pattern> {
+    vec![
+        pat::clique(3),
+        pat::clique(4),
+        pat::diamond(),
+        pat::tailed_triangle(),
+        pat::house(),
+    ]
+}
+
+fn small_graph(seed: u64) -> CsrGraph {
+    gen::erdos_renyi(13, 30, seed)
+}
+
+fn enum_count(g: &CsrGraph, plan: &Plan) -> u64 {
+    let mut e = Enumerator::new(g, plan);
+    (0..g.num_vertices() as u32)
+        .map(|v| e.count_root(v, &mut NullSink))
+        .sum()
+}
+
+fn all_roots(g: &CsrGraph) -> Vec<u32> {
+    (0..g.num_vertices() as u32).collect()
+}
+
+#[test]
+fn compiled_plans_match_brute_force_on_cpu() {
+    for seed in SEEDS {
+        let g = small_graph(seed);
+        for p in suite() {
+            let expected = brute_force_count(&g, &p);
+            let c = compile(&p).unwrap();
+            assert_eq!(
+                enum_count(&g, &c.plan),
+                expected,
+                "pattern {} seed {seed} order {:?}",
+                p.name,
+                c.order
+            );
+            // The multithreaded baseline executor agrees too.
+            assert_eq!(
+                count_plan(&g, &c.plan, &all_roots(&g), CpuFlavor::AutoMineOpt),
+                expected,
+                "mt pattern {} seed {seed}",
+                p.name
+            );
+        }
+    }
+}
+
+#[test]
+fn compiled_plans_match_brute_force_on_pim_sink() {
+    let cfg = PimConfig::default();
+    for seed in SEEDS {
+        let g = small_graph(seed);
+        let roots = all_roots(&g);
+        for p in suite() {
+            let expected = brute_force_count(&g, &p);
+            let c = compile(&p).unwrap();
+            for (name, opts) in [
+                ("baseline", SimOptions::BASELINE),
+                ("full", SimOptions::all()),
+            ] {
+                let r = simulate_plan(&g, &c.plan, &roots, &opts, &cfg);
+                assert_eq!(
+                    r.count, expected,
+                    "pattern {} seed {seed} opts {name}",
+                    p.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn restrictions_eliminate_exactly_aut_fold_overcounting() {
+    // Stripping every upper-bound restriction from a compiled plan must
+    // multiply the count by exactly |Aut(P)| — no more, no less.
+    let g = gen::erdos_renyi(16, 44, 5);
+    let roots = all_roots(&g);
+    for p in suite() {
+        let c = compile(&p).unwrap();
+        let restricted = count_plan(&g, &c.plan, &roots, CpuFlavor::AutoMineOpt);
+        let mut unrestricted_plan = c.plan.clone();
+        for lvl in &mut unrestricted_plan.levels {
+            lvl.upper.clear();
+        }
+        let unrestricted = count_plan(&g, &unrestricted_plan, &roots, CpuFlavor::AutoMineOpt);
+        assert_eq!(
+            unrestricted,
+            restricted * c.plan.aut_count,
+            "pattern {} (|Aut| = {})",
+            p.name,
+            c.plan.aut_count
+        );
+    }
+}
+
+#[test]
+fn acceptance_spec_tailed_triangle_end_to_end() {
+    // The issue's acceptance spec, straight through the string pipeline.
+    let c = compile_spec("0-1,1-2,2-0,2-3").unwrap();
+    assert_eq!(c.plan.pattern.name, "tailed-triangle");
+    let cfg = PimConfig::default();
+    for seed in SEEDS {
+        let g = small_graph(seed);
+        let expected = brute_force_count(&g, &pat::tailed_triangle());
+        assert_eq!(enum_count(&g, &c.plan), expected, "cpu seed {seed}");
+        let r = simulate_plan(&g, &c.plan, &all_roots(&g), &SimOptions::all(), &cfg);
+        assert_eq!(r.count, expected, "pim seed {seed}");
+    }
+}
+
+#[test]
+fn ad_hoc_specs_cpu_equals_pim_both_option_sets() {
+    // Five ad-hoc edge-list patterns (the acceptance criterion's shape):
+    // CPU and PIM SimSink counts must be identical under baseline and
+    // full-stack options.
+    let specs = [
+        "0-1,1-2,2-0,2-3",             // tailed triangle
+        "0-1,1-2,2-3,3-0",             // 4-cycle
+        "0-1,0-2,0-3,1-2,2-3",         // diamond
+        "0-1,1-2,2-3,3-4,4-0,0-2",     // house (C5 + chord)
+        "0-1,0-2,0-3,1-2,1-3,2-3,3-4", // tailed 4-clique
+    ];
+    let cfg = PimConfig::default();
+    let g = gen::erdos_renyi(40, 160, 23);
+    let roots = all_roots(&g);
+    for spec in specs {
+        let c = compile_spec(spec).unwrap();
+        let cpu = count_plan(&g, &c.plan, &roots, CpuFlavor::AutoMineOpt);
+        let base = simulate_plan(&g, &c.plan, &roots, &SimOptions::BASELINE, &cfg).count;
+        let full = simulate_plan(&g, &c.plan, &roots, &SimOptions::all(), &cfg).count;
+        assert_eq!(cpu, base, "{spec} baseline");
+        assert_eq!(cpu, full, "{spec} full stack");
+    }
+}
+
+#[test]
+fn non_induced_compiled_plans_obey_aut_invariant() {
+    // No induced brute-force oracle applies, but the automorphism
+    // invariant must still hold for non-induced plans.
+    let g = gen::erdos_renyi(14, 36, 8);
+    let roots = all_roots(&g);
+    for p in [pat::clique(4), pat::four_cycle(), pat::house()] {
+        let c = compile_with(&p, &CostModel::default(), false).unwrap();
+        let restricted = count_plan(&g, &c.plan, &roots, CpuFlavor::AutoMineOpt);
+        let mut stripped = c.plan.clone();
+        for lvl in &mut stripped.levels {
+            lvl.upper.clear();
+        }
+        let unrestricted = count_plan(&g, &stripped, &roots, CpuFlavor::AutoMineOpt);
+        assert_eq!(unrestricted, restricted * c.plan.aut_count, "{}", p.name);
+    }
+}
+
+#[test]
+fn compiled_house_and_cycle_have_expected_aut() {
+    assert_eq!(compile_spec("house").unwrap().plan.aut_count, 2);
+    assert_eq!(compile_spec("5-cycle").unwrap().plan.aut_count, 10);
+    assert_eq!(compile_spec("5-clique").unwrap().plan.aut_count, 120);
+}
