@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
                 patterns: vec![motif.clone()],
             };
             let cpu_r = cpu::run_application(&graph, &app, &roots, CpuFlavor::AutoMineOpt);
-            let pim_r = miner.pattern_count(&app, 1.0);
+            let pim_r = miner.pattern_count(&app, 1.0)?;
             assert_eq!(cpu_r.count, pim_r.count, "CPU/PIM disagree on {}", motif.name);
             table.row(vec![
                 motif.name.clone(),

@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     // 3. PIMPatternCount for each paper application.
     for name in ["3-CC", "4-CC", "3-MC", "4-DI", "4-CL"] {
         let app = application(name).unwrap();
-        let r = miner.pattern_count(&app, 1.0);
+        let r = miner.pattern_count(&app, 1.0)?;
         println!(
             "{:>5}: count={:>10}  sim time={}  near={}  steals={}",
             name,

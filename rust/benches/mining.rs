@@ -1,0 +1,97 @@
+//! Mining-workload bench (DESIGN.md §8) — beyond the paper's fixed
+//! counting applications: the one-pass motif census and FSM on the
+//! simulated machine, with the Table-2-style **support-aggregation**
+//! traffic breakdown and its response to the address remap. Census counts
+//! are asserted identical to the CPU engine on every graph.
+
+use pimminer::bench::{workloads, Bench};
+use pimminer::graph::gen;
+use pimminer::mine::{self, FsmConfig};
+use pimminer::pim::{simulate_fsm, simulate_motifs, PimConfig, SimOptions, SimResult};
+use pimminer::report::{self, Table};
+
+fn remote(r: &SimResult) -> u64 {
+    r.agg.intra_bytes + r.agg.inter_bytes
+}
+
+fn main() {
+    let bench = Bench::new("mining");
+    let cfg = PimConfig::default();
+    for inst in workloads::graphs(&["CI", "PP"]) {
+        let g = &inst.graph;
+        let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+
+        // ---- motif census: PIM vs CPU cross-check + per-config traffic
+        for k in [3usize, 4] {
+            let cpu = mine::motif_census(g, k, &roots);
+            let mut table = Table::new(
+                &format!(
+                    "{k}-motif census on {} (|V|={}, {} patterns, {} subgraphs)",
+                    inst.spec.abbrev,
+                    g.num_vertices(),
+                    cpu.counts.len(),
+                    cpu.total()
+                ),
+                &["Config", "Time", "Near%", "AggNear%", "AggRemote", "MergeB"],
+            );
+            for (name, opts) in [
+                ("Base", SimOptions::BASELINE),
+                ("Full", SimOptions::all()),
+            ] {
+                let r = bench.fixture(&format!("census-k{k}-{}-{name}", inst.spec.abbrev), || {
+                    simulate_motifs(g, k, &roots, &opts, &cfg)
+                });
+                assert_eq!(
+                    r.census.counts, cpu.counts,
+                    "PIM census diverged on {} k={k} ({name})",
+                    inst.spec.abbrev
+                );
+                table.row(vec![
+                    name.to_string(),
+                    report::s(r.sim.seconds),
+                    report::pct(r.sim.access.near_frac()),
+                    report::pct(r.sim.agg.near_frac()),
+                    report::bytes(remote(&r.sim)),
+                    report::bytes(r.sim.agg_merge_bytes),
+                ]);
+            }
+            table.print();
+        }
+
+        // ---- FSM on a labeled copy: the aggregation-heavy workload
+        let labeled = gen::with_random_labels(g.clone(), 4, 7);
+        let fsm_cfg = FsmConfig {
+            min_support: (g.num_vertices() / 30).max(2) as u64,
+            max_size: 3,
+        };
+        let mut table = Table::new(
+            &format!(
+                "FSM on {} (4 labels, support ≥ {}, max size {})",
+                inst.spec.abbrev, fsm_cfg.min_support, fsm_cfg.max_size
+            ),
+            &["Config", "Frequent", "Time", "AggNear%", "AggRemote"],
+        );
+        let mut frequent_counts = Vec::new();
+        for (name, opts) in [
+            ("Base", SimOptions::BASELINE),
+            ("Full", SimOptions::all()),
+        ] {
+            let (r, sim) = bench.fixture(&format!("fsm-{}-{name}", inst.spec.abbrev), || {
+                simulate_fsm(&labeled, &fsm_cfg, &opts, &cfg)
+            });
+            frequent_counts.push(r.frequent.len());
+            table.row(vec![
+                name.to_string(),
+                r.frequent.len().to_string(),
+                report::s(sim.seconds),
+                report::pct(sim.agg.near_frac()),
+                report::bytes(remote(&sim)),
+            ]);
+        }
+        assert_eq!(
+            frequent_counts[0], frequent_counts[1],
+            "optimizations must not change the mining result"
+        );
+        table.print();
+    }
+}

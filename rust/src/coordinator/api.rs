@@ -1,6 +1,7 @@
-//! The PIMMiner framework facade: `PIMLoadGraph` (Algorithm 1) and
-//! `PIMPatternCount` (§4.6.2), on top of the device model, placement,
-//! duplication, and the simulator.
+//! The PIMMiner framework facade: `PIMLoadGraph` (Algorithm 1),
+//! `PIMPatternCount` (§4.6.2), and the mining entry points
+//! `PIMMotifCount` / `PIMFrequentMine` (DESIGN.md §8), on top of the
+//! device model, placement, duplication, and the simulator.
 //!
 //! This is the public API an application uses (see `examples/`):
 //!
@@ -12,19 +13,24 @@
 //! let mut miner = PimMiner::new(PimConfig::default(), SimOptions::all());
 //! miner.load_graph_file(std::path::Path::new("graph.csr")).unwrap();
 //! let app = application("4-CC").unwrap();
-//! let result = miner.pattern_count(&app, 1.0);
+//! let result = miner.pattern_count(&app, 1.0).unwrap();
 //! println!("4-CC count = {}, simulated {}s", result.count, result.seconds);
+//! let census = miner.motif_count(4, 1.0).unwrap();
+//! println!("4-motif census: {:?}", census.census.counts);
 //! ```
 
 use super::device::{PimDevice, PimPtr};
 use crate::exec::cpu::sampled_roots;
 use crate::graph::io::NeighborListReader;
 use crate::graph::{CsrGraph, VertexId};
+use crate::mine::fsm::{FsmConfig, FsmResult};
 use crate::pattern::plan::Application;
 use crate::pim::config::PimConfig;
 use crate::pim::filter::Cmp;
 use crate::pim::placement::Placement;
-use crate::pim::sim::{simulate_app, SimOptions, SimResult};
+use crate::pim::sim::{
+    simulate_app, simulate_fsm, simulate_motifs, MotifSimResult, SimOptions, SimResult,
+};
 use anyhow::{bail, Result};
 use std::path::Path;
 
@@ -94,7 +100,13 @@ impl PimMiner {
             col_idx.extend_from_slice(&list);
             lists.push(ptr);
         }
-        let graph = CsrGraph { row_ptr, col_idx };
+        // PIMCSR02 files carry a vertex-label section after the lists.
+        let labels = reader.read_labels()?;
+        let graph = CsrGraph {
+            row_ptr,
+            col_idx,
+            labels,
+        };
         graph.check_invariants().map_err(|e| anyhow::anyhow!(e))?;
         self.finish_load(graph, lists)
     }
@@ -146,9 +158,24 @@ impl PimMiner {
         Ok(())
     }
 
+    /// The source pointer unit `requester` reads `N(v)` from: the
+    /// requester-local replica when the duplication pass placed one
+    /// (`v < v_b[requester]`), else the primary copy wherever it lives.
+    pub fn replica_source(&self, requester: usize, v: VertexId) -> Result<PimPtr> {
+        let loaded = self.loaded.as_ref().ok_or_else(|| anyhow::anyhow!("no graph loaded"))?;
+        if (v as usize) >= loaded.lists.len() {
+            bail!("vertex {v} out of range");
+        }
+        Ok(match loaded.replicas.get(requester).and_then(|r| r.get(v as usize)) {
+            Some(&replica) => replica,
+            None => loaded.lists[v as usize],
+        })
+    }
+
     /// `MemoryCopy` with the access-filter arguments (§4.5): reads `N(v)`
-    /// filtered by `(cmp, th)` from wherever it lives, as PIM unit
-    /// `requester` would.
+    /// filtered by `(cmp, th)` from wherever it lives — the requester's
+    /// own replica when duplication placed one — as PIM unit `requester`
+    /// would.
     pub fn memory_copy_filtered(
         &mut self,
         requester: usize,
@@ -156,14 +183,7 @@ impl PimMiner {
         cmp: Cmp,
         th: VertexId,
     ) -> Result<Vec<VertexId>> {
-        let loaded = self.loaded.as_ref().ok_or_else(|| anyhow::anyhow!("no graph loaded"))?;
-        let src = if loaded.placement.is_local(requester, v) && (v as usize) < loaded.lists.len()
-        {
-            // near-core: primary or replica — same contents
-            loaded.lists[v as usize]
-        } else {
-            loaded.lists[v as usize]
-        };
+        let src = self.replica_source(requester, v)?;
         let dst = self.device.memory_copy(requester, src, Some((cmp, th)))?;
         let data = self.device.read(dst)?.to_vec();
         self.device.pim_free(dst)?;
@@ -173,19 +193,42 @@ impl PimMiner {
     /// `PIMPatternCount` (§4.6.2): set up stealing parameters and launch
     /// `PIMFunction` on all units; returns counts plus the full simulated
     /// timing breakdown. `sample_ratio` follows §5's root sampling.
-    pub fn pattern_count(&self, app: &Application, sample_ratio: f64) -> SimResult {
-        let loaded = self
-            .loaded
-            .as_ref()
-            .expect("PIMPatternCount requires PIMLoadGraph first");
+    /// Errors when no graph is loaded.
+    pub fn pattern_count(&self, app: &Application, sample_ratio: f64) -> Result<SimResult> {
+        let loaded = self.require_loaded("PIMPatternCount")?;
         let roots = sampled_roots(loaded.graph.num_vertices(), sample_ratio);
-        simulate_app(&loaded.graph, app, &roots, &self.opts, &self.cfg)
+        Ok(simulate_app(&loaded.graph, app, &roots, &self.opts, &self.cfg))
     }
 
     /// `LaunchPIMKernel`-style generic launch over explicit roots.
-    pub fn launch(&self, app: &Application, roots: &[VertexId]) -> SimResult {
-        let loaded = self.loaded.as_ref().expect("load a graph first");
-        simulate_app(&loaded.graph, app, roots, &self.opts, &self.cfg)
+    pub fn launch(&self, app: &Application, roots: &[VertexId]) -> Result<SimResult> {
+        let loaded = self.require_loaded("LaunchPIMKernel")?;
+        Ok(simulate_app(&loaded.graph, app, roots, &self.opts, &self.cfg))
+    }
+
+    /// `PIMMotifCount` (DESIGN.md §8): one-pass census of every connected
+    /// induced `k`-subgraph, with per-unit pattern-support counters merged
+    /// over the inter-channel fabric at kernel end. Exact per-pattern
+    /// counts require `sample_ratio = 1.0` (a sample censuses only
+    /// subgraphs whose minimum vertex is sampled).
+    pub fn motif_count(&self, k: usize, sample_ratio: f64) -> Result<MotifSimResult> {
+        let loaded = self.require_loaded("PIMMotifCount")?;
+        let roots = sampled_roots(loaded.graph.num_vertices(), sample_ratio);
+        Ok(simulate_motifs(&loaded.graph, k, &roots, &self.opts, &self.cfg))
+    }
+
+    /// `PIMFrequentMine` (DESIGN.md §8): BFS edge-extension FSM with
+    /// minimum-image support over the loaded (labeled) graph; per-level
+    /// domain maps are the aggregation state the fabric must merge.
+    pub fn frequent_mine(&self, fsm: &FsmConfig) -> Result<(FsmResult, SimResult)> {
+        let loaded = self.require_loaded("PIMFrequentMine")?;
+        Ok(simulate_fsm(&loaded.graph, fsm, &self.opts, &self.cfg))
+    }
+
+    fn require_loaded(&self, what: &str) -> Result<&LoadedGraph> {
+        self.loaded
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("{what} requires PIMLoadGraph first"))
     }
 
     /// Verify device-resident lists match the CSR (used by tests and the
@@ -226,9 +269,27 @@ mod tests {
         m.load_graph(graph()).unwrap();
         m.verify_device_contents().unwrap();
         let app = application("3-CC").unwrap();
-        let r = m.pattern_count(&app, 1.0);
+        let r = m.pattern_count(&app, 1.0).unwrap();
         assert!(r.count > 0);
         assert!(r.seconds > 0.0);
+    }
+
+    #[test]
+    fn motif_count_and_frequent_mine_run_on_loaded_graph() {
+        let mut m = PimMiner::new(tiny_cfg(), SimOptions::all());
+        m.load_graph(graph()).unwrap();
+        let census = m.motif_count(3, 1.0).unwrap();
+        assert_eq!(census.census.counts.len(), 2); // wedge + triangle
+        assert!(census.census.total() > 0);
+        assert!(census.sim.agg_updates > 0);
+        let (fsm_r, sim) = m
+            .frequent_mine(&FsmConfig {
+                min_support: 1,
+                max_size: 3,
+            })
+            .unwrap();
+        assert!(!fsm_r.frequent.is_empty());
+        assert!(sim.total_cycles > 0);
     }
 
     #[test]
@@ -246,8 +307,8 @@ mod tests {
 
         a.verify_device_contents().unwrap();
         let app = application("4-CL").unwrap();
-        let ra = a.pattern_count(&app, 1.0);
-        let rb = b.pattern_count(&app, 1.0);
+        let ra = a.pattern_count(&app, 1.0).unwrap();
+        let rb = b.pattern_count(&app, 1.0).unwrap();
         assert_eq!(ra.count, rb.count);
         assert_eq!(ra.total_cycles, rb.total_cycles);
     }
@@ -280,12 +341,43 @@ mod tests {
     }
 
     #[test]
-    fn pattern_count_without_load_panics() {
+    fn filtered_memory_copy_reads_the_local_replica() {
+        let mut m = PimMiner::new(tiny_cfg(), SimOptions::all());
+        let g = graph();
+        m.load_graph(g.clone()).unwrap();
+        // tiny cfg fully duplicates (see duplication_creates_replicas), so
+        // every unit must source vertex 0 from its own replica — not the
+        // remote primary (which lives on round_robin_unit(0)).
+        let primary_owner = m.config().round_robin_unit(0);
+        let requester = (primary_owner + 3) % m.config().num_units();
+        let src = m.replica_source(requester, 0).unwrap();
+        assert_eq!(src.unit, requester, "must read the requester's replica");
+        // the primary stays the source for its own unit
+        assert_eq!(m.replica_source(primary_owner, 0).unwrap().unit, primary_owner);
+        // and the filtered copy still returns the right data
+        let got = m.memory_copy_filtered(requester, 0, Cmp::Lt, 80).unwrap();
+        let expected: Vec<u32> = g.neighbors(0).iter().copied().filter(|&x| x < 80).collect();
+        assert_eq!(got, expected);
+        // without duplication there are no replicas: fall back to primary
+        let mut plain = PimMiner::new(tiny_cfg(), SimOptions::BASELINE);
+        plain.load_graph(g).unwrap();
+        assert_eq!(plain.replica_source(requester, 0).unwrap().unit, primary_owner);
+        assert!(plain.replica_source(requester, u32::MAX - 1).is_err());
+    }
+
+    #[test]
+    fn launches_without_load_error() {
         let m = PimMiner::new(tiny_cfg(), SimOptions::BASELINE);
         let app = application("3-CC").unwrap();
-        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            m.pattern_count(&app, 1.0)
-        }));
-        assert!(r.is_err());
+        let err = m.pattern_count(&app, 1.0).unwrap_err();
+        assert!(err.to_string().contains("PIMLoadGraph"), "{err}");
+        assert!(m.launch(&app, &[0]).is_err());
+        assert!(m.motif_count(3, 1.0).is_err());
+        assert!(m
+            .frequent_mine(&FsmConfig {
+                min_support: 1,
+                max_size: 3,
+            })
+            .is_err());
     }
 }

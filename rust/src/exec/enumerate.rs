@@ -31,6 +31,14 @@ pub trait EnumSink {
     /// `count` embeddings were completed at the last level.
     #[inline]
     fn on_embeddings(&mut self, _count: u64) {}
+    /// A mining support-state update: `bytes` bytes of the requesting
+    /// unit's aggregate state (a motif counter slot, an FSM domain entry)
+    /// were read-modified-written for aggregate key `key`. Only the mining
+    /// engines (`crate::mine`) emit this; plain pattern counting carries
+    /// no per-unit aggregation state. The PIM `SimSink` charges it and the
+    /// end-of-kernel cross-unit merge against the fabric (DESIGN.md §8).
+    #[inline]
+    fn on_aggregate(&mut self, _key: usize, _bytes: u64) {}
 }
 
 /// Sink that ignores everything (pure counting).
@@ -182,8 +190,7 @@ impl<'g> Enumerator<'g> {
             c
         } else {
             let mut total = 0u64;
-            for idx in lo..hi {
-                let c = cands[idx];
+            for &c in &cands[lo..hi] {
                 self.bound[1] = c;
                 self.emit_fetch(1, c, sink);
                 total += self.descend(2, sink);
@@ -218,8 +225,7 @@ impl<'g> Enumerator<'g> {
             c
         } else {
             let mut total = 0u64;
-            for i in 0..cands.len() {
-                let c = cands[i];
+            for &c in &cands {
                 self.bound[level] = c;
                 self.emit_fetch(level, c, sink);
                 total += self.descend(level + 1, sink);

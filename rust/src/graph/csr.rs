@@ -16,6 +16,10 @@ pub struct CsrGraph {
     pub row_ptr: Vec<u64>,
     /// Concatenated neighbor lists, each sorted ascending.
     pub col_idx: Vec<VertexId>,
+    /// Optional vertex labels — the FSM workloads (`mine::fsm`) mine
+    /// labeled graphs; `None` means unlabeled (every vertex reads label
+    /// 0). When present, `labels.len() == |V|`.
+    pub labels: Option<Vec<u32>>,
 }
 
 impl CsrGraph {
@@ -55,9 +59,44 @@ impl CsrGraph {
         // by (lo, hi): for a fixed lower endpoint the upper endpoints arrive
         // ascending, and for a fixed upper endpoint the lower endpoints also
         // arrive ascending. Assert in debug builds.
-        let g = CsrGraph { row_ptr, col_idx };
+        let g = CsrGraph {
+            row_ptr,
+            col_idx,
+            labels: None,
+        };
         debug_assert!(g.check_invariants().is_ok());
         g
+    }
+
+    /// Attach vertex labels (consumed by the FSM engine). `labels` must
+    /// have one entry per vertex.
+    pub fn with_labels(mut self, labels: Vec<u32>) -> Self {
+        assert_eq!(
+            labels.len(),
+            self.num_vertices(),
+            "one label per vertex required"
+        );
+        self.labels = Some(labels);
+        self
+    }
+
+    /// Label of `v` (0 when the graph is unlabeled).
+    #[inline]
+    pub fn label(&self, v: VertexId) -> u32 {
+        self.labels.as_ref().map_or(0, |l| l[v as usize])
+    }
+
+    /// Sorted distinct labels present (a single `[0]` when unlabeled).
+    pub fn distinct_labels(&self) -> Vec<u32> {
+        match &self.labels {
+            None => vec![0],
+            Some(ls) => {
+                let mut out = ls.clone();
+                out.sort_unstable();
+                out.dedup();
+                out
+            }
+        }
     }
 
     /// Number of vertices.
@@ -107,6 +146,11 @@ impl CsrGraph {
         let n = self.num_vertices();
         if self.row_ptr[0] != 0 {
             return Err("row_ptr[0] != 0".into());
+        }
+        if let Some(ls) = &self.labels {
+            if ls.len() != n {
+                return Err(format!("{} labels for {n} vertices", ls.len()));
+            }
         }
         if *self.row_ptr.last().unwrap() as usize != self.col_idx.len() {
             return Err("row_ptr end mismatch".into());
@@ -198,6 +242,23 @@ mod tests {
         assert_eq!(g.num_vertices(), 0);
         assert_eq!(g.num_edges(), 0);
         g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn labels_attach_and_validate() {
+        let g = diamond().with_labels(vec![2, 0, 0, 1]);
+        assert_eq!(g.label(0), 2);
+        assert_eq!(g.label(3), 1);
+        assert_eq!(g.distinct_labels(), vec![0, 1, 2]);
+        g.check_invariants().unwrap();
+        // unlabeled graphs read label 0 everywhere
+        let u = diamond();
+        assert_eq!(u.label(2), 0);
+        assert_eq!(u.distinct_labels(), vec![0]);
+        // wrong-length label vector is an invariant violation
+        let mut bad = diamond();
+        bad.labels = Some(vec![0, 1]);
+        assert!(bad.check_invariants().is_err());
     }
 
     #[test]

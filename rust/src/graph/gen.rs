@@ -124,7 +124,22 @@ pub fn cap_degree(g: &CsrGraph, cap: usize) -> CsrGraph {
             }
         }
     }
-    CsrGraph::from_edges(n, &edges)
+    let mut capped = CsrGraph::from_edges(n, &edges);
+    // Vertex ids are unchanged, so labels carry over verbatim.
+    capped.labels = g.labels.clone();
+    capped
+}
+
+/// Attach seeded uniform vertex labels from `0..num_labels` — the FSM
+/// workloads (`mine::fsm`) mine labeled graphs, and none of the Table 3
+/// stand-ins carry labels of their own.
+pub fn with_random_labels(g: CsrGraph, num_labels: u32, seed: u64) -> CsrGraph {
+    assert!(num_labels >= 1, "need at least one label");
+    let mut rng = Rng::new(seed ^ 0x51AB_E11E_D000_0001);
+    let labels: Vec<u32> = (0..g.num_vertices())
+        .map(|_| rng.below_usize(num_labels as usize) as u32)
+        .collect();
+    g.with_labels(labels)
 }
 
 /// Erdős–Rényi G(n, m): exactly `m` distinct edges drawn uniformly.
@@ -233,6 +248,26 @@ mod tests {
         assert!(capped.num_edges() > g.num_edges() / 2, "cap dropped too much");
         // idempotent
         assert_eq!(cap_degree(&capped, 100), capped);
+    }
+
+    #[test]
+    fn cap_degree_preserves_labels() {
+        let g = with_random_labels(power_law(500, 3_000, 200, 4), 3, 8);
+        let capped = cap_degree(&g, 50);
+        assert_eq!(capped.labels, g.labels);
+        capped.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn random_labels_are_seeded_and_in_range() {
+        let g = with_random_labels(erdos_renyi(300, 900, 2), 4, 9);
+        let labels = g.labels.as_ref().unwrap();
+        assert_eq!(labels.len(), 300);
+        assert!(labels.iter().all(|&l| l < 4));
+        // deterministic, and every label class is hit at this size
+        let g2 = with_random_labels(erdos_renyi(300, 900, 2), 4, 9);
+        assert_eq!(g, g2);
+        assert_eq!(g.distinct_labels(), vec![0, 1, 2, 3]);
     }
 
     #[test]

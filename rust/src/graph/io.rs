@@ -3,7 +3,10 @@
 //! Two formats:
 //!   * the paper's binary CSR interchange (§4.6.1 Algorithm 1): vertex
 //!     count, then `RowPtr`, then `ColIdx` — the format `PIMLoadGraph`
-//!     streams from disk into PIM memory without staging in main memory;
+//!     streams from disk into PIM memory without staging in main memory.
+//!     Labeled graphs (the FSM workloads) use the `PIMCSR02` magic and
+//!     append one `u32` label per vertex after `ColIdx`; unlabeled files
+//!     keep the original `PIMCSR01` layout, so old files stay readable;
 //!   * plain text edge lists (`a b` per line, `#` comments) for
 //!     interoperability with SNAP-style files.
 
@@ -13,15 +16,17 @@ use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"PIMCSR01";
+const MAGIC_LABELED: &[u8; 8] = b"PIMCSR02";
 
 /// Write the binary CSR format: magic, u64 |V|, u64 |adj|, row_ptr (u64 LE),
-/// col_idx (u32 LE). Matches the layout Algorithm 1 expects: RowPtr can be
-/// read alone (header + row_ptr) before the neighbor lists stream in.
+/// col_idx (u32 LE), then — `PIMCSR02` only — one u32 label per vertex.
+/// Matches the layout Algorithm 1 expects: RowPtr can be read alone
+/// (header + row_ptr) before the neighbor lists stream in.
 pub fn write_csr(g: &CsrGraph, path: &Path) -> Result<()> {
     let file = std::fs::File::create(path)
         .with_context(|| format!("create {}", path.display()))?;
     let mut w = BufWriter::new(file);
-    w.write_all(MAGIC)?;
+    w.write_all(if g.labels.is_some() { MAGIC_LABELED } else { MAGIC })?;
     w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
     w.write_all(&(g.col_idx.len() as u64).to_le_bytes())?;
     for &p in &g.row_ptr {
@@ -30,19 +35,33 @@ pub fn write_csr(g: &CsrGraph, path: &Path) -> Result<()> {
     for &c in &g.col_idx {
         w.write_all(&c.to_le_bytes())?;
     }
+    if let Some(labels) = &g.labels {
+        for &l in labels {
+            w.write_all(&l.to_le_bytes())?;
+        }
+    }
     w.flush()?;
     Ok(())
 }
 
-/// Read the whole binary CSR file.
+/// Read the whole binary CSR file (either magic).
 pub fn read_csr(path: &Path) -> Result<CsrGraph> {
     let file = std::fs::File::open(path)
         .with_context(|| format!("open {}", path.display()))?;
     let mut r = BufReader::new(file);
-    let (n, nnz) = read_csr_header(&mut r)?;
-    let row_ptr = read_u64s(&mut r, n + 1)?;
-    let col_idx = read_u32s(&mut r, nnz)?;
-    let g = CsrGraph { row_ptr, col_idx };
+    let header = read_csr_header(&mut r)?;
+    let row_ptr = read_u64s(&mut r, header.n + 1)?;
+    let col_idx = read_u32s(&mut r, header.nnz)?;
+    let labels = if header.labeled {
+        Some(read_u32s(&mut r, header.n)?)
+    } else {
+        None
+    };
+    let g = CsrGraph {
+        row_ptr,
+        col_idx,
+        labels,
+    };
     g.check_invariants().map_err(|e| anyhow::anyhow!(e))?;
     Ok(g)
 }
@@ -53,9 +72,9 @@ pub fn read_csr_row_ptr(path: &Path) -> Result<(usize, Vec<u64>)> {
     let file = std::fs::File::open(path)
         .with_context(|| format!("open {}", path.display()))?;
     let mut r = BufReader::new(file);
-    let (n, _nnz) = read_csr_header(&mut r)?;
-    let row_ptr = read_u64s(&mut r, n + 1)?;
-    Ok((n, row_ptr))
+    let header = read_csr_header(&mut r)?;
+    let row_ptr = read_u64s(&mut r, header.n + 1)?;
+    Ok((header.n, row_ptr))
 }
 
 /// Streaming reader over the ColIdx section of a binary CSR file: yields
@@ -65,6 +84,7 @@ pub struct NeighborListReader {
     reader: BufReader<std::fs::File>,
     row_ptr: Vec<u64>,
     next_vertex: usize,
+    labeled: bool,
 }
 
 impl NeighborListReader {
@@ -72,12 +92,13 @@ impl NeighborListReader {
         let file = std::fs::File::open(path)
             .with_context(|| format!("open {}", path.display()))?;
         let mut reader = BufReader::new(file);
-        let (n, _) = read_csr_header(&mut reader)?;
-        let row_ptr = read_u64s(&mut reader, n + 1)?;
+        let header = read_csr_header(&mut reader)?;
+        let row_ptr = read_u64s(&mut reader, header.n + 1)?;
         Ok(NeighborListReader {
             reader,
             row_ptr,
             next_vertex: 0,
+            labeled: header.labeled,
         })
     }
 
@@ -87,6 +108,11 @@ impl NeighborListReader {
 
     pub fn row_ptr(&self) -> &[u64] {
         &self.row_ptr
+    }
+
+    /// Whether the file carries a vertex-label section (`PIMCSR02`).
+    pub fn labeled(&self) -> bool {
+        self.labeled
     }
 
     /// Read the next vertex's neighbor list; `None` after the last vertex.
@@ -99,6 +125,19 @@ impl NeighborListReader {
         let list = read_u32s(&mut self.reader, len)?;
         self.next_vertex += 1;
         Ok(Some((v as VertexId, list)))
+    }
+
+    /// Read the label section, which sits after the last neighbor list
+    /// (`PIMCSR02` files only; `None` for unlabeled files). All lists must
+    /// have been consumed first — labels are streamed, not seeked.
+    pub fn read_labels(&mut self) -> Result<Option<Vec<u32>>> {
+        if !self.labeled {
+            return Ok(None);
+        }
+        if self.next_vertex + 1 < self.row_ptr.len() {
+            bail!("labels follow the neighbor lists; consume all lists first");
+        }
+        Ok(Some(read_u32s(&mut self.reader, self.num_vertices())?))
     }
 }
 
@@ -149,18 +188,28 @@ pub fn write_edge_list(g: &CsrGraph, path: &Path) -> Result<()> {
     Ok(())
 }
 
-fn read_csr_header(r: &mut impl Read) -> Result<(usize, usize)> {
+struct CsrHeader {
+    n: usize,
+    nnz: usize,
+    labeled: bool,
+}
+
+fn read_csr_header(r: &mut impl Read) -> Result<CsrHeader> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("bad magic: not a PIMCSR01 file");
-    }
+    let labeled = if &magic == MAGIC {
+        false
+    } else if &magic == MAGIC_LABELED {
+        true
+    } else {
+        bail!("bad magic: not a PIMCSR01/PIMCSR02 file");
+    };
     let mut buf = [0u8; 8];
     r.read_exact(&mut buf)?;
     let n = u64::from_le_bytes(buf) as usize;
     r.read_exact(&mut buf)?;
     let nnz = u64::from_le_bytes(buf) as usize;
-    Ok((n, nnz))
+    Ok(CsrHeader { n, nnz, labeled })
 }
 
 fn read_u64s(r: &mut impl Read, count: usize) -> Result<Vec<u64>> {
@@ -199,6 +248,22 @@ mod tests {
         write_csr(&g, &p).unwrap();
         let g2 = read_csr(&p).unwrap();
         assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn labeled_csr_roundtrip() {
+        let g = gen::erdos_renyi(60, 200, 11).with_labels((0..60).map(|v| v % 5).collect());
+        let p = tmp("labeled.csr");
+        write_csr(&g, &p).unwrap();
+        let g2 = read_csr(&p).unwrap();
+        assert_eq!(g, g2);
+        assert_eq!(g2.label(7), 7 % 5);
+        // streaming reader surfaces the label section after the lists
+        let mut r = NeighborListReader::open(&p).unwrap();
+        assert!(r.labeled());
+        assert!(r.read_labels().is_err(), "labels before lists must fail");
+        while r.next_list().unwrap().is_some() {}
+        assert_eq!(r.read_labels().unwrap(), g.labels);
     }
 
     #[test]

@@ -49,8 +49,14 @@ pub fn relabel(g: &CsrGraph, order: &[VertexId]) -> Relabeling {
             }
         }
     }
+    let mut graph = CsrGraph::from_edges(n, &edges);
+    // Labels ride along with their vertices through the permutation.
+    graph.labels = g
+        .labels
+        .as_ref()
+        .map(|ls| order.iter().map(|&old| ls[old as usize]).collect());
     Relabeling {
-        graph: CsrGraph::from_edges(n, &edges),
+        graph,
         old_to_new,
         new_to_old: order.to_vec(),
     }
@@ -88,6 +94,19 @@ mod tests {
             for &u in g.neighbors(v) {
                 assert!(r.graph.has_edge(r.old_to_new[v as usize], r.old_to_new[u as usize]));
             }
+        }
+    }
+
+    #[test]
+    fn labels_follow_their_vertices() {
+        // star center (old id 3) has the top degree → becomes id 0; its
+        // label must move with it.
+        let g = CsrGraph::from_edges(4, &[(3, 0), (3, 1), (3, 2)])
+            .with_labels(vec![10, 11, 12, 99]);
+        let r = sort_by_degree_desc(&g);
+        assert_eq!(r.graph.label(0), 99);
+        for old in 0..4u32 {
+            assert_eq!(r.graph.label(r.old_to_new[old as usize]), g.label(old));
         }
     }
 

@@ -12,7 +12,11 @@
 //! general pattern compiler: any connected pattern up to 8 vertices —
 //! parsed from an edge-list spec — is lowered to an enumeration [`Plan`]
 //! (automorphism-based symmetry breaking, cost-driven matching order)
-//! that the CPU executors and the PIM simulator consume unchanged:
+//! that the CPU executors and the PIM simulator consume unchanged; and
+//! [`mine`] adds the pattern-*mining* workloads — one-pass motif counting
+//! and frequent-subgraph mining with minimum-image support — whose
+//! per-unit support state the simulator charges through a dedicated
+//! aggregation cost model (DESIGN.md §8):
 //!
 //! ```
 //! use pimminer::exec::cpu::{count_plan, sampled_roots, CpuFlavor};
@@ -41,6 +45,7 @@ pub mod coordinator;
 pub mod datasets;
 pub mod exec;
 pub mod graph;
+pub mod mine;
 pub mod pattern;
 pub mod pim;
 pub mod report;

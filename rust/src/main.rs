@@ -5,6 +5,8 @@
 //!   count     --dataset MI (--app 4-CC | --pattern "0-1,1-2,2-0,2-3")
 //!             [--system pim|cpu] [--sample 0.1] [--non-induced]
 //!             [--no-filter --no-remap --no-dup --no-steal]
+//!   motifs    --dataset MI -k 4 [--system pim|cpu] [--check]   one-pass census
+//!   fsm       --dataset MI --support 100 --max-size 4 [--labels 4]
 //!   plan      --pattern <edgelist|name>             print the compiled plan
 //!   verify    [--pattern <spec>] [--seeds 3]        compiled plans vs brute force
 //!   ladder    --dataset MI (--app 4-CC | --pattern <spec>)   Fig. 9 ladder
@@ -15,15 +17,21 @@
 //! `"0-1,1-2,2-0,2-3"` or a well-known name (`triangle`, `diamond`,
 //! `house`, ...) and routes it through the pattern compiler
 //! (`pattern::compile`) instead of the fixed application catalogue.
+//! `motifs` and `fsm` are the *mining* workloads (DESIGN.md §8): they
+//! discover patterns instead of counting a pre-compiled one, and on the
+//! PIM path report the support-aggregation traffic breakdown.
 
 use pimminer::coordinator::PimMiner;
 use pimminer::datasets;
 use pimminer::exec::brute_force_count;
 use pimminer::exec::cpu::{self, CpuFlavor};
 use pimminer::graph::{gen, io, sort_by_degree_desc, CsrGraph};
+use pimminer::mine::{self, FsmConfig};
 use pimminer::pattern::compile::{compile_with, parse_pattern, Compiled, CostModel};
 use pimminer::pattern::plan::application;
-use pimminer::pim::{simulate_plan, PimConfig, SimOptions};
+use pimminer::pim::{
+    simulate_fsm, simulate_motifs, simulate_plan, PimConfig, SimOptions, SimResult,
+};
 use pimminer::report::{self, Table};
 use pimminer::util::cli::Args;
 
@@ -33,6 +41,8 @@ fn main() {
     match cmd {
         "generate" => generate(&args),
         "count" => count(&args),
+        "motifs" => motifs(&args),
+        "fsm" => fsm(&args),
         "plan" => plan_cmd(&args),
         "verify" => verify(&args),
         "ladder" => ladder(&args),
@@ -45,13 +55,18 @@ fn help() {
     println!(
         "pimminer — PIM architecture-aware graph mining (paper reproduction)\n\
          \n\
-         usage: pimminer <generate|count|plan|verify|ladder|info> [flags]\n\
+         usage: pimminer <generate|count|motifs|fsm|plan|verify|ladder|info> [flags]\n\
          \n\
          generate --dataset <CI|PP|AS|MI|YT|PA|LJ> [--full] --out <file.csr>\n\
          count    (--dataset <abbrev> | --graph <file.csr>)\n\
                   (--app <3-CC|4-CC|5-CC|3-MC|4-DI|4-CL> | --pattern <edgelist|name>)\n\
                   [--system pim|cpu] [--sample <ratio>] [--non-induced]\n\
                   [--no-filter] [--no-remap] [--no-dup] [--no-steal]\n\
+         motifs   (--dataset | --graph) [-k <3|4|5>] [--system pim|cpu]\n\
+                  [--check]   one-pass census; --check cross-validates every\n\
+                  per-pattern count against an independent compiled-plan run\n\
+         fsm      (--dataset | --graph) [--support <s>] [--max-size <k>]\n\
+                  [--labels <L> [--label-seed <s>]] [--system pim|cpu]\n\
          plan     --pattern <edgelist|name> [--graph|--dataset ...] [--non-induced]\n\
          verify   [--pattern <spec>] [--seeds <k>] [--n <verts>] [--edges <m>]\n\
          ladder   (--dataset | --graph) (--app <name> | --pattern <spec>) [--sample <ratio>]\n\
@@ -132,7 +147,7 @@ fn count(args: &Args) {
         _ => {
             let mut miner = PimMiner::new(PimConfig::default(), options(args));
             miner.load_graph(g).expect("PIMLoadGraph");
-            let r = miner.pattern_count(&app, sample);
+            let r = miner.pattern_count(&app, sample).expect("PIMPatternCount");
             println!(
                 "{} on PIM: count={} time={} (avg core {}) near={} steals={}",
                 app.name,
@@ -178,6 +193,188 @@ fn count_pattern(args: &Args, g: &CsrGraph, sample: f64, spec: &str) {
             );
         }
     }
+}
+
+/// Render the mining aggregation-traffic breakdown (DESIGN.md §8).
+fn print_aggregation(r: &SimResult) {
+    let total = r.agg.total();
+    println!(
+        "aggregation: {} updates, traffic {} (near={} intra={} inter={}), merge {} in {} cycles",
+        r.agg_updates,
+        report::bytes(total),
+        report::pct(r.agg.near_frac()),
+        report::pct(r.agg.intra_frac()),
+        report::pct(r.agg.inter_frac()),
+        report::bytes(r.agg_merge_bytes),
+        r.agg_cycles,
+    );
+}
+
+/// `motifs -k 4`: the one-pass motif census (PIMMotifCount). `--check`
+/// re-counts every pattern with an independently compiled plan and fails
+/// loudly on any mismatch — the acceptance gate for the mining engine.
+///
+/// Unlike `count`, the census defaults to the *full* root set even on
+/// datasets with a default sampling ratio: a sampled census counts only
+/// subgraphs whose minimum vertex is sampled, which is not a fraction of
+/// the true counts. Sampling must be requested explicitly.
+fn motifs(args: &Args) {
+    let (g, _) = load_graph(args);
+    let k = args.get_usize("k", 4);
+    if !(2..=5).contains(&k) {
+        eprintln!("motifs error: -k must be between 2 and 5 (classifier table sizes), got {k}");
+        std::process::exit(2);
+    }
+    let sample = args.get_f64("sample", 1.0);
+    if sample < 1.0 {
+        if args.get_bool("check") {
+            eprintln!("motifs error: --check needs the full census (drop --sample)");
+            std::process::exit(2);
+        }
+        println!(
+            "note: sampling restricts the census to subgraphs whose minimum \
+             vertex is sampled — counts are not comparable to a full run"
+        );
+    }
+    let roots = cpu::sampled_roots(g.num_vertices(), sample);
+    let census = match args.get_or("system", "pim") {
+        "cpu" => {
+            let t = std::time::Instant::now();
+            let census = mine::motif_census(&g, k, &roots);
+            println!(
+                "{k}-motif census on CPU: {} subgraphs in {}",
+                census.total(),
+                report::s(t.elapsed().as_secs_f64())
+            );
+            census
+        }
+        _ => {
+            let r = simulate_motifs(&g, k, &roots, &options(args), &PimConfig::default());
+            println!(
+                "{k}-motif census on PIM: {} subgraphs, time={} near={} steals={}",
+                r.census.total(),
+                report::s(r.sim.seconds),
+                report::pct(r.sim.access.near_frac()),
+                r.sim.steals
+            );
+            print_aggregation(&r.sim);
+            r.census
+        }
+    };
+    let mut t = Table::new(
+        &format!("{k}-motif census ({} roots)", roots.len()),
+        &["Motif", "Edges", "Count"],
+    );
+    for (m, &c) in census.motifs.iter().zip(&census.counts) {
+        t.row(vec![m.name.clone(), m.num_edges().to_string(), c.to_string()]);
+    }
+    t.print();
+    if args.get_bool("check") {
+        check_census(&g, &census);
+    }
+}
+
+/// Cross-validate the census that actually ran (CPU or PIM-simulated)
+/// against an independent `count --pattern`-style run of each compiled
+/// per-pattern plan over the full root set. Exits non-zero on mismatch —
+/// this is what catches a divergence in the mining pipeline itself.
+fn check_census(g: &CsrGraph, census: &pimminer::mine::MotifCensus) {
+    let all: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    let model = CostModel::for_graph(g);
+    let mut failures = 0u64;
+    for (i, m) in census.motifs.iter().enumerate() {
+        let compiled = compile_with(m, &model, true).expect("motifs compile");
+        let expected = cpu::count_plan(g, &compiled.plan, &all, CpuFlavor::AutoMineOpt);
+        if census.counts[i] != expected {
+            eprintln!(
+                "MISMATCH {}: census {} vs compiled plan {}",
+                m.name, census.counts[i], expected
+            );
+            failures += 1;
+        }
+    }
+    if failures > 0 {
+        eprintln!("motif check FAILED: {failures} patterns disagree");
+        std::process::exit(1);
+    }
+    println!(
+        "motif check OK: all {} per-pattern counts match independent compiled-plan runs",
+        census.motifs.len()
+    );
+}
+
+/// `fsm`: frequent subgraph mining (PIMFrequentMine). Unlabeled inputs
+/// can be given seeded labels with `--labels <L>`.
+fn fsm(args: &Args) {
+    let (mut g, _) = load_graph(args);
+    if let Some(v) = args.get("labels") {
+        match v.parse::<u32>() {
+            Ok(l) if l >= 1 => {
+                if g.labels.is_some() {
+                    println!("note: graph already carries labels; --labels ignored");
+                } else {
+                    g = gen::with_random_labels(g, l, args.get_u64("label-seed", 42));
+                }
+            }
+            _ => {
+                eprintln!("fsm error: --labels must be a positive integer, got '{v}'");
+                std::process::exit(2);
+            }
+        }
+    }
+    let max_size = args.get_usize("max-size", 4);
+    if !(2..=8).contains(&max_size) {
+        eprintln!("fsm error: --max-size must be between 2 and 8, got {max_size}");
+        std::process::exit(2);
+    }
+    let cfg = FsmConfig {
+        min_support: args.get_u64("support", 100),
+        max_size,
+    };
+    let result = match args.get_or("system", "pim") {
+        "cpu" => {
+            let t = std::time::Instant::now();
+            let r = mine::fsm_mine(&g, &cfg);
+            println!(
+                "FSM on CPU: {} frequent patterns (support ≥ {}) in {}",
+                r.frequent.len(),
+                cfg.min_support,
+                report::s(t.elapsed().as_secs_f64())
+            );
+            r
+        }
+        _ => {
+            let (r, sim) = simulate_fsm(&g, &cfg, &options(args), &PimConfig::default());
+            println!(
+                "FSM on PIM: {} frequent patterns (support ≥ {}), time={} near={}",
+                r.frequent.len(),
+                cfg.min_support,
+                report::s(sim.seconds),
+                report::pct(sim.access.near_frac())
+            );
+            print_aggregation(&sim);
+            r
+        }
+    };
+    let mut t = Table::new(
+        &format!(
+            "frequent patterns (min support {}, max size {}, {} levels searched)",
+            cfg.min_support,
+            cfg.max_size,
+            result.candidates_per_level.len()
+        ),
+        &["Pattern", "Vertices", "Edges", "Support", "Embeddings"],
+    );
+    for f in &result.frequent {
+        t.row(vec![
+            f.pattern.describe(),
+            f.pattern.size().to_string(),
+            f.pattern.pattern.num_edges().to_string(),
+            f.support.to_string(),
+            f.embeddings.to_string(),
+        ]);
+    }
+    t.print();
 }
 
 /// `plan --pattern <spec>`: compile and pretty-print without running.

@@ -1,0 +1,312 @@
+//! One-pass motif counting (the k-MC *mining* workload): every connected
+//! induced `k`-subgraph is enumerated exactly once and classified through
+//! the [`PatternClassifier`] into per-pattern counts.
+//!
+//! The enumeration is the ESU construction (Wernicke's FANMOD algorithm):
+//! from each root `v`, grow the subgraph by repeatedly moving a vertex
+//! `w` from the extension set into the subgraph and adding `w`'s
+//! *exclusive* neighbors (`> v`, not yet adjacent to the subgraph) to the
+//! extension set. Each connected `k`-subset is reached exactly once, so
+//! per-pattern counts equal the induced embedding counts the compiled
+//! per-pattern plans produce — asserted by `tests/integration_mine.rs`.
+//!
+//! Like the nested-loop [`Enumerator`](crate::exec::enumerate::Enumerator),
+//! the engine reports every neighbor-list fetch, extension scan, completed
+//! embedding, and support-state update to an [`EnumSink`], so the same
+//! PIM timing model prices mining and counting identically
+//! ([`pim::sim::simulate_motifs`](crate::pim::sim::simulate_motifs)).
+//! The `u > root` extension rule is a `(cmp='>', th=root)` in-bank filter
+//! predicate, so fetches report the post-filter survivor count.
+
+use super::classify::PatternClassifier;
+use crate::exec::enumerate::{EnumSink, NullSink};
+use crate::exec::setops::prefix_len;
+use crate::graph::{CsrGraph, VertexId};
+use crate::pattern::pattern::Pattern;
+use crate::util::threads;
+
+/// Per-pattern counts for one size `k`, aligned with
+/// [`PatternClassifier::motifs`].
+#[derive(Clone, Debug)]
+pub struct MotifCensus {
+    pub k: usize,
+    pub motifs: Vec<Pattern>,
+    pub counts: Vec<u64>,
+}
+
+impl MotifCensus {
+    /// Total connected induced `k`-subgraphs.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Count of the motif isomorphic to `p`, if `p` has `k` vertices.
+    pub fn count_of(&self, p: &Pattern) -> Option<u64> {
+        self.motifs
+            .iter()
+            .position(|m| m.is_isomorphic(p))
+            .map(|i| self.counts[i])
+    }
+}
+
+/// Reusable single-thread ESU state for one `(graph, classifier)` pair.
+/// Construct once per worker; [`run_root`](CensusEngine::run_root) may be
+/// called repeatedly. Counts accumulate in `counts`.
+pub struct CensusEngine<'g> {
+    g: &'g CsrGraph,
+    cls: &'g PatternClassifier,
+    pub counts: Vec<u64>,
+    sub: Vec<VertexId>,
+    /// `visited[u]` ⇔ `u` ∈ subgraph ∪ N(subgraph) on the current path
+    /// (restricted to ids `> root`) — the ESU exclusivity test.
+    visited: Vec<bool>,
+    /// Per-depth extension sets, recycled across nodes and roots (§Perf:
+    /// the enumeration hot path must not allocate; recursion depth ≤ k).
+    ext_pool: Vec<Vec<VertexId>>,
+    /// Per-depth exclusive-neighbor scratch, recycled likewise.
+    added_pool: Vec<Vec<VertexId>>,
+}
+
+impl<'g> CensusEngine<'g> {
+    pub fn new(g: &'g CsrGraph, cls: &'g PatternClassifier) -> Self {
+        CensusEngine {
+            g,
+            cls,
+            counts: vec![0; cls.num_patterns()],
+            sub: Vec::with_capacity(cls.k()),
+            visited: vec![false; g.num_vertices()],
+            ext_pool: vec![Vec::new(); cls.k() + 1],
+            added_pool: vec![Vec::new(); cls.k() + 1],
+        }
+    }
+
+    /// Enumerate and classify every connected `k`-subgraph whose minimum
+    /// vertex is `root`, reporting work to `sink`.
+    pub fn run_root(&mut self, root: VertexId, sink: &mut impl EnumSink) {
+        let nbrs = self.g.neighbors(root);
+        // Survivors of the `> root` filter are a suffix of the ascending
+        // list (the mirror image of the `< th` prefix filter).
+        let surv = nbrs.len() - prefix_len(nbrs, root + 1);
+        sink.on_fetch(0, root, nbrs.len(), surv);
+        if surv == 0 {
+            return;
+        }
+        let survivors = &nbrs[nbrs.len() - surv..];
+        self.visited[root as usize] = true;
+        let mut ext = std::mem::take(&mut self.ext_pool[1]);
+        ext.clear();
+        for &u in survivors {
+            self.visited[u as usize] = true;
+            ext.push(u);
+        }
+        self.ext_pool[1] = ext;
+        self.sub.push(root);
+        self.extend(root, 0, sink);
+        self.sub.pop();
+        for &u in survivors {
+            self.visited[u as usize] = false;
+        }
+        self.visited[root as usize] = false;
+    }
+
+    /// Expand one ESU node. The extension set for this depth was staged in
+    /// `ext_pool[sub.len()]` by the caller; it is drained here and the
+    /// (emptied) buffer returned to the pool.
+    fn extend(&mut self, root: VertexId, mask: u32, sink: &mut impl EnumSink) {
+        let depth = self.sub.len();
+        let mut ext = std::mem::take(&mut self.ext_pool[depth]);
+        if depth == self.cls.k() - 1 {
+            for &w in &ext {
+                let full_mask = mask | self.adjacency_bits(w, depth);
+                // Connected by construction (w ∈ N(sub)); classify_mask
+                // cannot miss.
+                let pid = self
+                    .cls
+                    .classify_mask(full_mask)
+                    .expect("ESU embeddings are connected");
+                self.counts[pid] += 1;
+                sink.on_embeddings(1);
+                // one 8-byte counter-slot read-modify-write per embedding
+                sink.on_aggregate(pid, 8);
+            }
+            self.ext_pool[depth] = ext;
+            return;
+        }
+        while let Some(w) = ext.pop() {
+            let nbrs = self.g.neighbors(w);
+            let surv = nbrs.len() - prefix_len(nbrs, root + 1);
+            sink.on_fetch(depth, w, nbrs.len(), surv);
+            sink.on_scan(depth, surv);
+            // exclusive neighbors of w: > root and not yet in sub ∪ N(sub)
+            let mut added = std::mem::take(&mut self.added_pool[depth]);
+            added.clear();
+            for &u in &nbrs[nbrs.len() - surv..] {
+                if !self.visited[u as usize] {
+                    self.visited[u as usize] = true;
+                    added.push(u);
+                }
+            }
+            // Stage the child's extension set: ext \ {w} ∪ added.
+            let mut child = std::mem::take(&mut self.ext_pool[depth + 1]);
+            child.clear();
+            child.extend_from_slice(&ext);
+            child.extend_from_slice(&added);
+            self.ext_pool[depth + 1] = child;
+            let next_mask = mask | self.adjacency_bits(w, depth);
+            self.sub.push(w);
+            self.extend(root, next_mask, sink);
+            self.sub.pop();
+            for &u in &added {
+                self.visited[u as usize] = false;
+            }
+            self.added_pool[depth] = added;
+            // w stays visited (it is a neighbor of the subgraph) and stays
+            // out of `ext` — this is what makes each subset unique.
+        }
+        self.ext_pool[depth] = ext;
+    }
+
+    /// Mask bits contributed by placing `w` at position `depth`: one bit
+    /// per edge between `w` and the current subgraph prefix.
+    #[inline]
+    fn adjacency_bits(&self, w: VertexId, depth: usize) -> u32 {
+        let mut bits = 0u32;
+        for (i, &s) in self.sub.iter().enumerate() {
+            if self.g.has_edge(s, w) {
+                bits |= 1 << self.cls.slot(i, depth);
+            }
+        }
+        bits
+    }
+}
+
+/// Multithreaded CPU motif census over the given roots (use all vertices
+/// for exact counts — a root sample censuses only subgraphs whose
+/// *minimum* vertex is sampled).
+pub fn motif_census(g: &CsrGraph, k: usize, roots: &[VertexId]) -> MotifCensus {
+    let cls = PatternClassifier::new(k);
+    let counts = threads::par_fold(
+        roots.len(),
+        16,
+        || CensusEngine::new(g, &cls),
+        |e, i| e.run_root(roots[i], &mut NullSink),
+        |mut a, b| {
+            for (x, y) in a.counts.iter_mut().zip(&b.counts) {
+                *x += *y;
+            }
+            a
+        },
+    )
+    .map(|e| e.counts)
+    .unwrap_or_else(|| vec![0; cls.num_patterns()]);
+    MotifCensus {
+        k,
+        motifs: cls.motifs().to_vec(),
+        counts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::pattern::pattern as pat;
+
+    fn all_roots(g: &CsrGraph) -> Vec<VertexId> {
+        (0..g.num_vertices() as VertexId).collect()
+    }
+
+    #[test]
+    fn clique_census_is_binomial() {
+        let g = gen::clique(6);
+        let census = motif_census(&g, 3, &all_roots(&g));
+        // every 3-subset of K6 is a triangle
+        assert_eq!(census.count_of(&pat::clique(3)), Some(20));
+        assert_eq!(census.count_of(&pat::wedge()), Some(0));
+        assert_eq!(census.total(), 20);
+        let c4 = motif_census(&g, 4, &all_roots(&g));
+        assert_eq!(c4.count_of(&pat::clique(4)), Some(15));
+        assert_eq!(c4.total(), 15);
+    }
+
+    #[test]
+    fn star_census_counts_stars_only() {
+        let g = gen::star(6); // center 0, five leaves
+        let c3 = motif_census(&g, 3, &all_roots(&g));
+        assert_eq!(c3.count_of(&pat::wedge()), Some(10)); // C(5,2)
+        assert_eq!(c3.count_of(&pat::clique(3)), Some(0));
+        let c4 = motif_census(&g, 4, &all_roots(&g));
+        assert_eq!(c4.count_of(&pat::four_star()), Some(10)); // C(5,3)
+        assert_eq!(c4.total(), 10);
+    }
+
+    #[test]
+    fn cycle_census() {
+        let g = gen::cycle(8);
+        let c4 = motif_census(&g, 4, &all_roots(&g));
+        // the only connected induced 4-subgraphs of C8 are 4-paths (8 of
+        // them, one per starting edge direction class)
+        assert_eq!(c4.count_of(&pat::four_path()), Some(8));
+        assert_eq!(c4.total(), 8);
+    }
+
+    #[test]
+    fn census_total_counts_each_subset_once() {
+        // on a clique every k-subset is connected, so total = C(n, k)
+        let g = gen::clique(9);
+        for (k, expect) in [(3usize, 84u64), (4, 126), (5, 126)] {
+            let c = motif_census(&g, k, &all_roots(&g));
+            assert_eq!(c.total(), expect, "k={k}");
+        }
+    }
+
+    #[test]
+    fn census_matches_brute_force_per_pattern() {
+        use crate::exec::enumerate::brute_force_count;
+        for seed in 0..2u64 {
+            let g = gen::erdos_renyi(13, 26, seed);
+            let census = motif_census(&g, 4, &all_roots(&g));
+            for (i, m) in census.motifs.iter().enumerate() {
+                assert_eq!(
+                    census.counts[i],
+                    brute_force_count(&g, m),
+                    "motif {i} seed {seed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sink_sees_embeddings_and_aggregates() {
+        struct Probe {
+            emb: u64,
+            agg: u64,
+            fetches: u64,
+        }
+        impl EnumSink for Probe {
+            fn on_embeddings(&mut self, c: u64) {
+                self.emb += c;
+            }
+            fn on_aggregate(&mut self, _k: usize, b: u64) {
+                self.agg += b;
+            }
+            fn on_fetch(&mut self, _l: usize, _v: u32, _f: usize, _p: usize) {
+                self.fetches += 1;
+            }
+        }
+        let g = gen::clique(5);
+        let cls = PatternClassifier::new(3);
+        let mut e = CensusEngine::new(&g, &cls);
+        let mut probe = Probe {
+            emb: 0,
+            agg: 0,
+            fetches: 0,
+        };
+        for v in 0..5 {
+            e.run_root(v, &mut probe);
+        }
+        assert_eq!(probe.emb, 10); // C(5,3)
+        assert_eq!(probe.agg, 10 * 8);
+        assert!(probe.fetches > 0);
+    }
+}

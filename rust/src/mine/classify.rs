@@ -1,0 +1,199 @@
+//! Pattern classification: enumerated embedding → canonical pattern ID.
+//!
+//! The mining engines (`census`, `fsm`) discover *unknown* subgraph
+//! shapes, so every embedding must be mapped to a canonical pattern. The
+//! naive route — build a [`Pattern`] and call
+//! [`canonical_code`](Pattern::canonical_code) per embedding — pays `k!`
+//! permutations on the hottest path of the whole subsystem. Instead the
+//! classifier precomputes the full map once per size `k ≤ 5`: a connected
+//! `k`-subgraph is an adjacency bitset over the `k(k−1)/2` vertex pairs
+//! (≤ 10 bits), so a 1024-entry table sends *every possible* induced
+//! adjacency mask to its motif ID (the index into
+//! [`connected_motifs`](crate::pattern::motif::connected_motifs)`(k)`),
+//! built with the same automorphism/canonical-form machinery the pattern
+//! compiler uses. Runtime classification is then one table lookup.
+
+use crate::graph::{CsrGraph, VertexId};
+use crate::pattern::motif::connected_motifs;
+use crate::pattern::pattern::Pattern;
+use std::collections::HashMap;
+
+/// Largest subgraph size the classifier tables cover (the paper's mining
+/// workloads stop at 5; the table for k would be `2^(k(k-1)/2)` entries).
+pub const MAX_MOTIF_K: usize = 5;
+
+const NO_PATTERN: u16 = u16::MAX;
+
+/// Precomputed induced-adjacency-mask → motif-ID table for one size `k`.
+pub struct PatternClassifier {
+    k: usize,
+    motifs: Vec<Pattern>,
+    /// `table[mask]` = motif ID, or `NO_PATTERN` for disconnected masks.
+    table: Vec<u16>,
+    /// `slot_of[a][b]` = bit index of pair `(a, b)` in the mask, using the
+    /// `(0,1),(0,2),…,(k-2,k-1)` order of [`Pattern::canonical_code`].
+    slot_of: [[u8; MAX_MOTIF_K]; MAX_MOTIF_K],
+}
+
+impl PatternClassifier {
+    /// Build the table for subgraphs of exactly `k` vertices (2 ≤ k ≤ 5).
+    pub fn new(k: usize) -> Self {
+        assert!(
+            (2..=MAX_MOTIF_K).contains(&k),
+            "classifier supports sizes 2..={MAX_MOTIF_K}, got {k}"
+        );
+        let motifs = connected_motifs(k);
+        let by_code: HashMap<u64, u16> = motifs
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.canonical_code(), i as u16))
+            .collect();
+
+        let mut slot_of = [[0u8; MAX_MOTIF_K]; MAX_MOTIF_K];
+        let mut slot_edges = Vec::with_capacity(k * (k - 1) / 2);
+        for a in 0..k {
+            for b in (a + 1)..k {
+                slot_of[a][b] = slot_edges.len() as u8;
+                slot_of[b][a] = slot_edges.len() as u8;
+                slot_edges.push((a, b));
+            }
+        }
+
+        let num_slots = slot_edges.len();
+        let mut table = vec![NO_PATTERN; 1 << num_slots];
+        for (mask, entry) in table.iter_mut().enumerate() {
+            let edges: Vec<(usize, usize)> = slot_edges
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| mask & (1 << i) != 0)
+                .map(|(_, &e)| e)
+                .collect();
+            let p = Pattern::new(k, &edges, "");
+            if p.is_connected() {
+                *entry = by_code[&p.canonical_code()];
+            }
+        }
+        PatternClassifier {
+            k,
+            motifs,
+            table,
+            slot_of,
+        }
+    }
+
+    /// Subgraph size this classifier covers.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The canonical pattern set, in motif-ID order.
+    pub fn motifs(&self) -> &[Pattern] {
+        &self.motifs
+    }
+
+    /// Number of distinct connected patterns of size `k`.
+    pub fn num_patterns(&self) -> usize {
+        self.motifs.len()
+    }
+
+    /// Bit index of vertex pair `(a, b)` in the adjacency mask.
+    #[inline]
+    pub fn slot(&self, a: usize, b: usize) -> u32 {
+        self.slot_of[a][b] as u32
+    }
+
+    /// Classify a precomputed induced adjacency mask (bit
+    /// [`slot`](Self::slot) set per present edge). `None` iff the mask is
+    /// disconnected — impossible for embeddings produced by a
+    /// connected-subgraph enumerator.
+    #[inline]
+    pub fn classify_mask(&self, mask: u32) -> Option<usize> {
+        match self.table[mask as usize] {
+            NO_PATTERN => None,
+            id => Some(id as usize),
+        }
+    }
+
+    /// Classify an embedding by its vertex set: builds the induced mask
+    /// with pairwise adjacency tests, then one table lookup.
+    pub fn classify(&self, g: &CsrGraph, verts: &[VertexId]) -> Option<usize> {
+        debug_assert_eq!(verts.len(), self.k);
+        let mut mask = 0u32;
+        for a in 0..self.k {
+            for b in (a + 1)..self.k {
+                if g.has_edge(verts[a], verts[b]) {
+                    mask |= 1 << self.slot(a, b);
+                }
+            }
+        }
+        self.classify_mask(mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::pattern::pattern as pat;
+
+    #[test]
+    fn table_covers_oeis_pattern_counts() {
+        assert_eq!(PatternClassifier::new(3).num_patterns(), 2);
+        assert_eq!(PatternClassifier::new(4).num_patterns(), 6);
+        assert_eq!(PatternClassifier::new(5).num_patterns(), 21);
+    }
+
+    #[test]
+    fn classifies_known_shapes() {
+        let cls = PatternClassifier::new(4);
+        let g = gen::clique(4);
+        let id = cls.classify(&g, &[0, 1, 2, 3]).unwrap();
+        assert!(cls.motifs()[id].is_isomorphic(&pat::clique(4)));
+
+        let star = gen::star(4);
+        let id = cls.classify(&star, &[0, 1, 2, 3]).unwrap();
+        assert!(cls.motifs()[id].is_isomorphic(&pat::four_star()));
+    }
+
+    #[test]
+    fn classification_is_relabel_invariant() {
+        // every ordering of the same vertex set maps to the same ID
+        let g = gen::complete_bipartite(2, 2); // a 4-cycle
+        let cls = PatternClassifier::new(4);
+        let mut verts = [0u32, 1, 2, 3];
+        let base = cls.classify(&g, &verts).unwrap();
+        for _ in 0..8 {
+            verts.rotate_left(1);
+            verts.swap(0, 2);
+            assert_eq!(cls.classify(&g, &verts), Some(base));
+        }
+        assert!(cls.motifs()[base].is_isomorphic(&pat::four_cycle()));
+    }
+
+    #[test]
+    fn disconnected_masks_are_rejected() {
+        let cls = PatternClassifier::new(4);
+        // only edges (0,1) and (2,3): disconnected
+        let mask = (1 << cls.slot(0, 1)) | (1 << cls.slot(2, 3));
+        assert_eq!(cls.classify_mask(mask), None);
+        assert_eq!(cls.classify_mask(0), None);
+    }
+
+    #[test]
+    fn every_connected_mask_agrees_with_canonical_code() {
+        // exhaustive: the table must agree with the exact canonical form
+        let cls = PatternClassifier::new(4);
+        for mask in 0u32..(1 << 6) {
+            let edges: Vec<(usize, usize)> = (0..4)
+                .flat_map(|a| ((a + 1)..4).map(move |b| (a, b)))
+                .filter(|&(a, b)| mask & (1 << cls.slot(a, b)) != 0)
+                .collect();
+            let p = Pattern::new(4, &edges, "");
+            match cls.classify_mask(mask) {
+                None => assert!(!p.is_connected()),
+                Some(id) => assert!(cls.motifs()[id].is_isomorphic(&p)),
+            }
+        }
+    }
+}

@@ -1,0 +1,653 @@
+//! Frequent subgraph mining (FSM) over labeled graphs — the second
+//! mining workload family (GraMi / Pangolin class): discover every
+//! connected labeled pattern whose **minimum-image (MNI) support** meets
+//! a threshold.
+//!
+//! * **Search**: BFS over edge count. Level 1 holds the distinct label
+//!   pairs present in the graph; each later level extends the previous
+//!   level's frequent patterns by one edge — *forward* (a new vertex with
+//!   one edge, any label) or *backward* (an edge closing two existing
+//!   vertices) — deduplicated by a labeled canonical form. Every
+//!   connected pattern is reachable through a chain of connected
+//!   one-edge-smaller subpatterns, so BFS with threshold pruning is
+//!   complete.
+//! * **Support**: minimum-image — for each pattern vertex, the number of
+//!   distinct data vertices it binds to across all embeddings; support is
+//!   the minimum over pattern vertices. Embeddings are non-induced and
+//!   label-preserving (the standard FSM semantics); MNI is anti-monotone
+//!   under edge removal, which makes threshold pruning sound.
+//! * **Execution**: candidate evaluation is behind [`LevelExecutor`], so
+//!   the same BFS drives both the multithreaded CPU path
+//!   ([`fsm_mine`]) and the PIM simulation
+//!   ([`pim::sim::simulate_fsm`](crate::pim::sim::simulate_fsm)), where
+//!   per-unit domain maps are the aggregation state the fabric must merge
+//!   (DESIGN.md §8).
+
+use crate::exec::enumerate::{EnumSink, NullSink};
+use crate::exec::setops::{intersect_into, NO_BOUND};
+use crate::graph::{CsrGraph, VertexId};
+use crate::pattern::pattern::{permute_all, Pattern, MAX_PATTERN};
+use crate::util::threads;
+use std::collections::HashSet;
+
+/// A labeled pattern candidate. Vertex order is a *connected order* (every
+/// non-root vertex adjacent to an earlier one) by construction, so the
+/// matcher binds vertices in identity order.
+#[derive(Clone, Debug)]
+pub struct LabeledPattern {
+    pub pattern: Pattern,
+    /// `labels[i]` = required data-vertex label of pattern vertex `i`.
+    pub labels: Vec<u32>,
+}
+
+impl LabeledPattern {
+    /// The single-edge pattern with (sorted) endpoint labels.
+    pub fn edge(la: u32, lb: u32) -> Self {
+        let (lo, hi) = if la <= lb { (la, lb) } else { (lb, la) };
+        LabeledPattern {
+            pattern: Pattern::new(2, &[(0, 1)], "edge"),
+            labels: vec![lo, hi],
+        }
+    }
+
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.pattern.size()
+    }
+
+    /// Canonical key under label-preserving isomorphism: the
+    /// lexicographically smallest `(adjacency code, label sequence)` over
+    /// all vertex permutations. Two candidates are the same labeled
+    /// pattern iff their keys agree — the BFS dedup criterion.
+    pub fn canonical_key(&self) -> (u64, Vec<u32>) {
+        let n = self.size();
+        let mut best: Option<(u64, Vec<u32>)> = None;
+        let mut perm: Vec<usize> = (0..n).collect();
+        permute_all(&mut perm, 0, &mut |p| {
+            let mut code = 0u64;
+            let mut bit = 0;
+            for a in 0..n {
+                for b in (a + 1)..n {
+                    if self.pattern.has_edge(p[a], p[b]) {
+                        code |= 1 << bit;
+                    }
+                    bit += 1;
+                }
+            }
+            let labels: Vec<u32> = p.iter().map(|&v| self.labels[v]).collect();
+            let key = (code, labels);
+            let better = match &best {
+                None => true,
+                Some(b) => &key < b,
+            };
+            if better {
+                best = Some(key);
+            }
+        });
+        best.expect("patterns have at least one vertex")
+    }
+
+    /// Compact display form, e.g. `3v/3e[0,0,1]`.
+    pub fn describe(&self) -> String {
+        let labels: Vec<String> = self.labels.iter().map(|l| l.to_string()).collect();
+        format!(
+            "{}v/{}e[{}]",
+            self.size(),
+            self.pattern.num_edges(),
+            labels.join(",")
+        )
+    }
+}
+
+/// FSM parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct FsmConfig {
+    /// Minimum-image support threshold.
+    pub min_support: u64,
+    /// Maximum pattern size in vertices (2..=[`MAX_PATTERN`]).
+    pub max_size: usize,
+}
+
+/// One discovered frequent pattern.
+#[derive(Clone, Debug)]
+pub struct FrequentPattern {
+    pub pattern: LabeledPattern,
+    /// Minimum-image support.
+    pub support: u64,
+    /// Ordered (per-automorphism) non-induced embeddings enumerated while
+    /// computing the support.
+    pub embeddings: u64,
+}
+
+/// The mining outcome: every frequent pattern, plus per-level search
+/// telemetry (level = edge count).
+#[derive(Clone, Debug, Default)]
+pub struct FsmResult {
+    pub frequent: Vec<FrequentPattern>,
+    /// Candidates evaluated at each BFS level (level `i` ⇔ `i + 1` edges).
+    pub candidates_per_level: Vec<usize>,
+}
+
+impl FsmResult {
+    /// Frequent patterns with exactly `k` vertices.
+    pub fn frequent_of_size(&self, k: usize) -> Vec<&FrequentPattern> {
+        self.frequent
+            .iter()
+            .filter(|f| f.pattern.size() == k)
+            .collect()
+    }
+
+    /// Is some frequent pattern structurally isomorphic to the unlabeled
+    /// `p` with uniform labels? (The unlabeled-graph test hook.)
+    pub fn contains_unlabeled(&self, p: &Pattern) -> bool {
+        self.frequent
+            .iter()
+            .any(|f| f.pattern.labels.iter().all(|&l| l == 0) && f.pattern.pattern.is_isomorphic(p))
+    }
+}
+
+/// Per-candidate evaluation outcome from one BFS level.
+#[derive(Clone, Debug)]
+pub struct CandidateStats {
+    pub embeddings: u64,
+    pub support: u64,
+}
+
+/// Evaluates one BFS level's candidates over the data graph. The CPU
+/// executor lives here; the PIM-simulating executor is
+/// [`pim::sim::simulate_fsm`](crate::pim::sim::simulate_fsm)'s.
+pub trait LevelExecutor {
+    fn run_level(&mut self, g: &CsrGraph, candidates: &[LabeledPattern]) -> Vec<CandidateStats>;
+}
+
+/// Per-thread accumulator for one level: embedding counts and per-vertex
+/// domain (distinct-image) sets for every candidate.
+pub struct LevelAcc {
+    pub embeddings: Vec<u64>,
+    pub domains: Vec<Vec<HashSet<VertexId>>>,
+}
+
+impl LevelAcc {
+    pub fn new(candidates: &[LabeledPattern]) -> Self {
+        LevelAcc {
+            embeddings: vec![0; candidates.len()],
+            domains: candidates
+                .iter()
+                .map(|c| vec![HashSet::new(); c.size()])
+                .collect(),
+        }
+    }
+
+    pub fn merge(mut self, other: LevelAcc) -> LevelAcc {
+        for (a, b) in self.embeddings.iter_mut().zip(&other.embeddings) {
+            *a += *b;
+        }
+        for (da, db) in self.domains.iter_mut().zip(other.domains) {
+            for (sa, sb) in da.iter_mut().zip(db) {
+                sa.extend(sb);
+            }
+        }
+        self
+    }
+
+    pub fn into_stats(self) -> Vec<CandidateStats> {
+        self.embeddings
+            .into_iter()
+            .zip(self.domains)
+            .map(|(embeddings, domains)| CandidateStats {
+                embeddings,
+                support: domains.iter().map(|d| d.len() as u64).min().unwrap_or(0),
+            })
+            .collect()
+    }
+}
+
+/// Per-candidate matching shape, precomputed once per candidate per
+/// level so the matching recursion stays allocation-free: which levels'
+/// neighbor lists are consumed later (`fetched`), and each level's black
+/// predecessors (`preds[level][..npreds[level]]`).
+pub struct CandShape {
+    fetched: [bool; MAX_PATTERN],
+    preds: [[usize; MAX_PATTERN]; MAX_PATTERN],
+    npreds: [usize; MAX_PATTERN],
+}
+
+impl CandShape {
+    pub fn of(cand: &LabeledPattern) -> Self {
+        let k = cand.size();
+        let mut shape = CandShape {
+            fetched: [false; MAX_PATTERN],
+            preds: [[0; MAX_PATTERN]; MAX_PATTERN],
+            npreds: [0; MAX_PATTERN],
+        };
+        for level in 1..k {
+            for j in 0..level {
+                if cand.pattern.has_edge(j, level) {
+                    shape.fetched[j] = true;
+                    shape.preds[level][shape.npreds[level]] = j;
+                    shape.npreds[level] += 1;
+                }
+            }
+        }
+        shape
+    }
+}
+
+/// Reusable matcher working set — one per worker thread. Buffers grow to
+/// the largest candidate seen and are recycled across roots (§Perf: the
+/// matching hot path must not allocate).
+#[derive(Default)]
+pub struct MatchScratch {
+    bound: Vec<VertexId>,
+    bufs: Vec<(Vec<VertexId>, Vec<VertexId>)>,
+}
+
+/// Enumerate the label-preserving, injective, non-induced embeddings of
+/// `cand` (with its precomputed [`CandShape`]) rooted at pattern vertex
+/// 0 = `root`, updating the candidate's domain sets and charging `sink`
+/// per fetch/scan/embedding plus one
+/// [`on_aggregate`](EnumSink::on_aggregate) per embedding (`k` 8-byte
+/// domain-entry updates).
+#[allow(clippy::too_many_arguments)]
+pub fn match_rooted(
+    g: &CsrGraph,
+    cand: &LabeledPattern,
+    shape: &CandShape,
+    cand_key: usize,
+    root: VertexId,
+    sink: &mut impl EnumSink,
+    domains: &mut [HashSet<VertexId>],
+    scratch: &mut MatchScratch,
+) -> u64 {
+    let k = cand.size();
+    debug_assert_eq!(domains.len(), k);
+    if g.label(root) != cand.labels[0] {
+        return 0;
+    }
+    if scratch.bound.len() < k {
+        scratch.bound.resize(k, 0);
+    }
+    if scratch.bufs.len() < k {
+        scratch.bufs.resize_with(k, Default::default);
+    }
+    scratch.bound[0] = root;
+    if shape.fetched[0] {
+        sink.on_fetch(0, root, g.degree(root), g.degree(root));
+    }
+    descend(
+        g,
+        cand,
+        cand_key,
+        1,
+        &mut scratch.bound,
+        shape,
+        sink,
+        domains,
+        &mut scratch.bufs,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn descend(
+    g: &CsrGraph,
+    cand: &LabeledPattern,
+    cand_key: usize,
+    level: usize,
+    bound: &mut [VertexId],
+    shape: &CandShape,
+    sink: &mut impl EnumSink,
+    domains: &mut [HashSet<VertexId>],
+    bufs: &mut [(Vec<VertexId>, Vec<VertexId>)],
+) -> u64 {
+    let k = cand.size();
+    // Candidates: intersection of earlier bound vertices' neighbor lists
+    // over the pattern's black edges into `level` (≥ 1 by connected
+    // order), then label + injectivity filters.
+    let preds = &shape.preds[level][..shape.npreds[level]];
+    debug_assert!(!preds.is_empty(), "candidate orders must be connected");
+    let (mut cands, mut tmp) = std::mem::take(&mut bufs[level]);
+    let mut scanned = 0usize;
+    if preds.len() == 1 {
+        cands.clear();
+        cands.extend_from_slice(g.neighbors(bound[preds[0]]));
+        scanned += cands.len();
+    } else {
+        scanned += intersect_into(
+            g.neighbors(bound[preds[0]]),
+            g.neighbors(bound[preds[1]]),
+            NO_BOUND,
+            &mut cands,
+        );
+        for &p in &preds[2..] {
+            scanned += intersect_into(&cands, g.neighbors(bound[p]), NO_BOUND, &mut tmp);
+            std::mem::swap(&mut cands, &mut tmp);
+        }
+    }
+    sink.on_scan(level, scanned);
+    let want = cand.labels[level];
+    cands.retain(|&c| g.label(c) == want && !bound[..level].contains(&c));
+
+    let mut total = 0u64;
+    if level == k - 1 {
+        for &c in &cands {
+            bound[level] = c;
+            total += 1;
+            for (i, dom) in domains.iter_mut().enumerate() {
+                dom.insert(bound[i]);
+            }
+            sink.on_embeddings(1);
+            // k 8-byte domain-entry read-modify-writes per embedding
+            sink.on_aggregate(cand_key, k as u64 * 8);
+        }
+    } else {
+        for &c in &cands {
+            bound[level] = c;
+            if shape.fetched[level] {
+                sink.on_fetch(level, c, g.degree(c), g.degree(c));
+            }
+            total += descend(
+                g, cand, cand_key, level + 1, bound, shape, sink, domains, bufs,
+            );
+        }
+    }
+    bufs[level] = (cands, tmp);
+    total
+}
+
+/// BFS candidate extension: every frequent pattern grows by one forward
+/// edge (new vertex, each label) and one backward edge (each non-adjacent
+/// existing pair), deduplicated by labeled canonical form.
+fn extend_candidates(
+    parents: &[LabeledPattern],
+    labelset: &[u32],
+    max_size: usize,
+) -> Vec<LabeledPattern> {
+    let mut seen: HashSet<(u64, Vec<u32>)> = HashSet::new();
+    let mut out = Vec::new();
+    let mut push = |cand: LabeledPattern, out: &mut Vec<LabeledPattern>| {
+        if seen.insert(cand.canonical_key()) {
+            out.push(cand);
+        }
+    };
+    for p in parents {
+        let k = p.size();
+        let edges = p.pattern.edges();
+        if k < max_size {
+            for attach in 0..k {
+                for &l in labelset {
+                    let mut e2 = edges.clone();
+                    e2.push((attach, k));
+                    let mut l2 = p.labels.clone();
+                    l2.push(l);
+                    push(
+                        LabeledPattern {
+                            pattern: Pattern::new(k + 1, &e2, "fsm-candidate"),
+                            labels: l2,
+                        },
+                        &mut out,
+                    );
+                }
+            }
+        }
+        for i in 0..k {
+            for j in (i + 1)..k {
+                if !p.pattern.has_edge(i, j) {
+                    let mut e2 = edges.clone();
+                    e2.push((i, j));
+                    push(
+                        LabeledPattern {
+                            pattern: Pattern::new(k, &e2, "fsm-candidate"),
+                            labels: p.labels.clone(),
+                        },
+                        &mut out,
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The distinct single-edge candidates present in the graph, sorted for
+/// determinism.
+fn seed_candidates(g: &CsrGraph) -> Vec<LabeledPattern> {
+    let mut pairs: Vec<(u32, u32)> = Vec::new();
+    let mut seen = HashSet::new();
+    for v in 0..g.num_vertices() as VertexId {
+        for &u in g.neighbors(v) {
+            if u > v {
+                let (a, b) = {
+                    let (la, lb) = (g.label(v), g.label(u));
+                    if la <= lb {
+                        (la, lb)
+                    } else {
+                        (lb, la)
+                    }
+                };
+                if seen.insert((a, b)) {
+                    pairs.push((a, b));
+                }
+            }
+        }
+    }
+    pairs.sort_unstable();
+    pairs
+        .into_iter()
+        .map(|(a, b)| LabeledPattern::edge(a, b))
+        .collect()
+}
+
+/// Run FSM with the given candidate-evaluation executor (the BFS control
+/// loop shared by the CPU and PIM paths).
+pub fn fsm_mine_with(
+    g: &CsrGraph,
+    cfg: &FsmConfig,
+    exec: &mut impl LevelExecutor,
+) -> FsmResult {
+    assert!(
+        (2..=MAX_PATTERN).contains(&cfg.max_size),
+        "max_size must be in 2..={MAX_PATTERN}"
+    );
+    let labelset = g.distinct_labels();
+    let max_edges = cfg.max_size * (cfg.max_size - 1) / 2;
+    let mut result = FsmResult::default();
+    let mut candidates = seed_candidates(g);
+    for level_edges in 1..=max_edges {
+        if candidates.is_empty() {
+            break;
+        }
+        result.candidates_per_level.push(candidates.len());
+        let stats = exec.run_level(g, &candidates);
+        let mut frequent_now = Vec::new();
+        for (cand, stat) in candidates.iter().zip(&stats) {
+            if stat.support >= cfg.min_support {
+                frequent_now.push(cand.clone());
+                result.frequent.push(FrequentPattern {
+                    pattern: cand.clone(),
+                    support: stat.support,
+                    embeddings: stat.embeddings,
+                });
+            }
+        }
+        if frequent_now.is_empty() || level_edges == max_edges {
+            break;
+        }
+        candidates = extend_candidates(&frequent_now, &labelset, cfg.max_size);
+    }
+    result
+}
+
+/// Multithreaded CPU FSM (NullSink; see
+/// [`pim::sim::simulate_fsm`](crate::pim::sim::simulate_fsm) for the
+/// simulated-machine run).
+pub fn fsm_mine(g: &CsrGraph, cfg: &FsmConfig) -> FsmResult {
+    fsm_mine_with(g, cfg, &mut CpuLevelExecutor)
+}
+
+/// The CPU candidate evaluator: dynamic root chunks across host threads,
+/// per-thread [`LevelAcc`]s merged at the end.
+pub struct CpuLevelExecutor;
+
+impl LevelExecutor for CpuLevelExecutor {
+    fn run_level(&mut self, g: &CsrGraph, candidates: &[LabeledPattern]) -> Vec<CandidateStats> {
+        let n = g.num_vertices();
+        let shapes: Vec<CandShape> = candidates.iter().map(CandShape::of).collect();
+        threads::par_fold(
+            n,
+            32,
+            || (LevelAcc::new(candidates), MatchScratch::default()),
+            |(acc, scratch), v| {
+                for (ci, cand) in candidates.iter().enumerate() {
+                    let emb = match_rooted(
+                        g,
+                        cand,
+                        &shapes[ci],
+                        ci,
+                        v as VertexId,
+                        &mut NullSink,
+                        &mut acc.domains[ci],
+                        scratch,
+                    );
+                    acc.embeddings[ci] += emb;
+                }
+            },
+            |(a, s), (b, _)| (a.merge(b), s),
+        )
+        .map(|(acc, _)| acc)
+        .unwrap_or_else(|| LevelAcc::new(candidates))
+        .into_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+    use crate::pattern::pattern as pat;
+
+    #[test]
+    fn canonical_key_identifies_relabels() {
+        // same labeled triangle written two ways
+        let a = LabeledPattern {
+            pattern: Pattern::new(3, &[(0, 1), (1, 2), (2, 0)], "t"),
+            labels: vec![1, 0, 0],
+        };
+        let b = LabeledPattern {
+            pattern: Pattern::new(3, &[(0, 1), (1, 2), (2, 0)], "t"),
+            labels: vec![0, 0, 1],
+        };
+        assert_eq!(a.canonical_key(), b.canonical_key());
+        let c = LabeledPattern {
+            pattern: Pattern::new(3, &[(0, 1), (1, 2), (2, 0)], "t"),
+            labels: vec![1, 1, 0],
+        };
+        assert_ne!(a.canonical_key(), c.canonical_key());
+    }
+
+    #[test]
+    fn two_disjoint_triangles_unlabeled() {
+        let g = CsrGraph::from_edges(6, &[(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3)]);
+        let r = fsm_mine(
+            &g,
+            &FsmConfig {
+                min_support: 6,
+                max_size: 3,
+            },
+        );
+        // edge, wedge, and triangle all have every vertex in every domain
+        assert!(r.contains_unlabeled(&pat::clique(3)));
+        assert!(r.contains_unlabeled(&pat::wedge()));
+        let tri = r
+            .frequent
+            .iter()
+            .find(|f| f.pattern.pattern.is_isomorphic(&pat::clique(3)))
+            .unwrap();
+        assert_eq!(tri.support, 6);
+        // ordered embeddings: 2 triangles × |Aut(K3)| = 12
+        assert_eq!(tri.embeddings, 12);
+    }
+
+    #[test]
+    fn labels_separate_support() {
+        // star: center label 9, five leaves label 1 → edge (1,9) has
+        // domains {center} / {leaves}: support 1 (the center bottleneck).
+        let g = gen::star(6).with_labels(vec![9, 1, 1, 1, 1, 1]);
+        let r = fsm_mine(
+            &g,
+            &FsmConfig {
+                min_support: 1,
+                max_size: 2,
+            },
+        );
+        assert_eq!(r.frequent.len(), 1);
+        assert_eq!(r.frequent[0].support, 1);
+        // label-asymmetric edge: one orientation per data edge
+        assert_eq!(r.frequent[0].embeddings, 5);
+        // threshold 2 prunes everything
+        let r2 = fsm_mine(
+            &g,
+            &FsmConfig {
+                min_support: 2,
+                max_size: 2,
+            },
+        );
+        assert!(r2.frequent.is_empty());
+    }
+
+    #[test]
+    fn threshold_one_finds_exactly_embeddable_patterns() {
+        // FSM semantics are non-induced: with threshold 1 the frequent
+        // k-vertex set is exactly the patterns with ≥ 1 (non-induced)
+        // embedding. On K4 every 4-vertex pattern embeds.
+        let g = gen::clique(4);
+        let r = fsm_mine(
+            &g,
+            &FsmConfig {
+                min_support: 1,
+                max_size: 4,
+            },
+        );
+        for p in crate::pattern::motif::connected_motifs(4) {
+            assert!(r.contains_unlabeled(&p), "missing {}", p.name);
+        }
+        assert_eq!(r.frequent_of_size(4).len(), 6);
+    }
+
+    #[test]
+    fn extension_dedups_isomorphic_candidates() {
+        let parents = vec![LabeledPattern::edge(0, 0)];
+        let cands = extend_candidates(&parents, &[0], 3);
+        // forward from either endpoint gives the same wedge once
+        assert_eq!(cands.len(), 1);
+        assert_eq!(cands[0].size(), 3);
+    }
+
+    #[test]
+    fn seed_candidates_cover_label_pairs() {
+        let g = gen::cycle(4).with_labels(vec![0, 1, 0, 1]);
+        let seeds = seed_candidates(&g);
+        // only (0,1) edges exist on the alternating cycle
+        assert_eq!(seeds.len(), 1);
+        assert_eq!(seeds[0].labels, vec![0, 1]);
+    }
+
+    #[test]
+    fn match_rooted_counts_ordered_embeddings() {
+        let g = gen::clique(4);
+        let tri = LabeledPattern {
+            pattern: Pattern::new(3, &[(0, 1), (1, 2), (2, 0)], "t"),
+            labels: vec![0, 0, 0],
+        };
+        let shape = CandShape::of(&tri);
+        let mut domains = vec![HashSet::new(); 3];
+        let mut scratch = MatchScratch::default();
+        let total: u64 = (0..4)
+            .map(|v| {
+                match_rooted(&g, &tri, &shape, 0, v, &mut NullSink, &mut domains, &mut scratch)
+            })
+            .sum();
+        // ordered embeddings: C(4,3) × |Aut(K3)| = 4 × 6
+        assert_eq!(total, 24);
+        assert!(domains.iter().all(|d| d.len() == 4));
+    }
+}

@@ -1,0 +1,31 @@
+//! The pattern-*mining* engine (DESIGN.md §8): workloads that discover
+//! patterns instead of counting a pre-compiled one.
+//!
+//! Two workload families on top of the enumeration substrate:
+//!
+//! * **Motif counting** ([`census`]) — a one-pass ESU enumeration of
+//!   every connected induced `k`-subgraph, classified into per-pattern
+//!   counts through the precomputed [`PatternClassifier`] tables.
+//! * **Frequent subgraph mining** ([`fsm`]) — BFS edge extension over
+//!   labeled patterns with minimum-image support and threshold pruning.
+//!
+//! Both engines report their work through the same
+//! [`EnumSink`](crate::exec::enumerate::EnumSink) callbacks the counting
+//! enumerator uses — plus the mining-specific
+//! [`on_aggregate`](crate::exec::enumerate::EnumSink::on_aggregate) hook
+//! for per-unit support-state updates — so the PIM simulator
+//! ([`pim::sim::simulate_motifs`](crate::pim::sim::simulate_motifs),
+//! [`pim::sim::simulate_fsm`](crate::pim::sim::simulate_fsm)) prices
+//! mining with the identical cost model, extended by the cross-unit
+//! support-aggregation traffic the counting workloads never generate.
+
+pub mod census;
+pub mod classify;
+pub mod fsm;
+
+pub use census::{motif_census, CensusEngine, MotifCensus};
+pub use classify::{PatternClassifier, MAX_MOTIF_K};
+pub use fsm::{
+    fsm_mine, fsm_mine_with, CandShape, CandidateStats, CpuLevelExecutor, FrequentPattern,
+    FsmConfig, FsmResult, LabeledPattern, LevelAcc, LevelExecutor, MatchScratch,
+};

@@ -22,7 +22,7 @@ pub struct Pattern {
 impl Pattern {
     /// Build from an edge list.
     pub fn new(n: usize, edges: &[(usize, usize)], name: &str) -> Self {
-        assert!(n >= 1 && n <= MAX_PATTERN);
+        assert!((1..=MAX_PATTERN).contains(&n));
         let mut adj = [0u8; MAX_PATTERN];
         for &(a, b) in edges {
             assert!(a < n && b < n && a != b, "bad pattern edge ({a},{b})");
@@ -163,7 +163,9 @@ impl Pattern {
     }
 }
 
-fn permute_all(perm: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+/// Visit every permutation of `perm` (Heap-style swap recursion). Shared
+/// with the FSM engine's labeled canonical form (`mine::fsm`).
+pub(crate) fn permute_all(perm: &mut [usize], k: usize, f: &mut impl FnMut(&[usize])) {
     if k == perm.len() {
         f(perm);
         return;

@@ -13,4 +13,7 @@ pub mod stealing;
 pub use addrmap::{AccessClass, AddrMap};
 pub use config::PimConfig;
 pub use placement::Placement;
-pub use sim::{simulate_app, simulate_plan, AccessStats, SimOptions, SimResult};
+pub use sim::{
+    simulate_app, simulate_fsm, simulate_motifs, simulate_plan, AccessStats, MotifSimResult,
+    SimOptions, SimResult,
+};

@@ -27,6 +27,12 @@ use super::placement::Placement;
 use super::stealing::{schedule, Piece};
 use crate::exec::enumerate::{EnumSink, Enumerator};
 use crate::graph::{CsrGraph, VertexId};
+use crate::mine::census::{CensusEngine, MotifCensus};
+use crate::mine::classify::PatternClassifier;
+use crate::mine::fsm::{
+    self, CandShape, CandidateStats, FsmConfig, FsmResult, LabeledPattern, LevelAcc,
+    LevelExecutor, MatchScratch,
+};
 use crate::pattern::plan::{Application, Plan};
 use crate::util::threads;
 use std::collections::VecDeque;
@@ -168,6 +174,19 @@ pub struct SimResult {
     pub link_bound: u64,
     /// Minimum duplication boundary across units (0 = no duplication).
     pub v_b_min: VertexId,
+    /// Aggregation-traffic byte distribution (mining support-state
+    /// updates + the end-of-kernel cross-unit merge) — the Table-2-style
+    /// breakdown for the mining workloads. All-zero for pattern counting,
+    /// which carries no per-unit aggregation state.
+    pub agg: AccessStats,
+    /// Support-state updates charged via
+    /// [`EnumSink::on_aggregate`](crate::exec::enumerate::EnumSink::on_aggregate).
+    pub agg_updates: u64,
+    /// Bytes moved by the cross-unit support-map merge.
+    pub agg_merge_bytes: u64,
+    /// Critical-path cycles of the merge (already included in
+    /// `total_cycles`).
+    pub agg_cycles: u64,
 }
 
 impl SimResult {
@@ -185,11 +204,17 @@ impl SimResult {
         }
     }
 
+    /// Accumulate a back-to-back phase (times add, counts add, byte
+    /// distributions merge). Differing `unit_busy` lengths are tolerated
+    /// by zero-extending — an all-zero `SimResult` is a valid identity.
     fn add(&mut self, o: &SimResult) {
         self.count += o.count;
         self.total_cycles += o.total_cycles;
         self.seconds += o.seconds;
         self.avg_unit_seconds += o.avg_unit_seconds;
+        if o.unit_busy.len() > self.unit_busy.len() {
+            self.unit_busy.resize(o.unit_busy.len(), 0);
+        }
         for (a, b) in self.unit_busy.iter_mut().zip(&o.unit_busy) {
             *a += *b;
         }
@@ -201,6 +226,34 @@ impl SimResult {
         self.bank_bound += o.bank_bound;
         self.link_bound += o.link_bound;
         self.v_b_min = self.v_b_min.min(o.v_b_min);
+        self.agg.merge(&o.agg);
+        self.agg_updates += o.agg_updates;
+        self.agg_merge_bytes += o.agg_merge_bytes;
+        self.agg_cycles += o.agg_cycles;
+    }
+
+    /// The all-zero identity for [`add`](Self::add) (`v_b_min` saturated
+    /// so it never masks a real minimum).
+    fn empty() -> SimResult {
+        SimResult {
+            count: 0,
+            total_cycles: 0,
+            seconds: 0.0,
+            avg_unit_seconds: 0.0,
+            unit_busy: Vec::new(),
+            access: AccessStats::default(),
+            tm_bytes: 0,
+            fm_bytes: 0,
+            steals: 0,
+            sched_cycles: 0,
+            bank_bound: 0,
+            link_bound: 0,
+            v_b_min: VertexId::MAX,
+            agg: AccessStats::default(),
+            agg_updates: 0,
+            agg_merge_bytes: 0,
+            agg_cycles: 0,
+        }
     }
 }
 
@@ -228,6 +281,10 @@ struct GlobalAcc {
     link_occ: Vec<u64>,
     /// Aggregate link service under the default interleave.
     uniform_link_occ: u64,
+    /// Aggregation (support-state) traffic by access class.
+    agg_f: [f64; 3],
+    /// Support-state updates observed.
+    agg_updates: u64,
 }
 
 impl GlobalAcc {
@@ -253,6 +310,48 @@ impl GlobalAcc {
             *a += *b;
         }
         self.uniform_link_occ += o.uniform_link_occ;
+        for (a, b) in self.agg_f.iter_mut().zip(&o.agg_f) {
+            *a += *b;
+        }
+        self.agg_updates += o.agg_updates;
+    }
+}
+
+/// Accumulate `bytes` of an access into `dest` (`[near, intra, inter]`
+/// f64 accumulators) under the given mapping — the exact-fraction
+/// bookkeeping shared by the fetch, scan, and aggregation paths.
+fn accumulate_access(
+    cfg: &PimConfig,
+    map: AddrMap,
+    owner: usize,
+    requester: usize,
+    bytes: u64,
+    local_copy: bool,
+    dest: &mut [f64; 3],
+) {
+    let b = bytes as f64;
+    if local_copy {
+        dest[0] += b;
+        return;
+    }
+    match map {
+        AddrMap::LocalFirst => {
+            if owner == requester {
+                dest[0] += b;
+            } else if cfg.channel_of(owner) == cfg.channel_of(requester) {
+                dest[1] += b;
+            } else {
+                dest[2] += b;
+            }
+        }
+        AddrMap::DefaultInterleave => {
+            let nb = cfg.num_banks() as f64;
+            let near = cfg.banks_per_unit() as f64 / nb;
+            let intra = (cfg.banks_per_channel - cfg.banks_per_unit()) as f64 / nb;
+            dest[0] += b * near;
+            dest[1] += b * intra;
+            dest[2] += b * (1.0 - near - intra);
+        }
     }
 }
 
@@ -282,38 +381,30 @@ struct SimSink<'a> {
     l1_used: u64,
 }
 
-impl<'a> SimSink<'a> {
+impl SimSink<'_> {
     /// Accumulate exact fractional access-class bytes.
-    fn add_access(&mut self, map: AddrMap, owner: usize, requester: usize, bytes: u64, local_copy: bool) {
-        let cfg = self.cfg;
-        let b = bytes as f64;
-        if local_copy {
-            self.acc.access_f[0] += b;
-            return;
-        }
-        match map {
-            AddrMap::LocalFirst => {
-                if owner == requester {
-                    self.acc.access_f[0] += b;
-                } else if cfg.channel_of(owner) == cfg.channel_of(requester) {
-                    self.acc.access_f[1] += b;
-                } else {
-                    self.acc.access_f[2] += b;
-                }
-            }
-            AddrMap::DefaultInterleave => {
-                let nb = cfg.num_banks() as f64;
-                let near = cfg.banks_per_unit() as f64 / nb;
-                let intra = (cfg.banks_per_channel - cfg.banks_per_unit()) as f64 / nb;
-                self.acc.access_f[0] += b * near;
-                self.acc.access_f[1] += b * intra;
-                self.acc.access_f[2] += b * (1.0 - near - intra);
-            }
-        }
+    #[inline]
+    fn add_access(
+        &mut self,
+        map: AddrMap,
+        owner: usize,
+        requester: usize,
+        bytes: u64,
+        local_copy: bool,
+    ) {
+        accumulate_access(
+            self.cfg,
+            map,
+            owner,
+            requester,
+            bytes,
+            local_copy,
+            &mut self.acc.access_f,
+        );
     }
 }
 
-impl<'a> EnumSink for SimSink<'a> {
+impl EnumSink for SimSink<'_> {
     fn on_fetch(&mut self, level: usize, v: VertexId, full: usize, prefix: usize) {
         if level == 1 {
             self.lvl1_chunks += 1;
@@ -422,69 +513,131 @@ impl<'a> EnumSink for SimSink<'a> {
     fn on_embeddings(&mut self, count: u64) {
         self.acc.count += count;
     }
+
+    fn on_aggregate(&mut self, _key: usize, bytes: u64) {
+        let cfg = self.cfg;
+        self.acc.agg_updates += 1;
+        // A support-state update is a read-modify-write of the requesting
+        // unit's own aggregation map. Under local-first mapping the map
+        // lives in the unit's bank group (near-core); under the default
+        // interleave even a unit's *own* state is striped across the whole
+        // stack — mining pays the Table-2 remote penalty on every update.
+        accumulate_access(
+            cfg,
+            self.map,
+            self.requester,
+            self.requester,
+            bytes,
+            false,
+            &mut self.acc.agg_f,
+        );
+        let split = split_access(cfg, self.map, self.requester, self.requester, bytes, false);
+        let startup = startup_latency(cfg, split.dominant()) / cfg.mshr_overlap.max(1);
+        let transfer = bytes.div_ceil(cfg.link_bytes_per_cycle);
+        self.task_cycles += startup + transfer;
+        match self.map {
+            AddrMap::LocalFirst => {
+                self.acc.unit_bank_occ[self.requester] += transfer;
+            }
+            AddrMap::DefaultInterleave => {
+                self.acc.uniform_bank_occ += transfer;
+                self.acc.uniform_link_occ += transfer;
+            }
+        }
+    }
 }
 
-/// Simulate one plan over the given root tasks.
-pub fn simulate_plan(
-    g: &CsrGraph,
-    plan: &Plan,
-    roots: &[VertexId],
-    opts: &SimOptions,
-    cfg: &PimConfig,
-) -> SimResult {
-    // Placement (Algorithm 1) + optional duplication (Algorithm 2).
-    let mut placement = Placement::round_robin(g, cfg);
-    if opts.duplication && opts.remap {
-        placement = placement.with_duplication(g, cfg, opts.capacity_per_unit);
-    }
-    let v_b_min = placement.v_b.iter().copied().min().unwrap_or(0);
+/// Shared per-run setup: placement (Algorithm 1) + optional duplication
+/// (Algorithm 2), and the L1 hot-prefix residency boundary.
+struct SimSetup {
+    placement: Placement,
+    hot_k: VertexId,
+    v_b_min: VertexId,
+}
 
-    // Hot-prefix residency boundary: the largest K whose (half, reserving
-    // capacity for the task working set) prefix of neighbor lists fits the
-    // 32 KB L1D.
-    let hot_k = {
-        let budget = cfg.l1d_bytes / 2;
-        let mut used = 0u64;
-        let mut k: VertexId = 0;
-        while (k as usize) < g.num_vertices() {
-            let sz = g.neighbor_bytes(k);
-            if used + sz > budget {
-                break;
-            }
-            used += sz;
-            k += 1;
+impl SimSetup {
+    fn new(g: &CsrGraph, opts: &SimOptions, cfg: &PimConfig) -> Self {
+        let mut placement = Placement::round_robin(g, cfg);
+        if opts.duplication && opts.remap {
+            placement = placement.with_duplication(g, cfg, opts.capacity_per_unit);
         }
-        k
-    };
+        let v_b_min = placement.v_b.iter().copied().min().unwrap_or(0);
 
-    // Task → unit assignment: local-first runs each root on the unit that
-    // owns its neighbor list; the baseline interleave assigns round-robin
-    // over the task sequence (§3.1).
-    let assign = |i: usize, root: VertexId| -> usize {
+        // Hot-prefix residency boundary: the largest K whose (half,
+        // reserving capacity for the task working set) prefix of neighbor
+        // lists fits the 32 KB L1D.
+        let hot_k = {
+            let budget = cfg.l1d_bytes / 2;
+            let mut used = 0u64;
+            let mut k: VertexId = 0;
+            while (k as usize) < g.num_vertices() {
+                let sz = g.neighbor_bytes(k);
+                if used + sz > budget {
+                    break;
+                }
+                used += sz;
+                k += 1;
+            }
+            k
+        };
+        SimSetup {
+            placement,
+            hot_k,
+            v_b_min,
+        }
+    }
+
+    /// Task → unit assignment: local-first runs each root on the unit
+    /// that owns its neighbor list; the baseline interleave assigns
+    /// round-robin over the task sequence (§3.1).
+    #[inline]
+    fn assign(&self, opts: &SimOptions, cfg: &PimConfig, i: usize, root: VertexId) -> usize {
         if opts.remap {
-            placement.owner[root as usize] as usize
+            self.placement.owner[root as usize] as usize
         } else {
             cfg.round_robin_unit(i)
         }
-    };
+    }
+}
 
-    // -------- Phase 1: parallel profiling --------
+/// A root-task workload the profiling pass can drive: a per-thread worker
+/// plus the per-root enumeration reporting into a [`SimSink`]. Pattern
+/// counting, the motif census, and FSM level evaluation all implement
+/// this, so one pipeline prices every workload.
+trait TaskRunner: Sync {
+    type Worker: Send;
+    fn worker(&self) -> Self::Worker;
+    fn run(&self, w: &mut Self::Worker, root: VertexId, sink: &mut SimSink<'_>);
+}
+
+/// Phase 1: profile every root task in parallel (bit-deterministic).
+/// Returns the merged accumulator, per-task profiles in root order, and
+/// the per-thread workers (the mining runners accumulate their counts and
+/// domains in them).
+fn profile_pass<R: TaskRunner>(
+    runner: &R,
+    roots: &[VertexId],
+    opts: &SimOptions,
+    cfg: &PimConfig,
+    setup: &SimSetup,
+) -> (GlobalAcc, Vec<TaskProfile>, Vec<R::Worker>) {
     let ntasks = roots.len();
     let nthreads = threads::num_threads().min(ntasks.max(1));
     let next = AtomicUsize::new(0);
     let chunk = 16usize;
-    struct Shard {
+    struct Shard<W> {
         profiles: Vec<(usize, TaskProfile)>,
         acc: GlobalAcc,
+        worker: W,
     }
-    let shards: Vec<Shard> = std::thread::scope(|s| {
+    let shards: Vec<Shard<R::Worker>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..nthreads)
             .map(|_| {
                 s.spawn(|| {
-                    let mut e = Enumerator::new(g, plan);
                     let mut shard = Shard {
                         profiles: Vec::new(),
                         acc: GlobalAcc::new(cfg),
+                        worker: runner.worker(),
                     };
                     let mut l1 = std::collections::HashMap::new();
                     loop {
@@ -500,16 +653,16 @@ pub fn simulate_plan(
                                 cfg,
                                 opts,
                                 map: opts.addr_map(),
-                                placement: &placement,
-                                requester: assign(i, root),
+                                placement: &setup.placement,
+                                requester: setup.assign(opts, cfg, i, root),
                                 task_cycles: 0,
                                 lvl1_chunks: 0,
                                 acc: &mut shard.acc,
-                                hot_k,
+                                hot_k: setup.hot_k,
                                 l1: &mut l1,
                                 l1_used: 0,
                             };
-                            e.count_root(root, &mut sink);
+                            runner.run(&mut shard.worker, root, &mut sink);
                             let cycles = sink.task_cycles;
                             let chunks = sink.lvl1_chunks.max(1);
                             shard.profiles.push((i, TaskProfile { cycles, chunks }));
@@ -524,22 +677,102 @@ pub fn simulate_plan(
 
     let mut acc = GlobalAcc::new(cfg);
     let mut profiles: Vec<Option<TaskProfile>> = (0..ntasks).map(|_| None).collect();
+    let mut workers = Vec::with_capacity(shards.len());
     for shard in shards {
         acc.merge(shard.acc);
         for (i, p) in shard.profiles {
             profiles[i] = Some(p);
         }
+        workers.push(shard.worker);
     }
+    let profiles = profiles
+        .into_iter()
+        .map(|p| p.expect("every task profiled"))
+        .collect();
+    (acc, profiles, workers)
+}
 
-    // -------- Phase 2: schedule --------
+/// Sizing of the end-of-kernel support-map merge: entries each
+/// participating unit ships, and bytes per entry.
+struct AggSpec {
+    entries: u64,
+    entry_bytes: u64,
+}
+
+/// Charge the cross-unit support-map merge (DESIGN.md §8): a two-stage
+/// reduction — units → channel leader (intra-channel), channel leaders →
+/// global leader (inter-channel). Under the default interleave the maps
+/// are striped over the whole stack, so merge bytes take the interleave
+/// split instead of the topological one. Returns (bytes, critical-path
+/// cycles); byte classes accumulate into `agg_f`.
+fn merge_aggregation(
+    cfg: &PimConfig,
+    map: AddrMap,
+    active: &[bool],
+    spec: &AggSpec,
+    agg_f: &mut [f64; 3],
+) -> (u64, u64) {
+    let map_bytes = spec.entries * spec.entry_bytes;
+    if map_bytes == 0 {
+        return (0, 0);
+    }
+    let upc = cfg.units_per_channel;
+    let mut total = 0u64;
+    let mut stage1_max = 0u64;
+    let mut leaders: Vec<usize> = Vec::new();
+    for ch in 0..cfg.channels {
+        let members: Vec<usize> = (0..upc)
+            .map(|slot| ch * upc + slot)
+            .filter(|&u| active[u])
+            .collect();
+        let Some((&leader, rest)) = members.split_first() else {
+            continue;
+        };
+        leaders.push(leader);
+        let mut ch_cycles = 0u64;
+        for &u in rest {
+            total += map_bytes;
+            accumulate_access(cfg, map, leader, u, map_bytes, false, agg_f);
+            let split = split_access(cfg, map, leader, u, map_bytes, false);
+            ch_cycles += startup_latency(cfg, split.dominant())
+                + map_bytes.div_ceil(cfg.link_bytes_per_cycle);
+        }
+        stage1_max = stage1_max.max(ch_cycles);
+    }
+    let mut stage2 = 0u64;
+    if let Some((&global, rest)) = leaders.split_first() {
+        for &l in rest {
+            total += map_bytes;
+            accumulate_access(cfg, map, global, l, map_bytes, false, agg_f);
+            let split = split_access(cfg, map, global, l, map_bytes, false);
+            stage2 += startup_latency(cfg, split.dominant())
+                + map_bytes.div_ceil(cfg.link_bytes_per_cycle);
+        }
+    }
+    (total, stage1_max + stage2)
+}
+
+/// Phase 2 + assembly: schedule the profiled tasks on the units, apply
+/// the congestion bounds, and (mining workloads) charge the cross-unit
+/// support-map merge.
+fn finish_sim(
+    roots: &[VertexId],
+    profiles: Vec<TaskProfile>,
+    mut acc: GlobalAcc,
+    opts: &SimOptions,
+    cfg: &PimConfig,
+    setup: &SimSetup,
+    agg: Option<AggSpec>,
+) -> SimResult {
     let mut queues: Vec<VecDeque<Piece>> = vec![VecDeque::new(); cfg.num_units()];
     for (i, prof) in profiles.iter().enumerate() {
-        let prof = prof.as_ref().unwrap();
-        queues[assign(i, roots[i])].push_back(Piece {
+        queues[setup.assign(opts, cfg, i, roots[i])].push_back(Piece {
             cycles: prof.cycles,
             chunks: prof.chunks,
         });
     }
+    // Units holding mining state = units that ran at least one task.
+    let active: Vec<bool> = queues.iter().map(|q| !q.is_empty()).collect();
     let sched = schedule(cfg, queues, opts.stealing);
 
     // -------- Congestion bounds --------
@@ -557,7 +790,14 @@ pub fn simulate_plan(
         AddrMap::DefaultInterleave => acc.uniform_link_occ / cfg.channels as u64,
     };
 
-    let total_cycles = sched.makespan.max(bank_bound).max(link_bound);
+    let (agg_merge_bytes, agg_cycles) = match &agg {
+        Some(spec) => merge_aggregation(cfg, opts.addr_map(), &active, spec, &mut acc.agg_f),
+        None => (0, 0),
+    };
+
+    // The merge is a barrier after the enumeration phase: its critical
+    // path adds to whichever bound dominated the kernel.
+    let total_cycles = sched.makespan.max(bank_bound).max(link_bound) + agg_cycles;
     let avg_busy =
         sched.unit_busy.iter().sum::<u64>() as f64 / sched.unit_busy.len().max(1) as f64;
 
@@ -578,8 +818,208 @@ pub fn simulate_plan(
         sched_cycles: sched.makespan,
         bank_bound,
         link_bound,
-        v_b_min,
+        v_b_min: setup.v_b_min,
+        agg: AccessStats {
+            near_bytes: acc.agg_f[0].round() as u64,
+            intra_bytes: acc.agg_f[1].round() as u64,
+            inter_bytes: acc.agg_f[2].round() as u64,
+        },
+        agg_updates: acc.agg_updates,
+        agg_merge_bytes,
+        agg_cycles,
     }
+}
+
+/// Simulate one plan over the given root tasks.
+pub fn simulate_plan(
+    g: &CsrGraph,
+    plan: &Plan,
+    roots: &[VertexId],
+    opts: &SimOptions,
+    cfg: &PimConfig,
+) -> SimResult {
+    struct PlanRunner<'g> {
+        g: &'g CsrGraph,
+        plan: &'g Plan,
+    }
+    impl<'g> TaskRunner for PlanRunner<'g> {
+        type Worker = Enumerator<'g>;
+        fn worker(&self) -> Enumerator<'g> {
+            Enumerator::new(self.g, self.plan)
+        }
+        fn run(&self, w: &mut Enumerator<'g>, root: VertexId, sink: &mut SimSink<'_>) {
+            w.count_root(root, sink);
+        }
+    }
+    let setup = SimSetup::new(g, opts, cfg);
+    let (acc, profiles, _) = profile_pass(&PlanRunner { g, plan }, roots, opts, cfg, &setup);
+    finish_sim(roots, profiles, acc, opts, cfg, &setup, None)
+}
+
+/// Outcome of `PIMMotifCount`: the census plus the simulated timing.
+#[derive(Clone, Debug)]
+pub struct MotifSimResult {
+    pub census: MotifCensus,
+    pub sim: SimResult,
+}
+
+/// One-pass k-motif census on the simulated machine (`PIMMotifCount`):
+/// the ESU engine runs per root task under the standard cost model, each
+/// classified embedding charges a support-counter update, and the
+/// per-unit count maps merge over the fabric at kernel end.
+pub fn simulate_motifs(
+    g: &CsrGraph,
+    k: usize,
+    roots: &[VertexId],
+    opts: &SimOptions,
+    cfg: &PimConfig,
+) -> MotifSimResult {
+    struct CensusRunner<'g> {
+        g: &'g CsrGraph,
+        cls: &'g PatternClassifier,
+    }
+    impl<'g> TaskRunner for CensusRunner<'g> {
+        type Worker = CensusEngine<'g>;
+        fn worker(&self) -> CensusEngine<'g> {
+            CensusEngine::new(self.g, self.cls)
+        }
+        fn run(&self, w: &mut CensusEngine<'g>, root: VertexId, sink: &mut SimSink<'_>) {
+            w.run_root(root, sink);
+        }
+    }
+    let cls = PatternClassifier::new(k);
+    let setup = SimSetup::new(g, opts, cfg);
+    let (acc, profiles, workers) =
+        profile_pass(&CensusRunner { g, cls: &cls }, roots, opts, cfg, &setup);
+    let mut counts = vec![0u64; cls.num_patterns()];
+    for w in workers {
+        for (a, b) in counts.iter_mut().zip(&w.counts) {
+            *a += *b;
+        }
+    }
+    let spec = AggSpec {
+        entries: cls.num_patterns() as u64,
+        entry_bytes: 8, // one u64 counter slot per pattern
+    };
+    let sim = finish_sim(roots, profiles, acc, opts, cfg, &setup, Some(spec));
+    MotifSimResult {
+        census: MotifCensus {
+            k,
+            motifs: cls.motifs().to_vec(),
+            counts,
+        },
+        sim,
+    }
+}
+
+/// FSM on the simulated machine (`PIMFrequentMine`): every BFS level's
+/// candidate evaluation runs through the profiling + scheduling pipeline
+/// (one task per root vertex, all candidates evaluated within the task),
+/// and each level's per-unit domain maps merge over the fabric. Level
+/// times add back-to-back into one [`SimResult`].
+pub fn simulate_fsm(
+    g: &CsrGraph,
+    fsm_cfg: &FsmConfig,
+    opts: &SimOptions,
+    cfg: &PimConfig,
+) -> (FsmResult, SimResult) {
+    struct FsmLevelRunner<'a> {
+        g: &'a CsrGraph,
+        cands: &'a [LabeledPattern],
+        shapes: Vec<CandShape>,
+    }
+    impl TaskRunner for FsmLevelRunner<'_> {
+        type Worker = (LevelAcc, MatchScratch);
+        fn worker(&self) -> Self::Worker {
+            (LevelAcc::new(self.cands), MatchScratch::default())
+        }
+        fn run(&self, w: &mut Self::Worker, root: VertexId, sink: &mut SimSink<'_>) {
+            let (acc, scratch) = w;
+            for (ci, cand) in self.cands.iter().enumerate() {
+                let n = fsm::match_rooted(
+                    self.g,
+                    cand,
+                    &self.shapes[ci],
+                    ci,
+                    root,
+                    sink,
+                    &mut acc.domains[ci],
+                    scratch,
+                );
+                acc.embeddings[ci] += n;
+            }
+        }
+    }
+    struct PimLevelExecutor<'a> {
+        opts: &'a SimOptions,
+        cfg: &'a PimConfig,
+        setup: SimSetup,
+        roots: Vec<VertexId>,
+        levels: Vec<SimResult>,
+    }
+    impl LevelExecutor for PimLevelExecutor<'_> {
+        fn run_level(
+            &mut self,
+            g: &CsrGraph,
+            candidates: &[LabeledPattern],
+        ) -> Vec<CandidateStats> {
+            let runner = FsmLevelRunner {
+                g,
+                cands: candidates,
+                shapes: candidates.iter().map(CandShape::of).collect(),
+            };
+            let (acc, profiles, workers) =
+                profile_pass(&runner, &self.roots, self.opts, self.cfg, &self.setup);
+            let merged = workers
+                .into_iter()
+                .map(|(acc, _)| acc)
+                .reduce(LevelAcc::merge)
+                .unwrap_or_else(|| LevelAcc::new(candidates));
+            // MNI domains are *sets* of distinct images (counts are not
+            // additive across units), so each unit ships its whole local
+            // domain map. Size the merge by the merged domain
+            // cardinalities — the union every unit's map is a subset of —
+            // at 16 bytes per (vertex, presence) record.
+            let spec = AggSpec {
+                entries: merged
+                    .domains
+                    .iter()
+                    .flat_map(|cand| cand.iter().map(|dom| dom.len() as u64))
+                    .sum(),
+                entry_bytes: 16,
+            };
+            let sim = finish_sim(
+                &self.roots,
+                profiles,
+                acc,
+                self.opts,
+                self.cfg,
+                &self.setup,
+                Some(spec),
+            );
+            self.levels.push(sim);
+            merged.into_stats()
+        }
+    }
+    let setup = SimSetup::new(g, opts, cfg);
+    let v_b_min = setup.v_b_min;
+    let mut exec = PimLevelExecutor {
+        opts,
+        cfg,
+        setup,
+        roots: (0..g.num_vertices() as VertexId).collect(),
+        levels: Vec::new(),
+    };
+    let result = fsm::fsm_mine_with(g, fsm_cfg, &mut exec);
+    let mut total = SimResult::empty();
+    for lvl in &exec.levels {
+        total.add(lvl);
+    }
+    if exec.levels.is_empty() {
+        total.v_b_min = v_b_min;
+        total.unit_busy = vec![0; cfg.num_units()];
+    }
+    (result, total)
 }
 
 /// Simulate a whole application: plans run back-to-back (times add).
@@ -743,6 +1183,131 @@ mod tests {
             b.total_cycles,
             a.total_cycles
         );
+    }
+
+    #[test]
+    fn sim_result_add_handles_edge_cases() {
+        // empty + empty stays the identity
+        let mut a = SimResult::empty();
+        a.add(&SimResult::empty());
+        assert_eq!(a.count, 0);
+        assert_eq!(a.total_cycles, 0);
+        assert!(a.unit_busy.is_empty());
+        assert_eq!(a.v_b_min, VertexId::MAX);
+
+        // mismatched unit_busy lengths zero-extend instead of truncating
+        let mut short = SimResult::empty();
+        short.unit_busy = vec![5, 5];
+        short.count = 1;
+        let mut long = SimResult::empty();
+        long.unit_busy = vec![1, 2, 3, 4];
+        long.count = 2;
+        long.v_b_min = 7;
+        long.agg_updates = 9;
+        long.agg_merge_bytes = 64;
+        long.agg_cycles = 10;
+        short.add(&long);
+        assert_eq!(short.unit_busy, vec![6, 7, 3, 4]);
+        assert_eq!(short.count, 3);
+        assert_eq!(short.v_b_min, 7);
+        assert_eq!(short.agg_updates, 9);
+        assert_eq!(short.agg_merge_bytes, 64);
+        assert_eq!(short.agg_cycles, 10);
+        // adding the longer to the shorter is length-stable the other way
+        long.add(&short);
+        assert_eq!(long.unit_busy.len(), 4);
+    }
+
+    #[test]
+    fn exe_over_avg_edge_cases() {
+        // empty unit_busy and zero-average busy both report 0, not NaN
+        let mut r = SimResult::empty();
+        assert_eq!(r.exe_over_avg(), 0.0);
+        r.unit_busy = vec![0, 0, 0];
+        r.total_cycles = 100;
+        assert_eq!(r.exe_over_avg(), 0.0);
+        // balanced load: Exe/Avg = total / mean
+        r.unit_busy = vec![10, 20, 30];
+        assert!((r.exe_over_avg() - 100.0 / 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pattern_counting_reports_zero_aggregation() {
+        let g = test_graph();
+        let cfg = PimConfig::default();
+        let app = application("3-CC").unwrap();
+        let r = simulate_app(&g, &app, &all_roots(&g), &SimOptions::all(), &cfg);
+        assert_eq!(r.agg.total(), 0);
+        assert_eq!(r.agg_updates, 0);
+        assert_eq!(r.agg_merge_bytes, 0);
+        assert_eq!(r.agg_cycles, 0);
+    }
+
+    #[test]
+    fn motif_sim_counts_match_cpu_census() {
+        let g = test_graph();
+        let cfg = PimConfig::default();
+        let roots = all_roots(&g);
+        let cpu = crate::mine::census::motif_census(&g, 3, &roots);
+        for (_, opts) in SimOptions::ladder() {
+            let r = simulate_motifs(&g, 3, &roots, &opts, &cfg);
+            assert_eq!(r.census.counts, cpu.counts);
+            assert_eq!(r.sim.count, cpu.total());
+        }
+    }
+
+    #[test]
+    fn mining_aggregation_traffic_shrinks_with_remap() {
+        let g = test_graph();
+        let cfg = PimConfig::default();
+        let roots = all_roots(&g);
+        let base = simulate_motifs(&g, 3, &roots, &SimOptions::BASELINE, &cfg).sim;
+        let remap = simulate_motifs(&g, 3, &roots, &SimOptions::all(), &cfg).sim;
+        // both runs aggregate: nonzero updates, merge, and traffic
+        for r in [&base, &remap] {
+            assert!(r.agg_updates > 0);
+            assert!(r.agg.total() > 0);
+            assert!(r.agg_merge_bytes > 0);
+            assert!(r.agg_cycles > 0);
+        }
+        // the update stream is near-core once the maps are unit-local:
+        // remote aggregation bytes must shrink by a large factor
+        let remote = |r: &SimResult| r.agg.intra_bytes + r.agg.inter_bytes;
+        assert!(
+            remote(&remap) * 10 < remote(&base),
+            "remap remote agg {} vs base {}",
+            remote(&remap),
+            remote(&base)
+        );
+        assert!(remap.agg.near_frac() > 0.9);
+    }
+
+    #[test]
+    fn fsm_sim_matches_cpu_fsm() {
+        use crate::graph::gen;
+        let g = crate::graph::sort_by_degree_desc(&gen::with_random_labels(
+            gen::power_law(400, 1600, 60, 5),
+            3,
+            11,
+        ))
+        .graph;
+        let cfg = PimConfig::default();
+        let fsm_cfg = FsmConfig {
+            min_support: 20,
+            max_size: 3,
+        };
+        let cpu = fsm::fsm_mine(&g, &fsm_cfg);
+        let (pim, sim) = simulate_fsm(&g, &fsm_cfg, &SimOptions::all(), &cfg);
+        assert_eq!(cpu.frequent.len(), pim.frequent.len());
+        for (a, b) in cpu.frequent.iter().zip(&pim.frequent) {
+            assert_eq!(a.support, b.support);
+            assert_eq!(a.embeddings, b.embeddings);
+            assert_eq!(a.pattern.canonical_key(), b.pattern.canonical_key());
+        }
+        assert!(sim.total_cycles > 0);
+        assert!(sim.agg_updates > 0);
+        // sim.count totals the embeddings of every evaluated candidate
+        assert!(sim.count >= cpu.frequent.iter().map(|f| f.embeddings).sum::<u64>());
     }
 
     #[test]

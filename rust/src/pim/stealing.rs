@@ -217,7 +217,7 @@ fn find_victim(cfg: &PimConfig, units: &[UnitState], thief: usize, t: u64) -> Op
 fn take_work(units: &mut [UnitState], victim: usize, t: u64, overhead: u64) -> Vec<Piece> {
     let vic = &mut units[victim];
     if !vic.queue.is_empty() {
-        let take = (vic.queue.len() + 1) / 2;
+        let take = vic.queue.len().div_ceil(2);
         let at = vic.queue.len() - take;
         let stolen: Vec<Piece> = vic.queue.split_off(at).into();
         // Victim still pays the suspension overhead on its current piece.

@@ -1,6 +1,7 @@
 //! Tiny command-line flag parser (no `clap` offline).
 //!
-//! Supports `--flag value`, `--flag=value`, bare boolean `--flag`, and
+//! Supports `--flag value`, `--flag=value`, bare boolean `--flag`, short
+//! flags `-k value` (single dash, non-numeric, e.g. `motifs -k 4`), and
 //! positional arguments. Used by the `pimminer` binary and the examples.
 
 use std::collections::HashMap;
@@ -22,15 +23,28 @@ impl Args {
         let mut flags = HashMap::new();
         let mut positional = Vec::new();
         let mut iter = items.into_iter().peekable();
+        // `-k` style short flags: a single dash followed by something
+        // non-numeric (negative numbers stay positional).
+        let is_short_flag = |s: &str| {
+            s.len() > 1
+                && s.starts_with('-')
+                && !s.starts_with("--")
+                && !s.as_bytes()[1].is_ascii_digit()
+        };
         while let Some(item) = iter.next() {
-            if let Some(stripped) = item.strip_prefix("--") {
+            let stripped = match item.strip_prefix("--") {
+                Some(s) => Some(s),
+                None if is_short_flag(&item) => Some(&item[1..]),
+                None => None,
+            };
+            if let Some(stripped) = stripped {
                 if let Some((k, v)) = stripped.split_once('=') {
                     flags.insert(k.to_string(), v.to_string());
                 } else {
                     // `--flag value` unless the next token is another flag.
                     let takes_value = iter
                         .peek()
-                        .map(|n| !n.starts_with("--"))
+                        .map(|n| !n.starts_with("--") && !is_short_flag(n))
                         .unwrap_or(false);
                     if takes_value {
                         flags.insert(stripped.to_string(), iter.next().unwrap());
@@ -102,6 +116,22 @@ mod tests {
         assert!(a.get_bool("steal"));
         assert!(a.get_bool("filter"));
         assert_eq!(a.get("out"), Some("x"));
+    }
+
+    #[test]
+    fn short_flags_parse() {
+        let a = parse("motifs -k 4 --dataset MI -check");
+        assert_eq!(a.get_usize("k", 0), 4);
+        assert_eq!(a.get("dataset"), Some("MI"));
+        assert!(a.get_bool("check"));
+        assert_eq!(a.positional(), &["motifs".to_string()]);
+        // negative numbers are not flags
+        let b = parse("run -5");
+        assert_eq!(b.positional(), &["run".to_string(), "-5".to_string()]);
+        // a short flag does not swallow a following flag as its value
+        let c = parse("-k --out x");
+        assert!(c.get_bool("k"));
+        assert_eq!(c.get("out"), Some("x"));
     }
 
     #[test]

@@ -27,7 +27,7 @@ fn full_pipeline_counts_match_cpu_for_every_app() {
     miner.verify_device_contents().unwrap();
     for app in paper_applications() {
         let expected = cpu::run_application(&g, &app, &roots, CpuFlavor::AutoMineOpt).count;
-        let r = miner.pattern_count(&app, 1.0);
+        let r = miner.pattern_count(&app, 1.0).unwrap();
         assert_eq!(r.count, expected, "{}", app.name);
         assert!(r.seconds > 0.0);
     }
@@ -105,7 +105,7 @@ fn options_affect_timing_not_counts() {
     for (name, opts) in SimOptions::ladder() {
         let mut miner = PimMiner::new(PimConfig::default(), opts);
         miner.load_graph(g.clone()).unwrap();
-        let r = miner.pattern_count(&app, 1.0);
+        let r = miner.pattern_count(&app, 1.0).unwrap();
         results.push((name, r));
     }
     let count0 = results[0].1.count;
@@ -122,8 +122,8 @@ fn sampled_pattern_count() {
     let app = application("3-CC").unwrap();
     let mut miner = PimMiner::new(PimConfig::default(), SimOptions::all());
     miner.load_graph(g).unwrap();
-    let full = miner.pattern_count(&app, 1.0);
-    let sampled = miner.pattern_count(&app, 0.2);
+    let full = miner.pattern_count(&app, 1.0).unwrap();
+    let sampled = miner.pattern_count(&app, 0.2).unwrap();
     assert!(sampled.count < full.count);
     assert!(sampled.count > 0);
 }

@@ -1,0 +1,198 @@
+//! Mining-engine integration (DESIGN.md §8): the acceptance gates for the
+//! `mine` subsystem.
+//!
+//! * every `motifs -k 4` per-pattern count matches an independent
+//!   `count --pattern`-style compiled-plan run, on 3 seeded graphs;
+//! * k=3 census totals match the brute-force triangle + wedge oracle;
+//! * FSM with threshold 1 on an unlabeled-equivalent graph agrees with
+//!   motif counting;
+//! * PIM-simulated mining reports a nonzero aggregation-traffic
+//!   breakdown that shrinks when remap is enabled.
+
+use pimminer::exec::brute_force_count;
+use pimminer::exec::cpu::{self, CpuFlavor};
+use pimminer::graph::{gen, sort_by_degree_desc, CsrGraph, VertexId};
+use pimminer::mine::{self, FsmConfig};
+use pimminer::pattern::compile::{compile_with, CostModel};
+use pimminer::pattern::motif::connected_motifs;
+use pimminer::pattern::pattern as pat;
+use pimminer::pim::{simulate_fsm, simulate_motifs, PimConfig, SimOptions, SimResult};
+
+fn all_roots(g: &CsrGraph) -> Vec<VertexId> {
+    (0..g.num_vertices() as VertexId).collect()
+}
+
+/// Acceptance: `motifs -k 4` per-pattern counts exactly match independent
+/// `count --pattern` runs for every connected 4-vertex pattern on 3
+/// seeded graphs (and k=3 / k=5 for good measure on the first seed).
+#[test]
+fn census_matches_compiled_plan_counts_on_seeded_graphs() {
+    for seed in 0..3u64 {
+        let g = sort_by_degree_desc(&gen::erdos_renyi(60, 240, seed)).graph;
+        let roots = all_roots(&g);
+        let model = CostModel::for_graph(&g);
+        let sizes: &[usize] = if seed == 0 { &[3, 4, 5] } else { &[4] };
+        for &k in sizes {
+            let census = mine::motif_census(&g, k, &roots);
+            assert_eq!(census.motifs.len(), connected_motifs(k).len());
+            for (i, m) in census.motifs.iter().enumerate() {
+                let compiled = compile_with(m, &model, true).expect("motif compiles");
+                let expected = cpu::count_plan(&g, &compiled.plan, &roots, CpuFlavor::AutoMineOpt);
+                assert_eq!(
+                    census.counts[i], expected,
+                    "seed {seed} k={k} motif {} ({})",
+                    i, m.name
+                );
+            }
+        }
+    }
+}
+
+/// Satellite property test: k=3 motif counts sum to the brute-force
+/// triangle + wedge totals across 3 seeds.
+#[test]
+fn k3_census_sums_to_brute_force_triangles_plus_wedges() {
+    for seed in 0..3u64 {
+        let g = gen::erdos_renyi(18, 45, seed);
+        let census = mine::motif_census(&g, 3, &all_roots(&g));
+        let triangles = brute_force_count(&g, &pat::clique(3));
+        let wedges = brute_force_count(&g, &pat::wedge());
+        assert_eq!(census.count_of(&pat::clique(3)), Some(triangles), "seed {seed}");
+        assert_eq!(census.count_of(&pat::wedge()), Some(wedges), "seed {seed}");
+        assert_eq!(census.total(), triangles + wedges, "seed {seed}");
+    }
+}
+
+/// Acceptance: FSM with threshold 1 on an unlabeled-equivalent graph
+/// agrees with motif counting — the frequent k-vertex set is exactly the
+/// set of patterns with at least one (non-induced) embedding, which in
+/// particular contains every pattern the induced census counts.
+#[test]
+fn fsm_threshold_one_agrees_with_motif_counting() {
+    let g = sort_by_degree_desc(&gen::erdos_renyi(40, 110, 7)).graph;
+    let roots = all_roots(&g);
+    let r = mine::fsm_mine(
+        &g,
+        &FsmConfig {
+            min_support: 1,
+            max_size: 4,
+        },
+    );
+    let model = CostModel::for_graph(&g);
+    let census = mine::motif_census(&g, 4, &roots);
+    for (i, m) in census.motifs.iter().enumerate() {
+        // non-induced embeddings: compiled plan without red-edge checks
+        let non_induced = compile_with(m, &model, false).expect("compiles");
+        let embeddable = cpu::count_plan(&g, &non_induced.plan, &roots, CpuFlavor::AutoMineOpt) > 0;
+        assert_eq!(
+            r.contains_unlabeled(m),
+            embeddable,
+            "motif {i} ({}): frequent-at-1 must equal non-induced embeddable",
+            m.name
+        );
+        // induced ⊆ non-induced: every census-positive motif is frequent
+        if census.counts[i] > 0 {
+            assert!(r.contains_unlabeled(m), "census-positive motif {i} missing");
+        }
+    }
+}
+
+/// Acceptance: PIM-simulated mining reports a nonzero aggregation-traffic
+/// breakdown that shrinks when remap is enabled — for both mining
+/// workloads.
+#[test]
+fn aggregation_breakdown_nonzero_and_shrinks_with_remap() {
+    let g = sort_by_degree_desc(&gen::power_law(900, 4_000, 80, 3)).graph;
+    let roots = all_roots(&g);
+    let cfg = PimConfig::default();
+    let remote = |r: &SimResult| r.agg.intra_bytes + r.agg.inter_bytes;
+
+    let base = simulate_motifs(&g, 4, &roots, &SimOptions::BASELINE, &cfg).sim;
+    let full = simulate_motifs(&g, 4, &roots, &SimOptions::all(), &cfg).sim;
+    for (name, r) in [("base", &base), ("full", &full)] {
+        assert!(r.agg.total() > 0, "{name}: zero aggregation traffic");
+        assert!(r.agg_updates > 0, "{name}: zero updates");
+        assert!(r.agg_merge_bytes > 0, "{name}: zero merge");
+    }
+    assert!(
+        remote(&full) < remote(&base),
+        "census remote agg must shrink with remap: {} vs {}",
+        remote(&full),
+        remote(&base)
+    );
+
+    let labeled = gen::with_random_labels(g.clone(), 3, 5);
+    let fsm_cfg = FsmConfig {
+        min_support: 30,
+        max_size: 3,
+    };
+    let (_, fsm_base) = simulate_fsm(&labeled, &fsm_cfg, &SimOptions::BASELINE, &cfg);
+    let (_, fsm_full) = simulate_fsm(&labeled, &fsm_cfg, &SimOptions::all(), &cfg);
+    assert!(fsm_base.agg.total() > 0 && fsm_full.agg.total() > 0);
+    assert!(
+        remote(&fsm_full) < remote(&fsm_base),
+        "FSM remote agg must shrink with remap: {} vs {}",
+        remote(&fsm_full),
+        remote(&fsm_base)
+    );
+}
+
+/// PIM census counts equal CPU census counts under every optimization
+/// ladder rung (mining counts are optimization-invariant, like Table 5's
+/// counting workloads).
+#[test]
+fn pim_census_is_optimization_invariant() {
+    let g = sort_by_degree_desc(&gen::power_law(700, 3_000, 70, 9)).graph;
+    let roots = all_roots(&g);
+    let cfg = PimConfig::default();
+    let cpu = mine::motif_census(&g, 4, &roots);
+    assert!(cpu.total() > 0);
+    for (name, opts) in SimOptions::ladder() {
+        let r = simulate_motifs(&g, 4, &roots, &opts, &cfg);
+        assert_eq!(r.census.counts, cpu.counts, "config {name}");
+    }
+}
+
+/// FSM finds a seeded labeled pattern with the exact support, end to end
+/// through the labeled-graph plumbing (labels survive degree sorting).
+#[test]
+fn fsm_finds_seeded_labeled_pattern() {
+    // 10 disjoint labeled triangles (labels 0-1-2) plus label-3 noise
+    // stars: the labeled triangle must be frequent with support 10.
+    let mut edges = Vec::new();
+    let mut labels = Vec::new();
+    for t in 0..10u32 {
+        let b = t * 3;
+        edges.extend([(b, b + 1), (b + 1, b + 2), (b + 2, b)]);
+        labels.extend([0u32, 1, 2]);
+    }
+    let hub = 30u32;
+    labels.push(3);
+    for leaf in 0..5u32 {
+        edges.push((hub, 31 + leaf));
+        labels.push(3);
+    }
+    let g = CsrGraph::from_edges(36, &edges).with_labels(labels);
+    let sorted = sort_by_degree_desc(&g).graph;
+    let r = mine::fsm_mine(
+        &sorted,
+        &FsmConfig {
+            min_support: 10,
+            max_size: 3,
+        },
+    );
+    let tri = r
+        .frequent
+        .iter()
+        .find(|f| f.pattern.pattern.num_edges() == 3 && f.pattern.size() == 3)
+        .expect("labeled triangle must be frequent");
+    assert_eq!(tri.support, 10);
+    let mut found_labels = tri.pattern.labels.clone();
+    found_labels.sort_unstable();
+    assert_eq!(found_labels, vec![0, 1, 2]);
+    // the label-3 noise edges (support 1 each side... at most 5) are not
+    assert!(r
+        .frequent
+        .iter()
+        .all(|f| !f.pattern.labels.contains(&3)));
+}
