@@ -1,0 +1,100 @@
+//! Partitioning-strategy comparison (DESIGN.md §9): the Table-2-style
+//! remote-byte breakdown of round-robin vs. streaming vs. refined owner
+//! maps on power-law and Erdős–Rényi graphs, at equal replica capacity,
+//! under the local-first mapping.
+//!
+//! `cargo bench --bench table_partition -- --json` (or
+//! `PIMMINER_BENCH_JSON=1`) additionally writes `BENCH_partition.json`
+//! with the remote-byte shares — the machine-readable mode CI consumes.
+
+use pimminer::bench::Bench;
+use pimminer::graph::{gen, sort_by_degree_desc, CsrGraph};
+use pimminer::part::PartitionStrategy;
+use pimminer::pattern::plan::application;
+use pimminer::pim::{build_placement, simulate_app, PimConfig, SimOptions};
+use pimminer::report::{bytes, json, pct, Table};
+
+fn graphs() -> Vec<(&'static str, CsrGraph)> {
+    vec![
+        ("power-law(2k,10k)", sort_by_degree_desc(&gen::power_law(2_000, 10_000, 300, 8)).graph),
+        ("power-law(4k,24k)", sort_by_degree_desc(&gen::power_law(4_000, 24_000, 400, 19)).graph),
+        ("erdos-renyi(2k,10k)", sort_by_degree_desc(&gen::erdos_renyi(2_000, 10_000, 7)).graph),
+    ]
+}
+
+fn main() {
+    let bench = Bench::new("table_partition");
+    let json_mode = std::env::args().any(|a| a == "--json")
+        || std::env::var("PIMMINER_BENCH_JSON").map(|v| v == "1").unwrap_or(false);
+    let cfg = PimConfig::default();
+    let app = application("3-CC").unwrap();
+    let mut table = Table::new(
+        "Partitioning — access distribution under LocalFirst, 3-CC, equal replica capacity",
+        &["Graph", "Strategy", "Near", "Intra", "Inter", "InterBytes", "ReplicaB", "vs RR"],
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+    for (name, g) in graphs() {
+        let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+        // Equal replica capacity for every strategy: own share + 10%.
+        let cap = g.total_bytes() / cfg.num_units() as u64 + g.total_bytes() / 10;
+        let mut rr_inter = None;
+        for strategy in PartitionStrategy::ALL {
+            let opts = SimOptions {
+                filter: true,
+                remap: true, // AddrMap::LocalFirst
+                duplication: true,
+                capacity_per_unit: Some(cap),
+                partitioner: strategy,
+                ..SimOptions::BASELINE
+            };
+            let r = bench.fixture(&format!("{name}/{}", strategy.name()), || {
+                simulate_app(&g, &app, &roots, &opts, &cfg)
+            });
+            let base = *rr_inter.get_or_insert(r.access.inter_bytes);
+            let reduction = 1.0 - r.access.inter_bytes as f64 / base.max(1) as f64;
+            if strategy == PartitionStrategy::Refined {
+                // the integration-test acceptance bar, asserted here too
+                assert!(
+                    r.access.inter_bytes * 4 <= base * 3,
+                    "{name}: refined inter bytes {} not ≥25% below round-robin {base}",
+                    r.access.inter_bytes
+                );
+            }
+            let rep = build_placement(&g, &opts, &cfg).replica_report(&g);
+            table.row(vec![
+                name.to_string(),
+                strategy.name().to_string(),
+                pct(r.access.near_frac()),
+                pct(r.access.intra_frac()),
+                pct(r.access.inter_frac()),
+                bytes(r.access.inter_bytes),
+                bytes(rep.total_bytes),
+                format!("-{:.1}%", reduction * 100.0),
+            ]);
+            json_rows.push(
+                json::Obj::new()
+                    .str("graph", name)
+                    .str("strategy", strategy.name())
+                    .f64("near_share", r.access.near_frac())
+                    .f64("intra_share", r.access.intra_frac())
+                    .f64("inter_share", r.access.inter_frac())
+                    .u64("near_bytes", r.access.near_bytes)
+                    .u64("intra_bytes", r.access.intra_bytes)
+                    .u64("inter_bytes", r.access.inter_bytes)
+                    .f64("inter_reduction_vs_rr", reduction)
+                    .u64("replica_bytes", rep.total_bytes)
+                    .f64("seconds", r.seconds)
+                    .render(),
+            );
+        }
+    }
+    table.print();
+    if json_mode {
+        let doc = json::Obj::new()
+            .str("bench", "table_partition")
+            .raw("rows", &json::array(&json_rows))
+            .render();
+        std::fs::write("BENCH_partition.json", doc).expect("write BENCH_partition.json");
+        println!("wrote BENCH_partition.json ({} rows)", json_rows.len());
+    }
+}

@@ -29,9 +29,11 @@ use crate::pim::config::PimConfig;
 use crate::pim::filter::Cmp;
 use crate::pim::placement::Placement;
 use crate::pim::sim::{
-    simulate_app, simulate_fsm, simulate_motifs, MotifSimResult, SimOptions, SimResult,
+    build_placement, simulate_app, simulate_fsm, simulate_motifs, MotifSimResult, SimOptions,
+    SimResult,
 };
 use anyhow::{bail, Result};
+use std::collections::HashMap;
 use std::path::Path;
 
 /// A graph resident in PIM memory.
@@ -40,8 +42,10 @@ pub struct LoadedGraph {
     pub placement: Placement,
     /// Per-vertex device allocation of the primary copy of `N(v)`.
     pub lists: Vec<PimPtr>,
-    /// Replicated hot lists per unit: `replicas[u][v]` for `v < v_b[u]`.
-    pub replicas: Vec<Vec<PimPtr>>,
+    /// Per-unit replica allocations, keyed by vertex: every `v` in
+    /// `placement.replicated_vertices(_, u)` has an entry (the primary
+    /// pointer when the unit already owns `v`).
+    pub replicas: Vec<HashMap<VertexId, PimPtr>>,
 }
 
 /// The framework handle (CPU-side leader).
@@ -83,22 +87,17 @@ impl PimMiner {
     }
 
     /// `PIMLoadGraph` from a binary CSR file (Algorithm 1): stream RowPtr
-    /// to host memory, then DMA each neighbor list straight into its
-    /// round-robin owner unit; finally run the duplication pass
-    /// (Algorithm 2) copying hot lists into every unit's spare capacity.
+    /// and the neighbor lists to host memory, then DMA each list into the
+    /// unit the selected partitioner assigns it (round-robin reproduces
+    /// the paper's lines 2–6), and finally place replicas — Algorithm 2's
+    /// hot prefix or the replication planner's per-unit sets.
     pub fn load_graph_file(&mut self, path: &Path) -> Result<()> {
         let mut reader = NeighborListReader::open(path)?;
         let n = reader.num_vertices();
         let row_ptr = reader.row_ptr().to_vec();
         let mut col_idx: Vec<VertexId> = Vec::with_capacity(row_ptr[n] as usize);
-        let mut lists: Vec<PimPtr> = Vec::with_capacity(n);
-        // Lines 2–6: per vertex, pick the owner, allocate, stream from file.
-        while let Some((v, list)) = reader.next_list()? {
-            let owner = self.cfg.round_robin_unit(v as usize);
-            let ptr = self.device.pim_malloc(owner, list.len())?;
-            self.device.write(ptr, &list)?;
+        while let Some((_, list)) = reader.next_list()? {
             col_idx.extend_from_slice(&list);
-            lists.push(ptr);
         }
         // PIMCSR02 files carry a vertex-label section after the lists.
         let labels = reader.read_labels()?;
@@ -108,44 +107,40 @@ impl PimMiner {
             labels,
         };
         graph.check_invariants().map_err(|e| anyhow::anyhow!(e))?;
-        self.finish_load(graph, lists)
+        self.load_graph(graph)
     }
 
-    /// `PIMLoadGraph` from an in-memory CSR (used by generators/benches —
-    /// same placement and duplication path, no file staging).
+    /// `PIMLoadGraph` from an in-memory CSR: build the placement the
+    /// options imply (partitioner strategy + replica scheme), allocate
+    /// every list in its owner unit, then copy replicas via `MemoryCopy`.
     pub fn load_graph(&mut self, graph: CsrGraph) -> Result<()> {
+        let placement = build_placement(&graph, &self.opts, &self.cfg);
         let n = graph.num_vertices();
         let mut lists = Vec::with_capacity(n);
         for v in 0..n {
-            let owner = self.cfg.round_robin_unit(v);
+            let owner = placement.owner[v] as usize;
             let ptr = self.device.pim_malloc(owner, graph.degree(v as VertexId))?;
             self.device.write(ptr, graph.neighbors(v as VertexId))?;
             lists.push(ptr);
         }
-        self.finish_load(graph, lists)
-    }
-
-    fn finish_load(&mut self, graph: CsrGraph, lists: Vec<PimPtr>) -> Result<()> {
-        let mut placement = Placement::round_robin(&graph, &self.cfg);
-        let mut replicas: Vec<Vec<PimPtr>> = vec![Vec::new(); self.cfg.num_units()];
+        let mut replicas: Vec<HashMap<VertexId, PimPtr>> =
+            vec![HashMap::new(); self.cfg.num_units()];
         if self.opts.duplication && self.opts.remap {
-            placement =
-                placement.with_duplication(&graph, &self.cfg, self.opts.capacity_per_unit);
-            // Algorithm 1 lines 7–12: copy each hot list into unit u via
-            // MemoryCopy. (Unfiltered copies — replicas must be complete.)
+            // Algorithm 1 lines 7–12, generalized: copy each planned list
+            // into unit u via MemoryCopy. (Unfiltered copies — replicas
+            // must be complete.) The placement already budgeted replica
+            // bytes against the unit's capacity, so a failed malloc here
+            // means the plan was computed against a different capacity —
+            // surface it.
             for u in 0..self.cfg.num_units() {
-                for v in 0..placement.v_b[u] {
+                for v in placement.replicated_vertices(&graph, u) {
                     let src = lists[v as usize];
                     if src.unit == u {
-                        replicas[u].push(src); // already local: reuse primary
+                        replicas[u].insert(v, src); // already local: reuse primary
                         continue;
                     }
-                    // Replicas live outside the capacity model tracked by
-                    // Algorithm 2 (v_b already accounted for them), so a
-                    // failed malloc here means v_b was computed against a
-                    // different capacity — surface it.
                     let dst = self.device.memory_copy(u, src, None)?;
-                    replicas[u].push(dst);
+                    replicas[u].insert(v, dst);
                 }
             }
         }
@@ -159,14 +154,15 @@ impl PimMiner {
     }
 
     /// The source pointer unit `requester` reads `N(v)` from: the
-    /// requester-local replica when the duplication pass placed one
-    /// (`v < v_b[requester]`), else the primary copy wherever it lives.
+    /// requester-local replica when the replica scheme placed one (the
+    /// hot prefix or a planned set), else the primary copy wherever it
+    /// lives.
     pub fn replica_source(&self, requester: usize, v: VertexId) -> Result<PimPtr> {
         let loaded = self.loaded.as_ref().ok_or_else(|| anyhow::anyhow!("no graph loaded"))?;
         if (v as usize) >= loaded.lists.len() {
             bail!("vertex {v} out of range");
         }
-        Ok(match loaded.replicas.get(requester).and_then(|r| r.get(v as usize)) {
+        Ok(match loaded.replicas.get(requester).and_then(|r| r.get(&v)) {
             Some(&replica) => replica,
             None => loaded.lists[v as usize],
         })

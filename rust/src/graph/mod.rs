@@ -7,4 +7,4 @@ pub mod io;
 pub mod sort;
 
 pub use csr::{CsrGraph, VertexId};
-pub use sort::{relabel, sort_by_degree_desc, Relabeling};
+pub use sort::{bfs_order, relabel, sort_by_degree_desc, Relabeling};

@@ -32,6 +32,35 @@ pub fn sort_by_degree_desc(g: &CsrGraph) -> Relabeling {
     relabel(g, &order)
 }
 
+/// BFS traversal order, seeding each component at its lowest-id (after
+/// the degree sort: highest-degree) unvisited vertex. This is the stream
+/// order the Fennel/LDG partitioner ([`crate::part::stream`]) consumes —
+/// a vertex arrives alongside its community, so its placed-neighbor
+/// affinity is informative when it is scored.
+pub fn bfs_order(g: &CsrGraph) -> Vec<VertexId> {
+    let n = g.num_vertices();
+    let mut order = Vec::with_capacity(n);
+    let mut seen = vec![false; n];
+    let mut queue = std::collections::VecDeque::new();
+    for seed in 0..n {
+        if seen[seed] {
+            continue;
+        }
+        seen[seed] = true;
+        queue.push_back(seed as VertexId);
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            for &w in g.neighbors(v) {
+                if !seen[w as usize] {
+                    seen[w as usize] = true;
+                    queue.push_back(w);
+                }
+            }
+        }
+    }
+    order
+}
+
 /// Relabel with an explicit new-id order: `order[new] = old`.
 pub fn relabel(g: &CsrGraph, order: &[VertexId]) -> Relabeling {
     let n = g.num_vertices();
@@ -108,6 +137,20 @@ mod tests {
         for old in 0..4u32 {
             assert_eq!(r.graph.label(r.old_to_new[old as usize]), g.label(old));
         }
+    }
+
+    #[test]
+    fn bfs_order_is_a_permutation_and_component_contiguous() {
+        // two components: a path 0-1-2 and an edge 3-4, plus isolate 5
+        let g = CsrGraph::from_edges(6, &[(0, 1), (1, 2), (3, 4)]);
+        let order = bfs_order(&g);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..6).collect::<Vec<_>>());
+        // component of 0 comes first, contiguously
+        assert_eq!(&order[..3], &[0, 1, 2]);
+        assert_eq!(&order[3..5], &[3, 4]);
+        assert_eq!(order[5], 5);
     }
 
     #[test]

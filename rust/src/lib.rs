@@ -16,7 +16,11 @@
 //! [`mine`] adds the pattern-*mining* workloads — one-pass motif counting
 //! and frequent-subgraph mining with minimum-image support — whose
 //! per-unit support state the simulator charges through a dedicated
-//! aggregation cost model (DESIGN.md §8):
+//! aggregation cost model (DESIGN.md §8); and [`part`] supplies
+//! locality-aware graph partitioning and replication (streaming
+//! Fennel/LDG + label-propagation refinement + a savings-driven replica
+//! planner) producing pluggable owner maps for the simulator
+//! (DESIGN.md §9):
 //!
 //! ```
 //! use pimminer::exec::cpu::{count_plan, sampled_roots, CpuFlavor};
@@ -46,6 +50,7 @@ pub mod datasets;
 pub mod exec;
 pub mod graph;
 pub mod mine;
+pub mod part;
 pub mod pattern;
 pub mod pim;
 pub mod report;

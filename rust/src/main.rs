@@ -7,6 +7,7 @@
 //!             [--no-filter --no-remap --no-dup --no-steal]
 //!   motifs    --dataset MI -k 4 [--system pim|cpu] [--check]   one-pass census
 //!   fsm       --dataset MI --support 100 --max-size 4 [--labels 4]
+//!   partition --dataset MI [--partitioner refined] [--check] [--json out.json]
 //!   plan      --pattern <edgelist|name>             print the compiled plan
 //!   verify    [--pattern <spec>] [--seeds 3]        compiled plans vs brute force
 //!   ladder    --dataset MI (--app 4-CC | --pattern <spec>)   Fig. 9 ladder
@@ -27,12 +28,13 @@ use pimminer::exec::brute_force_count;
 use pimminer::exec::cpu::{self, CpuFlavor};
 use pimminer::graph::{gen, io, sort_by_degree_desc, CsrGraph};
 use pimminer::mine::{self, FsmConfig};
+use pimminer::part::{self, PartitionStrategy};
 use pimminer::pattern::compile::{compile_with, parse_pattern, Compiled, CostModel};
 use pimminer::pattern::plan::application;
 use pimminer::pim::{
     simulate_fsm, simulate_motifs, simulate_plan, PimConfig, SimOptions, SimResult,
 };
-use pimminer::report::{self, Table};
+use pimminer::report::{self, json, Table};
 use pimminer::util::cli::Args;
 
 fn main() {
@@ -43,6 +45,7 @@ fn main() {
         "count" => count(&args),
         "motifs" => motifs(&args),
         "fsm" => fsm(&args),
+        "partition" => partition_cmd(&args),
         "plan" => plan_cmd(&args),
         "verify" => verify(&args),
         "ladder" => ladder(&args),
@@ -67,6 +70,9 @@ fn help() {
                   per-pattern count against an independent compiled-plan run\n\
          fsm      (--dataset | --graph) [--support <s>] [--max-size <k>]\n\
                   [--labels <L> [--label-seed <s>]] [--system pim|cpu]\n\
+         partition (--dataset | --graph) [--partitioner <name>] [--capacity <bytes>]\n\
+                  [--check] [--json <file>]   owner-map cut/balance/replica report;\n\
+                  --check validates the partitioning invariants (CI smoke)\n\
          plan     --pattern <edgelist|name> [--graph|--dataset ...] [--non-induced]\n\
          verify   [--pattern <spec>] [--seeds <k>] [--n <verts>] [--edges <m>]\n\
          ladder   (--dataset | --graph) (--app <name> | --pattern <spec>) [--sample <ratio>]\n\
@@ -74,7 +80,10 @@ fn help() {
          \n\
          pattern specs: edge lists like \"0-1,1-2,2-0,2-3\" (a tailed triangle)\n\
          or names: wedge triangle 4-path 4-star 4-cycle diamond tailed-triangle\n\
-         4-clique 5-clique 5-cycle house"
+         4-clique 5-clique 5-cycle house\n\
+         \n\
+         --partitioner round-robin|streaming|refined selects the owner map\n\
+         (count/motifs/fsm/ladder/partition; DESIGN.md §9)"
     );
 }
 
@@ -99,7 +108,18 @@ fn options(args: &Args) -> SimOptions {
         duplication: !args.get_bool("no-dup"),
         stealing: !args.get_bool("no-steal"),
         capacity_per_unit: args.get("capacity").and_then(|v| v.parse().ok()),
+        partitioner: partitioner_arg(args).unwrap_or_default(),
     }
+}
+
+/// Parse `--partitioner`; `None` when the flag is absent.
+fn partitioner_arg(args: &Args) -> Option<PartitionStrategy> {
+    args.get("partitioner").map(|s| {
+        PartitionStrategy::parse(s).unwrap_or_else(|| {
+            eprintln!("unknown partitioner '{s}' (round-robin | streaming | refined)");
+            std::process::exit(2);
+        })
+    })
 }
 
 fn compile_or_exit(spec: &str, model: &CostModel, induced: bool) -> Compiled {
@@ -377,6 +397,124 @@ fn fsm(args: &Args) {
     t.print();
 }
 
+/// `partition`: run the partitioning subsystem (DESIGN.md §9) and report,
+/// per strategy, the static channel-aware cut breakdown, byte balance,
+/// and the replica plan at the given per-unit capacity. `--check`
+/// validates the subsystem invariants (ownership total/in-range, exact
+/// byte accounting, balance slack, refined-cut ≤ streaming-cut, replica
+/// capacity) and exits non-zero on any violation — the CI smoke gate.
+/// `--json <file>` additionally writes the remote-byte shares machine-
+/// readably (the same shape the `table_partition` bench emits).
+fn partition_cmd(args: &Args) {
+    let (g, _) = load_graph(args);
+    let cfg = PimConfig::default();
+    let strategies: Vec<PartitionStrategy> = match partitioner_arg(args) {
+        Some(s) => vec![s],
+        None => PartitionStrategy::ALL.to_vec(),
+    };
+    // Replica budget: own share + 10% of the graph unless overridden —
+    // the partial-duplication regime where planning matters.
+    let cap: u64 = args
+        .get("capacity")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| g.total_bytes() / cfg.num_units() as u64 + g.total_bytes() / 10);
+    let check = args.get_bool("check");
+    let mut t = Table::new(
+        &format!(
+            "partitioning — |V|={} |E|={} ({} units, replica budget {}/unit)",
+            g.num_vertices(),
+            g.num_edges(),
+            cfg.num_units(),
+            report::bytes(cap)
+        ),
+        &["Strategy", "Near", "Intra", "Inter", "WeightedCut", "Balance", "ReplicaB", "SavedB"],
+    );
+    let mut failures = 0u64;
+    let mut costs: Vec<(PartitionStrategy, u64)> = Vec::new();
+    let mut json_rows: Vec<String> = Vec::new();
+    for &s in &strategies {
+        let p = part::partition(&g, &cfg, s);
+        if check {
+            if let Err(e) = p.check(&g, &cfg) {
+                eprintln!("partition check FAILED [{}]: {e}", s.name());
+                failures += 1;
+            }
+        }
+        let stats = part::cut_stats(&g, &cfg, &p.owner);
+        let cost = part::weighted_cost(&cfg, &stats);
+        costs.push((s, cost));
+        let plan = part::plan_replicas(&g, &cfg, &p.owner, cap);
+        let replica_bytes: u64 = plan.replica_bytes.iter().sum();
+        let saved: u64 = plan.est_saved_bytes.iter().sum();
+        if check {
+            // owned_bytes is exact per p.check() above; recompute replica
+            // bytes from the sets so the gate catches planner accounting
+            // drift instead of trusting its own accumulator
+            let owned = &p.owned_bytes;
+            for u in 0..cfg.num_units() {
+                let set_bytes: u64 = plan.sets[u].iter().map(|&v| g.neighbor_bytes(v)).sum();
+                if set_bytes != plan.replica_bytes[u] || owned[u] + set_bytes > cap.max(owned[u]) {
+                    eprintln!(
+                        "partition check FAILED [{}]: unit {u} replica plan over budget",
+                        s.name()
+                    );
+                    failures += 1;
+                }
+            }
+        }
+        t.row(vec![
+            s.name().to_string(),
+            report::pct(stats.near_frac()),
+            report::pct(stats.intra_frac()),
+            report::pct(stats.inter_frac()),
+            cost.to_string(),
+            format!("{:.3}", p.balance()),
+            report::bytes(replica_bytes),
+            report::bytes(saved),
+        ]);
+        json_rows.push(
+            json::Obj::new()
+                .str("strategy", s.name())
+                .f64("near_share", stats.near_frac())
+                .f64("intra_share", stats.intra_frac())
+                .f64("inter_share", stats.inter_frac())
+                .u64("inter_bytes", stats.inter_bytes)
+                .u64("weighted_cut", cost)
+                .f64("balance", p.balance())
+                .u64("replica_bytes", replica_bytes)
+                .render(),
+        );
+    }
+    t.print();
+    if check {
+        let get = |s: PartitionStrategy| costs.iter().find(|&&(x, _)| x == s).map(|&(_, c)| c);
+        if let (Some(st), Some(rf)) = (
+            get(PartitionStrategy::Streaming),
+            get(PartitionStrategy::Refined),
+        ) {
+            if rf > st {
+                eprintln!("partition check FAILED: refinement raised the cut ({rf} > {st})");
+                failures += 1;
+            }
+        }
+        if failures > 0 {
+            eprintln!("partition check FAILED: {failures} violations");
+            std::process::exit(1);
+        }
+        println!("partition check OK: all invariants hold for {} strategies", strategies.len());
+    }
+    if let Some(path) = args.get("json") {
+        let doc = json::Obj::new()
+            .u64("vertices", g.num_vertices() as u64)
+            .u64("edges", g.num_edges() as u64)
+            .u64("replica_budget_per_unit", cap)
+            .raw("strategies", &json::array(&json_rows))
+            .render();
+        std::fs::write(path, doc).expect("write partition json");
+        println!("wrote {path}");
+    }
+}
+
 /// `plan --pattern <spec>`: compile and pretty-print without running.
 fn plan_cmd(args: &Args) {
     let Some(spec) = args.get("pattern") else {
@@ -515,7 +653,9 @@ fn ladder(args: &Args) {
         &["Config", "Total", "AvgCore", "Near%", "Steals", "Speedup"],
     );
     let mut base = None;
-    for (name, opts) in SimOptions::ladder() {
+    let partitioner = partitioner_arg(args).unwrap_or_default();
+    for (name, mut opts) in SimOptions::ladder() {
+        opts.partitioner = partitioner;
         let r = match &pattern_plan {
             Some(plan) => simulate_plan(&g, plan, &roots, &opts, &cfg),
             None => pimminer::pim::simulate_app(&g, app.as_ref().unwrap(), &roots, &opts, &cfg),

@@ -1,0 +1,262 @@
+//! Locality-aware graph partitioning & replication (DESIGN.md §9).
+//!
+//! The simulator's `Placement` used to be hard-wired to the paper's
+//! round-robin unit sequence; every neighbor expansion was then a coin
+//! flip between intra- and inter-channel traffic. This subsystem produces
+//! pluggable **owner maps** instead:
+//!
+//! * [`stream::stream_partition`] — a Fennel/LDG-style streaming
+//!   partitioner with per-unit byte-capacity balance,
+//! * [`refine::refine`] — a label-propagation pass that iteratively moves
+//!   vertices to the unit (and preferentially the channel) holding most of
+//!   their neighbor bytes,
+//! * [`objective`] — the channel-aware cut objective that distinguishes
+//!   near-core / intra-channel / inter-channel edges using the
+//!   [`PimConfig`] topology,
+//! * [`replicate`] — a replication planner that generalizes the hot-prefix
+//!   duplication of Algorithm 2 into per-unit replica sets chosen by
+//!   expected remote-byte savings per replica byte.
+//!
+//! [`Placement`](crate::pim::placement::Placement) is constructed from any
+//! [`Partitioning`]; round-robin is just one [`PartitionStrategy`].
+
+pub mod objective;
+pub mod refine;
+pub mod replicate;
+pub mod stream;
+
+pub use objective::{cut_stats, weighted_cost, CutStats};
+pub use refine::refine;
+pub use replicate::{plan_replicas, ReplicaPlan, ReplicaSets};
+pub use stream::stream_partition;
+
+use crate::graph::{CsrGraph, VertexId};
+use crate::pim::config::PimConfig;
+
+/// Per-unit byte-capacity balance slack: a partitioner may load a unit up
+/// to `avg_bytes * BALANCE_SLACK` (plus at most one neighbor list, since
+/// lists are never split across units).
+pub const BALANCE_SLACK: f64 = 1.10;
+
+/// Which partitioner produces the owner map.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// §4.3.2 channel-major round-robin (Algorithm 1) — the paper's
+    /// placement, kept as the baseline strategy.
+    #[default]
+    RoundRobin,
+    /// Fennel/LDG-style streaming partitioner (BFS stream order,
+    /// channel-aware affinity, multiplicative balance penalty).
+    Streaming,
+    /// [`Streaming`](Self::Streaming) followed by channel-aware
+    /// label-propagation refinement.
+    Refined,
+}
+
+impl PartitionStrategy {
+    /// Every strategy, baseline first (the order benches sweep).
+    pub const ALL: [PartitionStrategy; 3] = [
+        PartitionStrategy::RoundRobin,
+        PartitionStrategy::Streaming,
+        PartitionStrategy::Refined,
+    ];
+
+    /// Parse a CLI spelling (`--partitioner round-robin|streaming|refined`).
+    pub fn parse(s: &str) -> Option<PartitionStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "roundrobin" | "rr" => Some(PartitionStrategy::RoundRobin),
+            "streaming" | "stream" | "fennel" | "ldg" => Some(PartitionStrategy::Streaming),
+            "refined" | "refine" | "lp" => Some(PartitionStrategy::Refined),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionStrategy::RoundRobin => "round-robin",
+            PartitionStrategy::Streaming => "streaming",
+            PartitionStrategy::Refined => "refined",
+        }
+    }
+}
+
+/// A complete owner map — what every partitioner hands the simulator.
+#[derive(Clone, Debug)]
+pub struct Partitioning {
+    pub strategy: PartitionStrategy,
+    /// `owner[v]` = PIM unit whose bank group stores `N(v)`.
+    pub owner: Vec<u32>,
+    /// Bytes of neighbor lists owned by each unit.
+    pub owned_bytes: Vec<u64>,
+}
+
+impl Partitioning {
+    /// Wrap an explicit owner map, computing the per-unit byte loads.
+    pub fn from_owner(
+        strategy: PartitionStrategy,
+        g: &CsrGraph,
+        cfg: &PimConfig,
+        owner: Vec<u32>,
+    ) -> Partitioning {
+        assert_eq!(owner.len(), g.num_vertices());
+        let mut owned_bytes = vec![0u64; cfg.num_units()];
+        for (v, &u) in owner.iter().enumerate() {
+            owned_bytes[u as usize] += g.neighbor_bytes(v as VertexId);
+        }
+        Partitioning {
+            strategy,
+            owner,
+            owned_bytes,
+        }
+    }
+
+    /// The paper's round-robin placement over the §4.3.2 channel-major
+    /// unit sequence.
+    pub fn round_robin(g: &CsrGraph, cfg: &PimConfig) -> Partitioning {
+        let owner: Vec<u32> = (0..g.num_vertices())
+            .map(|v| cfg.round_robin_unit(v) as u32)
+            .collect();
+        Partitioning::from_owner(PartitionStrategy::RoundRobin, g, cfg, owner)
+    }
+
+    /// Max-over-avg byte balance (1.0 = perfectly balanced).
+    pub fn balance(&self) -> f64 {
+        let max = self.owned_bytes.iter().copied().max().unwrap_or(0) as f64;
+        let avg = self.owned_bytes.iter().sum::<u64>() as f64
+            / self.owned_bytes.len().max(1) as f64;
+        if avg == 0.0 {
+            1.0
+        } else {
+            max / avg
+        }
+    }
+
+    /// Invariant check used by `pimminer partition --check`: ownership is
+    /// total and in-range, byte accounting is exact, and (non-round-robin
+    /// strategies) per-unit loads respect the balance slack.
+    pub fn check(&self, g: &CsrGraph, cfg: &PimConfig) -> Result<(), String> {
+        let units = cfg.num_units();
+        if self.owner.len() != g.num_vertices() {
+            return Err(format!(
+                "owner map covers {} vertices, graph has {}",
+                self.owner.len(),
+                g.num_vertices()
+            ));
+        }
+        if let Some(&bad) = self.owner.iter().find(|&&o| o as usize >= units) {
+            return Err(format!("owner {bad} out of range (units = {units})"));
+        }
+        let mut bytes = vec![0u64; units];
+        for (v, &u) in self.owner.iter().enumerate() {
+            bytes[u as usize] += g.neighbor_bytes(v as VertexId);
+        }
+        if bytes != self.owned_bytes {
+            return Err("owned_bytes diverges from the owner map".to_string());
+        }
+        if self.strategy != PartitionStrategy::RoundRobin {
+            let cap = balance_cap(g, cfg);
+            let max_list = (0..g.num_vertices() as VertexId)
+                .map(|v| g.neighbor_bytes(v))
+                .max()
+                .unwrap_or(0);
+            for (u, &b) in bytes.iter().enumerate() {
+                if b > cap + max_list {
+                    return Err(format!(
+                        "unit {u} holds {b} bytes, above cap {cap} + list slack {max_list}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The per-unit byte budget the balanced strategies aim for:
+/// `avg * BALANCE_SLACK`.
+pub fn balance_cap(g: &CsrGraph, cfg: &PimConfig) -> u64 {
+    let avg = g.total_bytes() as f64 / cfg.num_units() as f64;
+    (avg * BALANCE_SLACK).ceil() as u64
+}
+
+/// Build the owner map with `strategy`.
+pub fn partition(g: &CsrGraph, cfg: &PimConfig, strategy: PartitionStrategy) -> Partitioning {
+    match strategy {
+        PartitionStrategy::RoundRobin => Partitioning::round_robin(g, cfg),
+        PartitionStrategy::Streaming => {
+            let owner = stream::stream_partition(g, cfg);
+            Partitioning::from_owner(strategy, g, cfg, owner)
+        }
+        PartitionStrategy::Refined => {
+            let mut owner = stream::stream_partition(g, cfg);
+            refine::refine(g, cfg, &mut owner);
+            Partitioning::from_owner(strategy, g, cfg, owner)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen, sort_by_degree_desc};
+
+    fn graph() -> CsrGraph {
+        sort_by_degree_desc(&gen::power_law(800, 4000, 120, 9)).graph
+    }
+
+    #[test]
+    fn parse_round_trips_names() {
+        for s in PartitionStrategy::ALL {
+            assert_eq!(PartitionStrategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(PartitionStrategy::parse("rr"), Some(PartitionStrategy::RoundRobin));
+        assert_eq!(PartitionStrategy::parse("fennel"), Some(PartitionStrategy::Streaming));
+        assert_eq!(PartitionStrategy::parse("lp"), Some(PartitionStrategy::Refined));
+        assert_eq!(PartitionStrategy::parse("metis"), None);
+    }
+
+    #[test]
+    fn every_strategy_passes_its_own_check() {
+        let g = graph();
+        let cfg = PimConfig::tiny();
+        for s in PartitionStrategy::ALL {
+            let p = partition(&g, &cfg, s);
+            assert_eq!(p.strategy, s);
+            p.check(&g, &cfg).unwrap_or_else(|e| panic!("{}: {e}", s.name()));
+        }
+    }
+
+    #[test]
+    fn round_robin_matches_legacy_sequence() {
+        let g = graph();
+        let cfg = PimConfig::tiny();
+        let p = Partitioning::round_robin(&g, &cfg);
+        for v in 0..g.num_vertices() {
+            assert_eq!(p.owner[v] as usize, cfg.round_robin_unit(v));
+        }
+        assert_eq!(p.owned_bytes.iter().sum::<u64>(), g.total_bytes());
+    }
+
+    #[test]
+    fn locality_strategies_cut_the_weighted_objective() {
+        let g = graph();
+        let cfg = PimConfig::tiny();
+        let rr = partition(&g, &cfg, PartitionStrategy::RoundRobin);
+        let st = partition(&g, &cfg, PartitionStrategy::Streaming);
+        let rf = partition(&g, &cfg, PartitionStrategy::Refined);
+        let cost = |p: &Partitioning| weighted_cost(&cfg, &cut_stats(&g, &cfg, &p.owner));
+        assert!(cost(&st) < cost(&rr), "streaming {} vs rr {}", cost(&st), cost(&rr));
+        assert!(cost(&rf) <= cost(&st), "refined {} vs streaming {}", cost(&rf), cost(&st));
+    }
+
+    #[test]
+    fn check_rejects_corrupt_maps() {
+        let g = graph();
+        let cfg = PimConfig::tiny();
+        let mut p = partition(&g, &cfg, PartitionStrategy::Streaming);
+        p.owner[0] = cfg.num_units() as u32; // out of range
+        assert!(p.check(&g, &cfg).is_err());
+        let mut p = partition(&g, &cfg, PartitionStrategy::Streaming);
+        p.owned_bytes[0] += 4; // accounting drift
+        assert!(p.check(&g, &cfg).is_err());
+    }
+}

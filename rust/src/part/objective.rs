@@ -1,0 +1,140 @@
+//! The channel-aware cut objective (DESIGN.md §9.1).
+//!
+//! The simulator's traffic for an owner map is dominated by neighbor
+//! expansions: a task rooted at `r` runs on `owner[r]` and fetches `N(v)`
+//! for vertices `v` it binds. The static proxy charges, for every
+//! directed edge `w → v`, a fetch of `N(v)`'s bytes by unit `owner[w]`,
+//! classified by the [`PimConfig`] topology:
+//!
+//! * **near-core** — `owner[w] == owner[v]` (no fabric traffic),
+//! * **intra-channel** — same channel, different bank group,
+//! * **inter-channel** — different channel (the TSV-crossing class the
+//!   partitioners minimize).
+//!
+//! [`weighted_cost`] prices the classes with the Table-4 startup
+//! latencies (near counts 0 — it never leaves the bank group's
+//! periphery), giving partitioners and property tests one scalar to
+//! compare. The proxy deliberately ignores replicas and the L1 model —
+//! those belong to the simulator ([`crate::pim::sim`]), which reports the
+//! dynamic distribution for any placement.
+
+use crate::graph::{CsrGraph, VertexId};
+use crate::pim::config::PimConfig;
+
+/// Byte totals of the expansion-traffic proxy, by access class.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CutStats {
+    pub near_bytes: u64,
+    pub intra_bytes: u64,
+    pub inter_bytes: u64,
+}
+
+impl CutStats {
+    pub fn total(&self) -> u64 {
+        self.near_bytes + self.intra_bytes + self.inter_bytes
+    }
+
+    /// Bytes that leave the owning bank group (intra + inter).
+    pub fn remote_bytes(&self) -> u64 {
+        self.intra_bytes + self.inter_bytes
+    }
+
+    pub fn near_frac(&self) -> f64 {
+        frac(self.near_bytes, self.total())
+    }
+    pub fn intra_frac(&self) -> f64 {
+        frac(self.intra_bytes, self.total())
+    }
+    pub fn inter_frac(&self) -> f64 {
+        frac(self.inter_bytes, self.total())
+    }
+}
+
+fn frac(a: u64, b: u64) -> f64 {
+    if b == 0 {
+        0.0
+    } else {
+        a as f64 / b as f64
+    }
+}
+
+/// Per-byte cost of an access by `requester` to a list owned by `owner`:
+/// 0 near-core, `intra_latency` intra-channel, `inter_latency`
+/// inter-channel. The same weights drive the streaming partitioner's
+/// affinity, the refinement gain, and the replication planner's savings,
+/// so all three optimize one objective.
+#[inline]
+pub fn class_weight(cfg: &PimConfig, owner: usize, requester: usize) -> u64 {
+    if owner == requester {
+        0
+    } else if cfg.channel_of(owner) == cfg.channel_of(requester) {
+        cfg.intra_latency
+    } else {
+        cfg.inter_latency
+    }
+}
+
+/// Classify every directed edge's expansion fetch under `owner`.
+pub fn cut_stats(g: &CsrGraph, cfg: &PimConfig, owner: &[u32]) -> CutStats {
+    let mut s = CutStats::default();
+    for w in 0..g.num_vertices() as VertexId {
+        let req = owner[w as usize] as usize;
+        for &v in g.neighbors(w) {
+            let own = owner[v as usize] as usize;
+            let bytes = g.neighbor_bytes(v);
+            if own == req {
+                s.near_bytes += bytes;
+            } else if cfg.channel_of(own) == cfg.channel_of(req) {
+                s.intra_bytes += bytes;
+            } else {
+                s.inter_bytes += bytes;
+            }
+        }
+    }
+    s
+}
+
+/// The scalar the partitioners minimize: latency-weighted remote bytes.
+#[inline]
+pub fn weighted_cost(cfg: &PimConfig, s: &CutStats) -> u64 {
+    s.intra_bytes * cfg.intra_latency + s.inter_bytes * cfg.inter_latency
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    #[test]
+    fn class_weight_matches_topology() {
+        let cfg = PimConfig::default(); // 4 units per channel
+        assert_eq!(class_weight(&cfg, 5, 5), 0);
+        assert_eq!(class_weight(&cfg, 4, 6), cfg.intra_latency);
+        assert_eq!(class_weight(&cfg, 4, 9), cfg.inter_latency);
+    }
+
+    #[test]
+    fn cut_stats_conserve_expansion_bytes() {
+        let g = gen::erdos_renyi(200, 800, 3);
+        let cfg = PimConfig::tiny();
+        let owner: Vec<u32> = (0..200).map(|v| (v % cfg.num_units()) as u32).collect();
+        let s = cut_stats(&g, &cfg, &owner);
+        // every directed edge contributes the serving list's bytes once
+        let expected: u64 = (0..200u32)
+            .flat_map(|w| g.neighbors(w).iter().map(|&v| g.neighbor_bytes(v)))
+            .sum();
+        assert_eq!(s.total(), expected);
+        assert!(s.inter_bytes > 0);
+    }
+
+    #[test]
+    fn single_unit_owner_is_all_near() {
+        let g = gen::erdos_renyi(100, 400, 7);
+        let cfg = PimConfig::tiny();
+        let owner = vec![3u32; 100];
+        let s = cut_stats(&g, &cfg, &owner);
+        assert_eq!(s.remote_bytes(), 0);
+        assert_eq!(weighted_cost(&cfg, &s), 0);
+        assert!((s.near_frac() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,234 @@
+//! The replication planner (DESIGN.md §9.4): generalizes Algorithm 2's
+//! hot-prefix duplication into per-unit replica sets.
+//!
+//! Algorithm 2 copies the same degree-sorted prefix into every unit. That
+//! is optimal only when every unit fetches the hubs equally — true under
+//! round-robin ownership, false once a locality partitioner skews which
+//! lists each unit expands. The planner instead estimates, per (unit,
+//! vertex) pair, the **remote bytes a replica would save**:
+//!
+//! ```text
+//! saved(u, v) = |{w ∈ N(v) : owner[w] = u}| · nb(v)      (fetches · bytes)
+//! value(u, v) = |{w ∈ N(v) : owner[w] = u}| · class_weight(owner[v], u)
+//! ```
+//!
+//! `value` is the latency-weighted saving **per replica byte** (the
+//! `nb(v)` factors cancel), so a greedy fill of each unit's spare
+//! capacity in descending `value` order is the fractional-knapsack
+//! solution to "which lists should this unit mirror".
+
+use super::objective::class_weight;
+use crate::graph::{CsrGraph, VertexId};
+use crate::pim::config::PimConfig;
+
+/// O(1)-lookup per-unit replica membership, shared with
+/// [`Placement`](crate::pim::placement::Placement).
+#[derive(Clone, Debug)]
+pub struct ReplicaSets {
+    words: usize,
+    bits: Vec<u64>,
+}
+
+impl ReplicaSets {
+    pub fn new(units: usize, n: usize) -> ReplicaSets {
+        let words = n.div_ceil(64);
+        ReplicaSets {
+            words,
+            bits: vec![0; units * words],
+        }
+    }
+
+    #[inline]
+    pub fn insert(&mut self, unit: usize, v: VertexId) {
+        self.bits[unit * self.words + v as usize / 64] |= 1 << (v % 64);
+    }
+
+    #[inline]
+    pub fn contains(&self, unit: usize, v: VertexId) -> bool {
+        self.bits[unit * self.words + v as usize / 64] & (1 << (v % 64)) != 0
+    }
+}
+
+/// The planner's output: per-unit replica vertex sets (sorted, excluding
+/// vertices the unit already owns) with byte and savings accounting.
+#[derive(Clone, Debug)]
+pub struct ReplicaPlan {
+    /// `sets[u]` = vertices replicated into unit `u`'s bank group.
+    pub sets: Vec<Vec<VertexId>>,
+    /// Replica bytes placed per unit.
+    pub replica_bytes: Vec<u64>,
+    /// Expected remote bytes saved per unit (`saved(u, v)` summed).
+    pub est_saved_bytes: Vec<u64>,
+}
+
+impl ReplicaPlan {
+    /// Bitset view for the simulator's per-fetch lookup.
+    pub fn to_sets(&self, units: usize, n: usize) -> ReplicaSets {
+        let mut rs = ReplicaSets::new(units, n);
+        for (u, set) in self.sets.iter().enumerate() {
+            for &v in set {
+                rs.insert(u, v);
+            }
+        }
+        rs
+    }
+}
+
+/// Plan replica sets for every unit under the shared byte budget
+/// `capacity_per_unit` (spare capacity = budget minus the unit's owned
+/// bytes, exactly as Algorithm 2 charges it).
+pub fn plan_replicas(
+    g: &CsrGraph,
+    cfg: &PimConfig,
+    owner: &[u32],
+    capacity_per_unit: u64,
+) -> ReplicaPlan {
+    let n = g.num_vertices();
+    let units = cfg.num_units();
+    let mut owned_bytes = vec![0u64; units];
+    for (v, &u) in owner.iter().enumerate() {
+        owned_bytes[u as usize] += g.neighbor_bytes(v as VertexId);
+    }
+
+    // Candidate generation: count, per serving vertex v, how many fetches
+    // each unit would issue (one per incident edge whose far endpoint it
+    // owns). Sparse counting keeps this O(E + candidates).
+    let mut cand: Vec<Vec<(u64, VertexId)>> = vec![Vec::new(); units]; // (value, v)
+    let mut cnt = vec![0u64; units];
+    let mut touched: Vec<usize> = Vec::new();
+    for v in 0..n as VertexId {
+        if g.degree(v) == 0 {
+            continue;
+        }
+        for &w in g.neighbors(v) {
+            let u = owner[w as usize] as usize;
+            if cnt[u] == 0 {
+                touched.push(u);
+            }
+            cnt[u] += 1;
+        }
+        let own = owner[v as usize] as usize;
+        for u in touched.drain(..) {
+            let c = cnt[u];
+            cnt[u] = 0;
+            if u == own {
+                continue; // already local — a replica saves nothing
+            }
+            let value = c * class_weight(cfg, own, u);
+            if value > 0 {
+                cand[u].push((value, v));
+            }
+        }
+    }
+
+    let mut sets: Vec<Vec<VertexId>> = vec![Vec::new(); units];
+    let mut replica_bytes = vec![0u64; units];
+    let mut est_saved_bytes = vec![0u64; units];
+    for u in 0..units {
+        // Descending value; ties toward lower id (hotter after the degree
+        // sort) for determinism.
+        cand[u].sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut free = capacity_per_unit.saturating_sub(owned_bytes[u]);
+        for &(value, v) in &cand[u] {
+            let sz = g.neighbor_bytes(v);
+            if sz == 0 || sz > free {
+                continue; // best-effort knapsack: later smaller lists may fit
+            }
+            free -= sz;
+            sets[u].push(v);
+            replica_bytes[u] += sz;
+            // value = fetches · weight, so fetches = value / weight (exact)
+            // and the saved remote bytes are fetches · nb(v).
+            let w = class_weight(cfg, owner[v as usize] as usize, u);
+            est_saved_bytes[u] += value / w * sz;
+        }
+        sets[u].sort_unstable();
+    }
+    ReplicaPlan {
+        sets,
+        replica_bytes,
+        est_saved_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen, sort_by_degree_desc, CsrGraph};
+    use crate::part::{partition, PartitionStrategy};
+
+    fn setup() -> (CsrGraph, PimConfig, Vec<u32>) {
+        let g = sort_by_degree_desc(&gen::power_law(800, 4_000, 120, 41)).graph;
+        let cfg = PimConfig::tiny();
+        let owner = partition(&g, &cfg, PartitionStrategy::Refined).owner;
+        (g, cfg, owner)
+    }
+
+    #[test]
+    fn respects_capacity_and_skips_owned() {
+        let (g, cfg, owner) = setup();
+        let total = g.total_bytes();
+        let cap = total / cfg.num_units() as u64 + total / 10;
+        let plan = plan_replicas(&g, &cfg, &owner, cap);
+        let mut owned_bytes = vec![0u64; cfg.num_units()];
+        for (v, &u) in owner.iter().enumerate() {
+            owned_bytes[u as usize] += g.neighbor_bytes(v as u32);
+        }
+        for u in 0..cfg.num_units() {
+            let bytes: u64 = plan.sets[u].iter().map(|&v| g.neighbor_bytes(v)).sum();
+            assert_eq!(bytes, plan.replica_bytes[u]);
+            assert!(owned_bytes[u] + bytes <= cap, "unit {u} over budget");
+            for &v in &plan.sets[u] {
+                assert_ne!(owner[v as usize] as usize, u, "replicated an owned list");
+            }
+            // sets are sorted and duplicate-free
+            assert!(plan.sets[u].windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn bitset_matches_sets() {
+        let (g, cfg, owner) = setup();
+        let cap = g.total_bytes() / cfg.num_units() as u64 * 2;
+        let plan = plan_replicas(&g, &cfg, &owner, cap);
+        let rs = plan.to_sets(cfg.num_units(), g.num_vertices());
+        for u in 0..cfg.num_units() {
+            let set: std::collections::HashSet<u32> = plan.sets[u].iter().copied().collect();
+            for v in 0..g.num_vertices() as u32 {
+                assert_eq!(rs.contains(u, v), set.contains(&v), "unit {u} vertex {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_capacity_plans_nothing() {
+        let (g, cfg, owner) = setup();
+        let plan = plan_replicas(&g, &cfg, &owner, 0);
+        assert!(plan.sets.iter().all(|s| s.is_empty()));
+        assert!(plan.replica_bytes.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn prefers_hot_remote_lists() {
+        // Star: every leaf's unit wants the hub's list. With capacity for
+        // one list, each non-owning unit must pick the hub (vertex 0 after
+        // degree sort).
+        let g = sort_by_degree_desc(&gen::star(64)).graph;
+        let cfg = PimConfig::tiny();
+        let owner: Vec<u32> = (0..64).map(|v| (v % cfg.num_units()) as u32).collect();
+        let hub_bytes = g.neighbor_bytes(0);
+        let mut owned = vec![0u64; cfg.num_units()];
+        for (v, &u) in owner.iter().enumerate() {
+            owned[u as usize] += g.neighbor_bytes(v as u32);
+        }
+        let cap = owned.iter().max().unwrap() + hub_bytes;
+        let plan = plan_replicas(&g, &cfg, &owner, cap);
+        for u in 0..cfg.num_units() {
+            if owner[0] as usize == u {
+                assert!(!plan.sets[u].contains(&0));
+            } else {
+                assert!(plan.sets[u].contains(&0), "unit {u} skipped the hub");
+            }
+        }
+    }
+}

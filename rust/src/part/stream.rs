@@ -1,0 +1,182 @@
+//! Fennel/LDG-style streaming partitioner (DESIGN.md §9.2).
+//!
+//! Vertices arrive in BFS stream order ([`bfs_order`]) so that each
+//! vertex is scored with most of its community already placed. A vertex's
+//! score for unit `u` is the channel-aware affinity — the latency-weighted
+//! remote bytes avoided by co-locating it with its placed neighbors —
+//! damped by the LDG multiplicative balance penalty `1 - load(u)/cap`:
+//!
+//! ```text
+//! score(u) = [ inter · aff_unit(u) + (inter-intra) · (aff_chan(ch(u)) - aff_unit(u)) ]
+//!            · (1 - bytes(u)/cap)
+//! ```
+//!
+//! where `aff_unit(u)` sums `nb(v) + nb(w)` over placed neighbors `w`
+//! owned by `u` (both directions of future expansion traffic), and
+//! `aff_chan` the same per channel. Units at or above the byte budget
+//! `cap = avg · BALANCE_SLACK` are ineligible, which bounds every unit's
+//! final load by `cap` plus at most one neighbor list.
+
+use super::balance_cap;
+use crate::graph::sort::bfs_order;
+use crate::graph::CsrGraph;
+use crate::pim::config::PimConfig;
+
+/// Stream-partition `g` over the units of `cfg`; returns the owner map.
+pub fn stream_partition(g: &CsrGraph, cfg: &PimConfig) -> Vec<u32> {
+    let n = g.num_vertices();
+    let units = cfg.num_units();
+    let upc = cfg.units_per_channel;
+    let cap = balance_cap(g, cfg).max(1);
+    // Affinity weights mirror objective::class_weight (near = 0): placing
+    // v beside a same-unit neighbor saves the full inter latency per
+    // byte; beside a same-channel one, the inter−intra difference.
+    let w_unit = cfg.inter_latency as f64;
+    let w_chan = cfg.inter_latency.saturating_sub(cfg.intra_latency) as f64;
+
+    let mut owner = vec![u32::MAX; n];
+    let mut bytes = vec![0u64; units];
+    // Sparse affinity scratch, reset per vertex via the touched lists.
+    let mut unit_aff = vec![0u64; units];
+    let mut chan_aff = vec![0u64; cfg.channels];
+    let mut touched_units: Vec<usize> = Vec::new();
+    let mut touched_chans: Vec<usize> = Vec::new();
+
+    for v in bfs_order(g) {
+        let nb_v = g.neighbor_bytes(v);
+        for &w in g.neighbors(v) {
+            let o = owner[w as usize];
+            if o == u32::MAX {
+                continue;
+            }
+            let u = o as usize;
+            let pair = nb_v + g.neighbor_bytes(w);
+            if unit_aff[u] == 0 {
+                touched_units.push(u);
+            }
+            unit_aff[u] += pair;
+            let ch = cfg.channel_of(u);
+            if chan_aff[ch] == 0 {
+                touched_chans.push(ch);
+            }
+            chan_aff[ch] += pair;
+        }
+
+        // Candidates: every unit of every touched channel (a unit owning
+        // no neighbor can still win through its channel affinity when its
+        // siblings are full), plus the least-loaded unit as the
+        // zero-affinity / all-full fallback.
+        let mut best: Option<(f64, u64, usize)> = None; // (score, bytes, unit)
+        let mut consider = |u: usize, bytes: &[u64]| {
+            if bytes[u] >= cap {
+                return;
+            }
+            let ch = cfg.channel_of(u);
+            let aff = unit_aff[u] as f64 * w_unit + (chan_aff[ch] - unit_aff[u]) as f64 * w_chan;
+            let score = aff * (1.0 - bytes[u] as f64 / cap as f64);
+            let cand = (score, bytes[u], u);
+            best = Some(match best {
+                None => cand,
+                // prefer higher score, then lighter load, then lower id
+                Some(b) => {
+                    if cand.0 > b.0 || (cand.0 == b.0 && (cand.1, cand.2) < (b.1, b.2)) {
+                        cand
+                    } else {
+                        b
+                    }
+                }
+            });
+        };
+        for &ch in &touched_chans {
+            for slot in 0..upc {
+                consider(ch * upc + slot, &bytes);
+            }
+        }
+        let min_u = (0..units).min_by_key(|&u| (bytes[u], u)).unwrap();
+        consider(min_u, &bytes);
+
+        // Everything at capacity (possible when one list dwarfs the
+        // budget): overflow onto the least-loaded unit.
+        let pick = best.map(|(_, _, u)| u).unwrap_or(min_u);
+        owner[v as usize] = pick as u32;
+        bytes[pick] += nb_v;
+
+        for u in touched_units.drain(..) {
+            unit_aff[u] = 0;
+        }
+        for ch in touched_chans.drain(..) {
+            chan_aff[ch] = 0;
+        }
+    }
+    owner
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen, sort_by_degree_desc, VertexId};
+    use crate::part::{cut_stats, weighted_cost, PartitionStrategy, Partitioning};
+
+    #[test]
+    fn covers_every_vertex_within_balance() {
+        let g = sort_by_degree_desc(&gen::power_law(1_000, 5_000, 150, 3)).graph;
+        let cfg = PimConfig::tiny();
+        let owner = stream_partition(&g, &cfg);
+        assert!(owner.iter().all(|&o| (o as usize) < cfg.num_units()));
+        let p = Partitioning::from_owner(PartitionStrategy::Streaming, &g, &cfg, owner);
+        let cap = balance_cap(&g, &cfg);
+        let max_list = (0..g.num_vertices() as VertexId)
+            .map(|v| g.neighbor_bytes(v))
+            .max()
+            .unwrap();
+        for &b in &p.owned_bytes {
+            assert!(b <= cap + max_list, "unit load {b} above {cap}+{max_list}");
+        }
+    }
+
+    #[test]
+    fn beats_round_robin_on_the_weighted_cut() {
+        let g = sort_by_degree_desc(&gen::power_law(1_500, 7_500, 200, 17)).graph;
+        let cfg = PimConfig::tiny();
+        let rr = Partitioning::round_robin(&g, &cfg);
+        let st = stream_partition(&g, &cfg);
+        let cost_rr = weighted_cost(&cfg, &cut_stats(&g, &cfg, &rr.owner));
+        let cost_st = weighted_cost(&cfg, &cut_stats(&g, &cfg, &st));
+        assert!(
+            cost_st < cost_rr,
+            "streaming {cost_st} should beat round-robin {cost_rr}"
+        );
+    }
+
+    #[test]
+    fn clique_components_cluster_onto_few_units() {
+        // Two disjoint K10s: the balance cap forces each clique across a
+        // few units, but streaming must still keep them far more local
+        // than round-robin scatter (which spreads both over all units).
+        let mut edges = Vec::new();
+        for a in 0..10u32 {
+            for b in (a + 1)..10 {
+                edges.push((a, b));
+                edges.push((a + 10, b + 10));
+            }
+        }
+        let g = CsrGraph::from_edges(20, &edges);
+        let cfg = PimConfig::tiny();
+        let st = cut_stats(&g, &cfg, &stream_partition(&g, &cfg));
+        let rr = cut_stats(&g, &cfg, &Partitioning::round_robin(&g, &cfg).owner);
+        let local = |s: &crate::part::CutStats| s.near_frac() + s.intra_frac();
+        assert!(
+            local(&st) > local(&rr) + 0.1,
+            "cliques scattered: streaming local {} vs round-robin {}",
+            local(&st),
+            local(&rr)
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = sort_by_degree_desc(&gen::power_law(600, 3_000, 100, 5)).graph;
+        let cfg = PimConfig::tiny();
+        assert_eq!(stream_partition(&g, &cfg), stream_partition(&g, &cfg));
+    }
+}

@@ -12,8 +12,8 @@ pub mod stealing;
 
 pub use addrmap::{AccessClass, AddrMap};
 pub use config::PimConfig;
-pub use placement::Placement;
+pub use placement::{Placement, ReplicaReport};
 pub use sim::{
-    simulate_app, simulate_fsm, simulate_motifs, simulate_plan, AccessStats, MotifSimResult,
-    SimOptions, SimResult,
+    build_placement, simulate_app, simulate_fsm, simulate_motifs, simulate_plan, AccessStats,
+    MotifSimResult, SimOptions, SimResult,
 };

@@ -1,12 +1,16 @@
-//! Graph placement over PIM units: round-robin neighbor-list allocation
-//! (Algorithm 1) and the selective vertex-duplication boundary
-//! (Algorithm 2).
+//! Graph placement over PIM units: an owner map produced by any
+//! [`Partitioning`] (round-robin / Algorithm 1 is one strategy) plus
+//! replica state — either the selective hot-prefix duplication boundary
+//! (Algorithm 2) or the generalized per-unit replica sets of the
+//! replication planner ([`crate::part::replicate`]).
 
 use super::config::PimConfig;
 use crate::graph::{CsrGraph, VertexId};
+use crate::part::replicate::{ReplicaPlan, ReplicaSets};
+use crate::part::Partitioning;
 
-/// Where every vertex's neighbor list lives, and (optionally) how far each
-/// unit's duplicated hot prefix extends.
+/// Where every vertex's neighbor list lives, and which lists each unit
+/// holds a replica of.
 #[derive(Clone, Debug)]
 pub struct Placement {
     /// `owner[v]` = PIM unit whose bank group stores `N(v)`.
@@ -14,34 +18,45 @@ pub struct Placement {
     /// Bytes of neighbor lists owned by each unit.
     pub owned_bytes: Vec<u64>,
     /// Per-unit duplication boundary `v_b` (Algorithm 2): vertices
-    /// `v < v_b[u]` have a replica in unit `u`'s bank group. All zeros when
-    /// duplication is disabled.
+    /// `v < v_b[u]` are local to unit `u` (owned or replicated). All zeros
+    /// when duplication is disabled. When a generalized replica plan is
+    /// installed, this is the longest locally-covered prefix per unit —
+    /// the scalar the Table-7 reports keep using.
     pub v_b: Vec<VertexId>,
+    /// Generalized per-unit replica sets ([`crate::part::replicate`]); `None`
+    /// means replicas are exactly the `v_b` prefixes.
+    pub replica_sets: Option<ReplicaSets>,
+    /// The planner's sorted per-unit vertex lists, kept alongside the
+    /// bitset so [`replicated_vertices`](Self::replicated_vertices) needs
+    /// no O(|V|) reconstruction per unit.
+    replica_lists: Option<Vec<Vec<VertexId>>>,
 }
 
 impl Placement {
+    /// Build from any owner map (the partitioning subsystem's product),
+    /// without replicas.
+    pub fn from_partitioning(part: &Partitioning) -> Placement {
+        let units = part.owned_bytes.len();
+        Placement {
+            owner: part.owner.clone(),
+            owned_bytes: part.owned_bytes.clone(),
+            v_b: vec![0; units],
+            replica_sets: None,
+            replica_lists: None,
+        }
+    }
+
     /// Round-robin placement over the §4.3.2 channel-major unit sequence
     /// (Algorithm 1 lines 2–6), without duplication.
     pub fn round_robin(g: &CsrGraph, cfg: &PimConfig) -> Placement {
-        let units = cfg.num_units();
-        let n = g.num_vertices();
-        let mut owner = vec![0u32; n];
-        let mut owned_bytes = vec![0u64; units];
-        for v in 0..n {
-            let u = cfg.round_robin_unit(v) as u32;
-            owner[v] = u;
-            owned_bytes[u as usize] += g.neighbor_bytes(v as VertexId);
-        }
-        Placement {
-            owner,
-            owned_bytes,
-            v_b: vec![0; units],
-        }
+        Placement::from_partitioning(&Partitioning::round_robin(g, cfg))
     }
 
     /// Apply Algorithm 2: fill each unit's remaining capacity with the
     /// highest-degree vertices' neighbor lists (ids are degree-sorted, so
-    /// the hot set is the prefix). `capacity_per_unit` defaults to the
+    /// the hot set is the prefix). Vertices the unit already owns are
+    /// local for free and consume no replica budget — the boundary walks
+    /// past them without charging. `capacity_per_unit` defaults to the
     /// config's bank-group share; tests and scaled benches may override.
     pub fn with_duplication(
         mut self,
@@ -55,8 +70,13 @@ impl Placement {
             let free = cap.saturating_sub(self.owned_bytes[u]);
             let mut used = 0u64;
             let mut v_b: VertexId = 0;
-            // Algorithm 2: greedily take vertices 0, 1, 2, ... while they fit.
+            // Algorithm 2: greedily take vertices 0, 1, 2, ... while they
+            // fit; owned lists pass for free.
             while v_b < n {
+                if self.owner[v_b as usize] as usize == u {
+                    v_b += 1;
+                    continue;
+                }
                 let sz = g.neighbor_bytes(v_b);
                 if used + sz <= free {
                     used += sz;
@@ -70,10 +90,53 @@ impl Placement {
         self
     }
 
+    /// Install a generalized replica plan. `v_b` becomes the longest
+    /// prefix each unit covers locally (owned or replicated), keeping the
+    /// Table-7 duplication scalar meaningful.
+    pub fn with_replica_plan(mut self, g: &CsrGraph, plan: &ReplicaPlan) -> Placement {
+        let n = g.num_vertices();
+        let units = self.owned_bytes.len();
+        let sets = plan.to_sets(units, n);
+        for u in 0..units {
+            let mut p = 0usize;
+            while p < n && (self.owner[p] as usize == u || sets.contains(u, p as VertexId)) {
+                p += 1;
+            }
+            self.v_b[u] = p as VertexId;
+        }
+        self.replica_sets = Some(sets);
+        self.replica_lists = Some(plan.sets.clone());
+        self
+    }
+
+    /// Does unit `u` hold a replica of `N(v)` (beyond primary ownership)?
+    #[inline]
+    pub fn has_replica(&self, unit: usize, v: VertexId) -> bool {
+        match &self.replica_sets {
+            Some(sets) => sets.contains(unit, v),
+            None => v < self.v_b[unit],
+        }
+    }
+
     /// Is `v`'s list near-core for `unit` (owned or duplicated)?
     #[inline]
     pub fn is_local(&self, unit: usize, v: VertexId) -> bool {
-        self.owner[v as usize] as usize == unit || v < self.v_b[unit]
+        self.owner[v as usize] as usize == unit || self.has_replica(unit, v)
+    }
+
+    /// The vertices unit `u` holds replicas of, ascending (the loader's
+    /// `MemoryCopy` worklist). For the prefix scheme this includes owned
+    /// vertices below the boundary (their "replica" is the primary copy).
+    pub fn replicated_vertices(&self, g: &CsrGraph, unit: usize) -> Vec<VertexId> {
+        match (&self.replica_lists, &self.replica_sets) {
+            (Some(lists), _) => lists[unit].clone(),
+            // bitset without lists: reconstruct (not produced by any
+            // current constructor, kept for robustness)
+            (None, Some(sets)) => (0..g.num_vertices() as VertexId)
+                .filter(|&v| sets.contains(unit, v))
+                .collect(),
+            (None, None) => (0..self.v_b[unit]).collect(),
+        }
     }
 
     /// Fraction of vertices duplicated everywhere (min over units).
@@ -84,6 +147,45 @@ impl Placement {
         let min_vb = self.v_b.iter().copied().min().unwrap_or(0);
         min_vb as f64 / n as f64
     }
+
+    /// Per-unit replica accounting — the breakdown behind the
+    /// [`duplication_fraction`](Self::duplication_fraction) scalar, used
+    /// by the `table_partition` bench. Replica bytes exclude lists the
+    /// unit owns (those never consumed budget).
+    pub fn replica_report(&self, g: &CsrGraph) -> ReplicaReport {
+        let units = self.owned_bytes.len();
+        let mut unit_replica_bytes = vec![0u64; units];
+        let mut unit_replicas = vec![0usize; units];
+        for u in 0..units {
+            for v in self.replicated_vertices(g, u) {
+                if self.owner[v as usize] as usize == u {
+                    continue;
+                }
+                unit_replica_bytes[u] += g.neighbor_bytes(v);
+                unit_replicas[u] += 1;
+            }
+        }
+        let total_bytes = unit_replica_bytes.iter().sum();
+        ReplicaReport {
+            min_fraction: self.duplication_fraction(g.num_vertices()),
+            unit_replica_bytes,
+            unit_replicas,
+            total_bytes,
+        }
+    }
+}
+
+/// Per-unit replica-byte report (see [`Placement::replica_report`]).
+#[derive(Clone, Debug)]
+pub struct ReplicaReport {
+    /// Bytes of non-owned lists replicated into each unit.
+    pub unit_replica_bytes: Vec<u64>,
+    /// Number of non-owned lists replicated into each unit.
+    pub unit_replicas: Vec<usize>,
+    /// Sum of `unit_replica_bytes`.
+    pub total_bytes: u64,
+    /// The legacy scalar: fraction of vertices local everywhere.
+    pub min_fraction: f64,
 }
 
 #[cfg(test)]
@@ -91,6 +193,7 @@ mod tests {
     use super::*;
     use crate::graph::gen;
     use crate::graph::sort_by_degree_desc;
+    use crate::part::{partition, plan_replicas, PartitionStrategy};
 
     #[test]
     fn round_robin_spreads_ownership() {
@@ -131,15 +234,37 @@ mod tests {
             let vb = p.v_b[u];
             assert!(vb > 0, "unit {u} should duplicate something");
             assert!((vb as usize) < g.num_vertices(), "unit {u} should not fit all");
-            // boundary is maximal: the next vertex must not fit
-            let used: u64 = (0..vb).map(|v| g.neighbor_bytes(v)).sum();
+            // only non-owned lists consume the replica budget
+            let used: u64 = (0..vb)
+                .filter(|&v| p.owner[v as usize] as usize != u)
+                .map(|v| g.neighbor_bytes(v))
+                .sum();
             let free = cap - p.owned_bytes[u];
             assert!(used <= free);
+            // boundary is maximal: it stopped at a non-owned list that
+            // does not fit
+            assert_ne!(p.owner[vb as usize] as usize, u);
             assert!(used + g.neighbor_bytes(vb) > free);
         }
         // hot prefix duplicated ⇒ local for everyone
         assert!(p.is_local(0, 0));
         assert!(p.is_local(7, 0));
+    }
+
+    #[test]
+    fn owned_lists_do_not_consume_replica_budget() {
+        // Zero replica budget: a unit's boundary still walks past the
+        // lists it owns (local for free), and stops at the first foreign
+        // list.
+        let g = sort_by_degree_desc(&gen::power_law(300, 1_500, 80, 6)).graph;
+        let cfg = PimConfig::tiny();
+        let mut owner = vec![1u32; 300];
+        owner[0] = 0; // unit 0 owns exactly the hottest list
+        let part = Partitioning::from_owner(PartitionStrategy::Streaming, &g, &cfg, owner);
+        let p = Placement::from_partitioning(&part).with_duplication(&g, &cfg, Some(0));
+        assert_eq!(p.v_b[0], 1, "owned hot list must pass for free");
+        assert_eq!(p.v_b[1], 0, "unit 1's prefix starts with a foreign list");
+        assert_eq!(p.v_b[2], 0, "unit 2 owns nothing and has no budget");
     }
 
     #[test]
@@ -149,6 +274,55 @@ mod tests {
         let p = Placement::round_robin(&g, &cfg);
         for v in 0..80u32 {
             assert!(p.is_local(p.owner[v as usize] as usize, v));
+        }
+    }
+
+    #[test]
+    fn replica_plan_installs_sets_and_prefix() {
+        let g = sort_by_degree_desc(&gen::power_law(600, 3_000, 100, 11)).graph;
+        let cfg = PimConfig::tiny();
+        let part = partition(&g, &cfg, PartitionStrategy::Refined);
+        let cap = g.total_bytes() / cfg.num_units() as u64 + g.total_bytes() / 8;
+        let plan = plan_replicas(&g, &cfg, &part.owner, cap);
+        let p = Placement::from_partitioning(&part).with_replica_plan(&g, &plan);
+        for u in 0..cfg.num_units() {
+            for &v in &plan.sets[u] {
+                assert!(p.has_replica(u, v));
+                assert!(p.is_local(u, v));
+            }
+            // v_b is the longest locally-covered prefix
+            let vb = p.v_b[u] as usize;
+            for v in 0..vb {
+                assert!(p.is_local(u, v as VertexId));
+            }
+            if vb < g.num_vertices() {
+                assert!(!p.is_local(u, vb as VertexId));
+            }
+            // replicated_vertices round-trips the plan exactly
+            assert_eq!(p.replicated_vertices(&g, u), plan.sets[u]);
+        }
+    }
+
+    #[test]
+    fn replica_report_accounts_bytes() {
+        let g = sort_by_degree_desc(&gen::power_law(400, 2_000, 90, 13)).graph;
+        let cfg = PimConfig::tiny();
+        let total = g.total_bytes();
+        let cap = total / cfg.num_units() as u64 + total / 10;
+        let p = Placement::round_robin(&g, &cfg).with_duplication(&g, &cfg, Some(cap));
+        let rep = p.replica_report(&g);
+        assert_eq!(rep.unit_replica_bytes.len(), cfg.num_units());
+        assert_eq!(rep.total_bytes, rep.unit_replica_bytes.iter().sum::<u64>());
+        assert!((rep.min_fraction - p.duplication_fraction(400)).abs() < 1e-12);
+        for u in 0..cfg.num_units() {
+            // the report charges exactly the non-owned prefix bytes
+            let expected: u64 = (0..p.v_b[u])
+                .filter(|&v| p.owner[v as usize] as usize != u)
+                .map(|v| g.neighbor_bytes(v))
+                .sum();
+            assert_eq!(rep.unit_replica_bytes[u], expected);
+            // replicas + owned stay within the Algorithm-2 budget
+            assert!(rep.unit_replica_bytes[u] + p.owned_bytes[u] <= cap);
         }
     }
 }

@@ -33,6 +33,7 @@ use crate::mine::fsm::{
     self, CandShape, CandidateStats, FsmConfig, FsmResult, LabeledPattern, LevelAcc,
     LevelExecutor, MatchScratch,
 };
+use crate::part::{self, PartitionStrategy};
 use crate::pattern::plan::{Application, Plan};
 use crate::util::threads;
 use std::collections::VecDeque;
@@ -63,6 +64,11 @@ pub struct SimOptions {
     /// Override per-unit capacity for duplication (scaled benches tighten
     /// this so partial duplication behaves like the paper's PA/LJ).
     pub capacity_per_unit: Option<u64>,
+    /// Which partitioner produces the owner map (DESIGN.md §9). The
+    /// paper's round-robin is the default; the locality strategies only
+    /// change traffic classes under `remap` (the task→unit assignment and
+    /// LocalFirst classification both read the owner map).
+    pub partitioner: PartitionStrategy,
 }
 
 impl SimOptions {
@@ -72,6 +78,7 @@ impl SimOptions {
         duplication: false,
         stealing: false,
         capacity_per_unit: None,
+        partitioner: PartitionStrategy::RoundRobin,
     };
 
     pub fn all() -> SimOptions {
@@ -80,7 +87,7 @@ impl SimOptions {
             remap: true,
             duplication: true,
             stealing: true,
-            capacity_per_unit: None,
+            ..SimOptions::BASELINE
         }
     }
 
@@ -424,8 +431,9 @@ impl EnumSink for SimSink<'_> {
             }
         }
         let owner = self.placement.owner[v as usize] as usize;
-        let local_copy =
-            self.opts.duplication && self.map == AddrMap::LocalFirst && v < self.placement.v_b[self.requester];
+        let local_copy = self.opts.duplication
+            && self.map == AddrMap::LocalFirst
+            && self.placement.has_replica(self.requester, v);
         let full_bytes = full as u64 * 4;
         // The filter drops elements failing `< th` before they leave the
         // bank; without it the full list crosses the fabric.
@@ -547,8 +555,44 @@ impl EnumSink for SimSink<'_> {
     }
 }
 
-/// Shared per-run setup: placement (Algorithm 1) + optional duplication
-/// (Algorithm 2), and the L1 hot-prefix residency boundary.
+/// Build the placement an option set implies — the owner map from the
+/// selected [`PartitionStrategy`] plus replicas when duplication is on:
+/// Algorithm 2's hot-prefix boundary for round-robin ownership (where
+/// every unit fetches the hubs equally), the savings-driven replication
+/// planner for the locality strategies (where fetch demand is skewed).
+/// Shared by the simulator and the coordinator's `PIMLoadGraph`.
+///
+/// Without `remap` the owner map affects neither task assignment nor
+/// access classification (the default interleave stripes every list), so
+/// the locality partitioners are skipped in favor of cheap round-robin.
+/// The build is deterministic and O(sweeps · E) — small next to the
+/// enumeration it prices, so the simulator recomputes it per run rather
+/// than threading cached placements through the public entry points.
+pub fn build_placement(g: &CsrGraph, opts: &SimOptions, cfg: &PimConfig) -> Placement {
+    let strategy = if opts.remap {
+        opts.partitioner
+    } else {
+        PartitionStrategy::RoundRobin
+    };
+    let partitioning = part::partition(g, cfg, strategy);
+    let mut placement = Placement::from_partitioning(&partitioning);
+    if opts.duplication && opts.remap {
+        placement = match opts.partitioner {
+            PartitionStrategy::RoundRobin => {
+                placement.with_duplication(g, cfg, opts.capacity_per_unit)
+            }
+            PartitionStrategy::Streaming | PartitionStrategy::Refined => {
+                let cap = opts.capacity_per_unit.unwrap_or_else(|| cfg.capacity_per_unit());
+                let plan = part::plan_replicas(g, cfg, &placement.owner, cap);
+                placement.with_replica_plan(g, &plan)
+            }
+        };
+    }
+    placement
+}
+
+/// Shared per-run setup: placement (owner map + replicas) and the L1
+/// hot-prefix residency boundary.
 struct SimSetup {
     placement: Placement,
     hot_k: VertexId,
@@ -557,10 +601,7 @@ struct SimSetup {
 
 impl SimSetup {
     fn new(g: &CsrGraph, opts: &SimOptions, cfg: &PimConfig) -> Self {
-        let mut placement = Placement::round_robin(g, cfg);
-        if opts.duplication && opts.remap {
-            placement = placement.with_duplication(g, cfg, opts.capacity_per_unit);
-        }
+        let placement = build_placement(g, opts, cfg);
         let v_b_min = placement.v_b.iter().copied().min().unwrap_or(0);
 
         // Hot-prefix residency boundary: the largest K whose (half,
@@ -1182,6 +1223,59 @@ mod tests {
             "steal {} vs no-steal {}",
             b.total_cycles,
             a.total_cycles
+        );
+    }
+
+    #[test]
+    fn partitioners_preserve_counts_and_cut_inter_traffic() {
+        let g = test_graph();
+        let cfg = PimConfig::default();
+        let app = application("3-CC").unwrap();
+        let roots = all_roots(&g);
+        let expected = cpu::run_application(&g, &app, &roots, CpuFlavor::AutoMineOpt).count;
+        let mut inter = Vec::new();
+        for strategy in PartitionStrategy::ALL {
+            let opts = SimOptions {
+                filter: true,
+                remap: true,
+                partitioner: strategy,
+                ..SimOptions::BASELINE
+            };
+            let r = simulate_app(&g, &app, &roots, &opts, &cfg);
+            assert_eq!(r.count, expected, "{:?}", strategy);
+            inter.push(r.access.inter_bytes);
+        }
+        // even without replicas, the locality strategies shed
+        // inter-channel traffic vs round-robin scatter
+        assert!(inter[1] < inter[0], "streaming {} vs rr {}", inter[1], inter[0]);
+        assert!(inter[2] < inter[0], "refined {} vs rr {}", inter[2], inter[0]);
+    }
+
+    #[test]
+    fn partitioner_replicas_flow_through_duplication() {
+        // With duplication on, the planner's replica sets must show up as
+        // near-core traffic (has_replica feeds split_access), and the
+        // covered-prefix scalar stays consistent.
+        let g = test_graph();
+        let cfg = PimConfig::default();
+        let app = application("3-CC").unwrap();
+        let roots = all_roots(&g);
+        let cap = g.total_bytes() / cfg.num_units() as u64 + g.total_bytes() / 10;
+        let no_dup = SimOptions {
+            filter: true,
+            remap: true,
+            partitioner: PartitionStrategy::Refined,
+            ..SimOptions::BASELINE
+        };
+        let dup = SimOptions { duplication: true, capacity_per_unit: Some(cap), ..no_dup };
+        let a = simulate_app(&g, &app, &roots, &no_dup, &cfg);
+        let b = simulate_app(&g, &app, &roots, &dup, &cfg);
+        assert_eq!(a.count, b.count);
+        assert!(
+            b.access.inter_bytes < a.access.inter_bytes,
+            "replicas should absorb remote fetches: {} vs {}",
+            b.access.inter_bytes,
+            a.access.inter_bytes
         );
     }
 

@@ -92,6 +92,68 @@ pub fn bytes(v: u64) -> String {
     }
 }
 
+/// Minimal JSON emission for the machine-readable bench outputs (`bench
+/// --json` / `BENCH_partition.json`) — serde is unavailable offline.
+pub mod json {
+    /// Escape a string for a JSON literal.
+    pub fn escape(s: &str) -> String {
+        let mut out = String::with_capacity(s.len() + 2);
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+
+    /// Incremental `{...}` builder. Values passed to `raw` must already
+    /// be valid JSON (nested objects, arrays, numbers).
+    #[derive(Default)]
+    pub struct Obj {
+        parts: Vec<String>,
+    }
+
+    impl Obj {
+        pub fn new() -> Obj {
+            Obj::default()
+        }
+        pub fn str(mut self, k: &str, v: &str) -> Obj {
+            self.parts.push(format!("\"{}\":\"{}\"", escape(k), escape(v)));
+            self
+        }
+        pub fn u64(mut self, k: &str, v: u64) -> Obj {
+            self.parts.push(format!("\"{}\":{v}", escape(k)));
+            self
+        }
+        pub fn f64(mut self, k: &str, v: f64) -> Obj {
+            // JSON has no NaN/Inf; clamp to null
+            let lit = if v.is_finite() {
+                format!("{v}")
+            } else {
+                "null".to_string()
+            };
+            self.parts.push(format!("\"{}\":{lit}", escape(k)));
+            self
+        }
+        pub fn raw(mut self, k: &str, v: &str) -> Obj {
+            self.parts.push(format!("\"{}\":{v}", escape(k)));
+            self
+        }
+        pub fn render(&self) -> String {
+            format!("{{{}}}", self.parts.join(","))
+        }
+    }
+
+    /// Render a JSON array from already-rendered element strings.
+    pub fn array(items: &[String]) -> String {
+        format!("[{}]", items.join(","))
+    }
+}
+
 /// Render an ASCII bar chart of per-core load (Fig. 4-style): cores are
 /// sorted descending and bucketed; each line shows the bucket's mean as a
 /// bar scaled to the max.
@@ -148,6 +210,20 @@ mod tests {
         assert_eq!(bytes(2_100_000_000), "2.1GB");
         assert_eq!(bytes(512), "512B");
         assert_eq!(x(12.739), "12.74x");
+    }
+
+    #[test]
+    fn json_builder_renders_valid_shapes() {
+        let inner = json::Obj::new().u64("a", 1).f64("b", 0.5).render();
+        assert_eq!(inner, "{\"a\":1,\"b\":0.5}");
+        let obj = json::Obj::new()
+            .str("name", "x\"y")
+            .raw("rows", &json::array(&[inner.clone(), inner]))
+            .f64("nan", f64::NAN)
+            .render();
+        assert!(obj.starts_with("{\"name\":\"x\\\"y\","));
+        assert!(obj.contains("\"rows\":[{\"a\":1,"));
+        assert!(obj.ends_with("\"nan\":null}"));
     }
 
     #[test]

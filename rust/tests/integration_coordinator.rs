@@ -5,6 +5,7 @@
 use pimminer::coordinator::PimMiner;
 use pimminer::exec::cpu::{self, CpuFlavor};
 use pimminer::graph::{gen, io, sort_by_degree_desc, CsrGraph};
+use pimminer::part::PartitionStrategy;
 use pimminer::pattern::plan::{application, paper_applications};
 use pimminer::pim::{PimConfig, SimOptions};
 
@@ -57,11 +58,8 @@ fn duplication_replicas_hold_hot_prefix() {
     let total = g.total_bytes();
     // tight capacity: partial duplication
     let opts = SimOptions {
-        filter: true,
-        remap: true,
-        duplication: true,
-        stealing: true,
         capacity_per_unit: Some(total / cfg.num_units() as u64 + total / 16),
+        ..SimOptions::all()
     };
     let mut miner = PimMiner::new(cfg, opts);
     miner.load_graph(g.clone()).unwrap();
@@ -69,18 +67,41 @@ fn duplication_replicas_hold_hot_prefix() {
     for u in 0..miner.config().num_units() {
         let vb = loaded.placement.v_b[u];
         assert!(vb > 0 && (vb as usize) < g.num_vertices(), "unit {u} v_b {vb}");
+        // the prefix scheme replicates exactly the vertices below v_b
         assert_eq!(loaded.replicas[u].len(), vb as usize);
+        for v in 0..vb {
+            assert!(loaded.replicas[u].contains_key(&v), "unit {u} missing {v}");
+        }
         // replicas live in unit u (or are the primary when already local)
-        for (v, ptr) in loaded.replicas[u].iter().enumerate() {
-            if loaded.placement.owner[v] as usize != u {
+        for (&v, ptr) in &loaded.replicas[u] {
+            if loaded.placement.owner[v as usize] as usize != u {
                 assert_eq!(ptr.unit, u, "replica of {v} misplaced");
             }
             assert_eq!(
                 miner.device().read(*ptr).unwrap(),
-                g.neighbors(v as u32),
+                g.neighbors(v),
                 "replica contents diverge for {v}"
             );
         }
+    }
+}
+
+#[test]
+fn locality_partitioner_load_matches_owner_map_and_counts() {
+    // Loading under a locality strategy must put every list on the unit
+    // the partitioner chose, place the planner's replicas, and leave
+    // counts untouched.
+    let g = graph();
+    let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    let app = application("3-CC").unwrap();
+    let expected = cpu::run_application(&g, &app, &roots, CpuFlavor::AutoMineOpt).count;
+    for strategy in PartitionStrategy::ALL {
+        let opts = SimOptions { partitioner: strategy, ..SimOptions::all() };
+        let mut miner = PimMiner::new(PimConfig::default(), opts);
+        miner.load_graph(g.clone()).unwrap();
+        miner.verify_device_contents().unwrap(); // lists on owner units
+        let r = miner.pattern_count(&app, 1.0).unwrap();
+        assert_eq!(r.count, expected, "{:?}", strategy);
     }
 }
 

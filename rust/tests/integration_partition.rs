@@ -1,0 +1,92 @@
+//! Acceptance gate for the partitioning subsystem (ISSUE 3 / DESIGN.md
+//! §9): on the fixed-seed degree-sorted power-law graph (2k vertices,
+//! 10k edges), the refined partitioning must cut the simulator's
+//! inter-channel bytes vs. round-robin under `AddrMap::LocalFirst` by at
+//! least 25% at equal replica capacity — the same comparison the
+//! `table_partition` bench prints.
+
+use pimminer::exec::cpu::{self, CpuFlavor};
+use pimminer::graph::{gen, sort_by_degree_desc, CsrGraph};
+use pimminer::part::PartitionStrategy;
+use pimminer::pattern::plan::application;
+use pimminer::pim::{simulate_app, PimConfig, SimOptions, SimResult};
+
+/// The acceptance graph: power-law, 2k vertices, 10k edges, seed 8,
+/// degree-sorted (the framework's canonical preprocessing).
+fn acceptance_graph() -> CsrGraph {
+    sort_by_degree_desc(&gen::power_law(2_000, 10_000, 300, 8)).graph
+}
+
+fn run(g: &CsrGraph, opts: &SimOptions, cfg: &PimConfig) -> SimResult {
+    let app = application("3-CC").unwrap();
+    let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    simulate_app(g, &app, &roots, opts, cfg)
+}
+
+#[test]
+fn refined_partitioning_cuts_inter_channel_bytes_by_25_percent() {
+    let g = acceptance_graph();
+    let cfg = PimConfig::default();
+    // Equal replica capacity on both sides: own share + 10% of the graph
+    // per unit — the partial-duplication regime where placement matters.
+    let cap = g.total_bytes() / cfg.num_units() as u64 + g.total_bytes() / 10;
+    let base = SimOptions {
+        filter: true,
+        remap: true, // AddrMap::LocalFirst
+        duplication: true,
+        capacity_per_unit: Some(cap),
+        ..SimOptions::BASELINE
+    };
+    let rr = run(&g, &SimOptions { partitioner: PartitionStrategy::RoundRobin, ..base }, &cfg);
+    let refined = run(&g, &SimOptions { partitioner: PartitionStrategy::Refined, ..base }, &cfg);
+    assert_eq!(rr.count, refined.count, "partitioning must not change counts");
+    let reduction = 1.0 - refined.access.inter_bytes as f64 / rr.access.inter_bytes as f64;
+    assert!(
+        reduction >= 0.25,
+        "refined partitioning cut inter-channel bytes by only {:.1}% \
+         ({} -> {}); the acceptance bar is 25%",
+        reduction * 100.0,
+        rr.access.inter_bytes,
+        refined.access.inter_bytes
+    );
+}
+
+#[test]
+fn locality_gain_holds_without_replicas_too() {
+    // The owner map alone (no duplication) must already shed a measurable
+    // share of inter-channel traffic — placement, not just replication,
+    // carries the gain.
+    let g = acceptance_graph();
+    let cfg = PimConfig::default();
+    let base = SimOptions {
+        filter: true,
+        remap: true,
+        ..SimOptions::BASELINE
+    };
+    let rr = run(&g, &base, &cfg);
+    let refined = run(&g, &SimOptions { partitioner: PartitionStrategy::Refined, ..base }, &cfg);
+    let reduction = 1.0 - refined.access.inter_bytes as f64 / rr.access.inter_bytes as f64;
+    assert!(
+        reduction >= 0.10,
+        "no-replica reduction {:.1}% below 10%",
+        reduction * 100.0
+    );
+}
+
+#[test]
+fn counts_invariant_across_strategies_and_option_sets() {
+    let g = acceptance_graph();
+    let cfg = PimConfig::default();
+    let app = application("3-CC").unwrap();
+    let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    let expected = cpu::run_application(&g, &app, &roots, CpuFlavor::AutoMineOpt).count;
+    for strategy in PartitionStrategy::ALL {
+        for opts in [
+            SimOptions { partitioner: strategy, ..SimOptions::BASELINE },
+            SimOptions { partitioner: strategy, ..SimOptions::all() },
+        ] {
+            let r = simulate_app(&g, &app, &roots, &opts, &cfg);
+            assert_eq!(r.count, expected, "{:?} / {:?}", strategy, opts);
+        }
+    }
+}

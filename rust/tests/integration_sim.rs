@@ -92,8 +92,8 @@ fn table7_partial_duplication_with_tight_capacity() {
         filter: true,
         remap: true,
         duplication: true,
-        stealing: false,
         capacity_per_unit: Some(per_unit),
+        ..SimOptions::BASELINE
     };
     let r = simulate_app(&g, &app, &rr, &opts, &cfg);
     let frac = r.v_b_min as f64 / g.num_vertices() as f64;

@@ -114,11 +114,17 @@ fn prop_placement_invariants() {
         assert_eq!(p.owned_bytes.iter().sum::<u64>(), g.col_idx.len() as u64 * 4);
         for u in 0..cfg.num_units() {
             let vb = p.v_b[u];
-            // the duplicated prefix fits in the free capacity
-            let used: u64 = (0..vb).map(|v| g.neighbor_bytes(v)).sum();
+            // the duplicated prefix fits in the free capacity (owned
+            // lists pass for free — they never consume replica budget)
+            let used: u64 = (0..vb)
+                .filter(|&v| p.owner[v as usize] as usize != u)
+                .map(|v| g.neighbor_bytes(v))
+                .sum();
             assert!(used <= cap.saturating_sub(p.owned_bytes[u]));
-            // maximality
+            // maximality: the boundary stopped at a foreign list that
+            // does not fit
             if (vb as usize) < n {
+                assert_ne!(p.owner[vb as usize] as usize, u);
                 assert!(
                     used + g.neighbor_bytes(vb) > cap.saturating_sub(p.owned_bytes[u]),
                     "v_b not maximal for unit {u}"
@@ -143,6 +149,7 @@ fn prop_sim_count_invariance_across_random_options() {
         let apps = ["3-CC", "4-CL", "4-DI"];
         let app = application(apps[rng.below_usize(apps.len())]).unwrap();
         let expected = cpu::run_application(&g, &app, &roots, CpuFlavor::AutoMineOpt).count;
+        let strategies = pimminer::part::PartitionStrategy::ALL;
         let opts = SimOptions {
             filter: rng.chance(0.5),
             remap: rng.chance(0.5),
@@ -153,6 +160,7 @@ fn prop_sim_count_invariance_across_random_options() {
             } else {
                 None
             },
+            partitioner: strategies[rng.below_usize(strategies.len())],
         };
         let r = simulate_app(&g, &app, &roots, &opts, &cfg);
         assert_eq!(r.count, expected, "opts {opts:?}");

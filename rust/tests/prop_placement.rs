@@ -1,0 +1,144 @@
+//! Property tests over the partitioning subsystem (`rust/src/part/`,
+//! DESIGN.md §9): owner-map totality, byte-balance slack, refinement
+//! monotonicity on the channel-weighted cut, replica-plan capacity, and
+//! placement/simulator agreement on replica lookups.
+
+use pimminer::graph::{gen, sort_by_degree_desc, CsrGraph, VertexId};
+use pimminer::part::{
+    self, balance_cap, cut_stats, plan_replicas, refine, stream_partition, weighted_cost,
+    PartitionStrategy,
+};
+use pimminer::pim::{build_placement, PimConfig, SimOptions};
+use pimminer::util::prop;
+use pimminer::util::rng::Rng;
+
+fn random_graph(rng: &mut Rng) -> CsrGraph {
+    let n = rng.range(50, 1_500) as usize;
+    let e = rng.range(n as u64, (n * 5) as u64) as usize;
+    let md = rng.range(4, 200) as usize;
+    sort_by_degree_desc(&gen::power_law(n, e, md, rng.next_u64())).graph
+}
+
+fn max_list_bytes(g: &CsrGraph) -> u64 {
+    (0..g.num_vertices() as VertexId).map(|v| g.neighbor_bytes(v)).max().unwrap_or(0)
+}
+
+#[test]
+fn prop_every_vertex_owned_exactly_once() {
+    prop::check("part-ownership", 0x81, 24, |rng| {
+        let g = random_graph(rng);
+        let cfg = PimConfig::tiny();
+        for strategy in PartitionStrategy::ALL {
+            let p = part::partition(&g, &cfg, strategy);
+            // the owner map is total, in-range, and byte-exact — check()
+            // is the subsystem's own invariant gate
+            assert_eq!(p.owner.len(), g.num_vertices(), "{:?}", strategy);
+            p.check(&g, &cfg).unwrap_or_else(|e| panic!("{:?}: {e}", strategy));
+            assert_eq!(p.owned_bytes.iter().sum::<u64>(), g.total_bytes(), "{:?}", strategy);
+        }
+    });
+}
+
+#[test]
+fn prop_balanced_strategies_respect_the_byte_slack() {
+    prop::check("part-balance", 0x82, 24, |rng| {
+        let g = random_graph(rng);
+        let cfg = PimConfig::tiny();
+        let cap = balance_cap(&g, &cfg);
+        let slack = max_list_bytes(&g);
+        for strategy in [PartitionStrategy::Streaming, PartitionStrategy::Refined] {
+            let p = part::partition(&g, &cfg, strategy);
+            for (u, &b) in p.owned_bytes.iter().enumerate() {
+                assert!(
+                    b <= cap + slack,
+                    "{:?}: unit {u} holds {b} > cap {cap} + list slack {slack}",
+                    strategy
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_refinement_never_increases_the_weighted_cut() {
+    prop::check("part-refine-monotone", 0x83, 20, |rng| {
+        let g = random_graph(rng);
+        let cfg = PimConfig::tiny();
+        // from the streaming start (the shipped pipeline) and from
+        // round-robin (an adversarial start)
+        let mut from_stream = stream_partition(&g, &cfg);
+        let mut from_rr: Vec<u32> = (0..g.num_vertices())
+            .map(|v| cfg.round_robin_unit(v) as u32)
+            .collect();
+        for owner in [&mut from_stream, &mut from_rr] {
+            let before = weighted_cost(&cfg, &cut_stats(&g, &cfg, owner));
+            refine(&g, &cfg, owner);
+            let after = weighted_cost(&cfg, &cut_stats(&g, &cfg, owner));
+            assert!(after <= before, "refine raised the cut: {after} > {before}");
+        }
+    });
+}
+
+#[test]
+fn prop_replica_plans_respect_capacity_and_skip_owned() {
+    prop::check("part-replica-capacity", 0x84, 20, |rng| {
+        let g = random_graph(rng);
+        let cfg = PimConfig::tiny();
+        let strategies = PartitionStrategy::ALL;
+        let p = part::partition(&g, &cfg, strategies[rng.below_usize(strategies.len())]);
+        let total = g.total_bytes();
+        let cap = total / cfg.num_units() as u64 + rng.below(total.max(1));
+        let plan = plan_replicas(&g, &cfg, &p.owner, cap);
+        for u in 0..cfg.num_units() {
+            let bytes: u64 = plan.sets[u].iter().map(|&v| g.neighbor_bytes(v)).sum();
+            assert_eq!(bytes, plan.replica_bytes[u]);
+            assert!(
+                p.owned_bytes[u] + bytes <= cap.max(p.owned_bytes[u]),
+                "unit {u} replica plan over budget"
+            );
+            for &v in &plan.sets[u] {
+                assert_ne!(p.owner[v as usize] as usize, u, "replicated an owned list");
+            }
+            assert!(plan.sets[u].windows(2).all(|w| w[0] < w[1]), "unsorted set");
+        }
+    });
+}
+
+#[test]
+fn prop_placement_replica_lookup_matches_the_plan() {
+    prop::check("part-placement-agree", 0x85, 16, |rng| {
+        let g = random_graph(rng);
+        let cfg = PimConfig::tiny();
+        let strategies = PartitionStrategy::ALL;
+        let strategy = strategies[rng.below_usize(strategies.len())];
+        let total = g.total_bytes();
+        let cap = total / cfg.num_units() as u64 + rng.below(total.max(1));
+        let opts = SimOptions {
+            remap: true,
+            duplication: true,
+            capacity_per_unit: Some(cap),
+            partitioner: strategy,
+            ..SimOptions::BASELINE
+        };
+        let placement = build_placement(&g, &opts, &cfg);
+        // ownership mirrors the partitioner exactly
+        let p = part::partition(&g, &cfg, strategy);
+        assert_eq!(placement.owner, p.owner);
+        // every unit: is_local ⟺ owned or replicated; v_b prefix is
+        // locally covered and maximal
+        for u in 0..cfg.num_units() {
+            let vb = placement.v_b[u] as usize;
+            for v in 0..vb {
+                assert!(placement.is_local(u, v as VertexId));
+            }
+            if vb < g.num_vertices() {
+                assert!(!placement.is_local(u, vb as VertexId), "v_b not maximal");
+            }
+            for v in 0..g.num_vertices() as VertexId {
+                if placement.owner[v as usize] as usize == u {
+                    assert!(placement.is_local(u, v));
+                }
+            }
+        }
+    });
+}
