@@ -1,13 +1,21 @@
 //! Performance microbenchmarks — the §Perf instrumentation of
-//! EXPERIMENTS.md: enumerator throughput, set-op kernels, simulator
-//! profiling rate, scheduler event rate, and (when artifacts exist) the
-//! PJRT batched-kernel path.
+//! EXPERIMENTS.md: set-op kernels (sorted merge vs the hybrid
+//! sparse/dense engine), enumerator throughput (merge vs hub bitmaps),
+//! simulator profiling rate, scheduler event rate, and (when artifacts
+//! exist) the PJRT batched-kernel path.
+//!
+//! `cargo bench --bench perf_micro -- --json` additionally writes every
+//! timing and derived metric to `BENCH_micro.json` at the repo root —
+//! the perf trajectory seed `make bench` refreshes and CI archives.
 
 use pimminer::bench::Bench;
 use pimminer::exec::cpu::{self, CpuFlavor};
-use pimminer::exec::setops::{count_intersect, intersect_into, subtract_into, NO_BOUND};
+use pimminer::exec::setops::{
+    count_intersect, count_intersect_hybrid, intersect_into, intersect_into_hybrid,
+    subtract_into, NO_BOUND,
+};
 use pimminer::exec::{Enumerator, NullSink};
-use pimminer::graph::{gen, sort_by_degree_desc};
+use pimminer::graph::{gen, sort_by_degree_desc, HubBitmaps};
 use pimminer::pattern::plan::{application, Plan};
 use pimminer::pattern::pattern::clique;
 use pimminer::pim::stealing::{schedule, Piece};
@@ -16,56 +24,136 @@ use pimminer::runtime::{artifacts_available, artifacts_dir, Runtime, SetOpReques
 use pimminer::util::rng::Rng;
 use std::collections::VecDeque;
 
+/// Exactly `n` distinct sorted ids from `[0, 1<<20)`. (The previous
+/// sort+dedup version silently shrank below the advertised size, so the
+/// `*_4k` labels and the elem/s math overstated the work.)
+fn mk(rng: &mut Rng, n: usize) -> Vec<u32> {
+    let mut seen = std::collections::HashSet::with_capacity(n * 2);
+    let mut v: Vec<u32> = Vec::with_capacity(n);
+    while v.len() < n {
+        let x = rng.below(1 << 20) as u32;
+        if seen.insert(x) {
+            v.push(x);
+        }
+    }
+    v.sort_unstable();
+    v
+}
+
 fn main() {
     let bench = Bench::new("perf_micro");
 
-    // --- set-op kernels ---
+    // --- set-op kernels (random 4k lists) ---
     let mut rng = Rng::new(1);
-    let mk = |rng: &mut Rng, n: usize| {
-        let mut v: Vec<u32> = (0..n).map(|_| rng.below(1 << 20) as u32).collect();
-        v.sort_unstable();
-        v.dedup();
-        v
-    };
     let a = mk(&mut rng, 4096);
     let b = mk(&mut rng, 4096);
+    assert_eq!(a.len() + b.len(), 8192, "mk must deliver exact lengths");
     let mut out = Vec::with_capacity(4096);
     let t = bench.measure("intersect_4k", 3, 50, || {
         intersect_into(&a, &b, NO_BOUND, &mut out)
     });
-    println!("  → {:.0}M elem/s", (a.len() + b.len()) as f64 / t / 1e6);
+    bench.metric(
+        "intersect_4k_melems_per_s",
+        (a.len() + b.len()) as f64 / t / 1e6,
+        "M elem/s",
+    );
     bench.measure("subtract_4k", 3, 50, || subtract_into(&a, &b, NO_BOUND, &mut out));
     bench.measure("count_intersect_4k", 3, 50, || count_intersect(&a, &b, NO_BOUND));
 
-    // --- enumerator ---
+    // --- hybrid kernels on real hub adjacency (DESIGN.md §10) ---
     let g = sort_by_degree_desc(&gen::power_law(20_000, 160_000, 800, 3)).graph;
+    let hubs = HubBitmaps::build(&g, None);
+    let h = hubs.prefix();
+    bench.metric("hub_prefix", h as f64, "vertices");
+    bench.metric("hub_bitmap_bytes", hubs.total_bytes() as f64, "bytes");
+    let (na, nb) = (g.neighbors(0), g.neighbors(1));
+    let t_merge = bench.measure("hub_pair_intersect_merge", 3, 200, || {
+        intersect_into(na, nb, h, &mut out)
+    });
+    let t_dense = bench.measure("hub_pair_intersect_dense", 3, 200, || {
+        intersect_into_hybrid(Some(&hubs), na, Some(0), nb, Some(1), h, &mut out)
+    });
+    bench.metric("hub_pair_dense_speedup", t_merge / t_dense, "x");
+    let t_count_merge = bench.measure("hub_pair_count_merge", 3, 200, || {
+        count_intersect(na, nb, h)
+    });
+    let t_count = bench.measure("hub_pair_count_dense", 3, 200, || {
+        count_intersect_hybrid(Some(&hubs), na, Some(0), nb, Some(1), h)
+    });
+    bench.metric("hub_pair_count_speedup", t_count_merge / t_count, "x");
+    // sparse-dense probe: a cold mid-degree list against a hub row
+    let probe_v = (h + (g.num_vertices() as u32 - h) / 2).min(g.num_vertices() as u32 - 1);
+    let np = g.neighbors(probe_v);
+    let t_pm = bench.measure("probe_pair_intersect_merge", 3, 200, || {
+        intersect_into(np, na, NO_BOUND, &mut out)
+    });
+    let t_pp = bench.measure("probe_pair_intersect_probe", 3, 200, || {
+        intersect_into_hybrid(Some(&hubs), np, Some(probe_v), na, Some(0), NO_BOUND, &mut out)
+    });
+    bench.metric("probe_pair_speedup", t_pm / t_pp, "x");
+
+    // --- enumerator (4-CC on the 20k power-law graph) ---
     let plan = Plan::build(&clique(4));
+    let nv = g.num_vertices();
     let mut e = Enumerator::new(&g, &plan);
-    let t = bench.measure("enumerate_4cc_20k_serial", 1, 5, || {
+    let t_serial = bench.measure("enumerate_4cc_20k_serial", 1, 5, || {
         let mut total = 0u64;
-        for v in 0..g.num_vertices() as u32 {
+        for v in 0..nv as u32 {
             total += e.count_root(v, &mut NullSink);
         }
         total
     });
-    println!("  → {:.0} roots/s serial", g.num_vertices() as f64 / t);
+    bench.metric("enumerate_4cc_20k_serial_roots_per_s", nv as f64 / t_serial, "roots/s");
+    let mut eh = Enumerator::with_hubs(&g, &plan, Some(&hubs));
+    let t_serial_h = bench.measure("enumerate_4cc_20k_serial_hybrid", 1, 5, || {
+        let mut total = 0u64;
+        for v in 0..nv as u32 {
+            total += eh.count_root(v, &mut NullSink);
+        }
+        total
+    });
+    bench.metric(
+        "enumerate_4cc_20k_serial_hybrid_roots_per_s",
+        nv as f64 / t_serial_h,
+        "roots/s",
+    );
+    bench.metric("enumerate_4cc_20k_hybrid_speedup", t_serial / t_serial_h, "x");
+
     let app = application("4-CC").unwrap();
-    let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
-    let t = bench.measure("enumerate_4cc_20k_parallel", 1, 5, || {
+    let roots: Vec<u32> = (0..nv as u32).collect();
+    let t_par = bench.measure("enumerate_4cc_20k_parallel", 1, 5, || {
         cpu::count_plan(&g, &plan, &roots, CpuFlavor::AutoMineOpt)
     });
-    println!("  → {:.0} roots/s parallel", g.num_vertices() as f64 / t);
+    bench.metric("enumerate_4cc_20k_parallel_roots_per_s", nv as f64 / t_par, "roots/s");
+    let t_par_h = bench.measure("enumerate_4cc_20k_parallel_hybrid", 1, 5, || {
+        cpu::count_plan_hybrid(&g, &plan, &roots, CpuFlavor::AutoMineOpt, Some(&hubs))
+    });
+    bench.metric(
+        "enumerate_4cc_20k_parallel_hybrid_roots_per_s",
+        nv as f64 / t_par_h,
+        "roots/s",
+    );
+    bench.metric(
+        "enumerate_4cc_20k_parallel_hybrid_speedup",
+        t_par / t_par_h,
+        "x",
+    );
 
     // --- simulator (profiling + scheduling, full ladder config) ---
     let cfg = PimConfig::default();
-    let count_t = t;
-    let t = bench.measure("simulate_4cc_20k_fullstack", 1, 5, || {
+    let t_sim = bench.measure("simulate_4cc_20k_fullstack", 1, 5, || {
         simulate_app(&g, &app, &roots, &SimOptions::all(), &cfg)
     });
-    println!(
-        "  → simulation overhead {:.2}x over the raw parallel count",
-        t / count_t
-    );
+    bench.metric("simulate_4cc_20k_roots_per_s", nv as f64 / t_sim, "roots/s");
+    bench.metric("simulate_overhead_vs_parallel_count", t_sim / t_par, "x");
+    let hub_opts = SimOptions {
+        hub_bitmaps: true,
+        ..SimOptions::all()
+    };
+    let t_sim_h = bench.measure("simulate_4cc_20k_fullstack_hub_bitmaps", 1, 5, || {
+        simulate_app(&g, &app, &roots, &hub_opts, &cfg)
+    });
+    bench.metric("simulate_4cc_20k_hub_roots_per_s", nv as f64 / t_sim_h, "roots/s");
 
     // --- stealing scheduler event rate ---
     let mut queues: Vec<VecDeque<Piece>> = vec![VecDeque::new(); cfg.num_units()];
@@ -79,7 +167,7 @@ fn main() {
     let t = bench.measure("scheduler_50k_pieces", 1, 10, || {
         schedule(&cfg, queues.clone(), true)
     });
-    println!("  → {:.1}M pieces/s", 50_000.0 / t / 1e6);
+    bench.metric("scheduler_mpieces_per_s", 50_000.0 / t / 1e6, "M pieces/s");
 
     // --- PJRT batched kernel path ---
     if artifacts_available() {
@@ -95,8 +183,12 @@ fn main() {
             })
             .collect();
         let t = bench.measure("pjrt_setops_512pairs", 1, 5, || kernel.run(&reqs).unwrap());
-        println!("  → {:.0} pairs/s through the AOT artifact", 512.0 / t);
+        bench.metric("pjrt_pairs_per_s", 512.0 / t, "pairs/s");
     } else {
         println!("pjrt kernel bench skipped (run `make artifacts`)");
+    }
+
+    if Bench::json_requested() {
+        bench.write_json("BENCH_micro.json").expect("write BENCH_micro.json");
     }
 }

@@ -4,14 +4,32 @@
 //! prints mean ± stddev. `fixture` times a one-shot experiment (the
 //! table/figure reproductions, which are deterministic simulations rather
 //! than repeated microbenches).
+//!
+//! Every `measure` call and every [`metric`](Bench::metric) is recorded,
+//! and [`write_json`](Bench::write_json) emits the session machine-
+//! readably — the perf-trajectory seed (`cargo bench --bench perf_micro
+//! -- --json` writes `BENCH_micro.json` at the repo root; `make bench`
+//! does this automatically, and CI uploads it as an artifact).
 
+use crate::report::json;
 use crate::util::stats;
+use std::cell::RefCell;
 use std::time::Instant;
+
+/// One timed entry recorded by [`Bench::measure`].
+struct Timing {
+    label: String,
+    mean_s: f64,
+    stddev_s: f64,
+    iters: usize,
+}
 
 /// One benchmark session (one binary).
 pub struct Bench {
     name: String,
     quick: bool,
+    timings: RefCell<Vec<Timing>>,
+    metrics: RefCell<Vec<(String, f64)>>,
 }
 
 impl Bench {
@@ -23,12 +41,20 @@ impl Bench {
         Bench {
             name: name.to_string(),
             quick,
+            timings: RefCell::new(Vec::new()),
+            metrics: RefCell::new(Vec::new()),
         }
     }
 
     /// Quick mode (PIMMINER_BENCH_QUICK=1) trims iteration counts.
     pub fn quick(&self) -> bool {
         self.quick
+    }
+
+    /// Did the bench binary receive `--json` (cargo passes everything
+    /// after `--` through)?
+    pub fn json_requested() -> bool {
+        std::env::args().any(|a| a == "--json")
     }
 
     /// Time `f` over `iters` iterations (after `warmup` runs) and print
@@ -53,7 +79,20 @@ impl Bench {
             format_time(sd),
             iters
         );
+        self.timings.borrow_mut().push(Timing {
+            label: label.to_string(),
+            mean_s: mean,
+            stddev_s: sd,
+            iters,
+        });
         mean
+    }
+
+    /// Record (and print) a derived scalar — a throughput, a speedup —
+    /// alongside the raw timings in the JSON output.
+    pub fn metric(&self, label: &str, value: f64, unit: &str) {
+        println!("  → {label} = {value:.3} {unit}");
+        self.metrics.borrow_mut().push((label.to_string(), value));
     }
 
     /// Run a one-shot experiment, reporting wall time.
@@ -66,6 +105,44 @@ impl Bench {
             format_time(t.elapsed().as_secs_f64())
         );
         out
+    }
+
+    /// Serialize every recorded timing and metric.
+    pub fn to_json(&self) -> String {
+        let timings: Vec<String> = self
+            .timings
+            .borrow()
+            .iter()
+            .map(|t| {
+                json::Obj::new()
+                    .str("label", &t.label)
+                    .f64("mean_s", t.mean_s)
+                    .f64("stddev_s", t.stddev_s)
+                    .u64("iters", t.iters as u64)
+                    .render()
+            })
+            .collect();
+        let metrics: Vec<String> = self
+            .metrics
+            .borrow()
+            .iter()
+            .map(|(label, value)| {
+                json::Obj::new().str("label", label).f64("value", *value).render()
+            })
+            .collect();
+        json::Obj::new()
+            .str("bench", &self.name)
+            .bool("quick", self.quick)
+            .raw("timings", &json::array(&timings))
+            .raw("metrics", &json::array(&metrics))
+            .render()
+    }
+
+    /// Write the session JSON to `path`.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())?;
+        println!("wrote {path}");
+        Ok(())
     }
 }
 
@@ -140,6 +217,20 @@ mod tests {
         let b = Bench::new("self-test");
         let v = b.fixture("id", || 42);
         assert_eq!(v, 42);
+    }
+
+    #[test]
+    fn records_timings_and_metrics_as_json() {
+        let b = Bench::new("self-test");
+        b.measure("spin", 0, 2, || std::hint::black_box(1 + 1));
+        b.metric("throughput", 12.5, "elem/s");
+        let j = b.to_json();
+        assert!(j.contains("\"bench\":\"self-test\""), "{j}");
+        assert!(j.contains("\"label\":\"spin\""), "{j}");
+        assert!(j.contains("\"label\":\"throughput\""), "{j}");
+        assert!(j.contains("\"value\":12.5"), "{j}");
+        // iters is recorded post-clamp so the JSON reflects what ran
+        assert!(j.contains("\"iters\":"), "{j}");
     }
 
     #[test]

@@ -22,7 +22,7 @@
 use super::device::{PimDevice, PimPtr};
 use crate::exec::cpu::sampled_roots;
 use crate::graph::io::NeighborListReader;
-use crate::graph::{CsrGraph, VertexId};
+use crate::graph::{CsrGraph, HubBitmaps, VertexId};
 use crate::mine::fsm::{FsmConfig, FsmResult};
 use crate::pattern::plan::Application;
 use crate::pim::config::PimConfig;
@@ -46,6 +46,14 @@ pub struct LoadedGraph {
     /// `placement.replicated_vertices(_, u)` has an entry (the primary
     /// pointer when the unit already owns `v`).
     pub replicas: Vec<HashMap<VertexId, PimPtr>>,
+    /// Hub-bitmap rows (DESIGN.md §10) when `SimOptions::hub_bitmaps` is
+    /// on — broadcast into every unit's bank group at load time, with
+    /// their bytes already subtracted from the replica budget by
+    /// `build_placement`. Like `lists`/`replicas`, this mirrors
+    /// device-resident state for API consumers; the simulators build
+    /// their own working copy per run (see `build_placement`'s note on
+    /// recomputing placement state).
+    pub hub_bitmaps: Option<HubBitmaps>,
 }
 
 /// The framework handle (CPU-side leader).
@@ -144,11 +152,16 @@ impl PimMiner {
                 }
             }
         }
+        let hub_bitmaps = self
+            .opts
+            .hub_bitmaps
+            .then(|| HubBitmaps::build(&graph, self.opts.hub_threshold));
         self.loaded = Some(LoadedGraph {
             graph,
             placement,
             lists,
             replicas,
+            hub_bitmaps,
         });
         Ok(())
     }
@@ -359,6 +372,27 @@ mod tests {
         plain.load_graph(g).unwrap();
         assert_eq!(plain.replica_source(requester, 0).unwrap().unit, primary_owner);
         assert!(plain.replica_source(requester, u32::MAX - 1).is_err());
+    }
+
+    #[test]
+    fn hub_bitmaps_load_and_preserve_counts() {
+        let opts = SimOptions {
+            hub_bitmaps: true,
+            hub_threshold: Some(16),
+            ..SimOptions::all()
+        };
+        let mut m = PimMiner::new(tiny_cfg(), opts);
+        m.load_graph(graph()).unwrap();
+        let hubs = m.loaded().unwrap().hub_bitmaps.as_ref().unwrap();
+        assert!(hubs.prefix() > 0, "threshold 16 must catch hubs");
+        assert_eq!(hubs.threshold(), 16);
+        let app = application("4-CL").unwrap();
+        let r = m.pattern_count(&app, 1.0).unwrap();
+        let mut plain = PimMiner::new(tiny_cfg(), SimOptions::all());
+        plain.load_graph(graph()).unwrap();
+        assert!(plain.loaded().unwrap().hub_bitmaps.is_none());
+        assert_eq!(r.count, plain.pattern_count(&app, 1.0).unwrap().count);
+        assert!(r.bitmap_words > 0, "hub roots must hit the dense path");
     }
 
     #[test]

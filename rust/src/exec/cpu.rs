@@ -15,7 +15,7 @@
 //! the *relative* shape (see DESIGN.md §2).
 
 use super::enumerate::{Enumerator, NullSink};
-use crate::graph::{CsrGraph, VertexId};
+use crate::graph::{CsrGraph, HubBitmaps, VertexId};
 use crate::pattern::plan::{Application, Plan};
 use crate::util::threads;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -71,10 +71,23 @@ pub fn count_plan(
     roots: &[VertexId],
     flavor: CpuFlavor,
 ) -> u64 {
+    count_plan_hybrid(g, plan, roots, flavor, None)
+}
+
+/// [`count_plan`] with the hybrid sparse/dense set engine: every worker's
+/// enumerator picks hub-bitmap kernels per level (DESIGN.md §10). Counts
+/// are identical with `hubs = None`; only throughput changes.
+pub fn count_plan_hybrid(
+    g: &CsrGraph,
+    plan: &Plan,
+    roots: &[VertexId],
+    flavor: CpuFlavor,
+    hubs: Option<&HubBitmaps>,
+) -> u64 {
     match flavor {
-        CpuFlavor::GraphPiLike => dynamic_count(g, plan, roots, 1),
-        CpuFlavor::AutoMineOpt => dynamic_count(g, plan, roots, 32),
-        CpuFlavor::AutoMineOrg => static_block_count(g, plan, roots),
+        CpuFlavor::GraphPiLike => dynamic_count(g, plan, roots, 1, hubs),
+        CpuFlavor::AutoMineOpt => dynamic_count(g, plan, roots, 32, hubs),
+        CpuFlavor::AutoMineOrg => static_block_count(g, plan, roots, hubs),
     }
 }
 
@@ -85,9 +98,24 @@ pub fn run_application(
     roots: &[VertexId],
     flavor: CpuFlavor,
 ) -> CpuResult {
+    run_application_hybrid(g, app, roots, flavor, None)
+}
+
+/// [`run_application`] with the hybrid set engine (see
+/// [`count_plan_hybrid`]).
+pub fn run_application_hybrid(
+    g: &CsrGraph,
+    app: &Application,
+    roots: &[VertexId],
+    flavor: CpuFlavor,
+    hubs: Option<&HubBitmaps>,
+) -> CpuResult {
     let plans = app.plans();
     let start = std::time::Instant::now();
-    let count = plans.iter().map(|p| count_plan(g, p, roots, flavor)).sum();
+    let count = plans
+        .iter()
+        .map(|p| count_plan_hybrid(g, p, roots, flavor, hubs))
+        .sum();
     CpuResult {
         count,
         seconds: start.elapsed().as_secs_f64(),
@@ -96,10 +124,16 @@ pub fn run_application(
 
 /// Dynamic scheduling: workers claim `chunk` roots at a time from a shared
 /// counter; per-worker `Enumerator` reuses scratch across roots.
-fn dynamic_count(g: &CsrGraph, plan: &Plan, roots: &[VertexId], chunk: usize) -> u64 {
+fn dynamic_count(
+    g: &CsrGraph,
+    plan: &Plan,
+    roots: &[VertexId],
+    chunk: usize,
+    hubs: Option<&HubBitmaps>,
+) -> u64 {
     let nthreads = threads::num_threads().min(roots.len().max(1));
     if nthreads <= 1 {
-        let mut e = Enumerator::new(g, plan);
+        let mut e = Enumerator::with_hubs(g, plan, hubs);
         return roots.iter().map(|&r| e.count_root(r, &mut NullSink)).sum();
     }
     let next = AtomicUsize::new(0);
@@ -107,7 +141,7 @@ fn dynamic_count(g: &CsrGraph, plan: &Plan, roots: &[VertexId], chunk: usize) ->
     std::thread::scope(|s| {
         for _ in 0..nthreads {
             s.spawn(|| {
-                let mut e = Enumerator::new(g, plan);
+                let mut e = Enumerator::with_hubs(g, plan, hubs);
                 let mut local = 0u64;
                 loop {
                     let start = next.fetch_add(chunk, Ordering::Relaxed);
@@ -131,12 +165,18 @@ fn dynamic_count(g: &CsrGraph, plan: &Plan, roots: &[VertexId], chunk: usize) ->
 /// the hubs — the load-imbalance pathology §5 describes. The executor
 /// also re-allocates per root (no scratch reuse), modeling the original
 /// AutoMine's per-call generality overhead.
-fn static_block_count(g: &CsrGraph, plan: &Plan, roots: &[VertexId]) -> u64 {
+fn static_block_count(
+    g: &CsrGraph,
+    plan: &Plan,
+    roots: &[VertexId],
+    hubs: Option<&HubBitmaps>,
+) -> u64 {
     let nthreads = threads::num_threads().min(roots.len().max(1));
     if nthreads <= 1 {
         let mut total = 0u64;
         for &r in roots {
-            let mut e = Enumerator::new(g, plan); // fresh per root: ORG overhead
+            // fresh per root: ORG overhead
+            let mut e = Enumerator::with_hubs(g, plan, hubs);
             total += e.count_root(r, &mut NullSink);
         }
         return total;
@@ -155,7 +195,7 @@ fn static_block_count(g: &CsrGraph, plan: &Plan, roots: &[VertexId]) -> u64 {
             s.spawn(move || {
                 let mut local = 0u64;
                 for &r in slice {
-                    let mut e = Enumerator::new(g, plan);
+                    let mut e = Enumerator::with_hubs(g, plan, hubs);
                     local += e.count_root(r, &mut NullSink);
                 }
                 total.fetch_add(local, Ordering::Relaxed);

@@ -14,9 +14,10 @@
 //! to the paper's example: load `N(v)` keeping only ids `< v`.
 
 use super::setops::{
-    bounded_copy_into, intersect_into, prefix_len, remove_values, subtract_into, NO_BOUND,
+    and_row_bounded, andnot_row_bounded, bounded_copy_into, emit_bits, intersect_into_hybrid,
+    load_row_bounded, prefix_len, remove_values, subtract_into_hybrid, ScanCost, NO_BOUND,
 };
-use crate::graph::{CsrGraph, VertexId};
+use crate::graph::{CsrGraph, HubBitmaps, VertexId};
 use crate::pattern::plan::Plan;
 
 /// Observer of enumeration work. All methods default to no-ops.
@@ -28,6 +29,12 @@ pub trait EnumSink {
     /// A set operation at `level` scanned `elems` elements.
     #[inline]
     fn on_scan(&mut self, _level: usize, _elems: usize) {}
+    /// A hybrid set operation at `level` processed `words` 64-bit bitmap
+    /// words (dense ANDs / probes — DESIGN.md §10). Word streams run at
+    /// in-bank internal bandwidth; the PIM `SimSink` charges them
+    /// separately from element scans.
+    #[inline]
+    fn on_word_ops(&mut self, _level: usize, _words: usize) {}
     /// `count` embeddings were completed at the last level.
     #[inline]
     fn on_embeddings(&mut self, _count: u64) {}
@@ -136,10 +143,22 @@ pub struct Enumerator<'g> {
     /// Candidate buffers: two per level for ping-pong merging.
     bufs: Vec<(Vec<VertexId>, Vec<VertexId>)>,
     bound: Vec<VertexId>,
+    /// Dense hub rows for the hybrid set kernels (DESIGN.md §10); `None`
+    /// keeps the pure sorted-merge engine.
+    hubs: Option<&'g HubBitmaps>,
+    /// Dense word accumulator for the all-hub fast path.
+    wbuf: Vec<u64>,
 }
 
 impl<'g> Enumerator<'g> {
     pub fn new(g: &'g CsrGraph, plan: &'g Plan) -> Self {
+        Self::with_hubs(g, plan, None)
+    }
+
+    /// Enumerator with the hybrid sparse/dense set engine enabled. Counts
+    /// are identical to [`Enumerator::new`]'s for every graph and plan
+    /// (pinned by `tests/prop_hybrid.rs`); only the work profile changes.
+    pub fn with_hubs(g: &'g CsrGraph, plan: &'g Plan, hubs: Option<&'g HubBitmaps>) -> Self {
         let n = plan.size();
         Enumerator {
             g,
@@ -147,6 +166,8 @@ impl<'g> Enumerator<'g> {
             fetch: FetchSpec::build(plan),
             bufs: (0..n).map(|_| (Vec::new(), Vec::new())).collect(),
             bound: vec![0; n],
+            hubs,
+            wbuf: Vec::new(),
         }
     }
 
@@ -178,8 +199,11 @@ impl<'g> Enumerator<'g> {
         }
         // Materialize level-1 candidates.
         let mut cands = std::mem::take(&mut self.bufs[1].0);
-        let scan = self.build_candidates(1, &mut cands);
-        sink.on_scan(1, scan);
+        let cost = self.build_candidates(1, &mut cands);
+        sink.on_scan(1, cost.elems);
+        if cost.words > 0 {
+            sink.on_word_ops(1, cost.words);
+        }
         let lo = start.min(cands.len());
         let hi = end.min(cands.len());
         let total = if n == 2 {
@@ -215,8 +239,11 @@ impl<'g> Enumerator<'g> {
         let n = self.plan.size();
         debug_assert!(level >= 2 && level < n);
         let mut cands = std::mem::take(&mut self.bufs[level].0);
-        let scan = self.build_candidates(level, &mut cands);
-        sink.on_scan(level, scan);
+        let cost = self.build_candidates(level, &mut cands);
+        sink.on_scan(level, cost.elems);
+        if cost.words > 0 {
+            sink.on_word_ops(level, cost.words);
+        }
         let total = if level == n - 1 {
             let c = cands.len() as u64;
             if c > 0 {
@@ -250,8 +277,8 @@ impl<'g> Enumerator<'g> {
     }
 
     /// Compute the candidate set for `level` into `out`, returning the
-    /// number of elements scanned by the set operations.
-    fn build_candidates(&mut self, level: usize, out: &mut Vec<VertexId>) -> usize {
+    /// [`ScanCost`] (sparse elements + dense words) of the set operations.
+    fn build_candidates(&mut self, level: usize, out: &mut Vec<VertexId>) -> ScanCost {
         let lp = &self.plan.levels[level];
         let ub = lp
             .upper
@@ -259,7 +286,7 @@ impl<'g> Enumerator<'g> {
             .map(|&r| self.bound[r])
             .min()
             .unwrap_or(NO_BOUND);
-        let mut scanned = 0usize;
+        let mut cost = ScanCost::default();
 
         // Order the intersections cheapest-first. Fixed-size scratch +
         // insertion sort: this runs once per partial embedding, so it must
@@ -277,31 +304,81 @@ impl<'g> Enumerator<'g> {
                 j -= 1;
             }
         }
+        debug_assert!(!ints.is_empty());
+
+        // Dense fast path (DESIGN.md §10): when the symmetry-breaking
+        // bound confines the level to the hub prefix and every operand is
+        // a hub, the whole chain runs in word-land — AND the intersect
+        // rows, AND-NOT the subtract rows, emit once. `ub` acts as a bit
+        // prefix mask, so only `ceil(ub/64)` words stream per operand.
+        if let Some(h) = self.hubs {
+            let dense = (ints.len() >= 2 || !lp.subtract.is_empty())
+                && ub <= h.prefix()
+                && ints.iter().chain(&lp.subtract).all(|&r| self.bound[r] < h.prefix());
+            if dense {
+                let mut w = std::mem::take(&mut self.wbuf);
+                let row = |r: usize| h.row(self.bound[r]).expect("checked above");
+                cost.words += load_row_bounded(row(ints[0]), ub, &mut w);
+                for &r in &ints[1..] {
+                    cost.words += and_row_bounded(&mut w, row(r));
+                }
+                for &r in &lp.subtract {
+                    cost.words += andnot_row_bounded(&mut w, row(r));
+                }
+                out.clear();
+                emit_bits(&w, out);
+                self.wbuf = w;
+                remove_values(out, &self.bound[..level]);
+                return cost;
+            }
+        }
 
         let mut tmp = std::mem::take(&mut self.bufs[level].1);
-        debug_assert!(!ints.is_empty());
         if ints.len() == 1 {
             let a = self.g.neighbors(self.bound[ints[0]]);
-            scanned += bounded_copy_into(a, ub, out);
+            cost.elems += bounded_copy_into(a, ub, out);
         } else {
-            let a = self.g.neighbors(self.bound[ints[0]]);
-            let b = self.g.neighbors(self.bound[ints[1]]);
-            scanned += intersect_into(a, b, ub, out);
+            let (va, vb) = (self.bound[ints[0]], self.bound[ints[1]]);
+            cost += intersect_into_hybrid(
+                self.hubs,
+                self.g.neighbors(va),
+                Some(va),
+                self.g.neighbors(vb),
+                Some(vb),
+                ub,
+                out,
+            );
             for &r in &ints[2..] {
-                let c = self.g.neighbors(self.bound[r]);
-                scanned += intersect_into(out, c, ub, &mut tmp);
+                let vc = self.bound[r];
+                cost += intersect_into_hybrid(
+                    self.hubs,
+                    out,
+                    None,
+                    self.g.neighbors(vc),
+                    Some(vc),
+                    ub,
+                    &mut tmp,
+                );
                 std::mem::swap(out, &mut tmp);
             }
         }
         for &r in &lp.subtract {
-            let c = self.g.neighbors(self.bound[r]);
-            scanned += subtract_into(out, c, ub, &mut tmp);
+            let vc = self.bound[r];
+            cost += subtract_into_hybrid(
+                self.hubs,
+                out,
+                None,
+                self.g.neighbors(vc),
+                Some(vc),
+                ub,
+                &mut tmp,
+            );
             std::mem::swap(out, &mut tmp);
         }
         self.bufs[level].1 = tmp;
         // Injectivity: drop already-bound vertices.
         remove_values(out, &self.bound[..level]);
-        scanned
+        cost
     }
 }
 

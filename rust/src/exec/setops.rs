@@ -6,8 +6,18 @@
 //! paper's in-bank filter implements) and terminates early once it is
 //! crossed. Each function returns the number of elements *scanned* so the
 //! PIM simulator can charge compute cycles.
+//!
+//! The `*_hybrid` kernels (DESIGN.md §10) additionally accept the dense
+//! [`HubBitmaps`] side structure and dispatch adaptively: a word-level
+//! dense path when both operands have bitmap rows and `ub` falls inside
+//! the hub prefix (`ub` becomes a bit-prefix mask), a probe path when one
+//! operand has a row (the sparse list is probed bit-by-bit, with a sorted
+//! tail merge for ids beyond the prefix), and the early-terminating merge
+//! otherwise. They return a [`ScanCost`] splitting sparse element scans
+//! from dense word ops so the PIM simulator can price the two streams
+//! differently.
 
-use crate::graph::VertexId;
+use crate::graph::{HubBitmaps, VertexId};
 
 /// Exclusive upper bound type; `VertexId::MAX` means unbounded.
 pub const NO_BOUND: VertexId = VertexId::MAX;
@@ -27,6 +37,8 @@ pub fn prefix_len(list: &[VertexId], th: VertexId) -> usize {
 /// sizes are skewed ≥16x) was tried and measured 7% *slower* on the 4-CC
 /// hot loop — the symmetry-breaking bound keeps effective list prefixes
 /// short enough that the early-terminating linear merge wins. Reverted.
+/// The skew case is instead handled by a *representation* change: the
+/// hybrid kernels below probe/stream dense hub bitmaps (DESIGN.md §10).
 pub fn intersect_into(
     a: &[VertexId],
     b: &[VertexId],
@@ -128,6 +140,370 @@ pub fn count_intersect(a: &[VertexId], b: &[VertexId], ub: VertexId) -> (u64, us
     (count, scanned)
 }
 
+// ---------------------------------------------------------------------
+// Hybrid sparse/dense kernels (DESIGN.md §10)
+// ---------------------------------------------------------------------
+
+/// Work done by a hybrid set operation, split by stream type: `elems`
+/// sorted-list elements scanned (the classic merge currency) and `words`
+/// 64-bit bitmap words touched (dense ANDs and single-bit probes). The
+/// PIM simulator charges the two at different rates — word streams run at
+/// in-bank internal bandwidth and never cross the fabric.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScanCost {
+    pub elems: usize,
+    pub words: usize,
+}
+
+impl std::ops::AddAssign for ScanCost {
+    #[inline]
+    fn add_assign(&mut self, o: ScanCost) {
+        self.elems += o.elems;
+        self.words += o.words;
+    }
+}
+
+/// Copy the first `min(ub, H)` bits of `row` into `w` (the dense
+/// accumulator), masking the tail of the last word — `ub` as a bit-prefix
+/// mask. Returns words written.
+pub fn load_row_bounded(row: &[u64], ub: VertexId, w: &mut Vec<u64>) -> usize {
+    w.clear();
+    let bits = (ub as usize).min(row.len() * 64);
+    let nw = bits.div_ceil(64);
+    w.extend_from_slice(&row[..nw]);
+    if bits % 64 != 0 {
+        if let Some(last) = w.last_mut() {
+            *last &= (1u64 << (bits % 64)) - 1;
+        }
+    }
+    nw
+}
+
+/// `w &= row` over `w`'s length. Returns words processed.
+#[inline]
+pub fn and_row_bounded(w: &mut [u64], row: &[u64]) -> usize {
+    for (a, b) in w.iter_mut().zip(row) {
+        *a &= *b;
+    }
+    w.len()
+}
+
+/// `w &= !row` over `w`'s length (dense subtraction). Returns words
+/// processed.
+#[inline]
+pub fn andnot_row_bounded(w: &mut [u64], row: &[u64]) -> usize {
+    for (a, b) in w.iter_mut().zip(row) {
+        *a &= !*b;
+    }
+    w.len()
+}
+
+/// Append the set-bit positions of `w` (ascending) to `out`.
+pub fn emit_bits(w: &[u64], out: &mut Vec<VertexId>) {
+    for (wi, &word) in w.iter().enumerate() {
+        let mut word = word;
+        while word != 0 {
+            let b = word.trailing_zeros();
+            out.push((wi * 64) as VertexId + b);
+            word &= word - 1;
+        }
+    }
+}
+
+/// Total set bits of `w`.
+#[inline]
+pub fn popcount_words(w: &[u64]) -> u64 {
+    w.iter().map(|x| x.count_ones() as u64).sum()
+}
+
+/// Is bit `x` set in `row`? Caller guarantees `x < row.len() * 64`.
+#[inline]
+fn bit(row: &[u64], x: VertexId) -> bool {
+    row[x as usize / 64] & (1 << (x % 64)) != 0
+}
+
+/// Probe-path intersection: elements of `a` below `min(ub, H)` are tested
+/// against `b`'s bitmap row (one word op each); elements in `[H, ub)` are
+/// resolved by a sorted merge against `b`'s `≥ H` suffix.
+fn probe_intersect(
+    a: &[VertexId],
+    b: &[VertexId],
+    b_row: &[u64],
+    h: VertexId,
+    ub: VertexId,
+    out: &mut Vec<VertexId>,
+) -> ScanCost {
+    let mut cost = ScanCost::default();
+    let lim = ub.min(h);
+    let mut i = 0usize;
+    while i < a.len() && a[i] < lim {
+        cost.words += 1;
+        if bit(b_row, a[i]) {
+            out.push(a[i]);
+        }
+        i += 1;
+    }
+    if ub > h {
+        let mut j = prefix_len(b, h);
+        while i < a.len() && j < b.len() {
+            let (x, y) = (a[i], b[j]);
+            if x >= ub || y >= ub {
+                break;
+            }
+            cost.elems += 1;
+            match x.cmp(&y) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    out.push(x);
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+    }
+    cost
+}
+
+/// Probe-path subtraction (`a \ b`), same tiling as [`probe_intersect`].
+fn probe_subtract(
+    a: &[VertexId],
+    b: &[VertexId],
+    b_row: &[u64],
+    h: VertexId,
+    ub: VertexId,
+    out: &mut Vec<VertexId>,
+) -> ScanCost {
+    let mut cost = ScanCost::default();
+    let lim = ub.min(h);
+    let mut i = 0usize;
+    while i < a.len() && a[i] < lim {
+        cost.words += 1;
+        if !bit(b_row, a[i]) {
+            out.push(a[i]);
+        }
+        i += 1;
+    }
+    if ub > h {
+        let mut j = prefix_len(b, h);
+        while i < a.len() {
+            let x = a[i];
+            if x >= ub {
+                break;
+            }
+            cost.elems += 1;
+            while j < b.len() && b[j] < x {
+                j += 1;
+                cost.elems += 1;
+            }
+            if j < b.len() && b[j] == x {
+                i += 1;
+                j += 1;
+            } else {
+                out.push(x);
+                i += 1;
+            }
+        }
+    }
+    cost
+}
+
+/// Hybrid `out = {x ∈ a ∩ b : x < ub}` — adaptive dispatch over the
+/// dense, probe, and merge paths (see module docs). `a_v` / `b_v` name
+/// the vertex whose neighbor list the operand is (when it is one), which
+/// is what makes the dense rows reachable; pass `None` for materialized
+/// intermediate lists. Exactly equivalent to [`intersect_into`] for every
+/// input (pinned by `tests/prop_hybrid.rs`).
+pub fn intersect_into_hybrid(
+    hubs: Option<&HubBitmaps>,
+    a: &[VertexId],
+    a_v: Option<VertexId>,
+    b: &[VertexId],
+    b_v: Option<VertexId>,
+    ub: VertexId,
+    out: &mut Vec<VertexId>,
+) -> ScanCost {
+    out.clear();
+    if let Some(h) = hubs {
+        let hp = h.prefix();
+        let ra = a_v.and_then(|v| h.row(v));
+        let rb = b_v.and_then(|v| h.row(v));
+        match (ra, rb) {
+            (Some(ra), Some(rb)) if ub <= hp => {
+                // Dense-dense: AND the two rows under the ub bit mask.
+                let bits = ub as usize;
+                let nw = bits.div_ceil(64);
+                let mut words = 0usize;
+                for wi in 0..nw {
+                    let mut w = ra[wi] & rb[wi];
+                    if wi == nw - 1 && bits % 64 != 0 {
+                        w &= (1u64 << (bits % 64)) - 1;
+                    }
+                    words += 1;
+                    let base = (wi * 64) as VertexId;
+                    while w != 0 {
+                        out.push(base + w.trailing_zeros());
+                        w &= w - 1;
+                    }
+                }
+                return ScanCost { elems: 0, words };
+            }
+            (Some(ra), Some(rb)) => {
+                // Both rows but the bound escapes the prefix: probe the
+                // shorter list against the longer's row.
+                return if a.len() <= b.len() {
+                    probe_intersect(a, b, rb, hp, ub, out)
+                } else {
+                    probe_intersect(b, a, ra, hp, ub, out)
+                };
+            }
+            (None, Some(rb)) => return probe_intersect(a, b, rb, hp, ub, out),
+            (Some(ra), None) => return probe_intersect(b, a, ra, hp, ub, out),
+            (None, None) => {}
+        }
+    }
+    ScanCost {
+        elems: intersect_into(a, b, ub, out),
+        words: 0,
+    }
+}
+
+/// Hybrid `out = {x ∈ a \ b : x < ub}`. Subtraction is not commutative,
+/// so only `b`'s row enables the probe path (plus the dense path when
+/// both rows exist and `ub` stays inside the prefix). Equivalent to
+/// [`subtract_into`] for every input.
+pub fn subtract_into_hybrid(
+    hubs: Option<&HubBitmaps>,
+    a: &[VertexId],
+    a_v: Option<VertexId>,
+    b: &[VertexId],
+    b_v: Option<VertexId>,
+    ub: VertexId,
+    out: &mut Vec<VertexId>,
+) -> ScanCost {
+    out.clear();
+    if let Some(h) = hubs {
+        let hp = h.prefix();
+        let ra = a_v.and_then(|v| h.row(v));
+        let rb = b_v.and_then(|v| h.row(v));
+        match (ra, rb) {
+            (Some(ra), Some(rb)) if ub <= hp => {
+                let bits = ub as usize;
+                let nw = bits.div_ceil(64);
+                let mut words = 0usize;
+                for wi in 0..nw {
+                    let mut w = ra[wi] & !rb[wi];
+                    if wi == nw - 1 && bits % 64 != 0 {
+                        w &= (1u64 << (bits % 64)) - 1;
+                    }
+                    words += 1;
+                    let base = (wi * 64) as VertexId;
+                    while w != 0 {
+                        out.push(base + w.trailing_zeros());
+                        w &= w - 1;
+                    }
+                }
+                return ScanCost { elems: 0, words };
+            }
+            (_, Some(rb)) => return probe_subtract(a, b, rb, hp, ub, out),
+            _ => {}
+        }
+    }
+    ScanCost {
+        elems: subtract_into(a, b, ub, out),
+        words: 0,
+    }
+}
+
+/// Hybrid `|{x ∈ a ∩ b : x < ub}|` — the dense path is a pure popcount
+/// stream (no materialization at all). Returns `(count, cost)`;
+/// equivalent to [`count_intersect`] for every input.
+pub fn count_intersect_hybrid(
+    hubs: Option<&HubBitmaps>,
+    a: &[VertexId],
+    a_v: Option<VertexId>,
+    b: &[VertexId],
+    b_v: Option<VertexId>,
+    ub: VertexId,
+) -> (u64, ScanCost) {
+    if let Some(h) = hubs {
+        let hp = h.prefix();
+        let ra = a_v.and_then(|v| h.row(v));
+        let rb = b_v.and_then(|v| h.row(v));
+        match (ra, rb) {
+            (Some(ra), Some(rb)) if ub <= hp => {
+                let bits = ub as usize;
+                let nw = bits.div_ceil(64);
+                let mut count = 0u64;
+                for wi in 0..nw {
+                    let mut w = ra[wi] & rb[wi];
+                    if wi == nw - 1 && bits % 64 != 0 {
+                        w &= (1u64 << (bits % 64)) - 1;
+                    }
+                    count += w.count_ones() as u64;
+                }
+                return (count, ScanCost { elems: 0, words: nw });
+            }
+            (Some(ra), Some(rb)) => {
+                let (shorter, longer, row) =
+                    if a.len() <= b.len() { (a, b, rb) } else { (b, a, ra) };
+                return probe_count(shorter, longer, row, hp, ub);
+            }
+            (None, Some(rb)) => return probe_count(a, b, rb, hp, ub),
+            (Some(ra), None) => return probe_count(b, a, ra, hp, ub),
+            (None, None) => {}
+        }
+    }
+    let (count, scanned) = count_intersect(a, b, ub);
+    (
+        count,
+        ScanCost {
+            elems: scanned,
+            words: 0,
+        },
+    )
+}
+
+fn probe_count(
+    a: &[VertexId],
+    b: &[VertexId],
+    b_row: &[u64],
+    h: VertexId,
+    ub: VertexId,
+) -> (u64, ScanCost) {
+    let mut cost = ScanCost::default();
+    let mut count = 0u64;
+    let lim = ub.min(h);
+    let mut i = 0usize;
+    while i < a.len() && a[i] < lim {
+        cost.words += 1;
+        if bit(b_row, a[i]) {
+            count += 1;
+        }
+        i += 1;
+    }
+    if ub > h {
+        let mut j = prefix_len(b, h);
+        while i < a.len() && j < b.len() {
+            let (x, y) = (a[i], b[j]);
+            if x >= ub || y >= ub {
+                break;
+            }
+            cost.elems += 1;
+            match x.cmp(&y) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    count += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+    }
+    (count, cost)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,5 +586,112 @@ mod tests {
         assert!(out.is_empty());
         subtract_into(&[], &v(&[1]), NO_BOUND, &mut out);
         assert!(out.is_empty());
+    }
+
+    // ---- hybrid kernels (exhaustive equivalence lives in
+    // tests/prop_hybrid.rs; these pin the dispatch arms directly) ----
+
+    use crate::graph::{gen, sort_by_degree_desc, CsrGraph, HubBitmaps};
+
+    fn hub_setup() -> (CsrGraph, HubBitmaps) {
+        let g = sort_by_degree_desc(&gen::power_law(400, 3_000, 120, 9)).graph;
+        let hubs = HubBitmaps::build(&g, Some(8));
+        assert!(hubs.prefix() >= 2, "need at least two hubs");
+        (g, hubs)
+    }
+
+    #[test]
+    fn word_primitives_roundtrip() {
+        let row = [0b1011u64, u64::MAX, 0];
+        let mut w = Vec::new();
+        // ub inside the first word masks the tail
+        assert_eq!(load_row_bounded(&row, 3, &mut w), 1);
+        assert_eq!(w, vec![0b011]);
+        let mut out = Vec::new();
+        emit_bits(&w, &mut out);
+        assert_eq!(out, v(&[0, 1]));
+        assert_eq!(popcount_words(&w), 2);
+        // full load + and/andnot
+        load_row_bounded(&row, 192, &mut w);
+        assert_eq!(w, row);
+        assert_eq!(and_row_bounded(&mut w, &[0b0001, 0b111, 0]), 3);
+        assert_eq!(w, vec![0b0001, 0b111, 0]);
+        assert_eq!(andnot_row_bounded(&mut w, &[0b0001, 0, 0]), 3);
+        assert_eq!(w, vec![0, 0b111, 0]);
+        let mut out = Vec::new();
+        emit_bits(&w, &mut out);
+        assert_eq!(out, v(&[64, 65, 66]));
+    }
+
+    #[test]
+    fn hybrid_paths_match_merge() {
+        let (g, hubs) = hub_setup();
+        let h = hubs.prefix();
+        let hub_a = 0u32;
+        let hub_b = 1u32;
+        let tail = (g.num_vertices() - 1) as u32; // low degree, no row
+        let cases = [
+            (hub_a, hub_b, h / 2),      // dense-dense, ub as bit mask
+            (hub_a, hub_b, h),          // dense-dense at the boundary
+            (hub_a, hub_b, NO_BOUND),   // both rows, bound escapes: probe
+            (tail, hub_a, NO_BOUND),    // sparse-dense probe + tail merge
+            (hub_a, tail, h / 2),       // row on the left only: swapped
+            (tail, tail, NO_BOUND),     // no rows: merge fallback
+        ];
+        for (va, vb, ub) in cases {
+            let (a, b) = (g.neighbors(va), g.neighbors(vb));
+            let mut want = Vec::new();
+            let mut got = Vec::new();
+            intersect_into(a, b, ub, &mut want);
+            let c = intersect_into_hybrid(Some(&hubs), a, Some(va), b, Some(vb), ub, &mut got);
+            assert_eq!(got, want, "intersect {va},{vb} ub={ub}");
+            subtract_into(a, b, ub, &mut want);
+            subtract_into_hybrid(Some(&hubs), a, Some(va), b, Some(vb), ub, &mut got);
+            assert_eq!(got, want, "subtract {va},{vb} ub={ub}");
+            let (n, _) = count_intersect(a, b, ub);
+            let (nh, _) = count_intersect_hybrid(Some(&hubs), a, Some(va), b, Some(vb), ub);
+            assert_eq!(nh, n, "count {va},{vb} ub={ub}");
+            let _ = c;
+        }
+    }
+
+    #[test]
+    fn dense_path_reports_words_not_elems() {
+        let (g, hubs) = hub_setup();
+        let h = hubs.prefix();
+        let mut out = Vec::new();
+        let c = intersect_into_hybrid(
+            Some(&hubs),
+            g.neighbors(0),
+            Some(0),
+            g.neighbors(1),
+            Some(1),
+            h,
+            &mut out,
+        );
+        assert_eq!(c.elems, 0);
+        assert_eq!(c.words, (h as usize).div_ceil(64));
+        // materialized operand (no id) against a hub row: probe path
+        let probe = intersect_into_hybrid(
+            Some(&hubs),
+            &out.clone(),
+            None,
+            g.neighbors(0),
+            Some(0),
+            NO_BOUND,
+            &mut out,
+        );
+        assert!(probe.words > 0 || out.is_empty());
+        // no hubs at all: pure merge cost
+        let m = intersect_into_hybrid(
+            None,
+            g.neighbors(0),
+            Some(0),
+            g.neighbors(1),
+            Some(1),
+            NO_BOUND,
+            &mut out,
+        );
+        assert_eq!(m.words, 0);
     }
 }

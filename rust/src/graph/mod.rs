@@ -3,8 +3,10 @@
 
 pub mod csr;
 pub mod gen;
+pub mod hub;
 pub mod io;
 pub mod sort;
 
 pub use csr::{CsrGraph, VertexId};
+pub use hub::HubBitmaps;
 pub use sort::{bfs_order, relabel, sort_by_degree_desc, Relabeling};

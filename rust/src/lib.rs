@@ -20,7 +20,9 @@
 //! locality-aware graph partitioning and replication (streaming
 //! Fennel/LDG + label-propagation refinement + a savings-driven replica
 //! planner) producing pluggable owner maps for the simulator
-//! (DESIGN.md §9):
+//! (DESIGN.md §9); and [`graph::hub::HubBitmaps`] plus the hybrid
+//! kernels in [`exec::setops`] give every executor a dense in-bank
+//! bitmap fast path over the high-degree prefix (DESIGN.md §10):
 //!
 //! ```
 //! use pimminer::exec::cpu::{count_plan, sampled_roots, CpuFlavor};

@@ -65,6 +65,7 @@ fn help() {
                   (--app <3-CC|4-CC|5-CC|3-MC|4-DI|4-CL> | --pattern <edgelist|name>)\n\
                   [--system pim|cpu] [--sample <ratio>] [--non-induced]\n\
                   [--no-filter] [--no-remap] [--no-dup] [--no-steal]\n\
+                  [--hub-bitmaps [--hub-threshold <deg>]]\n\
          motifs   (--dataset | --graph) [-k <3|4|5>] [--system pim|cpu]\n\
                   [--check]   one-pass census; --check cross-validates every\n\
                   per-pattern count against an independent compiled-plan run\n\
@@ -83,7 +84,11 @@ fn help() {
          4-clique 5-clique 5-cycle house\n\
          \n\
          --partitioner round-robin|streaming|refined selects the owner map\n\
-         (count/motifs/fsm/ladder/partition; DESIGN.md §9)"
+         (count/motifs/fsm/ladder/partition; DESIGN.md §9)\n\
+         --hub-bitmaps enables the hybrid sparse/dense set engine (dense\n\
+         in-bank bitmap rows for the high-degree prefix; DESIGN.md §10) on\n\
+         count/fsm/ladder, both systems; --hub-threshold <deg> overrides\n\
+         the degree heuristic"
     );
 }
 
@@ -109,7 +114,18 @@ fn options(args: &Args) -> SimOptions {
         stealing: !args.get_bool("no-steal"),
         capacity_per_unit: args.get("capacity").and_then(|v| v.parse().ok()),
         partitioner: partitioner_arg(args).unwrap_or_default(),
+        hub_bitmaps: args.get_bool("hub-bitmaps"),
+        hub_threshold: args.get("hub-threshold").and_then(|v| v.parse().ok()),
     }
+}
+
+/// Build the hub rows for the CPU executors when `--hub-bitmaps` is on
+/// (the PIM path builds its own inside the simulator setup).
+fn cpu_hubs(args: &Args, g: &CsrGraph) -> Option<pimminer::graph::HubBitmaps> {
+    args.get_bool("hub-bitmaps").then(|| {
+        let threshold = args.get("hub-threshold").and_then(|v| v.parse().ok());
+        pimminer::graph::HubBitmaps::build(g, threshold)
+    })
 }
 
 /// Parse `--partitioner`; `None` when the flag is absent.
@@ -156,7 +172,14 @@ fn count(args: &Args) {
     match system {
         "cpu" => {
             let roots = cpu::sampled_roots(g.num_vertices(), sample);
-            let r = cpu::run_application(&g, &app, &roots, CpuFlavor::AutoMineOpt);
+            let hubs = cpu_hubs(args, &g);
+            let r = cpu::run_application_hybrid(
+                &g,
+                &app,
+                &roots,
+                CpuFlavor::AutoMineOpt,
+                hubs.as_ref(),
+            );
             println!(
                 "{} on CPU: count={} time={}",
                 app.name,
@@ -177,6 +200,13 @@ fn count(args: &Args) {
                 report::pct(r.access.near_frac()),
                 r.steals
             );
+            if r.bitmap_words > 0 {
+                println!(
+                    "set-op streams: {} sparse element scans, {} in-bank bitmap word ops \
+                     (hybrid engine, DESIGN.md §10)",
+                    r.scan_elems, r.bitmap_words
+                );
+            }
         }
     }
 }
@@ -192,7 +222,14 @@ fn count_pattern(args: &Args, g: &CsrGraph, sample: f64, spec: &str) {
     match args.get_or("system", "pim") {
         "cpu" => {
             let t = std::time::Instant::now();
-            let count = cpu::count_plan(g, &compiled.plan, &roots, CpuFlavor::AutoMineOpt);
+            let hubs = cpu_hubs(args, g);
+            let count = cpu::count_plan_hybrid(
+                g,
+                &compiled.plan,
+                &roots,
+                CpuFlavor::AutoMineOpt,
+                hubs.as_ref(),
+            );
             println!(
                 "{name} on CPU: count={count} time={} (order {:?}, est cost {:.3e})",
                 report::s(t.elapsed().as_secs_f64()),
@@ -354,7 +391,8 @@ fn fsm(args: &Args) {
     let result = match args.get_or("system", "pim") {
         "cpu" => {
             let t = std::time::Instant::now();
-            let r = mine::fsm_mine(&g, &cfg);
+            let hubs = cpu_hubs(args, &g);
+            let r = mine::fsm_mine_hybrid(&g, &cfg, hubs.as_ref());
             println!(
                 "FSM on CPU: {} frequent patterns (support ≥ {}) in {}",
                 r.frequent.len(),
@@ -654,8 +692,12 @@ fn ladder(args: &Args) {
     );
     let mut base = None;
     let partitioner = partitioner_arg(args).unwrap_or_default();
+    let hub_bitmaps = args.get_bool("hub-bitmaps");
+    let hub_threshold = args.get("hub-threshold").and_then(|v| v.parse().ok());
     for (name, mut opts) in SimOptions::ladder() {
         opts.partitioner = partitioner;
+        opts.hub_bitmaps = hub_bitmaps;
+        opts.hub_threshold = hub_threshold;
         let r = match &pattern_plan {
             Some(plan) => simulate_plan(&g, plan, &roots, &opts, &cfg),
             None => pimminer::pim::simulate_app(&g, app.as_ref().unwrap(), &roots, &opts, &cfg),

@@ -24,8 +24,8 @@
 //!   (DESIGN.md §8).
 
 use crate::exec::enumerate::{EnumSink, NullSink};
-use crate::exec::setops::{intersect_into, NO_BOUND};
-use crate::graph::{CsrGraph, VertexId};
+use crate::exec::setops::{intersect_into_hybrid, ScanCost, NO_BOUND};
+use crate::graph::{CsrGraph, HubBitmaps, VertexId};
 use crate::pattern::pattern::{permute_all, Pattern, MAX_PATTERN};
 use crate::util::threads;
 use std::collections::HashSet;
@@ -247,10 +247,13 @@ pub struct MatchScratch {
 /// 0 = `root`, updating the candidate's domain sets and charging `sink`
 /// per fetch/scan/embedding plus one
 /// [`on_aggregate`](EnumSink::on_aggregate) per embedding (`k` 8-byte
-/// domain-entry updates).
+/// domain-entry updates). `hubs` enables the hybrid sparse/dense set
+/// kernels for the candidate-generation intersections (DESIGN.md §10);
+/// embedding counts and domains are identical either way.
 #[allow(clippy::too_many_arguments)]
 pub fn match_rooted(
     g: &CsrGraph,
+    hubs: Option<&HubBitmaps>,
     cand: &LabeledPattern,
     shape: &CandShape,
     cand_key: usize,
@@ -276,6 +279,7 @@ pub fn match_rooted(
     }
     descend(
         g,
+        hubs,
         cand,
         cand_key,
         1,
@@ -290,6 +294,7 @@ pub fn match_rooted(
 #[allow(clippy::too_many_arguments)]
 fn descend(
     g: &CsrGraph,
+    hubs: Option<&HubBitmaps>,
     cand: &LabeledPattern,
     cand_key: usize,
     level: usize,
@@ -302,28 +307,46 @@ fn descend(
     let k = cand.size();
     // Candidates: intersection of earlier bound vertices' neighbor lists
     // over the pattern's black edges into `level` (≥ 1 by connected
-    // order), then label + injectivity filters.
+    // order), then label + injectivity filters. FSM embeddings are
+    // unbounded (no symmetry restriction), so the hybrid kernels take the
+    // probe path against hub rows rather than the dense `ub`-masked one.
     let preds = &shape.preds[level][..shape.npreds[level]];
     debug_assert!(!preds.is_empty(), "candidate orders must be connected");
     let (mut cands, mut tmp) = std::mem::take(&mut bufs[level]);
-    let mut scanned = 0usize;
+    let mut cost = ScanCost::default();
     if preds.len() == 1 {
         cands.clear();
         cands.extend_from_slice(g.neighbors(bound[preds[0]]));
-        scanned += cands.len();
+        cost.elems += cands.len();
     } else {
-        scanned += intersect_into(
-            g.neighbors(bound[preds[0]]),
-            g.neighbors(bound[preds[1]]),
+        let (va, vb) = (bound[preds[0]], bound[preds[1]]);
+        cost += intersect_into_hybrid(
+            hubs,
+            g.neighbors(va),
+            Some(va),
+            g.neighbors(vb),
+            Some(vb),
             NO_BOUND,
             &mut cands,
         );
         for &p in &preds[2..] {
-            scanned += intersect_into(&cands, g.neighbors(bound[p]), NO_BOUND, &mut tmp);
+            let vc = bound[p];
+            cost += intersect_into_hybrid(
+                hubs,
+                &cands,
+                None,
+                g.neighbors(vc),
+                Some(vc),
+                NO_BOUND,
+                &mut tmp,
+            );
             std::mem::swap(&mut cands, &mut tmp);
         }
     }
-    sink.on_scan(level, scanned);
+    sink.on_scan(level, cost.elems);
+    if cost.words > 0 {
+        sink.on_word_ops(level, cost.words);
+    }
     let want = cand.labels[level];
     cands.retain(|&c| g.label(c) == want && !bound[..level].contains(&c));
 
@@ -346,7 +369,7 @@ fn descend(
                 sink.on_fetch(level, c, g.degree(c), g.degree(c));
             }
             total += descend(
-                g, cand, cand_key, level + 1, bound, shape, sink, domains, bufs,
+                g, hubs, cand, cand_key, level + 1, bound, shape, sink, domains, bufs,
             );
         }
     }
@@ -481,17 +504,28 @@ pub fn fsm_mine_with(
 /// [`pim::sim::simulate_fsm`](crate::pim::sim::simulate_fsm) for the
 /// simulated-machine run).
 pub fn fsm_mine(g: &CsrGraph, cfg: &FsmConfig) -> FsmResult {
-    fsm_mine_with(g, cfg, &mut CpuLevelExecutor)
+    fsm_mine_with(g, cfg, &mut CpuLevelExecutor { hubs: None })
+}
+
+/// [`fsm_mine`] with the hybrid sparse/dense set engine: candidate
+/// generation probes hub-bitmap rows instead of merging full hub lists
+/// (DESIGN.md §10). Results are identical to [`fsm_mine`]'s.
+pub fn fsm_mine_hybrid(g: &CsrGraph, cfg: &FsmConfig, hubs: Option<&HubBitmaps>) -> FsmResult {
+    fsm_mine_with(g, cfg, &mut CpuLevelExecutor { hubs })
 }
 
 /// The CPU candidate evaluator: dynamic root chunks across host threads,
 /// per-thread [`LevelAcc`]s merged at the end.
-pub struct CpuLevelExecutor;
+pub struct CpuLevelExecutor<'h> {
+    /// Hub rows for the hybrid kernels; `None` = pure sorted merge.
+    pub hubs: Option<&'h HubBitmaps>,
+}
 
-impl LevelExecutor for CpuLevelExecutor {
+impl LevelExecutor for CpuLevelExecutor<'_> {
     fn run_level(&mut self, g: &CsrGraph, candidates: &[LabeledPattern]) -> Vec<CandidateStats> {
         let n = g.num_vertices();
         let shapes: Vec<CandShape> = candidates.iter().map(CandShape::of).collect();
+        let hubs = self.hubs;
         threads::par_fold(
             n,
             32,
@@ -500,6 +534,7 @@ impl LevelExecutor for CpuLevelExecutor {
                 for (ci, cand) in candidates.iter().enumerate() {
                     let emb = match_rooted(
                         g,
+                        hubs,
                         cand,
                         &shapes[ci],
                         ci,
@@ -643,7 +678,9 @@ mod tests {
         let mut scratch = MatchScratch::default();
         let total: u64 = (0..4)
             .map(|v| {
-                match_rooted(&g, &tri, &shape, 0, v, &mut NullSink, &mut domains, &mut scratch)
+                match_rooted(
+                    &g, None, &tri, &shape, 0, v, &mut NullSink, &mut domains, &mut scratch,
+                )
             })
             .sum();
         // ordered embeddings: C(4,3) × |Aut(K3)| = 4 × 6

@@ -26,6 +26,6 @@ pub mod fsm;
 pub use census::{motif_census, CensusEngine, MotifCensus};
 pub use classify::{PatternClassifier, MAX_MOTIF_K};
 pub use fsm::{
-    fsm_mine, fsm_mine_with, CandShape, CandidateStats, CpuLevelExecutor, FrequentPattern,
-    FsmConfig, FsmResult, LabeledPattern, LevelAcc, LevelExecutor, MatchScratch,
+    fsm_mine, fsm_mine_hybrid, fsm_mine_with, CandShape, CandidateStats, CpuLevelExecutor,
+    FrequentPattern, FsmConfig, FsmResult, LabeledPattern, LevelAcc, LevelExecutor, MatchScratch,
 };

@@ -37,6 +37,12 @@ pub struct PimConfig {
     /// Elements the PIM core scans per memory cycle (4-issue @ 250 MHz
     /// against a 1 GHz memory clock ⇒ 1).
     pub scan_elems_per_cycle: u64,
+    /// 64-bit bitmap words the in-bank logic streams per memory cycle for
+    /// the hybrid set engine's dense path (DESIGN.md §10). A bank group's
+    /// internal row buffer feeds 32 B/cycle ⇒ 4 words/cycle — 4× the
+    /// 8 B/cycle external link, which is the internal-bandwidth win the
+    /// bitmap representation converts irregular merges into.
+    pub bitmap_words_per_cycle: u64,
     /// Outstanding-miss overlap: the L1 caches have 16 MSHRs (Table 4), so
     /// consecutive access startup latencies overlap. Effective startup
     /// charged per access = latency / mshr_overlap (8 = conservative —
@@ -66,6 +72,7 @@ impl Default for PimConfig {
             row_overhead: 28,
             capacity_bytes: 4 << 30,
             scan_elems_per_cycle: 1,
+            bitmap_words_per_cycle: 4,
             mshr_overlap: 8,
             l1d_bytes: 32 << 10,
             l1_hit_latency: 16,

@@ -26,7 +26,7 @@ use super::config::PimConfig;
 use super::placement::Placement;
 use super::stealing::{schedule, Piece};
 use crate::exec::enumerate::{EnumSink, Enumerator};
-use crate::graph::{CsrGraph, VertexId};
+use crate::graph::{CsrGraph, HubBitmaps, VertexId};
 use crate::mine::census::{CensusEngine, MotifCensus};
 use crate::mine::classify::PatternClassifier;
 use crate::mine::fsm::{
@@ -69,6 +69,14 @@ pub struct SimOptions {
     /// change traffic classes under `remap` (the task→unit assignment and
     /// LocalFirst classification both read the owner map).
     pub partitioner: PartitionStrategy,
+    /// DESIGN.md §10: hybrid sparse/dense set engine. Every unit holds a
+    /// private copy of the hub-bitmap rows, intersections whose symmetry
+    /// bound falls in the hub prefix run as in-bank word streams, and the
+    /// rows' bytes are charged against the per-unit replica budget.
+    pub hub_bitmaps: bool,
+    /// Hub degree threshold override (`--hub-threshold`); `None` uses
+    /// [`HubBitmaps::auto_threshold`].
+    pub hub_threshold: Option<usize>,
 }
 
 impl SimOptions {
@@ -79,6 +87,8 @@ impl SimOptions {
         stealing: false,
         capacity_per_unit: None,
         partitioner: PartitionStrategy::RoundRobin,
+        hub_bitmaps: false,
+        hub_threshold: None,
     };
 
     pub fn all() -> SimOptions {
@@ -194,6 +204,13 @@ pub struct SimResult {
     /// Critical-path cycles of the merge (already included in
     /// `total_cycles`).
     pub agg_cycles: u64,
+    /// Sorted-list elements scanned by the set-operation sparse path —
+    /// one side of the DESIGN.md §10 work split.
+    pub scan_elems: u64,
+    /// 64-bit bitmap words processed by the hybrid set engine's dense
+    /// path (in-bank streams that never cross the fabric). Zero unless
+    /// [`SimOptions::hub_bitmaps`] is on.
+    pub bitmap_words: u64,
 }
 
 impl SimResult {
@@ -237,6 +254,8 @@ impl SimResult {
         self.agg_updates += o.agg_updates;
         self.agg_merge_bytes += o.agg_merge_bytes;
         self.agg_cycles += o.agg_cycles;
+        self.scan_elems += o.scan_elems;
+        self.bitmap_words += o.bitmap_words;
     }
 
     /// The all-zero identity for [`add`](Self::add) (`v_b_min` saturated
@@ -260,6 +279,8 @@ impl SimResult {
             agg_updates: 0,
             agg_merge_bytes: 0,
             agg_cycles: 0,
+            scan_elems: 0,
+            bitmap_words: 0,
         }
     }
 }
@@ -292,6 +313,10 @@ struct GlobalAcc {
     agg_f: [f64; 3],
     /// Support-state updates observed.
     agg_updates: u64,
+    /// Sparse set-operation elements scanned.
+    scan_elems: u64,
+    /// Dense bitmap words processed by the hybrid set engine.
+    bitmap_words: u64,
 }
 
 impl GlobalAcc {
@@ -321,6 +346,8 @@ impl GlobalAcc {
             *a += *b;
         }
         self.agg_updates += o.agg_updates;
+        self.scan_elems += o.scan_elems;
+        self.bitmap_words += o.bitmap_words;
     }
 }
 
@@ -493,6 +520,7 @@ impl EnumSink for SimSink<'_> {
             return;
         }
         let cfg = self.cfg;
+        self.acc.scan_elems += elems as u64;
         // Set operations stream their inputs/outputs through scratch
         // buffers the PIM core PIM_malloc'd. Under local-first mapping the
         // scratch lives in the core's own bank group (near); under the
@@ -512,6 +540,41 @@ impl EnumSink for SimSink<'_> {
                 self.acc.unit_bank_occ[self.requester] += transfer;
             }
             AddrMap::DefaultInterleave => {
+                self.acc.uniform_bank_occ += transfer;
+                self.acc.uniform_link_occ += transfer;
+            }
+        }
+    }
+
+    fn on_word_ops(&mut self, _level: usize, words: usize) {
+        if words == 0 {
+            return;
+        }
+        let cfg = self.cfg;
+        self.acc.bitmap_words += words as u64;
+        // The dense path streams bitmap rows resident in the requesting
+        // unit's own bank group (every unit holds a private copy — the
+        // bytes were budgeted by `build_placement`). Under local-first
+        // mapping the words never leave the bank: they run at the internal
+        // row-buffer bandwidth (`bitmap_words_per_cycle`) and put no load
+        // on the TSV links. Under the default interleave even the rows are
+        // striped, so the stream pays the usual class split and link
+        // service — bitmaps alone don't fix a bad address map.
+        let bytes = words as u64 * 8;
+        let split = split_access(cfg, self.map, self.requester, self.requester, bytes, false);
+        self.add_access(self.map, self.requester, self.requester, bytes, false);
+        let startup = startup_latency(cfg, split.dominant()) / cfg.mshr_overlap.max(1);
+        let compute = (words as u64).div_ceil(cfg.bitmap_words_per_cycle.max(1));
+        match self.map {
+            AddrMap::LocalFirst => {
+                self.task_cycles += startup + compute;
+                self.acc.unit_bank_occ[self.requester] += compute;
+            }
+            AddrMap::DefaultInterleave => {
+                // Striped rows cross the fabric: the stream is capped by
+                // the external link, not the internal row buffer.
+                let transfer = bytes.div_ceil(cfg.link_bytes_per_cycle);
+                self.task_cycles += startup + compute.max(transfer);
                 self.acc.uniform_bank_occ += transfer;
                 self.acc.uniform_link_occ += transfer;
             }
@@ -577,12 +640,21 @@ pub fn build_placement(g: &CsrGraph, opts: &SimOptions, cfg: &PimConfig) -> Plac
     let partitioning = part::partition(g, cfg, strategy);
     let mut placement = Placement::from_partitioning(&partitioning);
     if opts.duplication && opts.remap {
+        // The hub-bitmap rows (DESIGN.md §10) are replicated into every
+        // unit's bank group, so their bytes come out of the same per-unit
+        // replica budget Algorithm 2 / the replica planner fill.
+        let hub_reserve = if opts.hub_bitmaps {
+            HubBitmaps::projected_bytes(g, opts.hub_threshold)
+        } else {
+            0
+        };
+        let cap = opts
+            .capacity_per_unit
+            .unwrap_or_else(|| cfg.capacity_per_unit())
+            .saturating_sub(hub_reserve);
         placement = match opts.partitioner {
-            PartitionStrategy::RoundRobin => {
-                placement.with_duplication(g, cfg, opts.capacity_per_unit)
-            }
+            PartitionStrategy::RoundRobin => placement.with_duplication(g, cfg, Some(cap)),
             PartitionStrategy::Streaming | PartitionStrategy::Refined => {
-                let cap = opts.capacity_per_unit.unwrap_or_else(|| cfg.capacity_per_unit());
                 let plan = part::plan_replicas(g, cfg, &placement.owner, cap);
                 placement.with_replica_plan(g, &plan)
             }
@@ -591,18 +663,23 @@ pub fn build_placement(g: &CsrGraph, opts: &SimOptions, cfg: &PimConfig) -> Plac
     placement
 }
 
-/// Shared per-run setup: placement (owner map + replicas) and the L1
-/// hot-prefix residency boundary.
+/// Shared per-run setup: placement (owner map + replicas), the L1
+/// hot-prefix residency boundary, and the hub-bitmap rows when the
+/// hybrid set engine is on.
 struct SimSetup {
     placement: Placement,
     hot_k: VertexId,
     v_b_min: VertexId,
+    hubs: Option<HubBitmaps>,
 }
 
 impl SimSetup {
     fn new(g: &CsrGraph, opts: &SimOptions, cfg: &PimConfig) -> Self {
         let placement = build_placement(g, opts, cfg);
         let v_b_min = placement.v_b.iter().copied().min().unwrap_or(0);
+        let hubs = opts
+            .hub_bitmaps
+            .then(|| HubBitmaps::build(g, opts.hub_threshold));
 
         // Hot-prefix residency boundary: the largest K whose (half,
         // reserving capacity for the task working set) prefix of neighbor
@@ -625,6 +702,7 @@ impl SimSetup {
             placement,
             hot_k,
             v_b_min,
+            hubs,
         }
     }
 
@@ -868,6 +946,8 @@ fn finish_sim(
         agg_updates: acc.agg_updates,
         agg_merge_bytes,
         agg_cycles,
+        scan_elems: acc.scan_elems,
+        bitmap_words: acc.bitmap_words,
     }
 }
 
@@ -882,18 +962,24 @@ pub fn simulate_plan(
     struct PlanRunner<'g> {
         g: &'g CsrGraph,
         plan: &'g Plan,
+        hubs: Option<&'g HubBitmaps>,
     }
     impl<'g> TaskRunner for PlanRunner<'g> {
         type Worker = Enumerator<'g>;
         fn worker(&self) -> Enumerator<'g> {
-            Enumerator::new(self.g, self.plan)
+            Enumerator::with_hubs(self.g, self.plan, self.hubs)
         }
         fn run(&self, w: &mut Enumerator<'g>, root: VertexId, sink: &mut SimSink<'_>) {
             w.count_root(root, sink);
         }
     }
     let setup = SimSetup::new(g, opts, cfg);
-    let (acc, profiles, _) = profile_pass(&PlanRunner { g, plan }, roots, opts, cfg, &setup);
+    let runner = PlanRunner {
+        g,
+        plan,
+        hubs: setup.hubs.as_ref(),
+    };
+    let (acc, profiles, _) = profile_pass(&runner, roots, opts, cfg, &setup);
     finish_sim(roots, profiles, acc, opts, cfg, &setup, None)
 }
 
@@ -968,6 +1054,7 @@ pub fn simulate_fsm(
         g: &'a CsrGraph,
         cands: &'a [LabeledPattern],
         shapes: Vec<CandShape>,
+        hubs: Option<&'a HubBitmaps>,
     }
     impl TaskRunner for FsmLevelRunner<'_> {
         type Worker = (LevelAcc, MatchScratch);
@@ -979,6 +1066,7 @@ pub fn simulate_fsm(
             for (ci, cand) in self.cands.iter().enumerate() {
                 let n = fsm::match_rooted(
                     self.g,
+                    self.hubs,
                     cand,
                     &self.shapes[ci],
                     ci,
@@ -1008,6 +1096,7 @@ pub fn simulate_fsm(
                 g,
                 cands: candidates,
                 shapes: candidates.iter().map(CandShape::of).collect(),
+                hubs: self.setup.hubs.as_ref(),
             };
             let (acc, profiles, workers) =
                 profile_pass(&runner, &self.roots, self.opts, self.cfg, &self.setup);
@@ -1402,6 +1491,111 @@ mod tests {
         assert!(sim.agg_updates > 0);
         // sim.count totals the embeddings of every evaluated candidate
         assert!(sim.count >= cpu.frequent.iter().map(|f| f.embeddings).sum::<u64>());
+    }
+
+    #[test]
+    fn hub_bitmaps_preserve_counts_and_charge_word_ops() {
+        let g = test_graph();
+        let cfg = PimConfig::default();
+        let app = application("4-CC").unwrap();
+        let roots = all_roots(&g);
+        let base = simulate_app(&g, &app, &roots, &SimOptions::all(), &cfg);
+        let hyb_opts = SimOptions {
+            hub_bitmaps: true,
+            ..SimOptions::all()
+        };
+        let hyb = simulate_app(&g, &app, &roots, &hyb_opts, &cfg);
+        assert_eq!(hyb.count, base.count, "hybrid kernels must not change counts");
+        // the merge engine reports no word ops; the hybrid engine must
+        // convert a chunk of element scans into in-bank word streams
+        assert_eq!(base.bitmap_words, 0);
+        assert!(hyb.bitmap_words > 0);
+        assert!(
+            hyb.scan_elems < base.scan_elems,
+            "word ops should displace element scans: {} vs {}",
+            hyb.scan_elems,
+            base.scan_elems
+        );
+        // counts also survive under the baseline interleave
+        let hyb_base = SimOptions {
+            hub_bitmaps: true,
+            ..SimOptions::BASELINE
+        };
+        assert_eq!(simulate_app(&g, &app, &roots, &hyb_base, &cfg).count, base.count);
+    }
+
+    #[test]
+    fn hub_bitmaps_preserve_mining_results() {
+        use crate::graph::gen;
+        let g = test_graph();
+        let cfg = PimConfig::default();
+        let roots = all_roots(&g);
+        let opts = SimOptions {
+            hub_bitmaps: true,
+            ..SimOptions::all()
+        };
+        // motif census: the ESU engine takes no intersections, so counts
+        // are trivially stable — pin that the option is at least harmless
+        let cpu = crate::mine::census::motif_census(&g, 3, &roots);
+        assert_eq!(simulate_motifs(&g, 3, &roots, &opts, &cfg).census.counts, cpu.counts);
+        // FSM: candidate generation does run hybrid kernels
+        let lg = crate::graph::sort_by_degree_desc(&gen::with_random_labels(
+            gen::power_law(400, 1600, 60, 5),
+            3,
+            11,
+        ))
+        .graph;
+        let fsm_cfg = FsmConfig {
+            min_support: 20,
+            max_size: 3,
+        };
+        let want = fsm::fsm_mine(&lg, &fsm_cfg);
+        let (got, sim) = simulate_fsm(&lg, &fsm_cfg, &opts, &cfg);
+        assert_eq!(want.frequent.len(), got.frequent.len());
+        for (a, b) in want.frequent.iter().zip(&got.frequent) {
+            assert_eq!(a.support, b.support);
+            assert_eq!(a.embeddings, b.embeddings);
+        }
+        assert!(sim.bitmap_words > 0, "FSM on a hubby graph must hit the probe path");
+    }
+
+    #[test]
+    fn hub_bitmap_bytes_consume_replica_budget() {
+        let g = test_graph();
+        let cfg = PimConfig::default();
+        let reserve = crate::graph::HubBitmaps::projected_bytes(&g, None);
+        assert!(reserve > 0, "test graph must have hubs");
+        // Budget = own share + the bitmap reserve + 10% replica headroom:
+        // both runs get the same cap, so the hub run's replicas are
+        // squeezed by exactly the reserve.
+        let cap = g.total_bytes() / cfg.num_units() as u64 + reserve + g.total_bytes() / 10;
+        let no_hub = SimOptions {
+            filter: true,
+            remap: true,
+            duplication: true,
+            capacity_per_unit: Some(cap),
+            ..SimOptions::BASELINE
+        };
+        let hub = SimOptions {
+            hub_bitmaps: true,
+            ..no_hub
+        };
+        let p_no = build_placement(&g, &no_hub, &cfg);
+        let p_hub = build_placement(&g, &hub, &cfg);
+        let rep = p_hub.replica_report(&g);
+        for u in 0..cfg.num_units() {
+            // bitmap bytes + replica bytes + owned bytes stay within cap
+            assert!(
+                rep.unit_replica_bytes[u] + p_hub.owned_bytes[u] + reserve <= cap,
+                "unit {u} over budget with bitmaps"
+            );
+            // the boundary can only recede when the rows eat budget
+            assert!(p_hub.v_b[u] <= p_no.v_b[u], "unit {u}");
+        }
+        // at this (partial-duplication) capacity the reserve must actually
+        // displace some replicas somewhere
+        let rep_no = p_no.replica_report(&g);
+        assert!(rep.total_bytes < rep_no.total_bytes);
     }
 
     #[test]

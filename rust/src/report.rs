@@ -139,6 +139,10 @@ pub mod json {
             self.parts.push(format!("\"{}\":{lit}", escape(k)));
             self
         }
+        pub fn bool(mut self, k: &str, v: bool) -> Obj {
+            self.parts.push(format!("\"{}\":{v}", escape(k)));
+            self
+        }
         pub fn raw(mut self, k: &str, v: &str) -> Obj {
             self.parts.push(format!("\"{}\":{v}", escape(k)));
             self

@@ -6,19 +6,26 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Number of worker threads to use: `PIMMINER_THREADS` env override, else
-/// available parallelism, else 4.
+/// Number of worker threads to use: `PIMMINER_THREADS` env override
+/// (ignored unless it parses to ≥ 1), else available parallelism, else 4.
+/// The override is what makes bench and CI runs reproducible on shared
+/// machines — `PIMMINER_THREADS=8 make bench` pins every executor,
+/// mining engine, and the simulator's profiling pass to 8 workers.
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("PIMMINER_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            if n >= 1 {
-                return n;
-            }
-        }
+    match parse_threads_override(std::env::var("PIMMINER_THREADS").ok().as_deref()) {
+        Some(n) => n,
+        None => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4),
     }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
+}
+
+/// The override-parsing rule behind [`num_threads`], separated so the
+/// regression test never has to mutate the process environment (setenv
+/// races getenv in a multithreaded test binary): the variable counts
+/// only when it parses to an integer ≥ 1.
+fn parse_threads_override(v: Option<&str>) -> Option<usize> {
+    v.and_then(|s| s.parse::<usize>().ok()).filter(|&n| n >= 1)
 }
 
 /// Run `f(i)` for every `i in 0..n` across `threads` workers, claiming
@@ -158,6 +165,21 @@ mod tests {
         for (i, x) in v.iter().enumerate() {
             assert_eq!(*x, i * 3);
         }
+    }
+
+    #[test]
+    fn env_override_parsing_rules() {
+        // Valid overrides take effect verbatim.
+        assert_eq!(parse_threads_override(Some("3")), Some(3));
+        assert_eq!(parse_threads_override(Some("1")), Some(1));
+        assert_eq!(parse_threads_override(Some("128")), Some(128));
+        // Invalid or absent values fall through to the default path.
+        for bad in ["0", "-2", "lots", "", " 4", "4.0"] {
+            assert_eq!(parse_threads_override(Some(bad)), None, "{bad:?}");
+        }
+        assert_eq!(parse_threads_override(None), None);
+        // And the live path always yields a usable worker count.
+        assert!(num_threads() >= 1);
     }
 
     #[test]

@@ -1,0 +1,150 @@
+//! Property tests for the hybrid sparse/dense set engine (DESIGN.md §10):
+//! every `*_hybrid` kernel must produce exactly the sorted-merge kernel's
+//! output — same output set, same count — over random graphs, random
+//! operand pairs (hub/hub, hub/tail, materialized intermediates), and
+//! random `ub` bounds including `NO_BOUND`, zero, and the empty-prefix
+//! configuration where no bitmap rows exist at all.
+
+use pimminer::exec::cpu::{count_plan, count_plan_hybrid, sampled_roots, CpuFlavor};
+use pimminer::exec::setops::{
+    count_intersect, count_intersect_hybrid, intersect_into, intersect_into_hybrid,
+    subtract_into, subtract_into_hybrid, NO_BOUND,
+};
+use pimminer::graph::{gen, sort_by_degree_desc, CsrGraph, HubBitmaps, VertexId};
+use pimminer::mine::fsm::{fsm_mine, fsm_mine_hybrid, FsmConfig};
+use pimminer::pattern::compile::compile_spec;
+use pimminer::util::rng::Rng;
+
+fn graphs() -> Vec<CsrGraph> {
+    vec![
+        sort_by_degree_desc(&gen::power_law(600, 4_000, 150, 11)).graph,
+        sort_by_degree_desc(&gen::power_law(300, 1_200, 60, 23)).graph,
+        sort_by_degree_desc(&gen::erdos_renyi(200, 1_500, 5)).graph,
+        gen::star(40),   // extreme skew
+        gen::clique(30), // all-dense prefix
+    ]
+}
+
+/// `ub` values probing every dispatch regime for a prefix of length `h`.
+fn bounds(h: VertexId, n: usize, rng: &mut Rng) -> Vec<VertexId> {
+    let mut ubs = vec![
+        0,
+        1,
+        h / 2,
+        h.saturating_sub(1),
+        h,
+        h + 1,
+        n as VertexId,
+        NO_BOUND,
+    ];
+    for _ in 0..4 {
+        ubs.push(rng.below(n as u64 + 1) as VertexId);
+    }
+    ubs
+}
+
+#[test]
+fn hybrid_kernels_match_merge_kernels() {
+    let mut rng = Rng::new(99);
+    for (gi, g) in graphs().into_iter().enumerate() {
+        let n = g.num_vertices();
+        // several thresholds: tiny (broad prefix), the heuristic, huge
+        // (empty prefix — every call must fall back to the merge)
+        for threshold in [Some(2), None, Some(usize::MAX)] {
+            let hubs = HubBitmaps::build(&g, threshold);
+            let h = hubs.prefix();
+            let mut want = Vec::new();
+            let mut got = Vec::new();
+            for _ in 0..40 {
+                let va = rng.below(n as u64) as VertexId;
+                let vb = rng.below(n as u64) as VertexId;
+                let (a, b) = (g.neighbors(va), g.neighbors(vb));
+                for ub in bounds(h, n, &mut rng) {
+                    let ctx = format!("g{gi} t{threshold:?} va={va} vb={vb} ub={ub}");
+                    intersect_into(a, b, ub, &mut want);
+                    intersect_into_hybrid(Some(&hubs), a, Some(va), b, Some(vb), ub, &mut got);
+                    assert_eq!(got, want, "intersect {ctx}");
+                    // materialized left operand (no row reachable)
+                    let inter = want.clone();
+                    intersect_into(&inter, b, ub, &mut want);
+                    intersect_into_hybrid(Some(&hubs), &inter, None, b, Some(vb), ub, &mut got);
+                    assert_eq!(got, want, "intersect-mat {ctx}");
+                    subtract_into(a, b, ub, &mut want);
+                    subtract_into_hybrid(Some(&hubs), a, Some(va), b, Some(vb), ub, &mut got);
+                    assert_eq!(got, want, "subtract {ctx}");
+                    subtract_into(&inter, b, ub, &mut want);
+                    subtract_into_hybrid(Some(&hubs), &inter, None, b, Some(vb), ub, &mut got);
+                    assert_eq!(got, want, "subtract-mat {ctx}");
+                    let (c0, _) = count_intersect(a, b, ub);
+                    let (c1, _) =
+                        count_intersect_hybrid(Some(&hubs), a, Some(va), b, Some(vb), ub);
+                    assert_eq!(c1, c0, "count {ctx}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn empty_prefix_and_no_hubs_are_pure_fallback() {
+    let g = sort_by_degree_desc(&gen::power_law(300, 1_500, 80, 7)).graph;
+    let empty = HubBitmaps::build(&g, Some(usize::MAX));
+    assert_eq!(empty.prefix(), 0);
+    let (a, b) = (g.neighbors(0), g.neighbors(1));
+    let mut want = Vec::new();
+    let mut got = Vec::new();
+    for ub in [0, 5, NO_BOUND] {
+        intersect_into(a, b, ub, &mut want);
+        let c = intersect_into_hybrid(Some(&empty), a, Some(0), b, Some(1), ub, &mut got);
+        assert_eq!(got, want);
+        assert_eq!(c.words, 0, "empty prefix must never touch words");
+        let c2 = intersect_into_hybrid(None, a, Some(0), b, Some(1), ub, &mut got);
+        assert_eq!(got, want);
+        assert_eq!(c2.words, 0);
+    }
+}
+
+#[test]
+fn enumerator_counts_identical_with_hubs() {
+    let specs = ["triangle", "4-clique", "diamond", "4-cycle", "house"];
+    for seed in [3u64, 17] {
+        let g = sort_by_degree_desc(&gen::power_law(500, 3_500, 120, seed)).graph;
+        let roots = sampled_roots(g.num_vertices(), 1.0);
+        for threshold in [Some(4), None] {
+            let hubs = HubBitmaps::build(&g, threshold);
+            for spec in specs {
+                let plan = compile_spec(spec).unwrap().plan;
+                let want = count_plan(&g, &plan, &roots, CpuFlavor::AutoMineOpt);
+                let got =
+                    count_plan_hybrid(&g, &plan, &roots, CpuFlavor::AutoMineOpt, Some(&hubs));
+                assert_eq!(got, want, "{spec} seed {seed} t{threshold:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fsm_results_identical_with_hubs() {
+    let g = sort_by_degree_desc(&gen::with_random_labels(
+        gen::power_law(300, 1_400, 70, 13),
+        3,
+        29,
+    ))
+    .graph;
+    let cfg = FsmConfig {
+        min_support: 15,
+        max_size: 3,
+    };
+    let want = fsm_mine(&g, &cfg);
+    for threshold in [Some(4), None] {
+        let hubs = HubBitmaps::build(&g, threshold);
+        let got = fsm_mine_hybrid(&g, &cfg, Some(&hubs));
+        assert_eq!(want.frequent.len(), got.frequent.len(), "t{threshold:?}");
+        for (a, b) in want.frequent.iter().zip(&got.frequent) {
+            assert_eq!(a.pattern.canonical_key(), b.pattern.canonical_key());
+            assert_eq!(a.support, b.support);
+            assert_eq!(a.embeddings, b.embeddings);
+        }
+        assert_eq!(want.candidates_per_level, got.candidates_per_level);
+    }
+}

@@ -161,6 +161,12 @@ fn prop_sim_count_invariance_across_random_options() {
                 None
             },
             partitioner: strategies[rng.below_usize(strategies.len())],
+            hub_bitmaps: rng.chance(0.5),
+            hub_threshold: if rng.chance(0.3) {
+                Some(rng.range(1, 200) as usize)
+            } else {
+                None
+            },
         };
         let r = simulate_app(&g, &app, &roots, &opts, &cfg);
         assert_eq!(r.count, expected, "opts {opts:?}");
