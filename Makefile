@@ -14,11 +14,12 @@ test:
 # Every [[bench]] target is a plain binary (no criterion offline);
 # PIMMINER_BENCH_QUICK=1 trims iteration counts, PIMMINER_THREADS=<n>
 # pins the worker count for reproducible runs on shared machines. The
-# second invocation refreshes the machine-readable perf trajectory seed
-# (BENCH_micro.json at the repo root).
+# trailing invocations refresh the machine-readable perf trajectory
+# seeds (BENCH_micro.json and BENCH_fusion.json at the repo root).
 bench:
 	cargo bench
 	cargo bench --bench perf_micro -- --json
+	cargo bench --bench fusion -- --json
 
 # AOT-lower the Pallas/jnp set-operation kernels to HLO text under
 # artifacts/ at the repo root (where runtime::artifacts_dir finds them).

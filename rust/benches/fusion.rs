@@ -1,0 +1,179 @@
+//! Fused vs per-plan A/B (DESIGN.md §11): CPU seconds, simulated cycles,
+//! and fetched bytes for the multi-pattern workloads — 3-MC, 4-MC, the
+//! CC clique ladder, and FSM — on the fixed-seed power-law bench graph.
+//! Counts are asserted identical between the two modes, and fusion must
+//! strictly cut simulated fetched bytes and cycles; `-- --json` writes
+//! `BENCH_fusion.json` (`make bench` refreshes it, CI uploads it as an
+//! artifact alongside the parity smoke).
+
+use pimminer::bench::Bench;
+use pimminer::exec::cpu::{self, CpuFlavor};
+use pimminer::graph::{gen, sort_by_degree_desc};
+use pimminer::mine::fsm::{fsm_mine_opts, FsmConfig};
+use pimminer::pattern::plan::application;
+use pimminer::pim::{simulate_app, simulate_fsm, PimConfig, SimOptions, SimResult};
+use pimminer::report::{self, Table};
+
+fn main() {
+    let bench = Bench::new("fusion");
+    let cfg = PimConfig::default();
+    // Fixed-seed power-law bench graph: strong hub skew, so the shared
+    // loop prefixes carry real traffic. Quick mode shrinks it for CI.
+    let (n, m, dmax) = if bench.quick() {
+        (2_000, 12_000, 200)
+    } else {
+        (10_000, 80_000, 300)
+    };
+    let g = sort_by_degree_desc(&gen::power_law(n, m, dmax, 42)).graph;
+    let roots = cpu::sampled_roots(g.num_vertices(), 1.0);
+    let iters = if bench.quick() { 1 } else { 3 };
+
+    let mut table = Table::new(
+        &format!(
+            "fused vs per-plan — |V|={} |E|={} (seed 42)",
+            g.num_vertices(),
+            g.num_edges()
+        ),
+        &[
+            "Workload",
+            "CPU sep",
+            "CPU fused",
+            "Speedup",
+            "SimCy sep",
+            "SimCy fused",
+            "FM sep",
+            "FM fused",
+            "Shared",
+        ],
+    );
+
+    // CC is the clique ladder (3/4/5-CC): its plans are nested prefixes,
+    // so the fused trie is one path and the speedup is the headline
+    // number. 4-MC's six plans diverge right after level 1 and ~98% of
+    // their work sits in the unshared final levels, so its CPU ratio is
+    // bounded near 1× by construction — its wins are the simulator's
+    // traffic/cycle cuts (asserted below). DESIGN.md §11 quantifies both.
+    for app_name in ["3-MC", "4-MC", "CC"] {
+        let app = application(app_name).unwrap();
+        let t_sep = bench.measure(&format!("cpu/{app_name}/per-plan"), 1, iters, || {
+            cpu::run_application_with(&g, &app, &roots, CpuFlavor::AutoMineOpt, None, false, None)
+                .count
+        });
+        let t_fused = bench.measure(&format!("cpu/{app_name}/fused"), 1, iters, || {
+            cpu::run_application_with(&g, &app, &roots, CpuFlavor::AutoMineOpt, None, true, None)
+                .count
+        });
+        bench.metric(&format!("{app_name} cpu_speedup"), t_sep / t_fused, "x");
+
+        let sep = bench.fixture(&format!("sim/{app_name}/per-plan"), || {
+            simulate_app(&g, &app, &roots, &SimOptions::all(), &cfg)
+        });
+        let fused_opts = SimOptions {
+            fused: true,
+            ..SimOptions::all()
+        };
+        let fus = bench.fixture(&format!("sim/{app_name}/fused"), || {
+            simulate_app(&g, &app, &roots, &fused_opts, &cfg)
+        });
+        assert_eq!(sep.count, fus.count, "{app_name}: fused counts must match per-plan");
+        assert!(
+            fus.fm_bytes < sep.fm_bytes,
+            "{app_name}: fusion must cut fetched bytes ({} vs {})",
+            fus.fm_bytes,
+            sep.fm_bytes
+        );
+        assert!(
+            fus.total_cycles < sep.total_cycles,
+            "{app_name}: fusion must cut simulated cycles ({} vs {})",
+            fus.total_cycles,
+            sep.total_cycles
+        );
+        bench.metric(
+            &format!("{app_name} sim_cycle_speedup"),
+            sep.total_cycles as f64 / fus.total_cycles as f64,
+            "x",
+        );
+        bench.metric(
+            &format!("{app_name} sim_fm_reduction"),
+            sep.fm_bytes as f64 / fus.fm_bytes as f64,
+            "x",
+        );
+        bench.metric(
+            &format!("{app_name} shared_fetches"),
+            fus.shared_fetches as f64,
+            "fetches",
+        );
+        table.row(row(app_name, t_sep, t_fused, &sep, &fus));
+    }
+
+    // ---- FSM: fused level evaluation vs per-candidate ----
+    let (lv, le) = if bench.quick() {
+        (800, 4_000)
+    } else {
+        (2_000, 12_000)
+    };
+    let lg = sort_by_degree_desc(&gen::with_random_labels(
+        gen::power_law(lv, le, 120, 42),
+        4,
+        7,
+    ))
+    .graph;
+    let fsm_cfg = FsmConfig {
+        min_support: (lg.num_vertices() / 30).max(2) as u64,
+        max_size: 3,
+    };
+    let t_sep = bench.measure("cpu/FSM/per-candidate", 1, iters, || {
+        fsm_mine_opts(&lg, &fsm_cfg, None, false).frequent.len()
+    });
+    let t_fused = bench.measure("cpu/FSM/fused", 1, iters, || {
+        fsm_mine_opts(&lg, &fsm_cfg, None, true).frequent.len()
+    });
+    bench.metric("FSM cpu_speedup", t_sep / t_fused, "x");
+    let (r_sep, s_sep) = bench.fixture("sim/FSM/per-candidate", || {
+        simulate_fsm(&lg, &fsm_cfg, &SimOptions::all(), &cfg)
+    });
+    let (r_fus, s_fus) = bench.fixture("sim/FSM/fused", || {
+        simulate_fsm(
+            &lg,
+            &fsm_cfg,
+            &SimOptions {
+                fused: true,
+                ..SimOptions::all()
+            },
+            &cfg,
+        )
+    });
+    assert_eq!(r_sep.frequent.len(), r_fus.frequent.len(), "FSM results must match");
+    assert!(
+        s_fus.fm_bytes < s_sep.fm_bytes,
+        "FSM: fusion must cut fetched bytes ({} vs {})",
+        s_fus.fm_bytes,
+        s_sep.fm_bytes
+    );
+    bench.metric(
+        "FSM sim_cycle_speedup",
+        s_sep.total_cycles as f64 / s_fus.total_cycles as f64,
+        "x",
+    );
+    bench.metric("FSM shared_fetches", s_fus.shared_fetches as f64, "fetches");
+    table.row(row("FSM", t_sep, t_fused, &s_sep, &s_fus));
+
+    table.print();
+    if Bench::json_requested() {
+        bench.write_json("BENCH_fusion.json").unwrap();
+    }
+}
+
+fn row(name: &str, t_sep: f64, t_fused: f64, sep: &SimResult, fus: &SimResult) -> Vec<String> {
+    vec![
+        name.to_string(),
+        report::s(t_sep),
+        report::s(t_fused),
+        report::x(t_sep / t_fused),
+        sep.total_cycles.to_string(),
+        fus.total_cycles.to_string(),
+        report::bytes(sep.fm_bytes),
+        report::bytes(fus.fm_bytes),
+        fus.shared_fetches.to_string(),
+    ]
+}

@@ -29,7 +29,18 @@ fn main() {
         let g = &inst.graph;
         let roots = cpu::sampled_roots(g.num_vertices(), inst.sample_ratio);
         let (cpu_s, pim_s, count_cpu, count_pim) = bench.fixture(inst.spec.abbrev, || {
-            let c = cpu::run_application(g, &app, &roots, CpuFlavor::AutoMineOpt);
+            // Table 1's CPU column models the paper's 96-thread baseline,
+            // which has no plan fusion — keep the per-plan path (for the
+            // single-plan 4-CC app the two are identical anyway).
+            let c = cpu::run_application_with(
+                g,
+                &app,
+                &roots,
+                CpuFlavor::AutoMineOpt,
+                None,
+                false,
+                None,
+            );
             let p = simulate_app(g, &app, &roots, &SimOptions::BASELINE, &cfg);
             (c.seconds, p.seconds, c.count, p.count)
         });

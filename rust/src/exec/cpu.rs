@@ -11,14 +11,26 @@
 //!     base algorithm): dynamic chunked scheduling + the zero-allocation
 //!     enumerator.
 //!
+//! Multi-pattern applications run **fused** by default (DESIGN.md §11):
+//! the plans merge into a [`PlanTrie`] and one [`MultiEnumerator`]
+//! descent per root counts every pattern, sharing each prefix's work.
+//! [`run_application_with`] keeps the per-plan loop behind `fused:
+//! false` for A/B comparison (the `fusion` bench, `--no-fused` on the
+//! CLI). Dynamic scheduling claims roots hubs-first (descending degree),
+//! which shrinks the tail latency the last big task would otherwise
+//! inflict under power-law skew; the chunk size is overridable
+//! (`--chunk`).
+//!
 //! The absolute times are machine-local; Table 5's reproduction target is
 //! the *relative* shape (see DESIGN.md §2).
 
-use super::enumerate::{Enumerator, NullSink};
+use super::enumerate::{Enumerator, MultiEnumerator, NullSink};
 use crate::graph::{CsrGraph, HubBitmaps, VertexId};
+use crate::pattern::fuse::PlanTrie;
 use crate::pattern::plan::{Application, Plan};
 use crate::util::threads;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CpuFlavor {
@@ -33,6 +45,14 @@ impl CpuFlavor {
             CpuFlavor::GraphPiLike => "GraphPi",
             CpuFlavor::AutoMineOrg => "AM(ORG)",
             CpuFlavor::AutoMineOpt => "AM(OPT)",
+        }
+    }
+
+    /// Default dynamic-scheduling chunk (roots claimed per grab).
+    fn default_chunk(&self) -> usize {
+        match self {
+            CpuFlavor::GraphPiLike => 1,
+            _ => 32,
         }
     }
 }
@@ -64,14 +84,20 @@ pub fn sampled_roots(n: usize, ratio: f64) -> Vec<VertexId> {
         .collect()
 }
 
+/// Claim order for dynamic scheduling: root indices sorted by descending
+/// degree (stable, so equal-degree roots keep their input order). The
+/// biggest tasks start first, so no worker is left finishing a giant hub
+/// alone at the tail — the same skew argument as the simulator's
+/// profiling pass. Counts are order-independent; only wall clock moves.
+pub fn degree_order(g: &CsrGraph, roots: &[VertexId]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..roots.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(g.degree(roots[i])));
+    order
+}
+
 /// Count one plan's embeddings over the given roots.
-pub fn count_plan(
-    g: &CsrGraph,
-    plan: &Plan,
-    roots: &[VertexId],
-    flavor: CpuFlavor,
-) -> u64 {
-    count_plan_hybrid(g, plan, roots, flavor, None)
+pub fn count_plan(g: &CsrGraph, plan: &Plan, roots: &[VertexId], flavor: CpuFlavor) -> u64 {
+    count_plan_with(g, plan, roots, flavor, None, None)
 }
 
 /// [`count_plan`] with the hybrid sparse/dense set engine: every worker's
@@ -84,25 +110,39 @@ pub fn count_plan_hybrid(
     flavor: CpuFlavor,
     hubs: Option<&HubBitmaps>,
 ) -> u64 {
+    count_plan_with(g, plan, roots, flavor, hubs, None)
+}
+
+/// The canonical single-plan executor every [`count_plan`] variant is a
+/// thin wrapper over: flavor picks the scheduler, `hubs` the set engine,
+/// `chunk` overrides the flavor's dynamic claim size (`--chunk`).
+pub fn count_plan_with(
+    g: &CsrGraph,
+    plan: &Plan,
+    roots: &[VertexId],
+    flavor: CpuFlavor,
+    hubs: Option<&HubBitmaps>,
+    chunk: Option<usize>,
+) -> u64 {
     match flavor {
-        CpuFlavor::GraphPiLike => dynamic_count(g, plan, roots, 1, hubs),
-        CpuFlavor::AutoMineOpt => dynamic_count(g, plan, roots, 32, hubs),
         CpuFlavor::AutoMineOrg => static_block_count(g, plan, roots, hubs),
+        _ => dynamic_count(g, plan, roots, chunk.unwrap_or(flavor.default_chunk()), hubs),
     }
 }
 
-/// Count a whole application (sum over its patterns) and time it.
+/// Count a whole application (sum over its patterns) and time it —
+/// fused (DESIGN.md §11).
 pub fn run_application(
     g: &CsrGraph,
     app: &Application,
     roots: &[VertexId],
     flavor: CpuFlavor,
 ) -> CpuResult {
-    run_application_hybrid(g, app, roots, flavor, None)
+    run_application_with(g, app, roots, flavor, None, true, None)
 }
 
 /// [`run_application`] with the hybrid set engine (see
-/// [`count_plan_hybrid`]).
+/// [`count_plan_hybrid`]) — fused (DESIGN.md §11).
 pub fn run_application_hybrid(
     g: &CsrGraph,
     app: &Application,
@@ -110,20 +150,64 @@ pub fn run_application_hybrid(
     flavor: CpuFlavor,
     hubs: Option<&HubBitmaps>,
 ) -> CpuResult {
+    run_application_with(g, app, roots, flavor, hubs, true, None)
+}
+
+/// The canonical application executor the `run_application` variants
+/// wrap. `fused: true` merges the application's plans into a
+/// [`PlanTrie`] and traverses once per root; `fused: false` is the
+/// per-plan A/B baseline (one full traversal per pattern). Counts are
+/// bit-identical either way (`tests/prop_fuse.rs`).
+pub fn run_application_with(
+    g: &CsrGraph,
+    app: &Application,
+    roots: &[VertexId],
+    flavor: CpuFlavor,
+    hubs: Option<&HubBitmaps>,
+    fused: bool,
+    chunk: Option<usize>,
+) -> CpuResult {
     let plans = app.plans();
     let start = std::time::Instant::now();
-    let count = plans
-        .iter()
-        .map(|p| count_plan_hybrid(g, p, roots, flavor, hubs))
-        .sum();
+    let count = if fused {
+        let trie = PlanTrie::build(&plans);
+        count_plans_fused(g, &trie, roots, flavor, hubs, chunk)
+            .iter()
+            .sum()
+    } else {
+        plans
+            .iter()
+            .map(|p| count_plan_with(g, p, roots, flavor, hubs, chunk))
+            .sum()
+    };
     CpuResult {
         count,
         seconds: start.elapsed().as_secs_f64(),
     }
 }
 
-/// Dynamic scheduling: workers claim `chunk` roots at a time from a shared
-/// counter; per-worker `Enumerator` reuses scratch across roots.
+/// Fused multi-plan counting: one [`MultiEnumerator`] descent per root,
+/// returning the per-plan count vector (index = trie plan id = insertion
+/// order). The scheduling mirrors [`count_plan_with`]'s flavor semantics:
+/// dynamic hubs-first chunk claiming, or AM(ORG)'s static blocks with a
+/// fresh enumerator per root.
+pub fn count_plans_fused(
+    g: &CsrGraph,
+    trie: &PlanTrie,
+    roots: &[VertexId],
+    flavor: CpuFlavor,
+    hubs: Option<&HubBitmaps>,
+    chunk: Option<usize>,
+) -> Vec<u64> {
+    match flavor {
+        CpuFlavor::AutoMineOrg => fused_static_block(g, trie, roots, hubs),
+        _ => fused_dynamic(g, trie, roots, chunk.unwrap_or(flavor.default_chunk()), hubs),
+    }
+}
+
+/// Dynamic scheduling: workers claim `chunk` roots at a time (hubs
+/// first) from a shared counter; per-worker `Enumerator` reuses scratch
+/// across roots.
 fn dynamic_count(
     g: &CsrGraph,
     plan: &Plan,
@@ -131,11 +215,13 @@ fn dynamic_count(
     chunk: usize,
     hubs: Option<&HubBitmaps>,
 ) -> u64 {
+    let chunk = chunk.max(1);
     let nthreads = threads::num_threads().min(roots.len().max(1));
     if nthreads <= 1 {
         let mut e = Enumerator::with_hubs(g, plan, hubs);
         return roots.iter().map(|&r| e.count_root(r, &mut NullSink)).sum();
     }
+    let order = degree_order(g, roots);
     let next = AtomicUsize::new(0);
     let total = AtomicU64::new(0);
     std::thread::scope(|s| {
@@ -145,12 +231,12 @@ fn dynamic_count(
                 let mut local = 0u64;
                 loop {
                     let start = next.fetch_add(chunk, Ordering::Relaxed);
-                    if start >= roots.len() {
+                    if start >= order.len() {
                         break;
                     }
-                    let end = (start + chunk).min(roots.len());
-                    for &r in &roots[start..end] {
-                        local += e.count_root(r, &mut NullSink);
+                    let end = (start + chunk).min(order.len());
+                    for &i in &order[start..end] {
+                        local += e.count_root(roots[i], &mut NullSink);
                     }
                 }
                 total.fetch_add(local, Ordering::Relaxed);
@@ -158,6 +244,53 @@ fn dynamic_count(
         }
     });
     total.load(Ordering::Relaxed)
+}
+
+/// Fused analogue of [`dynamic_count`]: per-worker `MultiEnumerator` and
+/// per-plan count vectors merged at the end.
+fn fused_dynamic(
+    g: &CsrGraph,
+    trie: &PlanTrie,
+    roots: &[VertexId],
+    chunk: usize,
+    hubs: Option<&HubBitmaps>,
+) -> Vec<u64> {
+    let chunk = chunk.max(1);
+    let nthreads = threads::num_threads().min(roots.len().max(1));
+    if nthreads <= 1 {
+        let mut e = MultiEnumerator::with_hubs(g, trie, hubs);
+        let mut counts = vec![0u64; trie.num_plans];
+        for &r in roots {
+            e.count_root(r, &mut NullSink, &mut counts);
+        }
+        return counts;
+    }
+    let order = degree_order(g, roots);
+    let next = AtomicUsize::new(0);
+    let merged = Mutex::new(vec![0u64; trie.num_plans]);
+    std::thread::scope(|s| {
+        for _ in 0..nthreads {
+            s.spawn(|| {
+                let mut e = MultiEnumerator::with_hubs(g, trie, hubs);
+                let mut local = vec![0u64; trie.num_plans];
+                loop {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= order.len() {
+                        break;
+                    }
+                    let end = (start + chunk).min(order.len());
+                    for &i in &order[start..end] {
+                        e.count_root(roots[i], &mut NullSink, &mut local);
+                    }
+                }
+                let mut m = merged.lock().unwrap();
+                for (a, b) in m.iter_mut().zip(&local) {
+                    *a += *b;
+                }
+            });
+        }
+    });
+    merged.into_inner().unwrap()
 }
 
 /// Static contiguous block partitioning (AM(ORG)): thread `t` gets the
@@ -205,6 +338,50 @@ fn static_block_count(
     total.load(Ordering::Relaxed)
 }
 
+/// Fused analogue of [`static_block_count`] (AM(ORG)'s pathologies
+/// preserved: static blocks, fresh enumerator per root).
+fn fused_static_block(
+    g: &CsrGraph,
+    trie: &PlanTrie,
+    roots: &[VertexId],
+    hubs: Option<&HubBitmaps>,
+) -> Vec<u64> {
+    let nthreads = threads::num_threads().min(roots.len().max(1));
+    if nthreads <= 1 {
+        let mut counts = vec![0u64; trie.num_plans];
+        for &r in roots {
+            let mut e = MultiEnumerator::with_hubs(g, trie, hubs);
+            e.count_root(r, &mut NullSink, &mut counts);
+        }
+        return counts;
+    }
+    let merged = Mutex::new(vec![0u64; trie.num_plans]);
+    let block = roots.len().div_ceil(nthreads);
+    std::thread::scope(|s| {
+        for t in 0..nthreads {
+            let lo = t * block;
+            let hi = ((t + 1) * block).min(roots.len());
+            if lo >= hi {
+                continue;
+            }
+            let slice = &roots[lo..hi];
+            let merged = &merged;
+            s.spawn(move || {
+                let mut local = vec![0u64; trie.num_plans];
+                for &r in slice {
+                    let mut e = MultiEnumerator::with_hubs(g, trie, hubs);
+                    e.count_root(r, &mut NullSink, &mut local);
+                }
+                let mut m = merged.lock().unwrap();
+                for (a, b) in m.iter_mut().zip(&local) {
+                    *a += *b;
+                }
+            });
+        }
+    });
+    merged.into_inner().unwrap()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -223,6 +400,56 @@ mod tests {
             assert_eq!(a, b, "{app_name}");
             assert_eq!(b, c, "{app_name}");
         }
+    }
+
+    #[test]
+    fn fused_and_per_plan_application_runs_agree() {
+        let g = gen::erdos_renyi(120, 900, 13);
+        let roots = sampled_roots(g.num_vertices(), 1.0);
+        for app_name in ["3-MC", "4-MC"] {
+            let app = application(app_name).unwrap();
+            for flavor in [
+                CpuFlavor::GraphPiLike,
+                CpuFlavor::AutoMineOrg,
+                CpuFlavor::AutoMineOpt,
+            ] {
+                let fused =
+                    run_application_with(&g, &app, &roots, flavor, None, true, None).count;
+                let separate =
+                    run_application_with(&g, &app, &roots, flavor, None, false, None).count;
+                assert_eq!(fused, separate, "{app_name} {}", flavor.name());
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_override_preserves_counts() {
+        let g = gen::erdos_renyi(100, 600, 3);
+        let roots = sampled_roots(g.num_vertices(), 1.0);
+        let app = application("4-CC").unwrap();
+        let base = run_application(&g, &app, &roots, CpuFlavor::AutoMineOpt).count;
+        for chunk in [1usize, 4, 16, 1000] {
+            let r = run_application_with(
+                &g,
+                &app,
+                &roots,
+                CpuFlavor::AutoMineOpt,
+                None,
+                true,
+                Some(chunk),
+            );
+            assert_eq!(r.count, base, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn degree_order_is_descending_and_stable() {
+        let g = gen::star(6); // vertex 0 has degree 5, leaves degree 1
+        let roots: Vec<u32> = vec![3, 0, 5, 1];
+        let order = degree_order(&g, &roots);
+        assert_eq!(order[0], 1); // index of the hub root
+        // equal-degree leaves keep input order (stable sort)
+        assert_eq!(&order[1..], &[0, 2, 3]);
     }
 
     #[test]

@@ -18,6 +18,7 @@ use super::setops::{
     load_row_bounded, prefix_len, remove_values, subtract_into_hybrid, ScanCost, NO_BOUND,
 };
 use crate::graph::{CsrGraph, HubBitmaps, VertexId};
+use crate::pattern::fuse::PlanTrie;
 use crate::pattern::plan::Plan;
 
 /// Observer of enumeration work. All methods default to no-ops.
@@ -38,6 +39,13 @@ pub trait EnumSink {
     /// `count` embeddings were completed at the last level.
     #[inline]
     fn on_embeddings(&mut self, _count: u64) {}
+    /// A fused traversal (DESIGN.md §11) just emitted a fetch that serves
+    /// multiple plans at once: `saved` fetches of the same list that the
+    /// per-plan loop would have issued were elided. Fired immediately
+    /// after the corresponding [`on_fetch`](EnumSink::on_fetch); the PIM
+    /// `SimSink` accumulates it into `SimResult::shared_fetches`.
+    #[inline]
+    fn on_shared_fetch(&mut self, _saved: usize) {}
     /// A mining support-state update: `bytes` bytes of the requesting
     /// unit's aggregate state (a motif counter slot, an FSM domain entry)
     /// were read-modified-written for aggregate key `key`. Only the mining
@@ -87,6 +95,45 @@ impl FetchSpec {
                         .copied()
                         .filter(|&r| r <= j)
                         .collect();
+                    if refs.is_empty() {
+                        bounded = false;
+                    }
+                    sites.push(refs);
+                }
+                FetchSpec {
+                    needed,
+                    sites,
+                    bounded,
+                }
+            })
+            .collect()
+    }
+
+    /// Build the fetch metadata for every node of a fused [`PlanTrie`]
+    /// (DESIGN.md §11). `specs[x]` describes the fetch of `N(v)` for the
+    /// vertex bound at node `x` (the root node is `specs[0]`): the use
+    /// sites are every node in `x`'s subtree whose set-op expression
+    /// consumes `x`'s depth, with each site's bound refs restricted to
+    /// levels already bound at fetch time — the trie analogue of
+    /// [`FetchSpec::build`], so the shared fetch's filter threshold is
+    /// the `max` over *all* fused plans' needs.
+    pub fn build_trie(trie: &PlanTrie) -> Vec<FetchSpec> {
+        (0..trie.nodes.len())
+            .map(|x| {
+                let d = trie.nodes[x].depth;
+                let mut sites = Vec::new();
+                let mut bounded = true;
+                let mut needed = false;
+                let mut stack: Vec<usize> = trie.nodes[x].children.clone();
+                while let Some(m) = stack.pop() {
+                    let node = &trie.nodes[m];
+                    stack.extend_from_slice(&node.children);
+                    if !node.op.uses(d) {
+                        continue;
+                    }
+                    needed = true;
+                    let refs: Vec<usize> =
+                        node.op.upper.iter().copied().filter(|&r| r <= d).collect();
                     if refs.is_empty() {
                         bounded = false;
                     }
@@ -279,106 +326,334 @@ impl<'g> Enumerator<'g> {
     /// Compute the candidate set for `level` into `out`, returning the
     /// [`ScanCost`] (sparse elements + dense words) of the set operations.
     fn build_candidates(&mut self, level: usize, out: &mut Vec<VertexId>) -> ScanCost {
-        let lp = &self.plan.levels[level];
+        let plan = self.plan;
+        let lp = &plan.levels[level];
         let ub = lp
             .upper
             .iter()
             .map(|&r| self.bound[r])
             .min()
             .unwrap_or(NO_BOUND);
-        let mut cost = ScanCost::default();
-
-        // Order the intersections cheapest-first. Fixed-size scratch +
-        // insertion sort: this runs once per partial embedding, so it must
-        // not allocate (§Perf: -9% on the 4-CC hot loop vs Vec::clone).
-        let mut ints_buf = [0usize; crate::pattern::pattern::MAX_PATTERN];
-        let n_ints = lp.intersect.len();
-        ints_buf[..n_ints].copy_from_slice(&lp.intersect);
-        let ints = &mut ints_buf[..n_ints];
-        for i in 1..ints.len() {
-            let mut j = i;
-            while j > 0
-                && self.g.degree(self.bound[ints[j]]) < self.g.degree(self.bound[ints[j - 1]])
-            {
-                ints.swap(j, j - 1);
-                j -= 1;
-            }
-        }
-        debug_assert!(!ints.is_empty());
-
-        // Dense fast path (DESIGN.md §10): when the symmetry-breaking
-        // bound confines the level to the hub prefix and every operand is
-        // a hub, the whole chain runs in word-land — AND the intersect
-        // rows, AND-NOT the subtract rows, emit once. `ub` acts as a bit
-        // prefix mask, so only `ceil(ub/64)` words stream per operand.
-        if let Some(h) = self.hubs {
-            let dense = (ints.len() >= 2 || !lp.subtract.is_empty())
-                && ub <= h.prefix()
-                && ints.iter().chain(&lp.subtract).all(|&r| self.bound[r] < h.prefix());
-            if dense {
-                let mut w = std::mem::take(&mut self.wbuf);
-                let row = |r: usize| h.row(self.bound[r]).expect("checked above");
-                cost.words += load_row_bounded(row(ints[0]), ub, &mut w);
-                for &r in &ints[1..] {
-                    cost.words += and_row_bounded(&mut w, row(r));
-                }
-                for &r in &lp.subtract {
-                    cost.words += andnot_row_bounded(&mut w, row(r));
-                }
-                out.clear();
-                emit_bits(&w, out);
-                self.wbuf = w;
-                remove_values(out, &self.bound[..level]);
-                return cost;
-            }
-        }
-
         let mut tmp = std::mem::take(&mut self.bufs[level].1);
-        if ints.len() == 1 {
-            let a = self.g.neighbors(self.bound[ints[0]]);
-            cost.elems += bounded_copy_into(a, ub, out);
-        } else {
-            let (va, vb) = (self.bound[ints[0]], self.bound[ints[1]]);
-            cost += intersect_into_hybrid(
-                self.hubs,
-                self.g.neighbors(va),
-                Some(va),
-                self.g.neighbors(vb),
-                Some(vb),
-                ub,
-                out,
-            );
-            for &r in &ints[2..] {
-                let vc = self.bound[r];
-                cost += intersect_into_hybrid(
-                    self.hubs,
-                    out,
-                    None,
-                    self.g.neighbors(vc),
-                    Some(vc),
-                    ub,
-                    &mut tmp,
-                );
-                std::mem::swap(out, &mut tmp);
+        let cost = compute_candidates(
+            self.g,
+            self.hubs,
+            &lp.intersect,
+            &lp.subtract,
+            ub,
+            &self.bound[..level],
+            out,
+            &mut tmp,
+            &mut self.wbuf,
+        );
+        self.bufs[level].1 = tmp;
+        cost
+    }
+}
+
+/// One level's candidate-set computation — the kernel shared by
+/// [`Enumerator`], [`MultiEnumerator`], and the fused FSM matcher
+/// (`mine::fsm`): order the intersections cheapest-first, run the
+/// hub-bitmap dense chain when every operand is dense and the bound
+/// stays inside the prefix (DESIGN.md §10), else the hybrid merge
+/// chain, then drop already-bound vertices (injectivity). `bound` is
+/// the currently bound vertex prefix `f[0..depth]`; all operand refs
+/// index into it.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn compute_candidates(
+    g: &CsrGraph,
+    hubs: Option<&HubBitmaps>,
+    intersect: &[usize],
+    subtract: &[usize],
+    ub: VertexId,
+    bound: &[VertexId],
+    out: &mut Vec<VertexId>,
+    tmp: &mut Vec<VertexId>,
+    wbuf: &mut Vec<u64>,
+) -> ScanCost {
+    let mut cost = ScanCost::default();
+
+    // Order the intersections cheapest-first. Fixed-size scratch +
+    // insertion sort: this runs once per partial embedding, so it must
+    // not allocate (§Perf: -9% on the 4-CC hot loop vs Vec::clone).
+    let mut ints_buf = [0usize; crate::pattern::pattern::MAX_PATTERN];
+    let n_ints = intersect.len();
+    ints_buf[..n_ints].copy_from_slice(intersect);
+    let ints = &mut ints_buf[..n_ints];
+    for i in 1..ints.len() {
+        let mut j = i;
+        while j > 0 && g.degree(bound[ints[j]]) < g.degree(bound[ints[j - 1]]) {
+            ints.swap(j, j - 1);
+            j -= 1;
+        }
+    }
+    debug_assert!(!ints.is_empty());
+
+    // Dense fast path (DESIGN.md §10): when the symmetry-breaking
+    // bound confines the level to the hub prefix and every operand is
+    // a hub, the whole chain runs in word-land — AND the intersect
+    // rows, AND-NOT the subtract rows, emit once. `ub` acts as a bit
+    // prefix mask, so only `ceil(ub/64)` words stream per operand.
+    if let Some(h) = hubs {
+        let dense = (ints.len() >= 2 || !subtract.is_empty())
+            && ub <= h.prefix()
+            && ints.iter().chain(subtract).all(|&r| bound[r] < h.prefix());
+        if dense {
+            let row = |r: usize| h.row(bound[r]).expect("checked above");
+            cost.words += load_row_bounded(row(ints[0]), ub, wbuf);
+            for &r in &ints[1..] {
+                cost.words += and_row_bounded(wbuf, row(r));
+            }
+            for &r in subtract {
+                cost.words += andnot_row_bounded(wbuf, row(r));
+            }
+            out.clear();
+            emit_bits(wbuf, out);
+            remove_values(out, bound);
+            return cost;
+        }
+    }
+
+    if ints.len() == 1 {
+        let a = g.neighbors(bound[ints[0]]);
+        cost.elems += bounded_copy_into(a, ub, out);
+    } else {
+        let (va, vb) = (bound[ints[0]], bound[ints[1]]);
+        cost += intersect_into_hybrid(
+            hubs,
+            g.neighbors(va),
+            Some(va),
+            g.neighbors(vb),
+            Some(vb),
+            ub,
+            out,
+        );
+        for &r in &ints[2..] {
+            let vc = bound[r];
+            cost += intersect_into_hybrid(hubs, out, None, g.neighbors(vc), Some(vc), ub, tmp);
+            std::mem::swap(out, tmp);
+        }
+    }
+    for &r in subtract {
+        let vc = bound[r];
+        cost += subtract_into_hybrid(hubs, out, None, g.neighbors(vc), Some(vc), ub, tmp);
+        std::mem::swap(out, tmp);
+    }
+    // Injectivity: drop already-bound vertices.
+    remove_values(out, bound);
+    cost
+}
+
+/// Fused multi-plan enumeration state for one (graph, [`PlanTrie`]) pair
+/// (DESIGN.md §11): one trie descent per root enumerates **every** fused
+/// plan, computing each shared prefix's candidate set — and emitting its
+/// fetch/scan callbacks — exactly once. Per-plan counts land in a caller
+/// slice indexed by plan id; they are bit-identical to running each
+/// plan's [`Enumerator`] separately (pinned by `tests/prop_fuse.rs`).
+///
+/// ```
+/// use pimminer::exec::enumerate::{MultiEnumerator, NullSink};
+/// use pimminer::graph::gen;
+/// use pimminer::pattern::fuse::PlanTrie;
+/// use pimminer::pattern::plan::application;
+///
+/// let g = gen::clique(6);
+/// let plans = application("3-MC").unwrap().plans(); // wedge + triangle
+/// let trie = PlanTrie::build(&plans);
+/// let mut fused = MultiEnumerator::new(&g, &trie);
+/// let mut counts = vec![0u64; trie.num_plans];
+/// for v in 0..6 {
+///     fused.count_root(v, &mut NullSink, &mut counts);
+/// }
+/// assert_eq!(counts, vec![0, 20]); // K6: no induced wedge, C(6,3) triangles
+/// ```
+pub struct MultiEnumerator<'g> {
+    g: &'g CsrGraph,
+    trie: &'g PlanTrie,
+    /// Per-node fetch metadata ([`FetchSpec::build_trie`]).
+    fetch: Vec<FetchSpec>,
+    /// Per-node fetch sharing degree ([`PlanTrie::fetch_sharers`]).
+    sharers: Vec<usize>,
+    /// Candidate buffers, one pair **per trie node**: a parent's list
+    /// stays live while every child (at the same depth or deeper) builds
+    /// its own.
+    bufs: Vec<(Vec<VertexId>, Vec<VertexId>)>,
+    /// Bound vertices by loop depth.
+    bound: Vec<VertexId>,
+    hubs: Option<&'g HubBitmaps>,
+    wbuf: Vec<u64>,
+}
+
+impl<'g> MultiEnumerator<'g> {
+    pub fn new(g: &'g CsrGraph, trie: &'g PlanTrie) -> Self {
+        Self::with_hubs(g, trie, None)
+    }
+
+    /// Fused enumerator with the hybrid sparse/dense set engine enabled
+    /// (counts identical; only the work profile changes).
+    pub fn with_hubs(g: &'g CsrGraph, trie: &'g PlanTrie, hubs: Option<&'g HubBitmaps>) -> Self {
+        MultiEnumerator {
+            g,
+            trie,
+            fetch: FetchSpec::build_trie(trie),
+            sharers: trie.fetch_sharers(),
+            bufs: (0..trie.nodes.len()).map(|_| (Vec::new(), Vec::new())).collect(),
+            bound: vec![0; trie.depth],
+            hubs,
+            wbuf: Vec::new(),
+        }
+    }
+
+    /// Enumerate every fused plan rooted at `root`, adding each plan's
+    /// embeddings into `counts[plan_id]` (`counts.len()` must be
+    /// `trie.num_plans`). Returns the embeddings found at this root
+    /// summed over all plans.
+    pub fn count_root(
+        &mut self,
+        root: VertexId,
+        sink: &mut impl EnumSink,
+        counts: &mut [u64],
+    ) -> u64 {
+        debug_assert_eq!(counts.len(), self.trie.num_plans);
+        if let Some(l) = self.trie.root_label {
+            if self.g.label(root) != l {
+                return 0;
             }
         }
-        for &r in &lp.subtract {
-            let vc = self.bound[r];
-            cost += subtract_into_hybrid(
-                self.hubs,
-                out,
-                None,
-                self.g.neighbors(vc),
-                Some(vc),
-                ub,
-                &mut tmp,
-            );
-            std::mem::swap(out, &mut tmp);
+        let trie = self.trie;
+        self.bound[0] = root;
+        self.emit_fetch(0, root, sink);
+        let mut total = 0u64;
+        let root_node = &trie.nodes[0];
+        if !root_node.terminals.is_empty() {
+            // degenerate single-vertex plans: one embedding per root
+            for &pid in &root_node.terminals {
+                counts[pid] += 1;
+            }
+            total += root_node.terminals.len() as u64;
+            sink.on_embeddings(total);
         }
-        self.bufs[level].1 = tmp;
-        // Injectivity: drop already-bound vertices.
-        remove_values(out, &self.bound[..level]);
-        cost
+        for &child in &root_node.children {
+            total += self.descend(child, sink, counts);
+        }
+        total
+    }
+
+    /// Descend into trie node `x`: materialize its candidate set once,
+    /// credit terminal plans, and — when subtrees continue — bind each
+    /// candidate, fetch its list once for the whole subtree, and recurse
+    /// into every child branch.
+    fn descend(&mut self, x: usize, sink: &mut impl EnumSink, counts: &mut [u64]) -> u64 {
+        let trie = self.trie;
+        let node = &trie.nodes[x];
+        let depth = node.depth;
+        let op = &node.op;
+        let ub = op
+            .upper
+            .iter()
+            .map(|&r| self.bound[r])
+            .min()
+            .unwrap_or(NO_BOUND);
+        let mut total = 0u64;
+
+        // Single-operand levels (a star arm, every level-1 node) need no
+        // set operation at all: iterate the bounded neighbor-list prefix
+        // in place, skipping bound vertices. The scan is still charged
+        // once (the PIM core streams the prefix into scratch either way);
+        // only the host-side copy is elided.
+        if op.intersect.len() == 1 && op.subtract.is_empty() {
+            let g = self.g;
+            let v = self.bound[op.intersect[0]];
+            let list = g.neighbors(v);
+            let plen = prefix_len(list, ub);
+            let prefix = &list[..plen];
+            sink.on_scan(depth, plen);
+            if !node.terminals.is_empty() {
+                let dup = prefix
+                    .iter()
+                    .filter(|&&c| self.bound[..depth].contains(&c))
+                    .count();
+                let c = (plen - dup) as u64;
+                if c > 0 {
+                    for &pid in &node.terminals {
+                        counts[pid] += c;
+                    }
+                    let emb = c * node.terminals.len() as u64;
+                    sink.on_embeddings(emb);
+                    total += emb;
+                }
+            }
+            if !node.children.is_empty() {
+                for &cand in prefix {
+                    if self.bound[..depth].contains(&cand) {
+                        continue;
+                    }
+                    self.bound[depth] = cand;
+                    self.emit_fetch(x, cand, sink);
+                    for &child in &node.children {
+                        total += self.descend(child, sink, counts);
+                    }
+                }
+            }
+            return total;
+        }
+
+        let (mut cands, mut tmp) = std::mem::take(&mut self.bufs[x]);
+        let cost = compute_candidates(
+            self.g,
+            self.hubs,
+            &op.intersect,
+            &op.subtract,
+            ub,
+            &self.bound[..depth],
+            &mut cands,
+            &mut tmp,
+            &mut self.wbuf,
+        );
+        sink.on_scan(depth, cost.elems);
+        if cost.words > 0 {
+            sink.on_word_ops(depth, cost.words);
+        }
+        if !node.terminals.is_empty() {
+            let c = cands.len() as u64;
+            if c > 0 {
+                for &pid in &node.terminals {
+                    counts[pid] += c;
+                }
+                let emb = c * node.terminals.len() as u64;
+                sink.on_embeddings(emb);
+                total += emb;
+            }
+        }
+        if !node.children.is_empty() {
+            for &cand in &cands {
+                self.bound[depth] = cand;
+                self.emit_fetch(x, cand, sink);
+                for &child in &node.children {
+                    total += self.descend(child, sink, counts);
+                }
+            }
+        }
+        self.bufs[x] = (cands, tmp);
+        total
+    }
+
+    /// Report the fetch of `N(v)` for the vertex bound at node `x` — once
+    /// for the whole subtree, saving `sharers − 1` per-plan fetches.
+    #[inline]
+    fn emit_fetch(&self, x: usize, v: VertexId, sink: &mut impl EnumSink) {
+        let spec = &self.fetch[x];
+        if !spec.needed {
+            return;
+        }
+        let depth = self.trie.nodes[x].depth;
+        let list = self.g.neighbors(v);
+        let th = spec.threshold(&self.bound[..=depth]);
+        let prefix = prefix_len(list, th);
+        sink.on_fetch(depth, v, list.len(), prefix);
+        if self.sharers[x] > 1 {
+            sink.on_shared_fetch(self.sharers[x] - 1);
+        }
     }
 }
 
@@ -579,6 +854,67 @@ mod tests {
             assert_eq!(specs[j].threshold(&bound[..=j]), bound[j], "level {j}");
         }
         assert!(!specs[3].needed);
+    }
+
+    #[test]
+    fn fused_counts_match_per_plan_enumerators() {
+        use crate::pattern::fuse::PlanTrie;
+        use crate::pattern::plan::application;
+        for seed in 0..3u64 {
+            let g = gen::erdos_renyi(40, 200, seed);
+            for app_name in ["3-MC", "4-MC", "4-CC"] {
+                let plans = application(app_name).unwrap().plans();
+                let trie = PlanTrie::build(&plans);
+                let mut fused = MultiEnumerator::new(&g, &trie);
+                let mut counts = vec![0u64; plans.len()];
+                let mut total = 0u64;
+                for v in 0..40u32 {
+                    total += fused.count_root(v, &mut NullSink, &mut counts);
+                }
+                for (i, plan) in plans.iter().enumerate() {
+                    let mut e = Enumerator::new(&g, plan);
+                    let want: u64 = (0..40u32).map(|v| e.count_root(v, &mut NullSink)).sum();
+                    assert_eq!(counts[i], want, "{app_name} plan {i} seed {seed}");
+                }
+                assert_eq!(total, counts.iter().sum::<u64>());
+            }
+        }
+    }
+
+    #[test]
+    fn fused_shares_the_root_fetch() {
+        use crate::pattern::fuse::PlanTrie;
+        use crate::pattern::plan::application;
+        struct Counter {
+            level0_fetches: u64,
+            saved: u64,
+        }
+        impl EnumSink for Counter {
+            fn on_fetch(&mut self, level: usize, _v: u32, _f: usize, _p: usize) {
+                if level == 0 {
+                    self.level0_fetches += 1;
+                }
+            }
+            fn on_shared_fetch(&mut self, saved: usize) {
+                self.saved += saved as u64;
+            }
+        }
+        let g = gen::erdos_renyi(30, 140, 7);
+        let plans = application("4-MC").unwrap().plans();
+        let trie = PlanTrie::build(&plans);
+        let mut fused = MultiEnumerator::new(&g, &trie);
+        let mut counts = vec![0u64; plans.len()];
+        let mut sink = Counter {
+            level0_fetches: 0,
+            saved: 0,
+        };
+        for v in 0..30u32 {
+            fused.count_root(v, &mut sink, &mut counts);
+        }
+        // one level-0 fetch per root — the per-plan loop would issue six
+        assert_eq!(sink.level0_fetches, 30);
+        // each of those saved 5 duplicate fetches, plus deeper sharing
+        assert!(sink.saved >= 30 * 5, "saved {}", sink.saved);
     }
 
     #[test]

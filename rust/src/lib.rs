@@ -22,7 +22,10 @@
 //! planner) producing pluggable owner maps for the simulator
 //! (DESIGN.md §9); and [`graph::hub::HubBitmaps`] plus the hybrid
 //! kernels in [`exec::setops`] give every executor a dense in-bank
-//! bitmap fast path over the high-degree prefix (DESIGN.md §10):
+//! bitmap fast path over the high-degree prefix (DESIGN.md §10); and
+//! [`pattern::fuse`] merges multi-pattern workloads into one
+//! prefix-sharing trie so shared fetches and set operations run — and
+//! are charged — once (DESIGN.md §11):
 //!
 //! ```
 //! use pimminer::exec::cpu::{count_plan, sampled_roots, CpuFlavor};

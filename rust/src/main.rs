@@ -5,7 +5,8 @@
 //!   count     --dataset MI (--app 4-CC | --pattern "0-1,1-2,2-0,2-3")
 //!             [--system pim|cpu] [--sample 0.1] [--non-induced]
 //!             [--no-filter --no-remap --no-dup --no-steal]
-//!   motifs    --dataset MI -k 4 [--system pim|cpu] [--check]   one-pass census
+//!             [--no-fused] [--chunk n]   (apps run fused by default, §11)
+//!   motifs    --dataset MI -k 4 [--system pim|cpu] [--check] [--fused]
 //!   fsm       --dataset MI --support 100 --max-size 4 [--labels 4]
 //!   partition --dataset MI [--partitioner refined] [--check] [--json out.json]
 //!   plan      --pattern <edgelist|name>             print the compiled plan
@@ -30,9 +31,12 @@ use pimminer::graph::{gen, io, sort_by_degree_desc, CsrGraph};
 use pimminer::mine::{self, FsmConfig};
 use pimminer::part::{self, PartitionStrategy};
 use pimminer::pattern::compile::{compile_with, parse_pattern, Compiled, CostModel};
-use pimminer::pattern::plan::application;
+use pimminer::pattern::fuse::PlanTrie;
+use pimminer::pattern::motif::connected_motifs;
+use pimminer::pattern::plan::{application, Plan};
 use pimminer::pim::{
-    simulate_fsm, simulate_motifs, simulate_plan, PimConfig, SimOptions, SimResult,
+    simulate_fsm, simulate_motifs, simulate_plan, simulate_plans_fused, PimConfig, SimOptions,
+    SimResult,
 };
 use pimminer::report::{self, json, Table};
 use pimminer::util::cli::Args;
@@ -62,15 +66,16 @@ fn help() {
          \n\
          generate --dataset <CI|PP|AS|MI|YT|PA|LJ> [--full] --out <file.csr>\n\
          count    (--dataset <abbrev> | --graph <file.csr>)\n\
-                  (--app <3-CC|4-CC|5-CC|3-MC|4-DI|4-CL> | --pattern <edgelist|name>)\n\
+                  (--app <3-CC|4-CC|5-CC|3-MC|4-MC|4-DI|4-CL|CC> | --pattern <edgelist|name>)\n\
                   [--system pim|cpu] [--sample <ratio>] [--non-induced]\n\
                   [--no-filter] [--no-remap] [--no-dup] [--no-steal]\n\
-                  [--hub-bitmaps [--hub-threshold <deg>]]\n\
+                  [--hub-bitmaps [--hub-threshold <deg>]] [--no-fused] [--chunk <n>]\n\
          motifs   (--dataset | --graph) [-k <3|4|5>] [--system pim|cpu]\n\
-                  [--check]   one-pass census; --check cross-validates every\n\
-                  per-pattern count against an independent compiled-plan run\n\
+                  [--check] [--fused]   one-pass census; --check cross-validates\n\
+                  every per-pattern count against an independent compiled-plan\n\
+                  run; --fused swaps ESU for the fused compiled-plan census\n\
          fsm      (--dataset | --graph) [--support <s>] [--max-size <k>]\n\
-                  [--labels <L> [--label-seed <s>]] [--system pim|cpu]\n\
+                  [--labels <L> [--label-seed <s>]] [--system pim|cpu] [--no-fused]\n\
          partition (--dataset | --graph) [--partitioner <name>] [--capacity <bytes>]\n\
                   [--check] [--json <file>]   owner-map cut/balance/replica report;\n\
                   --check validates the partitioning invariants (CI smoke)\n\
@@ -88,7 +93,16 @@ fn help() {
          --hub-bitmaps enables the hybrid sparse/dense set engine (dense\n\
          in-bank bitmap rows for the high-degree prefix; DESIGN.md §10) on\n\
          count/fsm/ladder, both systems; --hub-threshold <deg> overrides\n\
-         the degree heuristic"
+         the degree heuristic\n\
+         \n\
+         multi-pattern runs are FUSED by default (DESIGN.md §11): plans merge\n\
+         into one prefix-sharing trie, so shared fetches/scans happen once\n\
+         (--app CC, the 3/4/5-clique ladder, fuses into a single path).\n\
+         --no-fused restores the per-plan / per-candidate loop (A/B baseline)\n\
+         on count --app and fsm, both systems; motifs opts in via --fused.\n\
+         --chunk <n> overrides the dynamic-scheduling claim size (CPU\n\
+         executors and the simulator's profiling pass; default 16 there,\n\
+         hubs claimed first either way)"
     );
 }
 
@@ -116,7 +130,15 @@ fn options(args: &Args) -> SimOptions {
         partitioner: partitioner_arg(args).unwrap_or_default(),
         hub_bitmaps: args.get_bool("hub-bitmaps"),
         hub_threshold: args.get("hub-threshold").and_then(|v| v.parse().ok()),
+        fused: fused_arg(args),
+        chunk: args.get("chunk").and_then(|v| v.parse().ok()),
     }
+}
+
+/// `--fused` (default) / `--no-fused`: fused multi-pattern enumeration
+/// vs the per-plan / per-candidate A/B baseline (DESIGN.md §11).
+fn fused_arg(args: &Args) -> bool {
+    !args.get_bool("no-fused")
 }
 
 /// Build the hub rows for the CPU executors when `--hub-bitmaps` is on
@@ -173,18 +195,22 @@ fn count(args: &Args) {
         "cpu" => {
             let roots = cpu::sampled_roots(g.num_vertices(), sample);
             let hubs = cpu_hubs(args, &g);
-            let r = cpu::run_application_hybrid(
+            let fused = fused_arg(args);
+            let r = cpu::run_application_with(
                 &g,
                 &app,
                 &roots,
                 CpuFlavor::AutoMineOpt,
                 hubs.as_ref(),
+                fused,
+                args.get("chunk").and_then(|v| v.parse().ok()),
             );
             println!(
-                "{} on CPU: count={} time={}",
+                "{} on CPU: count={} time={}{}",
                 app.name,
                 r.count,
-                report::s(r.seconds)
+                report::s(r.seconds),
+                if fused { " (fused)" } else { " (per-plan)" }
             );
         }
         _ => {
@@ -200,6 +226,7 @@ fn count(args: &Args) {
                 report::pct(r.access.near_frac()),
                 r.steals
             );
+            print_fusion(&r);
             if r.bitmap_words > 0 {
                 println!(
                     "set-op streams: {} sparse element scans, {} in-bank bitmap word ops \
@@ -208,6 +235,17 @@ fn count(args: &Args) {
                 );
             }
         }
+    }
+}
+
+/// Render the plan-fusion telemetry (DESIGN.md §11) when the run
+/// actually fused something (a single-plan trie shares nothing).
+fn print_fusion(r: &SimResult) {
+    if r.fused_plans > 1 {
+        println!(
+            "fusion: {} plans in one traversal, {} duplicate fetches elided (DESIGN.md §11)",
+            r.fused_plans, r.shared_fetches
+        );
     }
 }
 
@@ -294,8 +332,12 @@ fn motifs(args: &Args) {
         );
     }
     let roots = cpu::sampled_roots(g.num_vertices(), sample);
-    let census = match args.get_or("system", "pim") {
-        "cpu" => {
+    // `--fused` swaps the ESU engine for the fused compiled-plan census
+    // (DESIGN.md §11): every connected k-motif's plan merges into one
+    // trie and a single traversal per root counts them all.
+    let fused = args.get_bool("fused");
+    let census = match (args.get_or("system", "pim"), fused) {
+        ("cpu", false) => {
             let t = std::time::Instant::now();
             let census = mine::motif_census(&g, k, &roots);
             println!(
@@ -305,7 +347,30 @@ fn motifs(args: &Args) {
             );
             census
         }
-        _ => {
+        ("cpu", true) => {
+            let motifs = connected_motifs(k);
+            let plans: Vec<_> = motifs.iter().map(Plan::build).collect();
+            let trie = PlanTrie::build(&plans);
+            let hubs = cpu_hubs(args, &g);
+            let t = std::time::Instant::now();
+            let counts = cpu::count_plans_fused(
+                &g,
+                &trie,
+                &roots,
+                CpuFlavor::AutoMineOpt,
+                hubs.as_ref(),
+                args.get("chunk").and_then(|v| v.parse().ok()),
+            );
+            println!(
+                "{k}-motif census on CPU (fused {} plans, {} shared levels): {} subgraphs in {}",
+                trie.num_plans,
+                trie.shared_levels(),
+                counts.iter().sum::<u64>(),
+                report::s(t.elapsed().as_secs_f64())
+            );
+            pimminer::mine::MotifCensus { k, motifs, counts }
+        }
+        (_, false) => {
             let r = simulate_motifs(&g, k, &roots, &options(args), &PimConfig::default());
             println!(
                 "{k}-motif census on PIM: {} subgraphs, time={} near={} steals={}",
@@ -316,6 +381,21 @@ fn motifs(args: &Args) {
             );
             print_aggregation(&r.sim);
             r.census
+        }
+        (_, true) => {
+            let motifs = connected_motifs(k);
+            let plans: Vec<_> = motifs.iter().map(Plan::build).collect();
+            let (sim, counts) =
+                simulate_plans_fused(&g, &plans, &roots, &options(args), &PimConfig::default());
+            println!(
+                "{k}-motif census on PIM (fused plans): {} subgraphs, time={} near={} steals={}",
+                sim.count,
+                report::s(sim.seconds),
+                report::pct(sim.access.near_frac()),
+                sim.steals
+            );
+            print_fusion(&sim);
+            pimminer::mine::MotifCensus { k, motifs, counts }
         }
     };
     let mut t = Table::new(
@@ -392,12 +472,14 @@ fn fsm(args: &Args) {
         "cpu" => {
             let t = std::time::Instant::now();
             let hubs = cpu_hubs(args, &g);
-            let r = mine::fsm_mine_hybrid(&g, &cfg, hubs.as_ref());
+            let fused = fused_arg(args);
+            let r = mine::fsm_mine_opts(&g, &cfg, hubs.as_ref(), fused);
             println!(
-                "FSM on CPU: {} frequent patterns (support ≥ {}) in {}",
+                "FSM on CPU: {} frequent patterns (support ≥ {}) in {}{}",
                 r.frequent.len(),
                 cfg.min_support,
-                report::s(t.elapsed().as_secs_f64())
+                report::s(t.elapsed().as_secs_f64()),
+                if fused { " (fused levels)" } else { " (per-candidate)" }
             );
             r
         }
@@ -410,6 +492,7 @@ fn fsm(args: &Args) {
                 report::s(sim.seconds),
                 report::pct(sim.access.near_frac())
             );
+            print_fusion(&sim);
             print_aggregation(&sim);
             r
         }

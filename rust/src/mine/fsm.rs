@@ -23,9 +23,10 @@
 //!   per-unit domain maps are the aggregation state the fabric must merge
 //!   (DESIGN.md §8).
 
-use crate::exec::enumerate::{EnumSink, NullSink};
+use crate::exec::enumerate::{compute_candidates, EnumSink, NullSink};
 use crate::exec::setops::{intersect_into_hybrid, ScanCost, NO_BOUND};
 use crate::graph::{CsrGraph, HubBitmaps, VertexId};
+use crate::pattern::fuse::{PlanTrie, TrieLevel};
 use crate::pattern::pattern::{permute_all, Pattern, MAX_PATTERN};
 use crate::util::threads;
 use std::collections::HashSet;
@@ -240,6 +241,9 @@ impl CandShape {
 pub struct MatchScratch {
     bound: Vec<VertexId>,
     bufs: Vec<(Vec<VertexId>, Vec<VertexId>)>,
+    /// Dense word accumulator for the shared candidate kernel's hub fast
+    /// path (unreachable under FSM's `NO_BOUND`, but the kernel owns it).
+    wbuf: Vec<u64>,
 }
 
 /// Enumerate the label-preserving, injective, non-induced embeddings of
@@ -377,6 +381,168 @@ fn descend(
     total
 }
 
+/// A fused candidate group (DESIGN.md §11): every candidate of one BFS
+/// level sharing a root label, merged into a labeled [`PlanTrie`] whose
+/// nodes unify on (black-predecessor set, level label). One rooted
+/// traversal per group matches *all* its candidates, computing each
+/// shared edge-prefix's intersection — and emitting its fetch/scan
+/// callbacks — exactly once.
+pub struct FusedGroup {
+    /// Required label of the root (pattern vertex 0) data vertex.
+    pub root_label: u32,
+    /// The fused trie; plan ids are group-local.
+    pub trie: PlanTrie,
+    /// Group-local plan id → index into the level's candidate slice.
+    pub cand_ids: Vec<usize>,
+    /// Per trie node: candidates consuming `N(v)` for the vertex bound
+    /// there ([`PlanTrie::fetch_sharers`]).
+    sharers: Vec<usize>,
+}
+
+/// Group a level's candidates by root label and fuse each group's
+/// matching paths by shared edge prefix. Candidate order is preserved
+/// through [`FusedGroup::cand_ids`], so per-candidate stats land in the
+/// same slots the per-candidate executor fills.
+pub fn fuse_level(candidates: &[LabeledPattern]) -> Vec<FusedGroup> {
+    let mut groups: Vec<FusedGroup> = Vec::new();
+    for (ci, cand) in candidates.iter().enumerate() {
+        let root_label = cand.labels[0];
+        let gi = match groups.iter().position(|grp| grp.root_label == root_label) {
+            Some(gi) => gi,
+            None => {
+                groups.push(FusedGroup {
+                    root_label,
+                    trie: PlanTrie::new(Some(root_label)),
+                    cand_ids: Vec::new(),
+                    sharers: Vec::new(),
+                });
+                groups.len() - 1
+            }
+        };
+        let k = cand.size();
+        let levels: Vec<TrieLevel> = (1..k)
+            .map(|level| TrieLevel {
+                intersect: (0..level).filter(|&j| cand.pattern.has_edge(j, level)).collect(),
+                subtract: Vec::new(),
+                upper: Vec::new(),
+                label: Some(cand.labels[level]),
+            })
+            .collect();
+        let pid = groups[gi].trie.insert_path(&levels);
+        debug_assert_eq!(pid, groups[gi].cand_ids.len());
+        groups[gi].cand_ids.push(ci);
+    }
+    for grp in &mut groups {
+        grp.sharers = grp.trie.fetch_sharers();
+    }
+    groups
+}
+
+/// Fused analogue of [`match_rooted`]: enumerate the embeddings of every
+/// candidate in `group` rooted at `root` in one trie descent, updating
+/// each candidate's domains and embedding count in `acc` (indexed via
+/// [`FusedGroup::cand_ids`]). Results are bit-identical to matching each
+/// candidate separately (`tests/prop_fuse.rs`); fetches and scans shared
+/// by several candidates fire once.
+pub fn match_group_rooted(
+    g: &CsrGraph,
+    hubs: Option<&HubBitmaps>,
+    group: &FusedGroup,
+    root: VertexId,
+    sink: &mut impl EnumSink,
+    acc: &mut LevelAcc,
+    scratch: &mut MatchScratch,
+) {
+    if g.label(root) != group.root_label {
+        return;
+    }
+    let trie = &group.trie;
+    if scratch.bound.len() < trie.depth {
+        scratch.bound.resize(trie.depth, 0);
+    }
+    if scratch.bufs.len() < trie.nodes.len() {
+        scratch.bufs.resize_with(trie.nodes.len(), Default::default);
+    }
+    scratch.bound[0] = root;
+    if group.sharers[0] > 0 {
+        sink.on_fetch(0, root, g.degree(root), g.degree(root));
+        if group.sharers[0] > 1 {
+            sink.on_shared_fetch(group.sharers[0] - 1);
+        }
+    }
+    for &child in &trie.nodes[0].children {
+        fused_descend(g, hubs, group, child, sink, acc, scratch);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fused_descend(
+    g: &CsrGraph,
+    hubs: Option<&HubBitmaps>,
+    group: &FusedGroup,
+    x: usize,
+    sink: &mut impl EnumSink,
+    acc: &mut LevelAcc,
+    scratch: &mut MatchScratch,
+) {
+    let node = &group.trie.nodes[x];
+    let level = node.depth;
+    let preds = &node.op.intersect;
+    debug_assert!(!preds.is_empty(), "candidate orders must be connected");
+    // The shared candidate kernel handles the intersection chain and the
+    // injectivity filter (FSM embeddings are unbounded and never
+    // subtract, so the hub dense path stays dormant and only the probe /
+    // merge dispatch engages); the label filter is FSM's own.
+    let (mut cands, mut tmp) = std::mem::take(&mut scratch.bufs[x]);
+    let cost = compute_candidates(
+        g,
+        hubs,
+        preds,
+        &[],
+        NO_BOUND,
+        &scratch.bound[..level],
+        &mut cands,
+        &mut tmp,
+        &mut scratch.wbuf,
+    );
+    sink.on_scan(level, cost.elems);
+    if cost.words > 0 {
+        sink.on_word_ops(level, cost.words);
+    }
+    let want = node.op.label.expect("FSM trie levels carry labels");
+    cands.retain(|&c| g.label(c) == want);
+    if !node.terminals.is_empty() {
+        for &c in &cands {
+            scratch.bound[level] = c;
+            for &pid in &node.terminals {
+                let ci = group.cand_ids[pid];
+                acc.embeddings[ci] += 1;
+                for (i, dom) in acc.domains[ci].iter_mut().enumerate() {
+                    dom.insert(scratch.bound[i]);
+                }
+                sink.on_embeddings(1);
+                // k 8-byte domain-entry read-modify-writes per embedding
+                sink.on_aggregate(ci, (level as u64 + 1) * 8);
+            }
+        }
+    }
+    if !node.children.is_empty() {
+        for &c in &cands {
+            scratch.bound[level] = c;
+            if group.sharers[x] > 0 {
+                sink.on_fetch(level, c, g.degree(c), g.degree(c));
+                if group.sharers[x] > 1 {
+                    sink.on_shared_fetch(group.sharers[x] - 1);
+                }
+            }
+            for &child in &node.children {
+                fused_descend(g, hubs, group, child, sink, acc, scratch);
+            }
+        }
+    }
+    scratch.bufs[x] = (cands, tmp);
+}
+
 /// BFS candidate extension: every frequent pattern grows by one forward
 /// edge (new vertex, each label) and one backward edge (each non-adjacent
 /// existing pair), deduplicated by labeled canonical form.
@@ -502,16 +668,30 @@ pub fn fsm_mine_with(
 
 /// Multithreaded CPU FSM (NullSink; see
 /// [`pim::sim::simulate_fsm`](crate::pim::sim::simulate_fsm) for the
-/// simulated-machine run).
+/// simulated-machine run). Candidate evaluation is fused (DESIGN.md
+/// §11); [`fsm_mine_opts`] exposes the per-candidate A/B baseline.
 pub fn fsm_mine(g: &CsrGraph, cfg: &FsmConfig) -> FsmResult {
-    fsm_mine_with(g, cfg, &mut CpuLevelExecutor { hubs: None })
+    fsm_mine_opts(g, cfg, None, true)
 }
 
 /// [`fsm_mine`] with the hybrid sparse/dense set engine: candidate
 /// generation probes hub-bitmap rows instead of merging full hub lists
 /// (DESIGN.md §10). Results are identical to [`fsm_mine`]'s.
 pub fn fsm_mine_hybrid(g: &CsrGraph, cfg: &FsmConfig, hubs: Option<&HubBitmaps>) -> FsmResult {
-    fsm_mine_with(g, cfg, &mut CpuLevelExecutor { hubs })
+    fsm_mine_opts(g, cfg, hubs, true)
+}
+
+/// Fully parameterized CPU FSM: `hubs` selects the set engine, `fused`
+/// the level evaluation strategy (`true` = shared-prefix group matching,
+/// `false` = one rooted traversal per candidate). Mining results are
+/// identical for every combination (`tests/prop_fuse.rs`).
+pub fn fsm_mine_opts(
+    g: &CsrGraph,
+    cfg: &FsmConfig,
+    hubs: Option<&HubBitmaps>,
+    fused: bool,
+) -> FsmResult {
+    fsm_mine_with(g, cfg, &mut CpuLevelExecutor { hubs, fused })
 }
 
 /// The CPU candidate evaluator: dynamic root chunks across host threads,
@@ -519,13 +699,41 @@ pub fn fsm_mine_hybrid(g: &CsrGraph, cfg: &FsmConfig, hubs: Option<&HubBitmaps>)
 pub struct CpuLevelExecutor<'h> {
     /// Hub rows for the hybrid kernels; `None` = pure sorted merge.
     pub hubs: Option<&'h HubBitmaps>,
+    /// Fused shared-prefix group matching (DESIGN.md §11); `false`
+    /// matches every candidate in its own rooted traversal.
+    pub fused: bool,
 }
 
 impl LevelExecutor for CpuLevelExecutor<'_> {
     fn run_level(&mut self, g: &CsrGraph, candidates: &[LabeledPattern]) -> Vec<CandidateStats> {
         let n = g.num_vertices();
-        let shapes: Vec<CandShape> = candidates.iter().map(CandShape::of).collect();
         let hubs = self.hubs;
+        if self.fused {
+            let groups = fuse_level(candidates);
+            return threads::par_fold(
+                n,
+                32,
+                || (LevelAcc::new(candidates), MatchScratch::default()),
+                |(acc, scratch), v| {
+                    for grp in &groups {
+                        match_group_rooted(
+                            g,
+                            hubs,
+                            grp,
+                            v as VertexId,
+                            &mut NullSink,
+                            acc,
+                            scratch,
+                        );
+                    }
+                },
+                |(a, s), (b, _)| (a.merge(b), s),
+            )
+            .map(|(acc, _)| acc)
+            .unwrap_or_else(|| LevelAcc::new(candidates))
+            .into_stats();
+        }
+        let shapes: Vec<CandShape> = candidates.iter().map(CandShape::of).collect();
         threads::par_fold(
             n,
             32,
@@ -664,6 +872,48 @@ mod tests {
         // only (0,1) edges exist on the alternating cycle
         assert_eq!(seeds.len(), 1);
         assert_eq!(seeds[0].labels, vec![0, 1]);
+    }
+
+    #[test]
+    fn fuse_level_groups_by_root_label_and_shares_prefixes() {
+        let wedge = |labels: Vec<u32>| LabeledPattern {
+            pattern: Pattern::new(3, &[(0, 1), (1, 2)], "w"),
+            labels,
+        };
+        // two candidates share root label 0 and the (0,1)-labeled first
+        // edge; the third roots at label 5 and forms its own group
+        let cands = vec![
+            wedge(vec![0, 1, 0]),
+            wedge(vec![0, 1, 1]),
+            wedge(vec![5, 1, 0]),
+        ];
+        let groups = fuse_level(&cands);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].root_label, 0);
+        assert_eq!(groups[0].cand_ids, vec![0, 1]);
+        // shared level-1 node (preds [0], label 1), split at level 2
+        assert_eq!(groups[0].trie.shared_levels(), 1);
+        assert_eq!(groups[0].trie.nodes[0].children.len(), 1);
+        assert_eq!(groups[1].root_label, 5);
+        assert_eq!(groups[1].cand_ids, vec![2]);
+    }
+
+    #[test]
+    fn fused_level_evaluation_matches_per_candidate() {
+        let g = gen::with_random_labels(gen::power_law(150, 700, 40, 3), 3, 11);
+        let cfg = FsmConfig {
+            min_support: 2,
+            max_size: 3,
+        };
+        let separate = fsm_mine_opts(&g, &cfg, None, false);
+        let fused = fsm_mine_opts(&g, &cfg, None, true);
+        assert_eq!(separate.frequent.len(), fused.frequent.len());
+        for (a, b) in separate.frequent.iter().zip(&fused.frequent) {
+            assert_eq!(a.support, b.support);
+            assert_eq!(a.embeddings, b.embeddings);
+            assert_eq!(a.pattern.canonical_key(), b.pattern.canonical_key());
+        }
+        assert_eq!(separate.candidates_per_level, fused.candidates_per_level);
     }
 
     #[test]

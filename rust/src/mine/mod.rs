@@ -26,6 +26,7 @@ pub mod fsm;
 pub use census::{motif_census, CensusEngine, MotifCensus};
 pub use classify::{PatternClassifier, MAX_MOTIF_K};
 pub use fsm::{
-    fsm_mine, fsm_mine_hybrid, fsm_mine_with, CandShape, CandidateStats, CpuLevelExecutor,
-    FrequentPattern, FsmConfig, FsmResult, LabeledPattern, LevelAcc, LevelExecutor, MatchScratch,
+    fsm_mine, fsm_mine_hybrid, fsm_mine_opts, fsm_mine_with, fuse_level, match_group_rooted,
+    CandShape, CandidateStats, CpuLevelExecutor, FrequentPattern, FsmConfig, FsmResult,
+    FusedGroup, LabeledPattern, LevelAcc, LevelExecutor, MatchScratch,
 };

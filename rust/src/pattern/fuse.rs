@@ -1,0 +1,359 @@
+//! Plan fusion — merging a set of enumeration [`Plan`]s into a prefix
+//! trie so multi-pattern workloads traverse the data graph **once**
+//! (DESIGN.md §11).
+//!
+//! Multi-pattern applications (3-MC's wedge + triangle, the six
+//! connected 4-motifs of 4-MC, an FSM level's sibling candidates) run
+//! plans whose outer loop levels repeat the same neighbor-list fetches
+//! and set operations. The [`PlanTrie`] unifies levels greedily: two
+//! plans share a node exactly when their set-op expression (intersect /
+//! subtract operand refs), symmetry-restriction bound set, and — for
+//! labeled FSM candidates — required vertex label coincide, so a shared
+//! node's candidate set is computed (and, in the PIM cost model, fetched
+//! and charged) exactly once for every plan below it. Leaves carry plan
+//! ids; a plan of size `k` terminates at depth `k - 1`, and interior
+//! nodes may be terminals for shorter plans while longer siblings
+//! continue below.
+//!
+//! The trie is consumed by
+//! [`MultiEnumerator`](crate::exec::enumerate::MultiEnumerator) (fused
+//! pattern counting) and by `mine::fsm`'s fused group matcher; the PIM
+//! simulator prices both through the standard
+//! [`EnumSink`](crate::exec::enumerate::EnumSink) callbacks, which fire
+//! once per trie node instead of once per plan.
+
+use super::plan::Plan;
+
+/// One loop level of a fused path — the unification key. Two plans may
+/// share a node only when every field matches (order-sensitive: plan
+/// construction emits refs in deterministic ascending order, so equal
+/// recipes compare equal).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TrieLevel {
+    /// Earlier depths whose neighbor sets are intersected.
+    pub intersect: Vec<usize>,
+    /// Earlier depths whose neighbor sets are subtracted (induced plans).
+    pub subtract: Vec<usize>,
+    /// Symmetry-breaking upper-bound refs (`min` over bound values is the
+    /// candidate filter threshold).
+    pub upper: Vec<usize>,
+    /// Required data-vertex label (FSM candidates); `None` for the
+    /// unlabeled counting plans.
+    pub label: Option<u32>,
+}
+
+impl TrieLevel {
+    /// Does this level's set-op expression consume the vertex bound at
+    /// `depth`?
+    #[inline]
+    pub fn uses(&self, depth: usize) -> bool {
+        self.intersect.contains(&depth) || self.subtract.contains(&depth)
+    }
+}
+
+/// One node of the fused plan trie. `nodes[0]` is the root (the level-0
+/// vertex loop, no set-op of its own); every other node computes one
+/// candidate set from the recipe in `op`.
+#[derive(Clone, Debug)]
+pub struct TrieNode {
+    /// The set-op recipe this node executes (empty for the root).
+    pub op: TrieLevel,
+    /// Loop depth of the vertex this node binds (root = 0).
+    pub depth: usize,
+    /// Child node indices (deeper loop levels).
+    pub children: Vec<usize>,
+    /// Plan ids whose final level is this node.
+    pub terminals: Vec<usize>,
+    /// Plans terminating in this node's subtree (including here) — the
+    /// sharing degree of this node's candidate computation.
+    pub plans: usize,
+}
+
+/// A set of plans merged by shared loop prefixes. Plan ids are assigned
+/// in insertion order ([`PlanTrie::build`] preserves the input order, so
+/// id `i` is `plans[i]`).
+#[derive(Clone, Debug)]
+pub struct PlanTrie {
+    pub nodes: Vec<TrieNode>,
+    /// Number of fused plans.
+    pub num_plans: usize,
+    /// Maximum loop depth + 1 (= the largest fused plan's vertex count).
+    pub depth: usize,
+    /// Required root-vertex label (FSM groups); `None` for counting.
+    pub root_label: Option<u32>,
+    /// Total levels over all inserted paths (Σ plan sizes − num_plans) —
+    /// `total_levels − (num_nodes − 1)` levels were deduplicated.
+    pub total_levels: usize,
+}
+
+impl PlanTrie {
+    /// An empty trie (just the root-loop node).
+    pub fn new(root_label: Option<u32>) -> PlanTrie {
+        PlanTrie {
+            nodes: vec![TrieNode {
+                op: TrieLevel::default(),
+                depth: 0,
+                children: Vec::new(),
+                terminals: Vec::new(),
+                plans: 0,
+            }],
+            num_plans: 0,
+            depth: 1,
+            root_label,
+            total_levels: 0,
+        }
+    }
+
+    /// Insert one plan as the path `levels[0..]` (depth 1 onward; the
+    /// root loop is implicit). Levels unify greedily with existing nodes
+    /// from the top down; the first mismatch starts a fresh branch.
+    /// Returns the assigned plan id (sequential from 0).
+    pub fn insert_path(&mut self, levels: &[TrieLevel]) -> usize {
+        let pid = self.num_plans;
+        self.num_plans += 1;
+        self.depth = self.depth.max(levels.len() + 1);
+        self.total_levels += levels.len();
+        let mut cur = 0usize;
+        self.nodes[0].plans += 1;
+        for (d, lvl) in levels.iter().enumerate() {
+            let found = self.nodes[cur]
+                .children
+                .iter()
+                .copied()
+                .find(|&c| self.nodes[c].op == *lvl);
+            let child = match found {
+                Some(c) => c,
+                None => {
+                    let id = self.nodes.len();
+                    self.nodes.push(TrieNode {
+                        op: lvl.clone(),
+                        depth: d + 1,
+                        children: Vec::new(),
+                        terminals: Vec::new(),
+                        plans: 0,
+                    });
+                    self.nodes[cur].children.push(id);
+                    id
+                }
+            };
+            self.nodes[child].plans += 1;
+            cur = child;
+        }
+        self.nodes[cur].terminals.push(pid);
+        pid
+    }
+
+    /// Fuse a set of unlabeled counting plans (the [`Application`] /
+    /// motif-census path). Plan id `i` corresponds to `plans[i]`.
+    ///
+    /// [`Application`]: crate::pattern::plan::Application
+    ///
+    /// ```
+    /// use pimminer::pattern::fuse::PlanTrie;
+    /// use pimminer::pattern::plan::application;
+    ///
+    /// let plans = application("3-MC").unwrap().plans(); // wedge + triangle
+    /// let trie = PlanTrie::build(&plans);
+    /// assert_eq!(trie.num_plans, 2);
+    /// // both patterns have 3 vertices; the root loop is always shared
+    /// assert!(trie.num_nodes() <= 1 + 2 * 2);
+    /// ```
+    pub fn build(plans: &[Plan]) -> PlanTrie {
+        let mut trie = PlanTrie::new(None);
+        for plan in plans {
+            let levels: Vec<TrieLevel> = plan.levels[1..]
+                .iter()
+                .map(|l| TrieLevel {
+                    intersect: l.intersect.clone(),
+                    subtract: l.subtract.clone(),
+                    upper: l.upper.clone(),
+                    label: None,
+                })
+                .collect();
+            trie.insert_path(&levels);
+        }
+        trie
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Loop levels deduplicated by prefix sharing: how many per-plan
+    /// candidate computations (and their fetch/scan traffic) the fused
+    /// traversal elides.
+    pub fn shared_levels(&self) -> usize {
+        self.total_levels - (self.nodes.len() - 1)
+    }
+
+    /// Per-node fetch sharing degree: `sharers[x]` is the number of fused
+    /// plans that consume `N(v)` for the vertex bound at node `x` (i.e.
+    /// whose path below `x` intersects or subtracts depth `depth(x)`).
+    /// In per-plan execution each of those plans would fetch the list
+    /// itself; the fused traversal fetches once and saves
+    /// `sharers[x] − 1` fetches per binding. `sharers[x] == 0` means the
+    /// fetch is never needed (mirrors `FetchSpec::needed`).
+    pub fn fetch_sharers(&self) -> Vec<usize> {
+        (0..self.nodes.len())
+            .map(|x| {
+                let node = &self.nodes[x];
+                let d = node.depth;
+                node.children.iter().map(|&c| self.count_users(c, d)).sum()
+            })
+            .collect()
+    }
+
+    /// Plans through `y`'s subtree whose remaining path (from `y` down)
+    /// uses depth `d`. Once a node on the path uses `d`, every plan below
+    /// it needs the fetch.
+    fn count_users(&self, y: usize, d: usize) -> usize {
+        let node = &self.nodes[y];
+        if node.op.uses(d) {
+            return node.plans;
+        }
+        node.children.iter().map(|&c| self.count_users(c, d)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::pattern as pat;
+    use crate::pattern::plan::application;
+
+    #[test]
+    fn single_plan_trie_is_a_path() {
+        let plan = Plan::build(&pat::clique(4));
+        let trie = PlanTrie::build(std::slice::from_ref(&plan));
+        assert_eq!(trie.num_plans, 1);
+        assert_eq!(trie.num_nodes(), 4); // root + 3 levels
+        assert_eq!(trie.depth, 4);
+        assert_eq!(trie.shared_levels(), 0);
+        // the path is a chain with the plan terminating at the leaf
+        let mut cur = 0;
+        for d in 1..4 {
+            assert_eq!(trie.nodes[cur].children.len(), 1);
+            cur = trie.nodes[cur].children[0];
+            assert_eq!(trie.nodes[cur].depth, d);
+            assert_eq!(trie.nodes[cur].plans, 1);
+        }
+        assert_eq!(trie.nodes[cur].terminals, vec![0]);
+        // clique levels: every fetch below the leaf is consumed once
+        let sharers = trie.fetch_sharers();
+        assert_eq!(sharers[0], 1); // root list used by levels 1..3
+        assert_eq!(sharers[cur], 0); // leaf binding fetches nothing
+    }
+
+    #[test]
+    fn identical_plans_fuse_completely() {
+        let plan = Plan::build(&pat::clique(4));
+        let trie = PlanTrie::build(&[plan.clone(), plan]);
+        assert_eq!(trie.num_plans, 2);
+        assert_eq!(trie.num_nodes(), 4);
+        assert_eq!(trie.shared_levels(), 3);
+        // both plans terminate at the same leaf; the root fetch serves 2
+        assert_eq!(trie.fetch_sharers()[0], 2);
+        let leaf = trie
+            .nodes
+            .iter()
+            .find(|n| !n.terminals.is_empty())
+            .unwrap();
+        assert_eq!(leaf.terminals, vec![0, 1]);
+    }
+
+    #[test]
+    fn four_mc_trie_shares_prefixes() {
+        let plans = application("4-MC").unwrap().plans();
+        let trie = PlanTrie::build(&plans);
+        assert_eq!(trie.num_plans, 6);
+        assert_eq!(trie.depth, 4);
+        // six plans × 3 levels = 18 path levels; prefix sharing must
+        // collapse at least the level-1 layer (every plan's level 1 is
+        // `intersect [0]`, differing only in the symmetry bound)
+        assert!(trie.shared_levels() > 0, "4-MC plans must share prefixes");
+        let level1: Vec<usize> = trie.nodes[0].children.clone();
+        assert!(
+            level1.len() < 6,
+            "level-1 nodes must unify: got {}",
+            level1.len()
+        );
+        for &c in &level1 {
+            assert_eq!(trie.nodes[c].op.intersect, vec![0]);
+            assert!(trie.nodes[c].op.subtract.is_empty());
+        }
+        // every plan id terminates exactly once
+        let mut seen = vec![0usize; 6];
+        for n in &trie.nodes {
+            for &pid in &n.terminals {
+                seen[pid] += 1;
+            }
+        }
+        assert_eq!(seen, vec![1; 6]);
+        // the root list is consumed by every plan (all intersect ref 0)
+        assert_eq!(trie.fetch_sharers()[0], 6);
+    }
+
+    #[test]
+    fn clique_ladder_fuses_to_one_path() {
+        // 3-CC/4-CC/5-CC plans are nested prefixes: the trie is a single
+        // path with terminals at depths 2, 3, 4 — counting all cliques up
+        // to size 5 costs one 5-CC traversal.
+        let plans = application("CC").unwrap().plans();
+        let trie = PlanTrie::build(&plans);
+        assert_eq!(trie.num_nodes(), 5);
+        assert_eq!(trie.shared_levels(), 5); // (2 + 3 + 4) path levels − 4 nodes
+        let mut depths: Vec<usize> = trie
+            .nodes
+            .iter()
+            .filter(|n| !n.terminals.is_empty())
+            .map(|n| n.depth)
+            .collect();
+        depths.sort_unstable();
+        assert_eq!(depths, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn labeled_levels_split_on_label() {
+        let mk = |label| TrieLevel {
+            intersect: vec![0],
+            subtract: vec![],
+            upper: vec![],
+            label: Some(label),
+        };
+        let mut trie = PlanTrie::new(Some(7));
+        trie.insert_path(&[mk(1), mk(2)]);
+        trie.insert_path(&[mk(1), mk(3)]);
+        trie.insert_path(&[mk(4)]);
+        assert_eq!(trie.num_plans, 3);
+        // level 1: labels 1 and 4 → two children; label-1 node splits
+        // into two level-2 children
+        assert_eq!(trie.nodes[0].children.len(), 2);
+        assert_eq!(trie.shared_levels(), 1); // the shared mk(1) level
+        assert_eq!(trie.root_label, Some(7));
+        // plan 2 (single level) terminates at depth 1
+        let t = trie
+            .nodes
+            .iter()
+            .find(|n| n.terminals.contains(&2))
+            .unwrap();
+        assert_eq!(t.depth, 1);
+    }
+
+    #[test]
+    fn fetch_sharers_count_only_consumers() {
+        // non-induced star plan: every level intersects only ref 0 — a
+        // bound leaf's list is never consumed, the root's is consumed by
+        // one plan. (The induced plan *subtracts* earlier leaves, which
+        // counts as consumption.)
+        let plan = Plan::build_with(&pat::four_star(), false);
+        let trie = PlanTrie::build(std::slice::from_ref(&plan));
+        let sharers = trie.fetch_sharers();
+        assert_eq!(sharers[0], 1);
+        // interior leaf bindings fetch nothing
+        for (i, n) in trie.nodes.iter().enumerate().skip(1) {
+            if !n.children.is_empty() {
+                assert_eq!(sharers[i], 0, "node {i}");
+            }
+        }
+    }
+}

@@ -7,9 +7,12 @@
 //! [`Plan`] the enumeration engine and the PIM simulator consume
 //! unchanged; [`motif`] generates the exhaustive per-size pattern sets of
 //! the k-MC applications; [`plan`] holds the plan representation and the
-//! paper's fixed application catalogue.
+//! paper's fixed application catalogue; [`fuse`] merges a set of plans
+//! into a prefix-sharing [`PlanTrie`](fuse::PlanTrie) so multi-pattern
+//! workloads traverse the graph once (DESIGN.md §11).
 
 pub mod compile;
+pub mod fuse;
 pub mod motif;
 pub mod pattern;
 pub mod plan;
@@ -26,5 +29,6 @@ pub(crate) fn normalize_name(name: &str) -> String {
 }
 
 pub use compile::{compile_spec, parse_pattern, Compiled, CostModel};
+pub use fuse::{PlanTrie, TrieLevel, TrieNode};
 pub use pattern::Pattern;
 pub use plan::{application, paper_applications, Application, LevelPlan, Plan};

@@ -203,6 +203,14 @@ pub fn application(name: &str) -> Option<Application> {
             name: "4-CL",
             patterns: vec![four_cycle()],
         },
+        // Beyond the paper's Table 5 set: the clique ladder. Its three
+        // plans are nested prefixes of one another, so the fused trie
+        // (DESIGN.md §11) collapses to a single path — counting all
+        // cliques up to size 5 for the price of 5-CC alone.
+        "cc" => Application {
+            name: "CC",
+            patterns: vec![clique(3), clique(4), clique(5)],
+        },
         _ => return None,
     };
     Some(app)
@@ -289,8 +297,23 @@ mod tests {
         assert_eq!(application("4-CC").unwrap().patterns.len(), 1);
         assert_eq!(application("3mc").unwrap().patterns.len(), 2);
         assert_eq!(application("4MC").unwrap().patterns.len(), 6);
+        assert_eq!(application("CC").unwrap().patterns.len(), 3);
         assert!(application("9zz").is_none());
         assert_eq!(paper_applications().len(), 6);
+    }
+
+    #[test]
+    fn clique_ladder_plans_are_nested_prefixes() {
+        // The fused-trie showcase (DESIGN.md §11): every 3-CC/4-CC level
+        // recipe must equal the corresponding 5-CC prefix level, so the
+        // three plans merge into one path.
+        let plans = application("CC").unwrap().plans();
+        let big = &plans[2];
+        for small in &plans[..2] {
+            for j in 1..small.size() {
+                assert_eq!(small.levels[j], big.levels[j], "level {j}");
+            }
+        }
     }
 
     #[test]

@@ -14,6 +14,6 @@ pub use addrmap::{AccessClass, AddrMap};
 pub use config::PimConfig;
 pub use placement::{Placement, ReplicaReport};
 pub use sim::{
-    build_placement, simulate_app, simulate_fsm, simulate_motifs, simulate_plan, AccessStats,
-    MotifSimResult, SimOptions, SimResult,
+    build_placement, simulate_app, simulate_fsm, simulate_motifs, simulate_plan,
+    simulate_plans_fused, AccessStats, MotifSimResult, SimOptions, SimResult,
 };

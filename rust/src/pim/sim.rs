@@ -25,7 +25,7 @@ use super::addrmap::{split_access, startup_latency, AddrMap};
 use super::config::PimConfig;
 use super::placement::Placement;
 use super::stealing::{schedule, Piece};
-use crate::exec::enumerate::{EnumSink, Enumerator};
+use crate::exec::enumerate::{EnumSink, Enumerator, MultiEnumerator};
 use crate::graph::{CsrGraph, HubBitmaps, VertexId};
 use crate::mine::census::{CensusEngine, MotifCensus};
 use crate::mine::classify::PatternClassifier;
@@ -34,6 +34,7 @@ use crate::mine::fsm::{
     LevelExecutor, MatchScratch,
 };
 use crate::part::{self, PartitionStrategy};
+use crate::pattern::fuse::PlanTrie;
 use crate::pattern::plan::{Application, Plan};
 use crate::util::threads;
 use std::collections::VecDeque;
@@ -77,6 +78,19 @@ pub struct SimOptions {
     /// Hub degree threshold override (`--hub-threshold`); `None` uses
     /// [`HubBitmaps::auto_threshold`].
     pub hub_threshold: Option<usize>,
+    /// DESIGN.md §11: fused multi-pattern enumeration. Multi-plan
+    /// applications descend one merged [`PlanTrie`] per root (shared
+    /// prefixes fetched and charged once) and FSM levels match candidate
+    /// groups in one rooted traversal; `false` keeps the per-plan /
+    /// per-candidate loops (the `--no-fused` A/B baseline). Counts and
+    /// mining results are bit-identical either way.
+    pub fused: bool,
+    /// Profiling-pass task-claim chunk override (`--chunk`); `None`
+    /// keeps the default of 16 roots per grab. Tasks are claimed in
+    /// descending-degree order either way (hubs first shrinks the host
+    /// pass's tail latency under power-law skew); simulated results are
+    /// bit-identical for every chunk.
+    pub chunk: Option<usize>,
 }
 
 impl SimOptions {
@@ -89,6 +103,8 @@ impl SimOptions {
         partitioner: PartitionStrategy::RoundRobin,
         hub_bitmaps: false,
         hub_threshold: None,
+        fused: false,
+        chunk: None,
     };
 
     pub fn all() -> SimOptions {
@@ -211,6 +227,14 @@ pub struct SimResult {
     /// path (in-bank streams that never cross the fabric). Zero unless
     /// [`SimOptions::hub_bitmaps`] is on.
     pub bitmap_words: u64,
+    /// Neighbor-list fetches elided by plan fusion (DESIGN.md §11): each
+    /// fetch a trie node emitted on behalf of `p` fused plans counts
+    /// `p − 1` here — the duplicate transfers the per-plan loop would
+    /// have issued. Zero unless [`SimOptions::fused`] is on.
+    pub shared_fetches: u64,
+    /// Plans (patterns / FSM candidates) evaluated through fused
+    /// traversals in this run; zero for per-plan execution.
+    pub fused_plans: u64,
 }
 
 impl SimResult {
@@ -256,6 +280,8 @@ impl SimResult {
         self.agg_cycles += o.agg_cycles;
         self.scan_elems += o.scan_elems;
         self.bitmap_words += o.bitmap_words;
+        self.shared_fetches += o.shared_fetches;
+        self.fused_plans += o.fused_plans;
     }
 
     /// The all-zero identity for [`add`](Self::add) (`v_b_min` saturated
@@ -281,6 +307,8 @@ impl SimResult {
             agg_cycles: 0,
             scan_elems: 0,
             bitmap_words: 0,
+            shared_fetches: 0,
+            fused_plans: 0,
         }
     }
 }
@@ -317,6 +345,8 @@ struct GlobalAcc {
     scan_elems: u64,
     /// Dense bitmap words processed by the hybrid set engine.
     bitmap_words: u64,
+    /// Fetches elided by fused traversals (DESIGN.md §11).
+    shared_fetches: u64,
 }
 
 impl GlobalAcc {
@@ -348,6 +378,7 @@ impl GlobalAcc {
         self.agg_updates += o.agg_updates;
         self.scan_elems += o.scan_elems;
         self.bitmap_words += o.bitmap_words;
+        self.shared_fetches += o.shared_fetches;
     }
 }
 
@@ -585,6 +616,10 @@ impl EnumSink for SimSink<'_> {
         self.acc.count += count;
     }
 
+    fn on_shared_fetch(&mut self, saved: usize) {
+        self.acc.shared_fetches += saved as u64;
+    }
+
     fn on_aggregate(&mut self, _key: usize, bytes: u64) {
         let cfg = self.cfg;
         self.acc.agg_updates += 1;
@@ -733,7 +768,16 @@ trait TaskRunner: Sync {
 /// Returns the merged accumulator, per-task profiles in root order, and
 /// the per-thread workers (the mining runners accumulate their counts and
 /// domains in them).
+///
+/// Workers claim tasks in **descending-degree order** (hubs first): under
+/// power-law skew the giant tasks otherwise land last and one thread
+/// finishes alone. The claim order changes neither the per-task profiles
+/// nor the task → unit assignment (profiles are recorded at the task's
+/// root-order index), so simulated results stay bit-identical; only the
+/// host-side wall clock moves. The claim chunk defaults to 16 roots and
+/// is overridable via [`SimOptions::chunk`] (`--chunk`).
 fn profile_pass<R: TaskRunner>(
+    g: &CsrGraph,
     runner: &R,
     roots: &[VertexId],
     opts: &SimOptions,
@@ -743,7 +787,8 @@ fn profile_pass<R: TaskRunner>(
     let ntasks = roots.len();
     let nthreads = threads::num_threads().min(ntasks.max(1));
     let next = AtomicUsize::new(0);
-    let chunk = 16usize;
+    let chunk = opts.chunk.unwrap_or(16).max(1);
+    let order = crate::exec::cpu::degree_order(g, roots);
     struct Shard<W> {
         profiles: Vec<(usize, TaskProfile)>,
         acc: GlobalAcc,
@@ -765,7 +810,7 @@ fn profile_pass<R: TaskRunner>(
                             break;
                         }
                         let end = (start + chunk).min(ntasks);
-                        for i in start..end {
+                        for &i in &order[start..end] {
                             let root = roots[i];
                             l1.clear();
                             let mut sink = SimSink {
@@ -948,6 +993,8 @@ fn finish_sim(
         agg_cycles,
         scan_elems: acc.scan_elems,
         bitmap_words: acc.bitmap_words,
+        shared_fetches: acc.shared_fetches,
+        fused_plans: 0,
     }
 }
 
@@ -979,8 +1026,58 @@ pub fn simulate_plan(
         plan,
         hubs: setup.hubs.as_ref(),
     };
-    let (acc, profiles, _) = profile_pass(&runner, roots, opts, cfg, &setup);
+    let (acc, profiles, _) = profile_pass(g, &runner, roots, opts, cfg, &setup);
     finish_sim(roots, profiles, acc, opts, cfg, &setup, None)
+}
+
+/// Simulate a set of plans **fused** (DESIGN.md §11): one merged
+/// [`PlanTrie`] descent per root task enumerates every plan, so a fetch
+/// or scan shared by `p` plans is loaded and charged exactly once (the
+/// elided transfers are reported in `SimResult::shared_fetches`).
+/// Returns the timing plus the per-plan count vector; the total and each
+/// entry are bit-identical to running [`simulate_plan`] per plan.
+pub fn simulate_plans_fused(
+    g: &CsrGraph,
+    plans: &[Plan],
+    roots: &[VertexId],
+    opts: &SimOptions,
+    cfg: &PimConfig,
+) -> (SimResult, Vec<u64>) {
+    struct FusedRunner<'a> {
+        g: &'a CsrGraph,
+        trie: &'a PlanTrie,
+        hubs: Option<&'a HubBitmaps>,
+    }
+    impl<'a> TaskRunner for FusedRunner<'a> {
+        type Worker = (MultiEnumerator<'a>, Vec<u64>);
+        fn worker(&self) -> Self::Worker {
+            (
+                MultiEnumerator::with_hubs(self.g, self.trie, self.hubs),
+                vec![0u64; self.trie.num_plans],
+            )
+        }
+        fn run(&self, w: &mut Self::Worker, root: VertexId, sink: &mut SimSink<'_>) {
+            let (e, counts) = w;
+            e.count_root(root, sink, counts);
+        }
+    }
+    let setup = SimSetup::new(g, opts, cfg);
+    let trie = PlanTrie::build(plans);
+    let runner = FusedRunner {
+        g,
+        trie: &trie,
+        hubs: setup.hubs.as_ref(),
+    };
+    let (acc, profiles, workers) = profile_pass(g, &runner, roots, opts, cfg, &setup);
+    let mut per_plan = vec![0u64; trie.num_plans];
+    for (_, counts) in workers {
+        for (a, b) in per_plan.iter_mut().zip(&counts) {
+            *a += *b;
+        }
+    }
+    let mut result = finish_sim(roots, profiles, acc, opts, cfg, &setup, None);
+    result.fused_plans = trie.num_plans as u64;
+    (result, per_plan)
 }
 
 /// Outcome of `PIMMotifCount`: the census plus the simulated timing.
@@ -1017,7 +1114,7 @@ pub fn simulate_motifs(
     let cls = PatternClassifier::new(k);
     let setup = SimSetup::new(g, opts, cfg);
     let (acc, profiles, workers) =
-        profile_pass(&CensusRunner { g, cls: &cls }, roots, opts, cfg, &setup);
+        profile_pass(g, &CensusRunner { g, cls: &cls }, roots, opts, cfg, &setup);
     let mut counts = vec![0u64; cls.num_patterns()];
     for w in workers {
         for (a, b) in counts.iter_mut().zip(&w.counts) {
@@ -1079,6 +1176,28 @@ pub fn simulate_fsm(
             }
         }
     }
+    /// Fused level evaluation (DESIGN.md §11): the level's candidates are
+    /// grouped by shared edge prefix and each group matched in one rooted
+    /// traversal, so sibling candidates' common intersections are
+    /// computed — and charged — once.
+    struct FusedFsmLevelRunner<'a> {
+        g: &'a CsrGraph,
+        cands: &'a [LabeledPattern],
+        groups: Vec<fsm::FusedGroup>,
+        hubs: Option<&'a HubBitmaps>,
+    }
+    impl TaskRunner for FusedFsmLevelRunner<'_> {
+        type Worker = (LevelAcc, MatchScratch);
+        fn worker(&self) -> Self::Worker {
+            (LevelAcc::new(self.cands), MatchScratch::default())
+        }
+        fn run(&self, w: &mut Self::Worker, root: VertexId, sink: &mut SimSink<'_>) {
+            let (acc, scratch) = w;
+            for grp in &self.groups {
+                fsm::match_group_rooted(self.g, self.hubs, grp, root, sink, acc, scratch);
+            }
+        }
+    }
     struct PimLevelExecutor<'a> {
         opts: &'a SimOptions,
         cfg: &'a PimConfig,
@@ -1092,14 +1211,23 @@ pub fn simulate_fsm(
             g: &CsrGraph,
             candidates: &[LabeledPattern],
         ) -> Vec<CandidateStats> {
-            let runner = FsmLevelRunner {
-                g,
-                cands: candidates,
-                shapes: candidates.iter().map(CandShape::of).collect(),
-                hubs: self.setup.hubs.as_ref(),
+            let (acc, profiles, workers) = if self.opts.fused {
+                let runner = FusedFsmLevelRunner {
+                    g,
+                    cands: candidates,
+                    groups: fsm::fuse_level(candidates),
+                    hubs: self.setup.hubs.as_ref(),
+                };
+                profile_pass(g, &runner, &self.roots, self.opts, self.cfg, &self.setup)
+            } else {
+                let runner = FsmLevelRunner {
+                    g,
+                    cands: candidates,
+                    shapes: candidates.iter().map(CandShape::of).collect(),
+                    hubs: self.setup.hubs.as_ref(),
+                };
+                profile_pass(g, &runner, &self.roots, self.opts, self.cfg, &self.setup)
             };
-            let (acc, profiles, workers) =
-                profile_pass(&runner, &self.roots, self.opts, self.cfg, &self.setup);
             let merged = workers
                 .into_iter()
                 .map(|(acc, _)| acc)
@@ -1118,7 +1246,7 @@ pub fn simulate_fsm(
                     .sum(),
                 entry_bytes: 16,
             };
-            let sim = finish_sim(
+            let mut sim = finish_sim(
                 &self.roots,
                 profiles,
                 acc,
@@ -1127,6 +1255,9 @@ pub fn simulate_fsm(
                 &self.setup,
                 Some(spec),
             );
+            if self.opts.fused {
+                sim.fused_plans = candidates.len() as u64;
+            }
             self.levels.push(sim);
             merged.into_stats()
         }
@@ -1152,7 +1283,10 @@ pub fn simulate_fsm(
     (result, total)
 }
 
-/// Simulate a whole application: plans run back-to-back (times add).
+/// Simulate a whole application. With [`SimOptions::fused`] the plans
+/// merge into one [`PlanTrie`] and run in a single fused pass
+/// (DESIGN.md §11); otherwise plans run back-to-back (times add). Counts
+/// are identical either way.
 pub fn simulate_app(
     g: &CsrGraph,
     app: &Application,
@@ -1161,6 +1295,9 @@ pub fn simulate_app(
     cfg: &PimConfig,
 ) -> SimResult {
     let plans = app.plans();
+    if opts.fused {
+        return simulate_plans_fused(g, &plans, roots, opts, cfg).0;
+    }
     let mut it = plans.iter();
     let first = it.next().expect("application has at least one pattern");
     let mut total = simulate_plan(g, first, roots, opts, cfg);
@@ -1491,6 +1628,131 @@ mod tests {
         assert!(sim.agg_updates > 0);
         // sim.count totals the embeddings of every evaluated candidate
         assert!(sim.count >= cpu.frequent.iter().map(|f| f.embeddings).sum::<u64>());
+    }
+
+    #[test]
+    fn fused_app_counts_match_and_cut_traffic() {
+        // The PR's acceptance invariant: fused 4-MC must report strictly
+        // fewer fetched bytes and total cycles than per-plan on the
+        // fixed-seed power-law bench graph, with bit-identical counts —
+        // across every ladder configuration.
+        let g = test_graph();
+        let cfg = PimConfig::default();
+        let roots = all_roots(&g);
+        let app = application("4-MC").unwrap();
+        for (name, opts) in SimOptions::ladder() {
+            let fused_opts = SimOptions { fused: true, ..opts };
+            let sep = simulate_app(&g, &app, &roots, &opts, &cfg);
+            let fus = simulate_app(&g, &app, &roots, &fused_opts, &cfg);
+            assert_eq!(fus.count, sep.count, "{name}");
+            assert_eq!(sep.shared_fetches, 0, "{name}");
+            assert_eq!(sep.fused_plans, 0, "{name}");
+            assert!(fus.shared_fetches > 0, "{name}");
+            assert_eq!(fus.fused_plans, 6, "{name}");
+            assert!(
+                fus.fm_bytes < sep.fm_bytes,
+                "{name}: fused {} vs per-plan {} fetched bytes",
+                fus.fm_bytes,
+                sep.fm_bytes
+            );
+            assert!(
+                fus.total_cycles < sep.total_cycles,
+                "{name}: fused {} vs per-plan {} cycles",
+                fus.total_cycles,
+                sep.total_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn fused_single_plan_is_bit_identical() {
+        // A one-plan "trie" is a degenerate path: the fused executor must
+        // reproduce the per-plan run exactly — same count, same cycles,
+        // same traffic, nothing shared.
+        let g = test_graph();
+        let cfg = PimConfig::default();
+        let roots = all_roots(&g);
+        let app = application("4-CC").unwrap();
+        let opts = SimOptions::all();
+        let sep = simulate_app(&g, &app, &roots, &opts, &cfg);
+        let fus = simulate_app(&g, &app, &roots, &SimOptions { fused: true, ..opts }, &cfg);
+        assert_eq!(fus.count, sep.count);
+        assert_eq!(fus.total_cycles, sep.total_cycles);
+        assert_eq!(fus.fm_bytes, sep.fm_bytes);
+        assert_eq!(fus.tm_bytes, sep.tm_bytes);
+        assert_eq!(fus.shared_fetches, 0);
+        assert_eq!(fus.fused_plans, 1);
+    }
+
+    #[test]
+    fn fused_per_plan_counts_match_separate_runs() {
+        let g = test_graph();
+        let cfg = PimConfig::default();
+        let roots = all_roots(&g);
+        let app = application("3-MC").unwrap();
+        let plans = app.plans();
+        let opts = SimOptions::all();
+        let (_, per_plan) = simulate_plans_fused(&g, &plans, &roots, &opts, &cfg);
+        for (i, plan) in plans.iter().enumerate() {
+            let want = simulate_plan(&g, plan, &roots, &opts, &cfg).count;
+            assert_eq!(per_plan[i], want, "plan {i}");
+        }
+    }
+
+    #[test]
+    fn chunk_override_is_bit_deterministic() {
+        let g = test_graph();
+        let cfg = PimConfig::default();
+        let roots = all_roots(&g);
+        let app = application("3-CC").unwrap();
+        let base = simulate_app(&g, &app, &roots, &SimOptions::all(), &cfg);
+        for chunk in [1usize, 4, 64, 4096] {
+            let opts = SimOptions {
+                chunk: Some(chunk),
+                ..SimOptions::all()
+            };
+            let r = simulate_app(&g, &app, &roots, &opts, &cfg);
+            assert_eq!(r.count, base.count, "chunk {chunk}");
+            assert_eq!(r.total_cycles, base.total_cycles, "chunk {chunk}");
+            assert_eq!(r.fm_bytes, base.fm_bytes, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn fsm_sim_fused_matches_per_candidate() {
+        use crate::graph::gen;
+        let lg = crate::graph::sort_by_degree_desc(&gen::with_random_labels(
+            gen::power_law(400, 1600, 60, 5),
+            3,
+            11,
+        ))
+        .graph;
+        let cfg = PimConfig::default();
+        let fsm_cfg = FsmConfig {
+            min_support: 20,
+            max_size: 3,
+        };
+        let (sep, sep_sim) = simulate_fsm(&lg, &fsm_cfg, &SimOptions::all(), &cfg);
+        let fused_opts = SimOptions {
+            fused: true,
+            ..SimOptions::all()
+        };
+        let (fus, fus_sim) = simulate_fsm(&lg, &fsm_cfg, &fused_opts, &cfg);
+        assert_eq!(sep.frequent.len(), fus.frequent.len());
+        for (a, b) in sep.frequent.iter().zip(&fus.frequent) {
+            assert_eq!(a.support, b.support);
+            assert_eq!(a.embeddings, b.embeddings);
+            assert_eq!(a.pattern.canonical_key(), b.pattern.canonical_key());
+        }
+        assert_eq!(fus_sim.count, sep_sim.count);
+        assert!(fus_sim.shared_fetches > 0, "sibling candidates must share fetches");
+        assert!(fus_sim.fused_plans > 0);
+        assert!(
+            fus_sim.fm_bytes < sep_sim.fm_bytes,
+            "fused FSM must move fewer bytes: {} vs {}",
+            fus_sim.fm_bytes,
+            sep_sim.fm_bytes
+        );
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Property tests for fused multi-pattern enumeration (DESIGN.md §11):
+//! a fused [`PlanTrie`] traversal must produce exactly the per-plan
+//! executors' counts — per plan, not just in total — over random labeled
+//! and unlabeled graphs, for every paper application and FSM level, with
+//! the hub-bitmap hybrid engine on and off, including the single-plan
+//! degenerate trie (a path) where fusion must be a perfect no-op.
+
+use pimminer::exec::cpu::{self, CpuFlavor};
+use pimminer::graph::{gen, sort_by_degree_desc, CsrGraph, HubBitmaps};
+use pimminer::mine::fsm::{fsm_mine_opts, FsmConfig};
+use pimminer::pattern::compile::compile_spec;
+use pimminer::pattern::fuse::PlanTrie;
+use pimminer::pattern::plan::{application, paper_applications, Application};
+use pimminer::pim::{
+    simulate_app, simulate_fsm, simulate_plan, simulate_plans_fused, PimConfig, SimOptions,
+};
+
+fn graphs() -> Vec<CsrGraph> {
+    vec![
+        sort_by_degree_desc(&gen::power_law(400, 2_500, 100, 11)).graph,
+        sort_by_degree_desc(&gen::erdos_renyi(150, 1_100, 5)).graph,
+        gen::star(40),   // extreme skew: every plan collapses at the hub
+        gen::clique(18), // all-dense: every pattern embeds everywhere
+    ]
+}
+
+fn hub_variants(g: &CsrGraph) -> Vec<Option<HubBitmaps>> {
+    vec![None, Some(HubBitmaps::build(g, Some(4)))]
+}
+
+/// The paper's six applications plus the CC clique ladder (whose fused
+/// trie is the degenerate-sharing opposite: one fully shared path).
+fn fused_applications() -> Vec<Application> {
+    let mut apps = paper_applications();
+    apps.push(application("CC").unwrap());
+    apps
+}
+
+#[test]
+fn fused_counts_equal_per_plan_sums_for_all_paper_applications() {
+    for (gi, g) in graphs().into_iter().enumerate() {
+        let roots = cpu::sampled_roots(g.num_vertices(), 1.0);
+        for hubs in hub_variants(&g) {
+            for app in fused_applications() {
+                let plans = app.plans();
+                let trie = PlanTrie::build(&plans);
+                let fused = cpu::count_plans_fused(
+                    &g,
+                    &trie,
+                    &roots,
+                    CpuFlavor::AutoMineOpt,
+                    hubs.as_ref(),
+                    None,
+                );
+                assert_eq!(fused.len(), plans.len());
+                let mut sum = 0u64;
+                for (i, plan) in plans.iter().enumerate() {
+                    let want = cpu::count_plan_hybrid(
+                        &g,
+                        plan,
+                        &roots,
+                        CpuFlavor::AutoMineOpt,
+                        hubs.as_ref(),
+                    );
+                    assert_eq!(
+                        fused[i],
+                        want,
+                        "graph {gi} app {} plan {i} hubs {}",
+                        app.name,
+                        hubs.is_some()
+                    );
+                    sum += want;
+                }
+                let total = cpu::run_application_with(
+                    &g,
+                    &app,
+                    &roots,
+                    CpuFlavor::AutoMineOpt,
+                    hubs.as_ref(),
+                    true,
+                    None,
+                )
+                .count;
+                assert_eq!(total, sum, "graph {gi} app {}", app.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn single_plan_degenerate_tries_are_exact() {
+    // One-plan tries (fixed catalogue and compiler-produced alike) must
+    // reproduce the plain enumerator's count: fusion with nothing to
+    // share is a no-op.
+    let specs = ["0-1,1-2,2-0", "0-1,1-2,2-0,2-3", "4-cycle", "house"];
+    for (gi, g) in graphs().into_iter().enumerate() {
+        let roots = cpu::sampled_roots(g.num_vertices(), 1.0);
+        for spec in specs {
+            let plan = compile_spec(spec).unwrap().plan;
+            let trie = PlanTrie::build(std::slice::from_ref(&plan));
+            assert_eq!(trie.num_plans, 1);
+            assert_eq!(trie.shared_levels(), 0);
+            let fused =
+                cpu::count_plans_fused(&g, &trie, &roots, CpuFlavor::AutoMineOpt, None, None);
+            let want = cpu::count_plan(&g, &plan, &roots, CpuFlavor::AutoMineOpt);
+            assert_eq!(fused, vec![want], "graph {gi} spec {spec}");
+        }
+    }
+}
+
+#[test]
+fn fused_fsm_levels_match_per_candidate_evaluation() {
+    for seed in [3u64, 17] {
+        let g = sort_by_degree_desc(&gen::with_random_labels(
+            gen::power_law(300, 1_400, 60, seed),
+            3,
+            seed + 1,
+        ))
+        .graph;
+        for hubs in hub_variants(&g) {
+            for min_support in [2u64, 25] {
+                let cfg = FsmConfig {
+                    min_support,
+                    max_size: 3,
+                };
+                let separate = fsm_mine_opts(&g, &cfg, hubs.as_ref(), false);
+                let fused = fsm_mine_opts(&g, &cfg, hubs.as_ref(), true);
+                assert_eq!(
+                    separate.candidates_per_level,
+                    fused.candidates_per_level,
+                    "seed {seed} support {min_support}"
+                );
+                assert_eq!(separate.frequent.len(), fused.frequent.len());
+                for (a, b) in separate.frequent.iter().zip(&fused.frequent) {
+                    assert_eq!(a.support, b.support, "seed {seed}");
+                    assert_eq!(a.embeddings, b.embeddings, "seed {seed}");
+                    assert_eq!(a.pattern.canonical_key(), b.pattern.canonical_key());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simulated_fused_counts_match_per_plan_simulation() {
+    let g = sort_by_degree_desc(&gen::power_law(600, 3_600, 120, 7)).graph;
+    let roots = cpu::sampled_roots(g.num_vertices(), 1.0);
+    let cfg = PimConfig::default();
+    for hub_bitmaps in [false, true] {
+        for app in fused_applications() {
+            let opts = SimOptions {
+                hub_bitmaps,
+                ..SimOptions::all()
+            };
+            let plans = app.plans();
+            let (sim, per_plan) = simulate_plans_fused(&g, &plans, &roots, &opts, &cfg);
+            let mut sum = 0u64;
+            for (i, plan) in plans.iter().enumerate() {
+                let want = simulate_plan(&g, plan, &roots, &opts, &cfg).count;
+                assert_eq!(per_plan[i], want, "{} plan {i} hubs {hub_bitmaps}", app.name);
+                sum += want;
+            }
+            assert_eq!(sim.count, sum, "{}", app.name);
+            assert_eq!(sim.fused_plans, plans.len() as u64);
+            // the dispatching entry point agrees with the explicit one
+            let fused_opts = SimOptions { fused: true, ..opts };
+            let via_app = simulate_app(&g, &app, &roots, &fused_opts, &cfg);
+            assert_eq!(via_app.count, sum, "{}", app.name);
+        }
+    }
+}
+
+#[test]
+fn simulated_fused_fsm_matches_mining_results() {
+    let g = sort_by_degree_desc(&gen::with_random_labels(
+        gen::power_law(300, 1_200, 50, 9),
+        4,
+        13,
+    ))
+    .graph;
+    let cfg = PimConfig::default();
+    let fsm_cfg = FsmConfig {
+        min_support: 10,
+        max_size: 3,
+    };
+    for hub_bitmaps in [false, true] {
+        let opts = SimOptions {
+            hub_bitmaps,
+            fused: true,
+            ..SimOptions::all()
+        };
+        let cpu_ref = fsm_mine_opts(&g, &fsm_cfg, None, false);
+        let (pim, sim) = simulate_fsm(&g, &fsm_cfg, &opts, &cfg);
+        assert_eq!(cpu_ref.frequent.len(), pim.frequent.len(), "hubs {hub_bitmaps}");
+        for (a, b) in cpu_ref.frequent.iter().zip(&pim.frequent) {
+            assert_eq!(a.support, b.support);
+            assert_eq!(a.embeddings, b.embeddings);
+            assert_eq!(a.pattern.canonical_key(), b.pattern.canonical_key());
+        }
+        assert!(sim.fused_plans > 0);
+    }
+}
+
+#[test]
+fn fused_trie_shapes_are_sound_for_every_application() {
+    // Structural invariants the executors rely on: every non-root node
+    // has a non-empty intersect set, refs point strictly upward, each
+    // plan terminates exactly once at its own depth.
+    for app in fused_applications() {
+        let plans = app.plans();
+        let trie = PlanTrie::build(&plans);
+        assert_eq!(trie.num_plans, plans.len());
+        let mut terminal_depth = vec![None; plans.len()];
+        for (x, node) in trie.nodes.iter().enumerate() {
+            if x == 0 {
+                assert!(node.op.intersect.is_empty());
+            } else {
+                assert!(!node.op.intersect.is_empty(), "{} node {x}", app.name);
+                for &r in node.op.intersect.iter().chain(&node.op.subtract) {
+                    assert!(r < node.depth, "{} node {x} ref {r}", app.name);
+                }
+                for &r in &node.op.upper {
+                    assert!(r < node.depth, "{} node {x} upper {r}", app.name);
+                }
+            }
+            for &pid in &node.terminals {
+                assert!(terminal_depth[pid].is_none(), "{} plan {pid}", app.name);
+                terminal_depth[pid] = Some(node.depth);
+            }
+        }
+        for (pid, plan) in plans.iter().enumerate() {
+            assert_eq!(
+                terminal_depth[pid],
+                Some(plan.size() - 1),
+                "{} plan {pid}",
+                app.name
+            );
+        }
+    }
+}

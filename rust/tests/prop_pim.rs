@@ -167,6 +167,12 @@ fn prop_sim_count_invariance_across_random_options() {
             } else {
                 None
             },
+            fused: rng.chance(0.5),
+            chunk: if rng.chance(0.3) {
+                Some(rng.range(1, 64) as usize)
+            } else {
+                None
+            },
         };
         let r = simulate_app(&g, &app, &roots, &opts, &cfg);
         assert_eq!(r.count, expected, "opts {opts:?}");
