@@ -15,11 +15,13 @@ test:
 # PIMMINER_BENCH_QUICK=1 trims iteration counts, PIMMINER_THREADS=<n>
 # pins the worker count for reproducible runs on shared machines. The
 # trailing invocations refresh the machine-readable perf trajectory
-# seeds (BENCH_micro.json and BENCH_fusion.json at the repo root).
+# seeds (BENCH_micro.json, BENCH_fusion.json, and BENCH_parallel.json
+# at the repo root).
 bench:
 	cargo bench
 	cargo bench --bench perf_micro -- --json
 	cargo bench --bench fusion -- --json
+	cargo bench --bench parallel -- --json
 
 # AOT-lower the Pallas/jnp set-operation kernels to HLO text under
 # artifacts/ at the repo root (where runtime::artifacts_dir finds them).

@@ -56,12 +56,30 @@ fn main() {
     for app_name in ["3-MC", "4-MC", "CC"] {
         let app = application(app_name).unwrap();
         let t_sep = bench.measure(&format!("cpu/{app_name}/per-plan"), 1, iters, || {
-            cpu::run_application_with(&g, &app, &roots, CpuFlavor::AutoMineOpt, None, false, None)
-                .count
+            cpu::run_application_with(
+                &g,
+                &app,
+                &roots,
+                CpuFlavor::AutoMineOpt,
+                None,
+                false,
+                None,
+                None,
+            )
+            .count
         });
         let t_fused = bench.measure(&format!("cpu/{app_name}/fused"), 1, iters, || {
-            cpu::run_application_with(&g, &app, &roots, CpuFlavor::AutoMineOpt, None, true, None)
-                .count
+            cpu::run_application_with(
+                &g,
+                &app,
+                &roots,
+                CpuFlavor::AutoMineOpt,
+                None,
+                true,
+                None,
+                None,
+            )
+            .count
         });
         bench.metric(&format!("{app_name} cpu_speedup"), t_sep / t_fused, "x");
 
@@ -123,10 +141,10 @@ fn main() {
         max_size: 3,
     };
     let t_sep = bench.measure("cpu/FSM/per-candidate", 1, iters, || {
-        fsm_mine_opts(&lg, &fsm_cfg, None, false).frequent.len()
+        fsm_mine_opts(&lg, &fsm_cfg, None, false, None).frequent.len()
     });
     let t_fused = bench.measure("cpu/FSM/fused", 1, iters, || {
-        fsm_mine_opts(&lg, &fsm_cfg, None, true).frequent.len()
+        fsm_mine_opts(&lg, &fsm_cfg, None, true, None).frequent.len()
     });
     bench.metric("FSM cpu_speedup", t_sep / t_fused, "x");
     let (r_sep, s_sep) = bench.fixture("sim/FSM/per-candidate", || {

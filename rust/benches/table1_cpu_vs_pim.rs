@@ -40,6 +40,7 @@ fn main() {
                 None,
                 false,
                 None,
+                None,
             );
             let p = simulate_app(g, &app, &roots, &SimOptions::BASELINE, &cfg);
             (c.seconds, p.seconds, c.count, p.count)

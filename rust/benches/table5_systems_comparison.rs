@@ -48,8 +48,9 @@ fn main() {
             // keep them on the per-plan path so Table 5's shape is not
             // skewed by our plan fusion (DESIGN.md §11); the PIM column
             // stays per-plan to match.
-            let sep =
-                |flavor| cpu::run_application_with(g, &app, &roots, flavor, None, false, None);
+            let sep = |flavor| {
+                cpu::run_application_with(g, &app, &roots, flavor, None, false, None, None)
+            };
             let (gp, org, opt, pim) = bench.fixture(&label, || {
                 let gp = sep(CpuFlavor::GraphPiLike);
                 let org = if run_org {

@@ -16,20 +16,22 @@
 //! descent per root counts every pattern, sharing each prefix's work.
 //! [`run_application_with`] keeps the per-plan loop behind `fused:
 //! false` for A/B comparison (the `fusion` bench, `--no-fused` on the
-//! CLI). Dynamic scheduling claims roots hubs-first (descending degree),
-//! which shrinks the tail latency the last big task would otherwise
-//! inflict under power-law skew; the chunk size is overridable
-//! (`--chunk`).
+//! CLI). Dynamic scheduling runs on the Chase–Lev work-stealing runtime
+//! (DESIGN.md §12): root chunks are seeded hubs-first (descending
+//! degree) across per-worker deques, which shrinks the tail latency the
+//! last big task would otherwise inflict under power-law skew; the chunk
+//! size is overridable (`--chunk`) and the worker count pinnable per
+//! call (`--threads`).
 //!
 //! The absolute times are machine-local; Table 5's reproduction target is
 //! the *relative* shape (see DESIGN.md §2).
 
-use super::enumerate::{Enumerator, MultiEnumerator, NullSink};
+use super::enumerate::{Enumerator, MultiEnumerator, NullSink, ParallelSink};
 use crate::graph::{CsrGraph, HubBitmaps, VertexId};
 use crate::pattern::fuse::PlanTrie;
 use crate::pattern::plan::{Application, Plan};
-use crate::util::threads;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::util::{threads, ws};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -97,7 +99,7 @@ pub fn degree_order(g: &CsrGraph, roots: &[VertexId]) -> Vec<usize> {
 
 /// Count one plan's embeddings over the given roots.
 pub fn count_plan(g: &CsrGraph, plan: &Plan, roots: &[VertexId], flavor: CpuFlavor) -> u64 {
-    count_plan_with(g, plan, roots, flavor, None, None)
+    count_plan_with(g, plan, roots, flavor, None, None, None)
 }
 
 /// [`count_plan`] with the hybrid sparse/dense set engine: every worker's
@@ -110,12 +112,14 @@ pub fn count_plan_hybrid(
     flavor: CpuFlavor,
     hubs: Option<&HubBitmaps>,
 ) -> u64 {
-    count_plan_with(g, plan, roots, flavor, hubs, None)
+    count_plan_with(g, plan, roots, flavor, hubs, None, None)
 }
 
 /// The canonical single-plan executor every [`count_plan`] variant is a
 /// thin wrapper over: flavor picks the scheduler, `hubs` the set engine,
-/// `chunk` overrides the flavor's dynamic claim size (`--chunk`).
+/// `chunk` overrides the flavor's dynamic claim size (`--chunk`), and
+/// `threads` pins the worker count for this call (`--threads`; `None`
+/// defers to `PIMMINER_THREADS` / available parallelism).
 pub fn count_plan_with(
     g: &CsrGraph,
     plan: &Plan,
@@ -123,10 +127,18 @@ pub fn count_plan_with(
     flavor: CpuFlavor,
     hubs: Option<&HubBitmaps>,
     chunk: Option<usize>,
+    threads: Option<usize>,
 ) -> u64 {
     match flavor {
-        CpuFlavor::AutoMineOrg => static_block_count(g, plan, roots, hubs),
-        _ => dynamic_count(g, plan, roots, chunk.unwrap_or(flavor.default_chunk()), hubs),
+        CpuFlavor::AutoMineOrg => static_block_count(g, plan, roots, hubs, threads),
+        _ => dynamic_count(
+            g,
+            plan,
+            roots,
+            chunk.unwrap_or(flavor.default_chunk()),
+            hubs,
+            threads,
+        ),
     }
 }
 
@@ -138,7 +150,7 @@ pub fn run_application(
     roots: &[VertexId],
     flavor: CpuFlavor,
 ) -> CpuResult {
-    run_application_with(g, app, roots, flavor, None, true, None)
+    run_application_with(g, app, roots, flavor, None, true, None, None)
 }
 
 /// [`run_application`] with the hybrid set engine (see
@@ -150,14 +162,16 @@ pub fn run_application_hybrid(
     flavor: CpuFlavor,
     hubs: Option<&HubBitmaps>,
 ) -> CpuResult {
-    run_application_with(g, app, roots, flavor, hubs, true, None)
+    run_application_with(g, app, roots, flavor, hubs, true, None, None)
 }
 
 /// The canonical application executor the `run_application` variants
 /// wrap. `fused: true` merges the application's plans into a
 /// [`PlanTrie`] and traverses once per root; `fused: false` is the
 /// per-plan A/B baseline (one full traversal per pattern). Counts are
-/// bit-identical either way (`tests/prop_fuse.rs`).
+/// bit-identical either way (`tests/prop_fuse.rs`), and for every
+/// `threads` pin (`tests/prop_parallel.rs`).
+#[allow(clippy::too_many_arguments)]
 pub fn run_application_with(
     g: &CsrGraph,
     app: &Application,
@@ -166,18 +180,19 @@ pub fn run_application_with(
     hubs: Option<&HubBitmaps>,
     fused: bool,
     chunk: Option<usize>,
+    threads: Option<usize>,
 ) -> CpuResult {
     let plans = app.plans();
     let start = std::time::Instant::now();
     let count = if fused {
         let trie = PlanTrie::build(&plans);
-        count_plans_fused(g, &trie, roots, flavor, hubs, chunk)
+        count_plans_fused(g, &trie, roots, flavor, hubs, chunk, threads)
             .iter()
             .sum()
     } else {
         plans
             .iter()
-            .map(|p| count_plan_with(g, p, roots, flavor, hubs, chunk))
+            .map(|p| count_plan_with(g, p, roots, flavor, hubs, chunk, threads))
             .sum()
     };
     CpuResult {
@@ -198,99 +213,124 @@ pub fn count_plans_fused(
     flavor: CpuFlavor,
     hubs: Option<&HubBitmaps>,
     chunk: Option<usize>,
+    threads: Option<usize>,
 ) -> Vec<u64> {
     match flavor {
-        CpuFlavor::AutoMineOrg => fused_static_block(g, trie, roots, hubs),
-        _ => fused_dynamic(g, trie, roots, chunk.unwrap_or(flavor.default_chunk()), hubs),
+        CpuFlavor::AutoMineOrg => fused_static_block(g, trie, roots, hubs, threads),
+        _ => {
+            fused_dynamic(
+                g,
+                trie,
+                roots,
+                chunk.unwrap_or(flavor.default_chunk()),
+                hubs,
+                threads,
+            )
+            .0
+        }
     }
 }
 
-/// Dynamic scheduling: workers claim `chunk` roots at a time (hubs
-/// first) from a shared counter; per-worker `Enumerator` reuses scratch
-/// across roots.
+/// [`count_plans_fused`] with the run's full work telemetry: the merged
+/// per-worker [`ParallelSink`] tallies and the host runtime's
+/// [`WsStats`](ws::WsStats) (steal counters). Always schedules through
+/// the work-stealing runtime (the AM(ORG) static-block pathology has no
+/// stealing to report); `flavor` only selects the default chunk. The
+/// counts and sink tallies are bit-identical for every `threads` pin —
+/// `tests/prop_parallel.rs` and the `parallel` bench consume this.
+pub fn count_plans_fused_telemetry(
+    g: &CsrGraph,
+    trie: &PlanTrie,
+    roots: &[VertexId],
+    flavor: CpuFlavor,
+    hubs: Option<&HubBitmaps>,
+    chunk: Option<usize>,
+    threads: Option<usize>,
+) -> (Vec<u64>, ParallelSink, ws::WsStats) {
+    fused_dynamic(
+        g,
+        trie,
+        roots,
+        chunk.unwrap_or(flavor.default_chunk()),
+        hubs,
+        threads,
+    )
+}
+
+/// Dynamic scheduling: roots become `chunk`-sized deque tasks seeded
+/// hubs-first across the work-stealing workers (DESIGN.md §12);
+/// per-worker `Enumerator` + [`ParallelSink`] reuse scratch across roots
+/// and merge in worker-index order.
 fn dynamic_count(
     g: &CsrGraph,
     plan: &Plan,
     roots: &[VertexId],
     chunk: usize,
     hubs: Option<&HubBitmaps>,
+    threads: Option<usize>,
 ) -> u64 {
-    let chunk = chunk.max(1);
-    let nthreads = threads::num_threads().min(roots.len().max(1));
-    if nthreads <= 1 {
-        let mut e = Enumerator::with_hubs(g, plan, hubs);
-        return roots.iter().map(|&r| e.count_root(r, &mut NullSink)).sum();
-    }
+    let workers = threads::resolve(threads).min(roots.len().max(1));
     let order = degree_order(g, roots);
-    let next = AtomicUsize::new(0);
-    let total = AtomicU64::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..nthreads {
-            s.spawn(|| {
-                let mut e = Enumerator::with_hubs(g, plan, hubs);
-                let mut local = 0u64;
-                loop {
-                    let start = next.fetch_add(chunk, Ordering::Relaxed);
-                    if start >= order.len() {
-                        break;
-                    }
-                    let end = (start + chunk).min(order.len());
-                    for &i in &order[start..end] {
-                        local += e.count_root(roots[i], &mut NullSink);
-                    }
-                }
-                total.fetch_add(local, Ordering::Relaxed);
-            });
-        }
-    });
-    total.load(Ordering::Relaxed)
+    let (states, _) = ws::run_chunks(
+        workers,
+        order.len(),
+        chunk.max(1),
+        |_| (Enumerator::with_hubs(g, plan, hubs), ParallelSink::default()),
+        |state, span| {
+            let (e, sink) = state;
+            for &i in &order[span] {
+                e.count_root(roots[i], sink);
+            }
+        },
+    );
+    let mut total = ParallelSink::default();
+    for (_, sink) in &states {
+        total.merge(sink);
+    }
+    total.embeddings
 }
 
-/// Fused analogue of [`dynamic_count`]: per-worker `MultiEnumerator` and
-/// per-plan count vectors merged at the end.
+/// Fused analogue of [`dynamic_count`]: per-worker `MultiEnumerator`,
+/// per-plan count vector, and [`ParallelSink`], merged in worker-index
+/// order. Returns the per-plan counts, the merged telemetry, and the
+/// runtime's steal statistics.
 fn fused_dynamic(
     g: &CsrGraph,
     trie: &PlanTrie,
     roots: &[VertexId],
     chunk: usize,
     hubs: Option<&HubBitmaps>,
-) -> Vec<u64> {
-    let chunk = chunk.max(1);
-    let nthreads = threads::num_threads().min(roots.len().max(1));
-    if nthreads <= 1 {
-        let mut e = MultiEnumerator::with_hubs(g, trie, hubs);
-        let mut counts = vec![0u64; trie.num_plans];
-        for &r in roots {
-            e.count_root(r, &mut NullSink, &mut counts);
-        }
-        return counts;
-    }
+    threads: Option<usize>,
+) -> (Vec<u64>, ParallelSink, ws::WsStats) {
+    let workers = threads::resolve(threads).min(roots.len().max(1));
     let order = degree_order(g, roots);
-    let next = AtomicUsize::new(0);
-    let merged = Mutex::new(vec![0u64; trie.num_plans]);
-    std::thread::scope(|s| {
-        for _ in 0..nthreads {
-            s.spawn(|| {
-                let mut e = MultiEnumerator::with_hubs(g, trie, hubs);
-                let mut local = vec![0u64; trie.num_plans];
-                loop {
-                    let start = next.fetch_add(chunk, Ordering::Relaxed);
-                    if start >= order.len() {
-                        break;
-                    }
-                    let end = (start + chunk).min(order.len());
-                    for &i in &order[start..end] {
-                        e.count_root(roots[i], &mut NullSink, &mut local);
-                    }
-                }
-                let mut m = merged.lock().unwrap();
-                for (a, b) in m.iter_mut().zip(&local) {
-                    *a += *b;
-                }
-            });
+    let (states, stats) = ws::run_chunks(
+        workers,
+        order.len(),
+        chunk.max(1),
+        |_| {
+            (
+                MultiEnumerator::with_hubs(g, trie, hubs),
+                vec![0u64; trie.num_plans],
+                ParallelSink::default(),
+            )
+        },
+        |state, span| {
+            let (e, counts, sink) = state;
+            for &i in &order[span] {
+                e.count_root(roots[i], sink, counts);
+            }
+        },
+    );
+    let mut counts = vec![0u64; trie.num_plans];
+    let mut work = ParallelSink::default();
+    for (_, local, sink) in &states {
+        for (a, b) in counts.iter_mut().zip(local.iter()) {
+            *a += *b;
         }
-    });
-    merged.into_inner().unwrap()
+        work.merge(sink);
+    }
+    (counts, work, stats)
 }
 
 /// Static contiguous block partitioning (AM(ORG)): thread `t` gets the
@@ -303,8 +343,9 @@ fn static_block_count(
     plan: &Plan,
     roots: &[VertexId],
     hubs: Option<&HubBitmaps>,
+    threads: Option<usize>,
 ) -> u64 {
-    let nthreads = threads::num_threads().min(roots.len().max(1));
+    let nthreads = threads::resolve(threads).min(roots.len().max(1));
     if nthreads <= 1 {
         let mut total = 0u64;
         for &r in roots {
@@ -345,8 +386,9 @@ fn fused_static_block(
     trie: &PlanTrie,
     roots: &[VertexId],
     hubs: Option<&HubBitmaps>,
+    threads: Option<usize>,
 ) -> Vec<u64> {
-    let nthreads = threads::num_threads().min(roots.len().max(1));
+    let nthreads = threads::resolve(threads).min(roots.len().max(1));
     if nthreads <= 1 {
         let mut counts = vec![0u64; trie.num_plans];
         for &r in roots {
@@ -414,9 +456,9 @@ mod tests {
                 CpuFlavor::AutoMineOpt,
             ] {
                 let fused =
-                    run_application_with(&g, &app, &roots, flavor, None, true, None).count;
+                    run_application_with(&g, &app, &roots, flavor, None, true, None, None).count;
                 let separate =
-                    run_application_with(&g, &app, &roots, flavor, None, false, None).count;
+                    run_application_with(&g, &app, &roots, flavor, None, false, None, None).count;
                 assert_eq!(fused, separate, "{app_name} {}", flavor.name());
             }
         }
@@ -437,9 +479,55 @@ mod tests {
                 None,
                 true,
                 Some(chunk),
+                None,
             );
             assert_eq!(r.count, base, "chunk {chunk}");
         }
+    }
+
+    #[test]
+    fn thread_pin_preserves_counts_and_telemetry() {
+        let g = gen::erdos_renyi(110, 700, 21);
+        let roots = sampled_roots(g.num_vertices(), 1.0);
+        let app = application("4-MC").unwrap();
+        let plans = app.plans();
+        let trie = crate::pattern::fuse::PlanTrie::build(&plans);
+        let (base_counts, base_work, _) = count_plans_fused_telemetry(
+            &g,
+            &trie,
+            &roots,
+            CpuFlavor::AutoMineOpt,
+            None,
+            None,
+            Some(1),
+        );
+        for t in [2usize, 4, 8] {
+            let (counts, work, stats) = count_plans_fused_telemetry(
+                &g,
+                &trie,
+                &roots,
+                CpuFlavor::AutoMineOpt,
+                None,
+                None,
+                Some(t),
+            );
+            assert_eq!(counts, base_counts, "threads {t}");
+            assert_eq!(work, base_work, "threads {t}");
+            assert_eq!(stats.local_pops + stats.steals, stats.tasks, "threads {t}");
+        }
+        // the per-plan path honors the pin too
+        let pinned = run_application_with(
+            &g,
+            &app,
+            &roots,
+            CpuFlavor::AutoMineOpt,
+            None,
+            false,
+            None,
+            Some(3),
+        )
+        .count;
+        assert_eq!(pinned, base_counts.iter().sum::<u64>());
     }
 
     #[test]

@@ -60,6 +60,76 @@ pub trait EnumSink {
 pub struct NullSink;
 impl EnumSink for NullSink {}
 
+/// Worker-private accumulator for the work-stealing runtime (DESIGN.md
+/// §12): every [`EnumSink`] channel tallied into plain `u64`s. The
+/// runtime ([`ws::run_tasks`](crate::util::ws::run_tasks)) gives each
+/// worker its own instance and merges them in worker-index order at the
+/// end; `u64` addition is associative and commutative, so the merged
+/// tallies are bit-identical for every steal schedule and worker count
+/// (`tests/prop_parallel.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ParallelSink {
+    /// Completed embeddings (`on_embeddings`) — equals the sum of the
+    /// enumerators' returned per-root counts.
+    pub embeddings: u64,
+    /// Neighbor-list fetches observed (`on_fetch`).
+    pub fetches: u64,
+    /// Post-filter elements surviving across all fetches.
+    pub fetched_elems: u64,
+    /// Elements scanned by sparse set operations (`on_scan`).
+    pub scan_elems: u64,
+    /// 64-bit words streamed by the dense hybrid kernels (`on_word_ops`).
+    pub word_ops: u64,
+    /// Per-plan fetches elided by fused prefix sharing (`on_shared_fetch`).
+    pub shared_fetches: u64,
+    /// Aggregate-state updates (`on_aggregate`) and their bytes.
+    pub agg_updates: u64,
+    pub agg_bytes: u64,
+}
+
+impl ParallelSink {
+    /// Fold another worker's tallies into this one (order-independent).
+    pub fn merge(&mut self, o: &ParallelSink) {
+        self.embeddings += o.embeddings;
+        self.fetches += o.fetches;
+        self.fetched_elems += o.fetched_elems;
+        self.scan_elems += o.scan_elems;
+        self.word_ops += o.word_ops;
+        self.shared_fetches += o.shared_fetches;
+        self.agg_updates += o.agg_updates;
+        self.agg_bytes += o.agg_bytes;
+    }
+}
+
+impl EnumSink for ParallelSink {
+    #[inline]
+    fn on_fetch(&mut self, _level: usize, _v: VertexId, _full: usize, prefix: usize) {
+        self.fetches += 1;
+        self.fetched_elems += prefix as u64;
+    }
+    #[inline]
+    fn on_scan(&mut self, _level: usize, elems: usize) {
+        self.scan_elems += elems as u64;
+    }
+    #[inline]
+    fn on_word_ops(&mut self, _level: usize, words: usize) {
+        self.word_ops += words as u64;
+    }
+    #[inline]
+    fn on_embeddings(&mut self, count: u64) {
+        self.embeddings += count;
+    }
+    #[inline]
+    fn on_shared_fetch(&mut self, saved: usize) {
+        self.shared_fetches += saved as u64;
+    }
+    #[inline]
+    fn on_aggregate(&mut self, _key: usize, bytes: u64) {
+        self.agg_updates += 1;
+        self.agg_bytes += bytes;
+    }
+}
+
 /// Per-level fetch metadata precomputed from a plan (see module docs).
 #[derive(Clone, Debug)]
 pub struct FetchSpec {

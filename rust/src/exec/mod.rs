@@ -5,4 +5,6 @@ pub mod cpu;
 pub mod enumerate;
 pub mod setops;
 
-pub use enumerate::{brute_force_count, EnumSink, Enumerator, FetchSpec, MultiEnumerator, NullSink};
+pub use enumerate::{
+    brute_force_count, EnumSink, Enumerator, FetchSpec, MultiEnumerator, NullSink, ParallelSink,
+};

@@ -70,6 +70,7 @@ fn help() {
                   [--system pim|cpu] [--sample <ratio>] [--non-induced]\n\
                   [--no-filter] [--no-remap] [--no-dup] [--no-steal]\n\
                   [--hub-bitmaps [--hub-threshold <deg>]] [--no-fused] [--chunk <n>]\n\
+                  [--threads <n>]\n\
          motifs   (--dataset | --graph) [-k <3|4|5>] [--system pim|cpu]\n\
                   [--check] [--fused]   one-pass census; --check cross-validates\n\
                   every per-pattern count against an independent compiled-plan\n\
@@ -102,7 +103,11 @@ fn help() {
          on count --app and fsm, both systems; motifs opts in via --fused.\n\
          --chunk <n> overrides the dynamic-scheduling claim size (CPU\n\
          executors and the simulator's profiling pass; default 16 there,\n\
-         hubs claimed first either way)"
+         hubs claimed first either way)\n\
+         --threads <n> pins the host worker count for the work-stealing\n\
+         runtime (DESIGN.md §12) on count/motifs/fsm and the simulator's\n\
+         profiling pass; defaults to PIMMINER_THREADS or the machine's\n\
+         available parallelism. Results are bit-identical either way."
     );
 }
 
@@ -132,7 +137,16 @@ fn options(args: &Args) -> SimOptions {
         hub_threshold: args.get("hub-threshold").and_then(|v| v.parse().ok()),
         fused: fused_arg(args),
         chunk: args.get("chunk").and_then(|v| v.parse().ok()),
+        threads: threads_arg(args),
     }
+}
+
+/// `--threads <n>`: pin the host worker count for the work-stealing
+/// runtime (DESIGN.md §12). Absent (or zero) falls back to
+/// `PIMMINER_THREADS` / the machine's available parallelism. Results
+/// are bit-identical regardless — this only moves wall-clock time.
+fn threads_arg(args: &Args) -> Option<usize> {
+    args.get("threads").and_then(|v| v.parse().ok()).filter(|&n: &usize| n >= 1)
 }
 
 /// `--fused` (default) / `--no-fused`: fused multi-pattern enumeration
@@ -204,6 +218,7 @@ fn count(args: &Args) {
                 hubs.as_ref(),
                 fused,
                 args.get("chunk").and_then(|v| v.parse().ok()),
+                threads_arg(args),
             );
             println!(
                 "{} on CPU: count={} time={}{}",
@@ -261,12 +276,14 @@ fn count_pattern(args: &Args, g: &CsrGraph, sample: f64, spec: &str) {
         "cpu" => {
             let t = std::time::Instant::now();
             let hubs = cpu_hubs(args, g);
-            let count = cpu::count_plan_hybrid(
+            let count = cpu::count_plan_with(
                 g,
                 &compiled.plan,
                 &roots,
                 CpuFlavor::AutoMineOpt,
                 hubs.as_ref(),
+                args.get("chunk").and_then(|v| v.parse().ok()),
+                threads_arg(args),
             );
             println!(
                 "{name} on CPU: count={count} time={} (order {:?}, est cost {:.3e})",
@@ -339,7 +356,7 @@ fn motifs(args: &Args) {
     let census = match (args.get_or("system", "pim"), fused) {
         ("cpu", false) => {
             let t = std::time::Instant::now();
-            let census = mine::motif_census(&g, k, &roots);
+            let census = mine::motif_census_with(&g, k, &roots, threads_arg(args));
             println!(
                 "{k}-motif census on CPU: {} subgraphs in {}",
                 census.total(),
@@ -360,6 +377,7 @@ fn motifs(args: &Args) {
                 CpuFlavor::AutoMineOpt,
                 hubs.as_ref(),
                 args.get("chunk").and_then(|v| v.parse().ok()),
+                threads_arg(args),
             );
             println!(
                 "{k}-motif census on CPU (fused {} plans, {} shared levels): {} subgraphs in {}",
@@ -473,7 +491,7 @@ fn fsm(args: &Args) {
             let t = std::time::Instant::now();
             let hubs = cpu_hubs(args, &g);
             let fused = fused_arg(args);
-            let r = mine::fsm_mine_opts(&g, &cfg, hubs.as_ref(), fused);
+            let r = mine::fsm_mine_opts(&g, &cfg, hubs.as_ref(), fused, threads_arg(args));
             println!(
                 "FSM on CPU: {} frequent patterns (support ≥ {}) in {}{}",
                 r.frequent.len(),

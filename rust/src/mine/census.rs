@@ -23,7 +23,7 @@ use crate::exec::enumerate::{EnumSink, NullSink};
 use crate::exec::setops::prefix_len;
 use crate::graph::{CsrGraph, VertexId};
 use crate::pattern::pattern::Pattern;
-use crate::util::threads;
+use crate::util::{threads, ws};
 
 /// Per-pattern counts for one size `k`, aligned with
 /// [`PatternClassifier::motifs`].
@@ -184,21 +184,40 @@ impl<'g> CensusEngine<'g> {
 /// for exact counts — a root sample censuses only subgraphs whose
 /// *minimum* vertex is sampled).
 pub fn motif_census(g: &CsrGraph, k: usize, roots: &[VertexId]) -> MotifCensus {
+    motif_census_with(g, k, roots, None)
+}
+
+/// [`motif_census`] with an explicit worker-count pin (`--threads`);
+/// `None` defers to `PIMMINER_THREADS` / available parallelism. Root
+/// chunks are seeded hubs-first across the work-stealing deques
+/// (DESIGN.md §12); per-worker [`CensusEngine`] counts merge in
+/// worker-index order, so counts are identical for every worker count.
+pub fn motif_census_with(
+    g: &CsrGraph,
+    k: usize,
+    roots: &[VertexId],
+    threads_pin: Option<usize>,
+) -> MotifCensus {
     let cls = PatternClassifier::new(k);
-    let counts = threads::par_fold(
-        roots.len(),
+    let workers = threads::resolve(threads_pin).min(roots.len().max(1));
+    let order = crate::exec::cpu::degree_order(g, roots);
+    let (engines, _) = ws::run_chunks(
+        workers,
+        order.len(),
         16,
-        || CensusEngine::new(g, &cls),
-        |e, i| e.run_root(roots[i], &mut NullSink),
-        |mut a, b| {
-            for (x, y) in a.counts.iter_mut().zip(&b.counts) {
-                *x += *y;
+        |_| CensusEngine::new(g, &cls),
+        |e, span| {
+            for &i in &order[span] {
+                e.run_root(roots[i], &mut NullSink);
             }
-            a
         },
-    )
-    .map(|e| e.counts)
-    .unwrap_or_else(|| vec![0; cls.num_patterns()]);
+    );
+    let mut counts = vec![0u64; cls.num_patterns()];
+    for e in &engines {
+        for (x, y) in counts.iter_mut().zip(&e.counts) {
+            *x += *y;
+        }
+    }
     MotifCensus {
         k,
         motifs: cls.motifs().to_vec(),

@@ -28,7 +28,7 @@ use crate::exec::setops::{intersect_into_hybrid, ScanCost, NO_BOUND};
 use crate::graph::{CsrGraph, HubBitmaps, VertexId};
 use crate::pattern::fuse::{PlanTrie, TrieLevel};
 use crate::pattern::pattern::{permute_all, Pattern, MAX_PATTERN};
-use crate::util::threads;
+use crate::util::{threads, ws};
 use std::collections::HashSet;
 
 /// A labeled pattern candidate. Vertex order is a *connected order* (every
@@ -671,94 +671,121 @@ pub fn fsm_mine_with(
 /// simulated-machine run). Candidate evaluation is fused (DESIGN.md
 /// §11); [`fsm_mine_opts`] exposes the per-candidate A/B baseline.
 pub fn fsm_mine(g: &CsrGraph, cfg: &FsmConfig) -> FsmResult {
-    fsm_mine_opts(g, cfg, None, true)
+    fsm_mine_opts(g, cfg, None, true, None)
 }
 
 /// [`fsm_mine`] with the hybrid sparse/dense set engine: candidate
 /// generation probes hub-bitmap rows instead of merging full hub lists
 /// (DESIGN.md §10). Results are identical to [`fsm_mine`]'s.
 pub fn fsm_mine_hybrid(g: &CsrGraph, cfg: &FsmConfig, hubs: Option<&HubBitmaps>) -> FsmResult {
-    fsm_mine_opts(g, cfg, hubs, true)
+    fsm_mine_opts(g, cfg, hubs, true, None)
 }
 
 /// Fully parameterized CPU FSM: `hubs` selects the set engine, `fused`
 /// the level evaluation strategy (`true` = shared-prefix group matching,
-/// `false` = one rooted traversal per candidate). Mining results are
-/// identical for every combination (`tests/prop_fuse.rs`).
+/// `false` = one rooted traversal per candidate), `threads` pins the
+/// worker count per call (`--threads`). Mining results are identical for
+/// every combination (`tests/prop_fuse.rs`, `tests/prop_parallel.rs`).
 pub fn fsm_mine_opts(
     g: &CsrGraph,
     cfg: &FsmConfig,
     hubs: Option<&HubBitmaps>,
     fused: bool,
+    threads: Option<usize>,
 ) -> FsmResult {
-    fsm_mine_with(g, cfg, &mut CpuLevelExecutor { hubs, fused })
+    fsm_mine_with(
+        g,
+        cfg,
+        &mut CpuLevelExecutor {
+            hubs,
+            fused,
+            threads,
+        },
+    )
 }
 
-/// The CPU candidate evaluator: dynamic root chunks across host threads,
-/// per-thread [`LevelAcc`]s merged at the end.
+/// The CPU candidate evaluator: root chunks across the work-stealing
+/// workers (DESIGN.md §12), per-worker [`LevelAcc`]s merged in
+/// worker-index order at the end.
 pub struct CpuLevelExecutor<'h> {
     /// Hub rows for the hybrid kernels; `None` = pure sorted merge.
     pub hubs: Option<&'h HubBitmaps>,
     /// Fused shared-prefix group matching (DESIGN.md §11); `false`
     /// matches every candidate in its own rooted traversal.
     pub fused: bool,
+    /// Worker-count pin (`--threads`); `None` defers to
+    /// `PIMMINER_THREADS` / available parallelism.
+    pub threads: Option<usize>,
 }
 
 impl LevelExecutor for CpuLevelExecutor<'_> {
     fn run_level(&mut self, g: &CsrGraph, candidates: &[LabeledPattern]) -> Vec<CandidateStats> {
         let n = g.num_vertices();
         let hubs = self.hubs;
+        let workers = threads::resolve(self.threads).min(n.max(1));
         if self.fused {
             let groups = fuse_level(candidates);
-            return threads::par_fold(
+            let (states, _) = ws::run_chunks(
+                workers,
                 n,
                 32,
-                || (LevelAcc::new(candidates), MatchScratch::default()),
-                |(acc, scratch), v| {
-                    for grp in &groups {
-                        match_group_rooted(
-                            g,
-                            hubs,
-                            grp,
-                            v as VertexId,
-                            &mut NullSink,
-                            acc,
-                            scratch,
-                        );
+                |_| (LevelAcc::new(candidates), MatchScratch::default()),
+                |state, span| {
+                    let (acc, scratch) = state;
+                    for v in span {
+                        for grp in &groups {
+                            match_group_rooted(
+                                g,
+                                hubs,
+                                grp,
+                                v as VertexId,
+                                &mut NullSink,
+                                acc,
+                                scratch,
+                            );
+                        }
                     }
                 },
-                |(a, s), (b, _)| (a.merge(b), s),
-            )
-            .map(|(acc, _)| acc)
-            .unwrap_or_else(|| LevelAcc::new(candidates))
-            .into_stats();
+            );
+            return states
+                .into_iter()
+                .map(|(acc, _)| acc)
+                .reduce(LevelAcc::merge)
+                .unwrap_or_else(|| LevelAcc::new(candidates))
+                .into_stats();
         }
         let shapes: Vec<CandShape> = candidates.iter().map(CandShape::of).collect();
-        threads::par_fold(
+        let (states, _) = ws::run_chunks(
+            workers,
             n,
             32,
-            || (LevelAcc::new(candidates), MatchScratch::default()),
-            |(acc, scratch), v| {
-                for (ci, cand) in candidates.iter().enumerate() {
-                    let emb = match_rooted(
-                        g,
-                        hubs,
-                        cand,
-                        &shapes[ci],
-                        ci,
-                        v as VertexId,
-                        &mut NullSink,
-                        &mut acc.domains[ci],
-                        scratch,
-                    );
-                    acc.embeddings[ci] += emb;
+            |_| (LevelAcc::new(candidates), MatchScratch::default()),
+            |state, span| {
+                let (acc, scratch) = state;
+                for v in span {
+                    for (ci, cand) in candidates.iter().enumerate() {
+                        let emb = match_rooted(
+                            g,
+                            hubs,
+                            cand,
+                            &shapes[ci],
+                            ci,
+                            v as VertexId,
+                            &mut NullSink,
+                            &mut acc.domains[ci],
+                            scratch,
+                        );
+                        acc.embeddings[ci] += emb;
+                    }
                 }
             },
-            |(a, s), (b, _)| (a.merge(b), s),
-        )
-        .map(|(acc, _)| acc)
-        .unwrap_or_else(|| LevelAcc::new(candidates))
-        .into_stats()
+        );
+        states
+            .into_iter()
+            .map(|(acc, _)| acc)
+            .reduce(LevelAcc::merge)
+            .unwrap_or_else(|| LevelAcc::new(candidates))
+            .into_stats()
     }
 }
 
@@ -905,8 +932,8 @@ mod tests {
             min_support: 2,
             max_size: 3,
         };
-        let separate = fsm_mine_opts(&g, &cfg, None, false);
-        let fused = fsm_mine_opts(&g, &cfg, None, true);
+        let separate = fsm_mine_opts(&g, &cfg, None, false, None);
+        let fused = fsm_mine_opts(&g, &cfg, None, true, None);
         assert_eq!(separate.frequent.len(), fused.frequent.len());
         for (a, b) in separate.frequent.iter().zip(&fused.frequent) {
             assert_eq!(a.support, b.support);

@@ -23,7 +23,7 @@ pub mod census;
 pub mod classify;
 pub mod fsm;
 
-pub use census::{motif_census, CensusEngine, MotifCensus};
+pub use census::{motif_census, motif_census_with, CensusEngine, MotifCensus};
 pub use classify::{PatternClassifier, MAX_MOTIF_K};
 pub use fsm::{
     fsm_mine, fsm_mine_hybrid, fsm_mine_opts, fsm_mine_with, fuse_level, match_group_rooted,

@@ -36,9 +36,8 @@ use crate::mine::fsm::{
 use crate::part::{self, PartitionStrategy};
 use crate::pattern::fuse::PlanTrie;
 use crate::pattern::plan::{Application, Plan};
-use crate::util::threads;
+use crate::util::{threads, ws};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Which PIMMiner optimizations are enabled (the Fig. 9 ladder).
 ///
@@ -91,6 +90,11 @@ pub struct SimOptions {
     /// pass's tail latency under power-law skew); simulated results are
     /// bit-identical for every chunk.
     pub chunk: Option<usize>,
+    /// Host worker-count pin for the profiling pass (`--threads`);
+    /// `None` defers to `PIMMINER_THREADS` / available parallelism.
+    /// Simulated results are bit-identical for every worker count
+    /// (`tests/prop_parallel.rs`) — this only moves host wall clock.
+    pub threads: Option<usize>,
 }
 
 impl SimOptions {
@@ -105,6 +109,7 @@ impl SimOptions {
         hub_threshold: None,
         fused: false,
         chunk: None,
+        threads: None,
     };
 
     pub fn all() -> SimOptions {
@@ -769,13 +774,16 @@ trait TaskRunner: Sync {
 /// the per-thread workers (the mining runners accumulate their counts and
 /// domains in them).
 ///
-/// Workers claim tasks in **descending-degree order** (hubs first): under
-/// power-law skew the giant tasks otherwise land last and one thread
-/// finishes alone. The claim order changes neither the per-task profiles
-/// nor the task → unit assignment (profiles are recorded at the task's
-/// root-order index), so simulated results stay bit-identical; only the
-/// host-side wall clock moves. The claim chunk defaults to 16 roots and
-/// is overridable via [`SimOptions::chunk`] (`--chunk`).
+/// Root chunks are seeded **hubs-first** (descending-degree order) across
+/// the Chase–Lev work-stealing deques (DESIGN.md §12): under power-law
+/// skew the giant tasks otherwise land last and one thread finishes
+/// alone. The schedule changes neither the per-task profiles nor the
+/// task → unit assignment (profiles are recorded at the task's root-order
+/// index, and per-worker shards merge in worker-index order), so
+/// simulated results stay bit-identical for every worker count and steal
+/// schedule; only the host-side wall clock moves. The chunk defaults to
+/// 16 roots ([`SimOptions::chunk`] / `--chunk`); the worker count comes
+/// from [`SimOptions::threads`] / `--threads`, else `PIMMINER_THREADS`.
 fn profile_pass<R: TaskRunner>(
     g: &CsrGraph,
     runner: &R,
@@ -785,59 +793,49 @@ fn profile_pass<R: TaskRunner>(
     setup: &SimSetup,
 ) -> (GlobalAcc, Vec<TaskProfile>, Vec<R::Worker>) {
     let ntasks = roots.len();
-    let nthreads = threads::num_threads().min(ntasks.max(1));
-    let next = AtomicUsize::new(0);
+    let workers = threads::resolve(opts.threads).min(ntasks.max(1));
     let chunk = opts.chunk.unwrap_or(16).max(1);
     let order = crate::exec::cpu::degree_order(g, roots);
     struct Shard<W> {
         profiles: Vec<(usize, TaskProfile)>,
         acc: GlobalAcc,
         worker: W,
+        l1: std::collections::HashMap<VertexId, u64>,
     }
-    let shards: Vec<Shard<R::Worker>> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..nthreads)
-            .map(|_| {
-                s.spawn(|| {
-                    let mut shard = Shard {
-                        profiles: Vec::new(),
-                        acc: GlobalAcc::new(cfg),
-                        worker: runner.worker(),
-                    };
-                    let mut l1 = std::collections::HashMap::new();
-                    loop {
-                        let start = next.fetch_add(chunk, Ordering::Relaxed);
-                        if start >= ntasks {
-                            break;
-                        }
-                        let end = (start + chunk).min(ntasks);
-                        for &i in &order[start..end] {
-                            let root = roots[i];
-                            l1.clear();
-                            let mut sink = SimSink {
-                                cfg,
-                                opts,
-                                map: opts.addr_map(),
-                                placement: &setup.placement,
-                                requester: setup.assign(opts, cfg, i, root),
-                                task_cycles: 0,
-                                lvl1_chunks: 0,
-                                acc: &mut shard.acc,
-                                hot_k: setup.hot_k,
-                                l1: &mut l1,
-                                l1_used: 0,
-                            };
-                            runner.run(&mut shard.worker, root, &mut sink);
-                            let cycles = sink.task_cycles;
-                            let chunks = sink.lvl1_chunks.max(1);
-                            shard.profiles.push((i, TaskProfile { cycles, chunks }));
-                        }
-                    }
-                    shard
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
+    let (shards, _ws_stats) = ws::run_chunks(
+        workers,
+        ntasks,
+        chunk,
+        |_| Shard {
+            profiles: Vec::new(),
+            acc: GlobalAcc::new(cfg),
+            worker: runner.worker(),
+            l1: std::collections::HashMap::new(),
+        },
+        |shard, span| {
+            for &i in &order[span] {
+                let root = roots[i];
+                shard.l1.clear();
+                let mut sink = SimSink {
+                    cfg,
+                    opts,
+                    map: opts.addr_map(),
+                    placement: &setup.placement,
+                    requester: setup.assign(opts, cfg, i, root),
+                    task_cycles: 0,
+                    lvl1_chunks: 0,
+                    acc: &mut shard.acc,
+                    hot_k: setup.hot_k,
+                    l1: &mut shard.l1,
+                    l1_used: 0,
+                };
+                runner.run(&mut shard.worker, root, &mut sink);
+                let cycles = sink.task_cycles;
+                let chunks = sink.lvl1_chunks.max(1);
+                shard.profiles.push((i, TaskProfile { cycles, chunks }));
+            }
+        },
+    );
 
     let mut acc = GlobalAcc::new(cfg);
     let mut profiles: Vec<Option<TaskProfile>> = (0..ntasks).map(|_| None).collect();

@@ -1,10 +1,14 @@
-//! Minimal data-parallel helpers over `std::thread::scope`.
+//! Worker-count policy plus the legacy data-parallel helpers, now thin
+//! wrappers over the Chase–Lev work-stealing runtime in [`ws`](super::ws)
+//! (DESIGN.md §12).
 //!
-//! No rayon offline; the CPU baseline executors and the large-graph
-//! generators only need two primitives: a parallel index map with dynamic
-//! (work-stealing-ish) chunk claiming, and a parallel fold.
+//! No rayon offline; the graph generators and a few cold paths only need
+//! `par_for` / `par_fold` / `par_map`, and routing them through the
+//! deque runtime keeps exactly one scheduler in the repository. The hot
+//! executors (`exec::cpu`, `mine`, `pim::sim`) call `ws` directly with a
+//! per-call worker pin.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use super::ws;
 
 /// Number of worker threads to use: `PIMMINER_THREADS` env override
 /// (ignored unless it parses to ≥ 1), else available parallelism, else 4.
@@ -20,6 +24,14 @@ pub fn num_threads() -> usize {
     }
 }
 
+/// Resolve a per-call worker pin (`--threads` / `SimOptions::threads`)
+/// against the environment policy: `Some(n ≥ 1)` wins, everything else
+/// falls back to [`num_threads`]. This is the one rule every executor
+/// entry point applies.
+pub fn resolve(threads: Option<usize>) -> usize {
+    threads.filter(|&n| n >= 1).unwrap_or_else(num_threads)
+}
+
 /// The override-parsing rule behind [`num_threads`], separated so the
 /// regression test never has to mutate the process environment (setenv
 /// races getenv in a multithreaded test binary): the variable counts
@@ -28,37 +40,26 @@ fn parse_threads_override(v: Option<&str>) -> Option<usize> {
     v.and_then(|s| s.parse::<usize>().ok()).filter(|&n| n >= 1)
 }
 
-/// Run `f(i)` for every `i in 0..n` across `threads` workers, claiming
-/// contiguous chunks of `chunk` indices from a shared atomic counter
-/// (dynamic scheduling — this is the CPU-side analogue of the paper's
-/// round-robin + stealing task distribution).
+/// Run `f(i)` for every `i in 0..n` across [`num_threads`] workers as
+/// `chunk`-sized work-stealing tasks.
 pub fn par_for(n: usize, chunk: usize, f: impl Fn(usize) + Sync) {
-    let threads = num_threads().min(n.max(1));
-    if threads <= 1 || n <= chunk {
-        for i in 0..n {
-            f(i);
-        }
-        return;
-    }
-    let next = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let start = next.fetch_add(chunk, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                let end = (start + chunk).min(n);
-                for i in start..end {
-                    f(i);
-                }
-            });
-        }
-    });
+    ws::run_chunks(
+        num_threads(),
+        n,
+        chunk,
+        |_| (),
+        |_, span| {
+            for i in span {
+                f(i);
+            }
+        },
+    );
 }
 
-/// Parallel fold: each worker folds its claimed indices into a local
-/// accumulator created by `init`, and the locals are merged with `merge`.
+/// Parallel fold: each worker folds its tasks' indices into a local
+/// accumulator created by `init`, and the locals are merged with `merge`
+/// in worker-index order (deterministic for associative-commutative
+/// merges; see DESIGN.md §12).
 pub fn par_fold<A: Send>(
     n: usize,
     chunk: usize,
@@ -66,65 +67,40 @@ pub fn par_fold<A: Send>(
     fold: impl Fn(&mut A, usize) + Sync,
     merge: impl Fn(A, A) -> A,
 ) -> Option<A> {
-    let threads = num_threads().min(n.max(1));
-    if threads <= 1 || n <= chunk {
-        let mut acc = init();
-        for i in 0..n {
-            fold(&mut acc, i);
-        }
-        return Some(acc);
-    }
-    let next = AtomicUsize::new(0);
-    let locals: Vec<A> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..threads)
-            .map(|_| {
-                s.spawn(|| {
-                    let mut acc = init();
-                    loop {
-                        let start = next.fetch_add(chunk, Ordering::Relaxed);
-                        if start >= n {
-                            break;
-                        }
-                        let end = (start + chunk).min(n);
-                        for i in start..end {
-                            fold(&mut acc, i);
-                        }
-                    }
-                    acc
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
+    let (locals, _) = ws::run_chunks(
+        num_threads(),
+        n,
+        chunk,
+        |_| init(),
+        |acc, span| {
+            for i in span {
+                fold(acc, i);
+            }
+        },
+    );
     locals.into_iter().reduce(merge)
 }
 
-/// Parallel map producing a `Vec<T>` in index order.
+/// Parallel map producing a `Vec<T>` in index order: workers collect
+/// `(index, value)` pairs, scattered single-threaded at the end (O(n) and
+/// cheap relative to `f`).
 pub fn par_map<T: Send + Sync>(n: usize, chunk: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
-    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    {
-        let slots = out.as_mut_slice();
-        // SAFETY-free approach: use interior chunking via raw split. We
-        // instead use a simple trick: wrap in UnsafeCell-free pattern by
-        // claiming disjoint chunks — but safe Rust can't share &mut. Use a
-        // Mutex-free alternative: collect per-chunk vectors then place.
-        let _ = slots;
-    }
-    // Safe implementation: compute (index, value) pairs per worker, then
-    // scatter single-threaded. The scatter is O(n) and cheap relative to f.
-    let pairs = par_fold(
+    let (parts, _) = ws::run_chunks(
+        num_threads(),
         n,
         chunk,
-        Vec::new,
-        |acc: &mut Vec<(usize, T)>, i| acc.push((i, f(i))),
-        |mut a, b| {
-            a.extend(b);
-            a
+        |_| Vec::new(),
+        |acc: &mut Vec<(usize, T)>, span| {
+            for i in span {
+                acc.push((i, f(i)));
+            }
         },
-    )
-    .unwrap_or_default();
-    for (i, v) in pairs {
-        out[i] = Some(v);
+    );
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for pairs in parts {
+        for (i, v) in pairs {
+            out[i] = Some(v);
+        }
     }
     out.into_iter().map(|o| o.unwrap()).collect()
 }
@@ -132,7 +108,7 @@ pub fn par_map<T: Send + Sync>(n: usize, chunk: usize, f: impl Fn(usize) -> T + 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicU64;
+    use std::sync::atomic::{AtomicU64, Ordering};
 
     #[test]
     fn par_for_visits_every_index_once() {
@@ -180,6 +156,16 @@ mod tests {
         assert_eq!(parse_threads_override(None), None);
         // And the live path always yields a usable worker count.
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn resolve_prefers_explicit_pin() {
+        assert_eq!(resolve(Some(3)), 3);
+        assert_eq!(resolve(Some(1)), 1);
+        // `Some(0)` is not a usable pin; both it and `None` defer to the
+        // environment policy.
+        assert_eq!(resolve(Some(0)), num_threads());
+        assert_eq!(resolve(None), num_threads());
     }
 
     #[test]

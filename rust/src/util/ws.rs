@@ -1,0 +1,436 @@
+//! Chase–Lev work-stealing host runtime (DESIGN.md §12).
+//!
+//! The CPU executors, the mining engines, and the simulator's profiling
+//! pass all walk a fixed set of root tasks. The previous helpers in
+//! [`threads`](super::threads) claimed chunks from one shared atomic
+//! counter — correct, but every claim contends on the same cache line and
+//! there is no per-worker locality. This module replaces that with the
+//! classic Chase–Lev deque (Chase & Lev, SPAA '05; memory orderings per
+//! Lê et al., PPoPP '13): each worker owns a deque of tasks, pops its own
+//! bottom end LIFO, and — once drained — steals from a random victim's
+//! top end FIFO.
+//!
+//! Seeding is **hubs-first**: callers order tasks by descending root
+//! degree (`exec::cpu::degree_order`) and [`run_tasks`] deals task `t` to
+//! deque `t % workers`, pushing each worker's share in descending task
+//! order so the owner's LIFO pop walks it ascending — every worker starts
+//! on its heaviest task, and a thief's FIFO steal takes the victim's
+//! *lightest* remaining task (the cheapest one to move, top of the
+//! deque). No worker is left finishing a giant hub alone at the tail.
+//!
+//! Determinism: each worker accumulates into private state (`init` builds
+//! one per worker; the [`ParallelSink`](crate::exec::enumerate::ParallelSink)
+//! adapter is the executors' instance of it) and [`run_tasks`] returns
+//! the states in **worker-index order**, regardless of which worker ran
+//! which task or in what interleaving. Callers merge left-to-right, so a
+//! run's merged result depends only on the task set — `u64` tallies are
+//! order-independent outright, and the simulator's `f64` accumulators add
+//! exactly representable dyadic fractions, so they too are bit-identical
+//! for every schedule (`tests/prop_parallel.rs` pins this for thread
+//! counts 1–8).
+//!
+//! The deques here only ever receive pushes before the workers start (the
+//! task set is fixed up front), but `push`/`pop`/`steal` implement the
+//! full concurrent protocol so ROADMAP's service batching and per-unit
+//! task queues can reuse the runtime with dynamic task creation.
+
+use super::rng::Rng;
+use std::ops::Range;
+use std::sync::atomic::{fence, AtomicIsize, AtomicU64, AtomicUsize, Ordering};
+
+/// Outcome of a [`WsDeque::steal`] attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Steal {
+    /// A task was stolen from the victim's top (FIFO) end.
+    Ok(usize),
+    /// The victim's deque was empty.
+    Empty,
+    /// Lost a race with the owner or another thief; worth retrying.
+    Retry,
+}
+
+/// A fixed-capacity Chase–Lev deque of `usize` tasks.
+///
+/// Tasks are plain indices, so the cells can be `AtomicUsize` and the
+/// whole structure stays in safe Rust: a racing load can only ever read a
+/// stale *task id*, and the top-CAS decides uniquely who keeps it.
+pub struct WsDeque {
+    /// Thieves' end. Only ever incremented (by a successful steal or the
+    /// owner's last-element pop).
+    top: AtomicIsize,
+    /// Owner's end. Only the owner moves it.
+    bottom: AtomicIsize,
+    buf: Box<[AtomicUsize]>,
+    mask: usize,
+}
+
+impl WsDeque {
+    /// Deque holding at most `cap` tasks (rounded up to a power of two).
+    pub fn with_capacity(cap: usize) -> Self {
+        let n = cap.max(1).next_power_of_two();
+        WsDeque {
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            buf: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            mask: n - 1,
+        }
+    }
+
+    /// Tasks currently queued (racy outside quiescence; exact for the
+    /// owner between operations).
+    pub fn len(&self) -> usize {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Owner: push a task onto the bottom (LIFO) end. Panics if the
+    /// fixed buffer is full — the runtime sizes each deque for its seeded
+    /// share, and stolen tasks only ever shrink a deque.
+    pub fn push(&self, task: usize) {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        assert!(
+            b - t < self.buf.len() as isize,
+            "WsDeque overflow (cap {})",
+            self.buf.len()
+        );
+        self.buf[b as usize & self.mask].store(task, Ordering::Relaxed);
+        // Publish the cell before the new bottom becomes visible to
+        // thieves.
+        fence(Ordering::Release);
+        self.bottom.store(b + 1, Ordering::Relaxed);
+    }
+
+    /// Owner: pop a task from the bottom (LIFO) end.
+    pub fn pop(&self) -> Option<usize> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        self.bottom.store(b, Ordering::Relaxed);
+        // The bottom decrement must be visible before we read top, or a
+        // concurrent thief and the owner could both take the last task.
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t <= b {
+            let task = self.buf[b as usize & self.mask].load(Ordering::Relaxed);
+            if t == b {
+                // Last element: race the thieves via CAS on top.
+                let won = self
+                    .top
+                    .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                    .is_ok();
+                self.bottom.store(b + 1, Ordering::Relaxed);
+                if won {
+                    Some(task)
+                } else {
+                    None
+                }
+            } else {
+                Some(task)
+            }
+        } else {
+            // Deque was empty; restore bottom.
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Thief: steal a task from the top (FIFO) end.
+    pub fn steal(&self) -> Steal {
+        let t = self.top.load(Ordering::Acquire);
+        // Order the top read before the bottom read (mirror of `pop`).
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t < b {
+            let task = self.buf[t as usize & self.mask].load(Ordering::Relaxed);
+            if self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_err()
+            {
+                return Steal::Retry;
+            }
+            Steal::Ok(task)
+        } else {
+            Steal::Empty
+        }
+    }
+}
+
+/// Counters describing one [`run_tasks`] execution. Purely observational:
+/// results never depend on them. Distinct from the *simulated* unit-level
+/// `SimResult::steals` — these count host-thread steals.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WsStats {
+    /// Workers actually spawned (after clamping to the task count).
+    pub workers: usize,
+    /// Tasks executed (= the task count; every task runs exactly once).
+    pub tasks: u64,
+    /// Tasks a worker popped from its own deque.
+    pub local_pops: u64,
+    /// Tasks executed via a successful steal.
+    pub steals: u64,
+    /// Steal attempts, successful or not (Empty and Retry included).
+    pub steal_attempts: u64,
+}
+
+/// Per-process run counter mixed into the victim-selection RNG seeds so
+/// successive runs probe victims in different orders. Steal order never
+/// affects results (see module docs) — this only decorrelates contention.
+static RUN_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Run tasks `0..ntasks` across `workers` workers with Chase–Lev work
+/// stealing. `init(w)` builds worker `w`'s private state; `body(state,
+/// task)` executes one task. Returns the per-worker states in
+/// **worker-index order** (merge them left-to-right for deterministic
+/// results) and the run's [`WsStats`].
+///
+/// Tasks are dealt round-robin (`task % workers`) and each worker pops
+/// its share in ascending task order — seed tasks heaviest-first (e.g.
+/// via `degree_order`) and every worker starts on its heaviest task.
+/// With `workers <= 1` (or fewer tasks than workers, which clamps) the
+/// whole run executes inline on the calling thread.
+pub fn run_tasks<S: Send>(
+    workers: usize,
+    ntasks: usize,
+    init: impl Fn(usize) -> S + Sync,
+    body: impl Fn(&mut S, usize) + Sync,
+) -> (Vec<S>, WsStats) {
+    let workers = workers.max(1).min(ntasks.max(1));
+    if workers == 1 {
+        let mut state = init(0);
+        for t in 0..ntasks {
+            body(&mut state, t);
+        }
+        let stats = WsStats {
+            workers: 1,
+            tasks: ntasks as u64,
+            local_pops: ntasks as u64,
+            ..WsStats::default()
+        };
+        return (vec![state], stats);
+    }
+    // Seed: deal task t to deque t % workers, pushing in descending task
+    // order so each owner's LIFO pop walks its share ascending.
+    let share = ntasks.div_ceil(workers);
+    let deques: Vec<WsDeque> = (0..workers).map(|_| WsDeque::with_capacity(share)).collect();
+    for t in (0..ntasks).rev() {
+        deques[t % workers].push(t);
+    }
+    let run_seed = RUN_COUNTER.fetch_add(1, Ordering::Relaxed);
+    let pops = AtomicU64::new(0);
+    let steals = AtomicU64::new(0);
+    let attempts = AtomicU64::new(0);
+    let states: Vec<S> = std::thread::scope(|s| {
+        let deques = &deques;
+        let init = &init;
+        let body = &body;
+        let pops = &pops;
+        let steals = &steals;
+        let attempts = &attempts;
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let mut rng = Rng::new(
+                    run_seed
+                        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        .wrapping_add(w as u64),
+                );
+                s.spawn(move || {
+                    let mut state = init(w);
+                    let mut my_pops = 0u64;
+                    let mut my_steals = 0u64;
+                    let mut my_attempts = 0u64;
+                    'work: loop {
+                        // Drain the local deque LIFO.
+                        while let Some(t) = deques[w].pop() {
+                            my_pops += 1;
+                            body(&mut state, t);
+                        }
+                        // Empty: sweep victims from a random start until a
+                        // steal lands or every deque reads Empty.
+                        loop {
+                            let start = rng.below_usize(workers);
+                            let mut contended = false;
+                            let mut stolen = None;
+                            for k in 0..workers {
+                                let v = (start + k) % workers;
+                                if v == w {
+                                    continue;
+                                }
+                                my_attempts += 1;
+                                match deques[v].steal() {
+                                    Steal::Ok(t) => {
+                                        stolen = Some(t);
+                                        break;
+                                    }
+                                    Steal::Retry => contended = true,
+                                    Steal::Empty => {}
+                                }
+                            }
+                            match stolen {
+                                Some(t) => {
+                                    my_steals += 1;
+                                    body(&mut state, t);
+                                    // Future-proofing: if `body` ever
+                                    // pushes follow-on tasks, drain the
+                                    // local deque before stealing again.
+                                    continue 'work;
+                                }
+                                // A Retry means a race was lost, not that
+                                // the deque was empty — sweep again.
+                                None if contended => continue,
+                                // Every deque is empty and no new tasks
+                                // can appear: done.
+                                None => break 'work,
+                            }
+                        }
+                    }
+                    pops.fetch_add(my_pops, Ordering::Relaxed);
+                    steals.fetch_add(my_steals, Ordering::Relaxed);
+                    attempts.fetch_add(my_attempts, Ordering::Relaxed);
+                    state
+                })
+            })
+            .collect();
+        // Joining in spawn order keeps the states in worker-index order.
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let stats = WsStats {
+        workers,
+        tasks: ntasks as u64,
+        local_pops: pops.load(Ordering::Relaxed),
+        steals: steals.load(Ordering::Relaxed),
+        steal_attempts: attempts.load(Ordering::Relaxed),
+    };
+    (states, stats)
+}
+
+/// [`run_tasks`] over an index space `0..n` split into `chunk`-sized
+/// contiguous tasks: `body` receives the sub-range each task covers.
+/// This is the shape every chunked call site (executors, census, FSM
+/// levels, the profiling pass) uses.
+pub fn run_chunks<S: Send>(
+    workers: usize,
+    n: usize,
+    chunk: usize,
+    init: impl Fn(usize) -> S + Sync,
+    body: impl Fn(&mut S, Range<usize>) + Sync,
+) -> (Vec<S>, WsStats) {
+    let chunk = chunk.max(1);
+    let ntasks = n.div_ceil(chunk);
+    run_tasks(workers, ntasks, init, |state, t| {
+        let lo = t * chunk;
+        body(state, lo..(lo + chunk).min(n));
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deque_owner_pops_lifo() {
+        let d = WsDeque::with_capacity(8);
+        for t in [1usize, 2, 3] {
+            d.push(t);
+        }
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.pop(), Some(3));
+        assert_eq!(d.pop(), Some(2));
+        assert_eq!(d.pop(), Some(1));
+        assert_eq!(d.pop(), None);
+        assert!(d.is_empty());
+        // pop on empty leaves the deque usable
+        d.push(9);
+        assert_eq!(d.pop(), Some(9));
+    }
+
+    #[test]
+    fn deque_thief_steals_fifo() {
+        let d = WsDeque::with_capacity(8);
+        for t in [1usize, 2, 3] {
+            d.push(t);
+        }
+        assert_eq!(d.steal(), Steal::Ok(1));
+        assert_eq!(d.steal(), Steal::Ok(2));
+        // owner and thief split the remainder consistently
+        assert_eq!(d.pop(), Some(3));
+        assert_eq!(d.steal(), Steal::Empty);
+    }
+
+    #[test]
+    fn deque_capacity_rounds_up() {
+        let d = WsDeque::with_capacity(5);
+        for t in 0..8 {
+            d.push(t); // 5 rounds up to 8
+        }
+        assert_eq!(d.len(), 8);
+    }
+
+    #[test]
+    fn run_tasks_visits_every_task_once() {
+        use std::sync::atomic::AtomicU64;
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let (_, stats) = run_tasks(
+            8,
+            n,
+            |_| (),
+            |_, t| {
+                hits[t].fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert_eq!(stats.local_pops + stats.steals, n as u64);
+        assert_eq!(stats.tasks, n as u64);
+    }
+
+    #[test]
+    fn states_return_in_worker_index_order() {
+        let (states, stats) = run_tasks(4, 100, |w| w, |_, _| {});
+        assert_eq!(states, vec![0, 1, 2, 3]);
+        assert_eq!(stats.workers, 4);
+    }
+
+    #[test]
+    fn workers_clamp_to_task_count() {
+        let (states, stats) = run_tasks(16, 3, |w| w, |_, _| {});
+        assert_eq!(stats.workers, 3);
+        assert_eq!(states.len(), 3);
+        // zero tasks: one inline worker, zero work
+        let (states, stats) = run_tasks(4, 0, |w| w, |_, _: usize| panic!());
+        assert_eq!(states, vec![0]);
+        assert_eq!(stats.tasks, 0);
+    }
+
+    #[test]
+    fn single_worker_runs_inline_in_task_order() {
+        let (mut states, stats) = run_tasks(
+            1,
+            5,
+            |_| Vec::new(),
+            |seen: &mut Vec<usize>, t| seen.push(t),
+        );
+        assert_eq!(states.pop().unwrap(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(stats.local_pops, 5);
+        assert_eq!(stats.steals, 0);
+    }
+
+    #[test]
+    fn run_chunks_covers_ragged_tail() {
+        let n = 103;
+        let (states, _) = run_chunks(
+            4,
+            n,
+            10,
+            |_| Vec::new(),
+            |seen: &mut Vec<usize>, span: Range<usize>| seen.extend(span),
+        );
+        let mut all: Vec<usize> = states.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>());
+    }
+}

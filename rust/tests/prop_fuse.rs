@@ -51,6 +51,7 @@ fn fused_counts_equal_per_plan_sums_for_all_paper_applications() {
                     CpuFlavor::AutoMineOpt,
                     hubs.as_ref(),
                     None,
+                    None,
                 );
                 assert_eq!(fused.len(), plans.len());
                 let mut sum = 0u64;
@@ -79,6 +80,7 @@ fn fused_counts_equal_per_plan_sums_for_all_paper_applications() {
                     hubs.as_ref(),
                     true,
                     None,
+                    None,
                 )
                 .count;
                 assert_eq!(total, sum, "graph {gi} app {}", app.name);
@@ -101,7 +103,7 @@ fn single_plan_degenerate_tries_are_exact() {
             assert_eq!(trie.num_plans, 1);
             assert_eq!(trie.shared_levels(), 0);
             let fused =
-                cpu::count_plans_fused(&g, &trie, &roots, CpuFlavor::AutoMineOpt, None, None);
+                cpu::count_plans_fused(&g, &trie, &roots, CpuFlavor::AutoMineOpt, None, None, None);
             let want = cpu::count_plan(&g, &plan, &roots, CpuFlavor::AutoMineOpt);
             assert_eq!(fused, vec![want], "graph {gi} spec {spec}");
         }
@@ -123,8 +125,8 @@ fn fused_fsm_levels_match_per_candidate_evaluation() {
                     min_support,
                     max_size: 3,
                 };
-                let separate = fsm_mine_opts(&g, &cfg, hubs.as_ref(), false);
-                let fused = fsm_mine_opts(&g, &cfg, hubs.as_ref(), true);
+                let separate = fsm_mine_opts(&g, &cfg, hubs.as_ref(), false, None);
+                let fused = fsm_mine_opts(&g, &cfg, hubs.as_ref(), true, None);
                 assert_eq!(
                     separate.candidates_per_level,
                     fused.candidates_per_level,
@@ -189,7 +191,7 @@ fn simulated_fused_fsm_matches_mining_results() {
             fused: true,
             ..SimOptions::all()
         };
-        let cpu_ref = fsm_mine_opts(&g, &fsm_cfg, None, false);
+        let cpu_ref = fsm_mine_opts(&g, &fsm_cfg, None, false, None);
         let (pim, sim) = simulate_fsm(&g, &fsm_cfg, &opts, &cfg);
         assert_eq!(cpu_ref.frequent.len(), pim.frequent.len(), "hubs {hub_bitmaps}");
         for (a, b) in cpu_ref.frequent.iter().zip(&pim.frequent) {

@@ -1,0 +1,313 @@
+//! Parallel-correctness suite for the Chase–Lev work-stealing host
+//! runtime (DESIGN.md §12): every executor that schedules through
+//! `util::ws` must produce **bit-identical** results for every worker
+//! count — 1, 2, 4, and 8 — with the hub-bitmap engine on and off and
+//! under arbitrary chunk sizes. The runtime itself is stressed directly:
+//! oversubscription (more workers than cores) must still visit every
+//! task exactly once, and an injected slow worker must shed its backlog
+//! through actual steals (`WsStats.steals > 0`).
+//!
+//! Determinism is by construction — per-worker private state merged in
+//! worker-index order (see `util::ws` module docs) — so these tests pin
+//! the construction, not luck: any future reduction that becomes
+//! schedule-dependent (a float sum over racy order, a `HashMap`
+//! iteration leak) fails here across the thread matrix.
+
+use pimminer::exec::cpu::{self, CpuFlavor};
+use pimminer::graph::{gen, sort_by_degree_desc, CsrGraph, HubBitmaps};
+use pimminer::mine::{self, fsm::FsmConfig};
+use pimminer::pattern::fuse::PlanTrie;
+use pimminer::pattern::plan::application;
+use pimminer::pim::{simulate_app, PimConfig, SimOptions};
+use pimminer::util::ws::{self, WsDeque};
+use pimminer::util::{prop, rng::Rng};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The worker-count matrix the issue pins: serial, under-, at-, and
+/// over-subscribed relative to typical CI hosts.
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn random_graph(rng: &mut Rng) -> CsrGraph {
+    let n = rng.range(120, 400) as usize;
+    let m = rng.range((n * 2) as u64, (n * 6) as u64) as usize;
+    let dmax = rng.range(20, 120) as usize;
+    sort_by_degree_desc(&gen::power_law(n, m, dmax, rng.next_u64())).graph
+}
+
+#[test]
+fn fused_counts_and_telemetry_are_bit_identical_across_thread_counts() {
+    prop::check("ws-fused-thread-identity", 0xA1, 10, |rng| {
+        let g = random_graph(rng);
+        let roots = cpu::sampled_roots(g.num_vertices(), 1.0);
+        let app = application(["4-MC", "CC", "3-MC"][rng.below_usize(3)]).unwrap();
+        let plans = app.plans();
+        let trie = PlanTrie::build(&plans);
+        let hubs = rng
+            .chance(0.5)
+            .then(|| HubBitmaps::build(&g, Some(rng.range(2, 16) as usize)));
+        let chunk = rng.chance(0.5).then(|| rng.range(1, 48) as usize);
+        let (base_counts, base_work, base_stats) = cpu::count_plans_fused_telemetry(
+            &g,
+            &trie,
+            &roots,
+            CpuFlavor::AutoMineOpt,
+            hubs.as_ref(),
+            chunk,
+            Some(1),
+        );
+        assert_eq!(base_stats.workers, 1);
+        for t in THREADS {
+            let (counts, work, stats) = cpu::count_plans_fused_telemetry(
+                &g,
+                &trie,
+                &roots,
+                CpuFlavor::AutoMineOpt,
+                hubs.as_ref(),
+                chunk,
+                Some(t),
+            );
+            assert_eq!(counts, base_counts, "{} threads {t}", app.name);
+            assert_eq!(work, base_work, "{} telemetry threads {t}", app.name);
+            // Conservation: every task ran exactly once, locally or stolen.
+            assert_eq!(stats.local_pops + stats.steals, stats.tasks);
+            assert_eq!(stats.tasks, base_stats.tasks);
+        }
+        // The per-plan (unfused) path goes through the same runtime.
+        for (i, plan) in plans.iter().enumerate() {
+            let want = cpu::count_plan_with(
+                &g,
+                plan,
+                &roots,
+                CpuFlavor::AutoMineOpt,
+                hubs.as_ref(),
+                chunk,
+                Some(1),
+            );
+            assert_eq!(base_counts[i], want, "{} plan {i} fused vs per-plan", app.name);
+            let t = THREADS[rng.below_usize(THREADS.len())];
+            let got = cpu::count_plan_with(
+                &g,
+                plan,
+                &roots,
+                CpuFlavor::AutoMineOpt,
+                hubs.as_ref(),
+                chunk,
+                Some(t),
+            );
+            assert_eq!(got, want, "{} plan {i} threads {t}", app.name);
+        }
+    });
+}
+
+#[test]
+fn fsm_supports_are_identical_across_thread_counts() {
+    prop::check("ws-fsm-thread-identity", 0xB2, 6, |rng| {
+        let g = sort_by_degree_desc(&gen::with_random_labels(
+            gen::power_law(250, 1_200, 60, rng.next_u64()),
+            rng.range(2, 5) as u32,
+            rng.next_u64(),
+        ))
+        .graph;
+        let cfg = FsmConfig {
+            min_support: rng.range(2, 30),
+            max_size: 3,
+        };
+        let hubs = rng.chance(0.5).then(|| HubBitmaps::build(&g, Some(8)));
+        let fused = rng.chance(0.5);
+        let base = mine::fsm_mine_opts(&g, &cfg, hubs.as_ref(), fused, Some(1));
+        for t in THREADS {
+            let r = mine::fsm_mine_opts(&g, &cfg, hubs.as_ref(), fused, Some(t));
+            assert_eq!(r.candidates_per_level, base.candidates_per_level, "threads {t}");
+            assert_eq!(r.frequent.len(), base.frequent.len(), "threads {t}");
+            for (a, b) in base.frequent.iter().zip(&r.frequent) {
+                assert_eq!(a.support, b.support, "threads {t}");
+                assert_eq!(a.embeddings, b.embeddings, "threads {t}");
+                assert_eq!(a.pattern.canonical_key(), b.pattern.canonical_key());
+            }
+        }
+    });
+}
+
+#[test]
+fn motif_census_is_identical_across_thread_counts() {
+    prop::check("ws-census-thread-identity", 0xC3, 6, |rng| {
+        let g = random_graph(rng);
+        let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+        let k = rng.range(3, 5) as usize;
+        let base = mine::motif_census_with(&g, k, &roots, Some(1));
+        for t in THREADS {
+            let c = mine::motif_census_with(&g, k, &roots, Some(t));
+            assert_eq!(c.counts, base.counts, "k={k} threads {t}");
+        }
+    });
+}
+
+/// The whole `SimResult` — cycles, bytes, scan/word telemetry, shared
+/// fetches, the f64 seconds — must be bit-identical for every host
+/// worker count: the profiling pass merges per-worker accumulators in
+/// worker-index order and its f64 sums add dyadic fractions (multiples
+/// of 1/256), so even the floats reproduce exactly. Compared through
+/// `Debug` so any future field joins the check automatically.
+#[test]
+fn sim_results_are_bit_identical_across_thread_counts() {
+    prop::check("ws-sim-thread-identity", 0xD4, 6, |rng| {
+        let g = random_graph(rng);
+        let roots = cpu::sampled_roots(g.num_vertices(), 1.0);
+        let cfg = PimConfig::default();
+        let app = application(["3-CC", "4-CL", "4-MC"][rng.below_usize(3)]).unwrap();
+        let opts = SimOptions {
+            fused: rng.chance(0.5),
+            hub_bitmaps: rng.chance(0.5),
+            stealing: rng.chance(0.5),
+            chunk: rng.chance(0.5).then(|| rng.range(1, 48) as usize),
+            threads: Some(1),
+            ..SimOptions::all()
+        };
+        let base = format!("{:?}", simulate_app(&g, &app, &roots, &opts, &cfg));
+        for t in THREADS {
+            let pinned = SimOptions {
+                threads: Some(t),
+                ..opts
+            };
+            let r = simulate_app(&g, &app, &roots, &pinned, &cfg);
+            assert_eq!(
+                format!("{r:?}"),
+                base,
+                "{} SimResult diverged at {t} host threads",
+                app.name
+            );
+        }
+    });
+}
+
+/// Oversubscription stress: far more workers than this machine has
+/// cores, forced preemption mid-task, and every task must still run
+/// exactly once with the conservation law `local_pops + steals = tasks`
+/// intact.
+#[test]
+fn oversubscribed_runtime_visits_every_task_exactly_once() {
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let workers = (cores * 4).max(16);
+    let n = 50_000;
+    let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let (_, stats) = ws::run_tasks(
+        workers,
+        n,
+        |_| (),
+        |_, t| {
+            hits[t].fetch_add(1, Ordering::Relaxed);
+            if t % 1024 == 0 {
+                std::thread::yield_now();
+            }
+        },
+    );
+    for (t, h) in hits.iter().enumerate() {
+        assert_eq!(h.load(Ordering::Relaxed), 1, "task {t} ran a wrong number of times");
+    }
+    assert_eq!(stats.workers, workers);
+    assert_eq!(stats.tasks, n as u64);
+    assert_eq!(stats.local_pops + stats.steals, n as u64);
+}
+
+/// Same law over the chunked entry point with a ragged tail and a chunk
+/// size that doesn't divide the index space.
+#[test]
+fn oversubscribed_chunked_runtime_covers_the_index_space() {
+    let n = 10_007; // prime: never divisible by the chunk
+    let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let (_, stats) = ws::run_chunks(
+        12,
+        n,
+        13,
+        |_| (),
+        |_, span: Range<usize>| {
+            for i in span {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        },
+    );
+    assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    assert_eq!(stats.local_pops + stats.steals, stats.tasks);
+}
+
+/// Imbalance stress: worker 0 sleeps on every task it executes, so its
+/// seeded share can only finish in time if the other workers steal it.
+/// This is the load-balancing claim the runtime exists for — the run
+/// must complete with `steals > 0`, and the results must still merge
+/// deterministically (each task recorded exactly once).
+#[test]
+fn slow_worker_sheds_load_through_steals() {
+    let n = 64;
+    let workers = 4;
+    let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let (states, stats) = ws::run_tasks(
+        workers,
+        n,
+        |w| (w, 0u64),
+        |state, t| {
+            let (w, done) = state;
+            if *w == 0 {
+                // The straggler: ~2ms per task. Its 16-task share would
+                // take ~32ms alone; the three fast workers drain their
+                // own shares in microseconds and must come steal.
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            *done += 1;
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        },
+    );
+    assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    assert_eq!(stats.local_pops + stats.steals, n as u64);
+    assert!(
+        stats.steals > 0,
+        "fast workers never stole from the straggler: {stats:?}"
+    );
+    assert!(stats.steal_attempts >= stats.steals);
+    // States come back in worker-index order and account for every task.
+    assert_eq!(states.iter().map(|&(w, _)| w).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    assert_eq!(states.iter().map(|&(_, d)| d).sum::<u64>(), n as u64);
+    // The straggler cannot have run its whole share: stealing moved work.
+    let straggler_done = states[0].1;
+    assert!(
+        straggler_done < n as u64 / workers as u64,
+        "straggler ran its full share ({straggler_done} tasks) — no load was shed"
+    );
+}
+
+/// The deque primitive under concurrent owner + thieves: a bounded
+/// producer/consumer race where every pushed task is claimed by exactly
+/// one side.
+#[test]
+fn deque_owner_and_thieves_partition_the_tasks() {
+    let n = 20_000usize;
+    let d = WsDeque::with_capacity(n);
+    for t in 0..n {
+        d.push(t);
+    }
+    let claimed: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    std::thread::scope(|s| {
+        let d = &d;
+        let claimed = &claimed;
+        // Three thieves race the owner for the top end.
+        for _ in 0..3 {
+            s.spawn(|| loop {
+                match d.steal() {
+                    ws::Steal::Ok(t) => {
+                        claimed[t].fetch_add(1, Ordering::Relaxed);
+                    }
+                    ws::Steal::Retry => continue,
+                    ws::Steal::Empty => break,
+                }
+            });
+        }
+        // Owner drains the bottom end concurrently.
+        while let Some(t) = d.pop() {
+            claimed[t].fetch_add(1, Ordering::Relaxed);
+        }
+    });
+    for (t, c) in claimed.iter().enumerate() {
+        assert_eq!(c.load(Ordering::Relaxed), 1, "task {t} claimed a wrong number of times");
+    }
+    assert!(d.is_empty());
+}

@@ -173,6 +173,11 @@ fn prop_sim_count_invariance_across_random_options() {
             } else {
                 None
             },
+            threads: if rng.chance(0.5) {
+                Some(rng.range(1, 8) as usize)
+            } else {
+                None
+            },
         };
         let r = simulate_app(&g, &app, &roots, &opts, &cfg);
         assert_eq!(r.count, expected, "opts {opts:?}");
