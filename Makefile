@@ -16,7 +16,10 @@ test:
 # pins the worker count for reproducible runs on shared machines. The
 # trailing invocations refresh the machine-readable perf trajectory
 # seeds (BENCH_micro.json, BENCH_fusion.json, and BENCH_parallel.json
-# at the repo root).
+# at the repo root); every document carries a meta block
+# (schema_version 2: threads, host cores, per-bench config — DESIGN.md
+# §13) so runs from different machines/configs are distinguishable.
+# The parallel bench also gates the observability overhead budget.
 bench:
 	cargo bench
 	cargo bench --bench perf_micro -- --json

@@ -24,12 +24,19 @@ struct Timing {
     iters: usize,
 }
 
+/// Schema of the `BENCH_*.json` documents. Version 2 added the shared
+/// `meta` block (thread count, host cores, per-bench config entries) so
+/// perf-trajectory tooling can tell runs on different machines or
+/// configurations apart.
+pub const BENCH_SCHEMA_VERSION: u64 = 2;
+
 /// One benchmark session (one binary).
 pub struct Bench {
     name: String,
     quick: bool,
     timings: RefCell<Vec<Timing>>,
     metrics: RefCell<Vec<(String, f64)>>,
+    configs: RefCell<Vec<(String, String)>>,
 }
 
 impl Bench {
@@ -43,7 +50,14 @@ impl Bench {
             quick,
             timings: RefCell::new(Vec::new()),
             metrics: RefCell::new(Vec::new()),
+            configs: RefCell::new(Vec::new()),
         }
+    }
+
+    /// Record a configuration key (hub settings, partitioner, fused
+    /// flag, ...) into the session's `meta` block.
+    pub fn config(&self, key: &str, value: &str) {
+        self.configs.borrow_mut().push((key.to_string(), value.to_string()));
     }
 
     /// Quick mode (PIMMINER_BENCH_QUICK=1) trims iteration counts.
@@ -130,9 +144,21 @@ impl Bench {
                 json::Obj::new().str("label", label).f64("value", *value).render()
             })
             .collect();
+        let mut meta = json::Obj::new()
+            .u64("schema_version", BENCH_SCHEMA_VERSION)
+            .bool("quick", self.quick)
+            .u64("threads", crate::util::threads::resolve(None) as u64)
+            .u64(
+                "host_cores",
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as u64,
+            );
+        for (k, v) in self.configs.borrow().iter() {
+            meta = meta.str(k, v);
+        }
         json::Obj::new()
             .str("bench", &self.name)
             .bool("quick", self.quick)
+            .raw("meta", &meta.render())
             .raw("timings", &json::array(&timings))
             .raw("metrics", &json::array(&metrics))
             .render()
@@ -231,6 +257,23 @@ mod tests {
         assert!(j.contains("\"value\":12.5"), "{j}");
         // iters is recorded post-clamp so the JSON reflects what ran
         assert!(j.contains("\"iters\":"), "{j}");
+    }
+
+    #[test]
+    fn json_carries_meta_block_and_configs() {
+        let b = Bench::new("self-test");
+        b.config("fused", "true");
+        b.config("partitioner", "refined");
+        let j = b.to_json();
+        assert!(
+            j.contains(&format!("\"schema_version\":{BENCH_SCHEMA_VERSION}")),
+            "{j}"
+        );
+        assert!(j.contains("\"meta\":{"), "{j}");
+        assert!(j.contains("\"threads\":"), "{j}");
+        assert!(j.contains("\"host_cores\":"), "{j}");
+        assert!(j.contains("\"fused\":\"true\""), "{j}");
+        assert!(j.contains("\"partitioner\":\"refined\""), "{j}");
     }
 
     #[test]

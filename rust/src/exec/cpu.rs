@@ -28,6 +28,7 @@
 
 use super::enumerate::{Enumerator, MultiEnumerator, NullSink, ParallelSink};
 use crate::graph::{CsrGraph, HubBitmaps, VertexId};
+use crate::obs::trace;
 use crate::pattern::fuse::PlanTrie;
 use crate::pattern::plan::{Application, Plan};
 use crate::util::{threads, ws};
@@ -185,16 +186,30 @@ pub fn run_application_with(
     let plans = app.plans();
     let start = std::time::Instant::now();
     let count = if fused {
-        let trie = PlanTrie::build(&plans);
+        let trie = {
+            let _sp = trace::span("plan/fuse");
+            trace::counter("plans", plans.len() as u64);
+            PlanTrie::build(&plans)
+        };
+        let _sp = trace::span("enumerate");
+        trace::counter("roots", roots.len() as u64);
         count_plans_fused(g, &trie, roots, flavor, hubs, chunk, threads)
             .iter()
             .sum()
     } else {
+        let _sp = trace::span("enumerate");
+        trace::counter("roots", roots.len() as u64);
         plans
             .iter()
             .map(|p| count_plan_with(g, p, roots, flavor, hubs, chunk, threads))
             .sum()
     };
+    crate::obs_debug!(
+        "cpu {}: {} plans, {} roots, count={count}",
+        if fused { "fused" } else { "per-plan" },
+        plans.len(),
+        roots.len()
+    );
     CpuResult {
         count,
         seconds: start.elapsed().as_secs_f64(),

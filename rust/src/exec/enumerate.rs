@@ -18,6 +18,7 @@ use super::setops::{
     load_row_bounded, prefix_len, remove_values, subtract_into_hybrid, ScanCost, NO_BOUND,
 };
 use crate::graph::{CsrGraph, HubBitmaps, VertexId};
+use crate::obs::metrics;
 use crate::pattern::fuse::PlanTrie;
 use crate::pattern::plan::Plan;
 
@@ -390,6 +391,7 @@ impl<'g> Enumerator<'g> {
         let list = self.g.neighbors(v);
         let th = spec.threshold(&self.bound[..=level]);
         let prefix = prefix_len(list, th);
+        metrics::NBR_LEN.record(list.len() as u64);
         sink.on_fetch(level, v, list.len(), prefix);
     }
 
@@ -417,6 +419,7 @@ impl<'g> Enumerator<'g> {
             &mut self.wbuf,
         );
         self.bufs[level].1 = tmp;
+        metrics::CAND_LEN.record(out.len() as u64);
         cost
     }
 }
@@ -637,6 +640,7 @@ impl<'g> MultiEnumerator<'g> {
             let list = g.neighbors(v);
             let plen = prefix_len(list, ub);
             let prefix = &list[..plen];
+            metrics::CAND_LEN.record(plen as u64);
             sink.on_scan(depth, plen);
             if !node.terminals.is_empty() {
                 let dup = prefix
@@ -680,6 +684,7 @@ impl<'g> MultiEnumerator<'g> {
             &mut tmp,
             &mut self.wbuf,
         );
+        metrics::CAND_LEN.record(cands.len() as u64);
         sink.on_scan(depth, cost.elems);
         if cost.words > 0 {
             sink.on_word_ops(depth, cost.words);
@@ -720,6 +725,7 @@ impl<'g> MultiEnumerator<'g> {
         let list = self.g.neighbors(v);
         let th = spec.threshold(&self.bound[..=depth]);
         let prefix = prefix_len(list, th);
+        metrics::NBR_LEN.record(list.len() as u64);
         sink.on_fetch(depth, v, list.len(), prefix);
         if self.sharers[x] > 1 {
             sink.on_shared_fetch(self.sharers[x] - 1);

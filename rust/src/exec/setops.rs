@@ -15,9 +15,12 @@
 //! tail merge for ids beyond the prefix), and the early-terminating merge
 //! otherwise. They return a [`ScanCost`] splitting sparse element scans
 //! from dense word ops so the PIM simulator can price the two streams
-//! differently.
+//! differently. Each hybrid dispatch resolution bumps one of the
+//! `setops.dense/probe/merge` registry counters (DESIGN.md §13) — a
+//! single relaxed-load no-op unless observability is enabled.
 
 use crate::graph::{HubBitmaps, VertexId};
+use crate::obs::metrics;
 
 /// Exclusive upper bound type; `VertexId::MAX` means unbounded.
 pub const NO_BOUND: VertexId = VertexId::MAX;
@@ -331,6 +334,7 @@ pub fn intersect_into_hybrid(
         match (ra, rb) {
             (Some(ra), Some(rb)) if ub <= hp => {
                 // Dense-dense: AND the two rows under the ub bit mask.
+                metrics::SETOP_DENSE.add(1);
                 let bits = ub as usize;
                 let nw = bits.div_ceil(64);
                 let mut words = 0usize;
@@ -351,17 +355,25 @@ pub fn intersect_into_hybrid(
             (Some(ra), Some(rb)) => {
                 // Both rows but the bound escapes the prefix: probe the
                 // shorter list against the longer's row.
+                metrics::SETOP_PROBE.add(1);
                 return if a.len() <= b.len() {
                     probe_intersect(a, b, rb, hp, ub, out)
                 } else {
                     probe_intersect(b, a, ra, hp, ub, out)
                 };
             }
-            (None, Some(rb)) => return probe_intersect(a, b, rb, hp, ub, out),
-            (Some(ra), None) => return probe_intersect(b, a, ra, hp, ub, out),
+            (None, Some(rb)) => {
+                metrics::SETOP_PROBE.add(1);
+                return probe_intersect(a, b, rb, hp, ub, out);
+            }
+            (Some(ra), None) => {
+                metrics::SETOP_PROBE.add(1);
+                return probe_intersect(b, a, ra, hp, ub, out);
+            }
             (None, None) => {}
         }
     }
+    metrics::SETOP_MERGE.add(1);
     ScanCost {
         elems: intersect_into(a, b, ub, out),
         words: 0,
@@ -388,6 +400,7 @@ pub fn subtract_into_hybrid(
         let rb = b_v.and_then(|v| h.row(v));
         match (ra, rb) {
             (Some(ra), Some(rb)) if ub <= hp => {
+                metrics::SETOP_DENSE.add(1);
                 let bits = ub as usize;
                 let nw = bits.div_ceil(64);
                 let mut words = 0usize;
@@ -405,10 +418,14 @@ pub fn subtract_into_hybrid(
                 }
                 return ScanCost { elems: 0, words };
             }
-            (_, Some(rb)) => return probe_subtract(a, b, rb, hp, ub, out),
+            (_, Some(rb)) => {
+                metrics::SETOP_PROBE.add(1);
+                return probe_subtract(a, b, rb, hp, ub, out);
+            }
             _ => {}
         }
     }
+    metrics::SETOP_MERGE.add(1);
     ScanCost {
         elems: subtract_into(a, b, ub, out),
         words: 0,
@@ -432,6 +449,7 @@ pub fn count_intersect_hybrid(
         let rb = b_v.and_then(|v| h.row(v));
         match (ra, rb) {
             (Some(ra), Some(rb)) if ub <= hp => {
+                metrics::SETOP_DENSE.add(1);
                 let bits = ub as usize;
                 let nw = bits.div_ceil(64);
                 let mut count = 0u64;
@@ -445,15 +463,23 @@ pub fn count_intersect_hybrid(
                 return (count, ScanCost { elems: 0, words: nw });
             }
             (Some(ra), Some(rb)) => {
+                metrics::SETOP_PROBE.add(1);
                 let (shorter, longer, row) =
                     if a.len() <= b.len() { (a, b, rb) } else { (b, a, ra) };
                 return probe_count(shorter, longer, row, hp, ub);
             }
-            (None, Some(rb)) => return probe_count(a, b, rb, hp, ub),
-            (Some(ra), None) => return probe_count(b, a, ra, hp, ub),
+            (None, Some(rb)) => {
+                metrics::SETOP_PROBE.add(1);
+                return probe_count(a, b, rb, hp, ub);
+            }
+            (Some(ra), None) => {
+                metrics::SETOP_PROBE.add(1);
+                return probe_count(b, a, ra, hp, ub);
+            }
             (None, None) => {}
         }
     }
+    metrics::SETOP_MERGE.add(1);
     let (count, scanned) = count_intersect(a, b, ub);
     (
         count,

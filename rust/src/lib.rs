@@ -55,6 +55,7 @@ pub mod datasets;
 pub mod exec;
 pub mod graph;
 pub mod mine;
+pub mod obs;
 pub mod part;
 pub mod pattern;
 pub mod pim;

@@ -29,6 +29,7 @@ use pimminer::exec::brute_force_count;
 use pimminer::exec::cpu::{self, CpuFlavor};
 use pimminer::graph::{gen, io, sort_by_degree_desc, CsrGraph};
 use pimminer::mine::{self, FsmConfig};
+use pimminer::obs::{self, metrics, trace};
 use pimminer::part::{self, PartitionStrategy};
 use pimminer::pattern::compile::{compile_with, parse_pattern, Compiled, CostModel};
 use pimminer::pattern::fuse::PlanTrie;
@@ -40,10 +41,13 @@ use pimminer::pim::{
 };
 use pimminer::report::{self, json, Table};
 use pimminer::util::cli::Args;
+use pimminer::util::threads;
+use pimminer::{obs_error, obs_info};
 
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    begin_observability(&args, cmd);
     match cmd {
         "generate" => generate(&args),
         "count" => count(&args),
@@ -56,6 +60,70 @@ fn main() {
         "info" => info(),
         _ => help(),
     }
+    finish_observability(&args, cmd);
+}
+
+/// `--profile` / `--trace-json`: whether query observability is armed
+/// for this run.
+fn obs_on(args: &Args) -> bool {
+    args.get_bool("profile") || args.get("trace-json").is_some()
+}
+
+/// Arm the tracer and metrics registry before the command body runs —
+/// the root span opens here so the `load` span (and everything after)
+/// nests inside it. A no-op without `--profile` / `--trace-json`, so
+/// the instrumented hot paths stay on their disabled fast path.
+fn begin_observability(args: &Args, cmd: &str) {
+    if !obs_on(args) {
+        return;
+    }
+    metrics::reset();
+    metrics::set_enabled(true);
+    trace::begin(cmd);
+}
+
+/// Close the root span and emit whatever was asked for: the
+/// human-readable self-time table (`--profile`) and/or the machine-
+/// readable span-tree + metrics document (`--trace-json <file>`).
+fn finish_observability(args: &Args, cmd: &str) {
+    if !obs_on(args) {
+        return;
+    }
+    let root = trace::finish();
+    if args.get_bool("profile") {
+        print!("{}", obs::render_profile(root.as_ref()));
+    }
+    if let Some(path) = args.get("trace-json") {
+        let meta = obs_meta(args, cmd);
+        std::fs::write(path, obs::report_json(&meta, root.as_ref())).expect("write trace json");
+        println!("wrote {path}");
+    }
+    metrics::set_enabled(false);
+}
+
+/// Run metadata stamped into the `--trace-json` document.
+fn obs_meta(args: &Args, cmd: &str) -> Vec<(String, String)> {
+    vec![
+        ("command".to_string(), cmd.to_string()),
+        ("system".to_string(), args.get_or("system", "pim").to_string()),
+        (
+            "threads".to_string(),
+            threads::resolve(threads_arg(args)).to_string(),
+        ),
+        (
+            "partitioner".to_string(),
+            partitioner_arg(args).unwrap_or_default().name().to_string(),
+        ),
+        (
+            "hub_bitmaps".to_string(),
+            args.get_bool("hub-bitmaps").to_string(),
+        ),
+        (
+            "hub_threshold".to_string(),
+            args.get("hub-threshold").unwrap_or("auto").to_string(),
+        ),
+        ("fused".to_string(), fused_arg(args).to_string()),
+    ]
 }
 
 fn help() {
@@ -107,12 +175,21 @@ fn help() {
          --threads <n> pins the host worker count for the work-stealing\n\
          runtime (DESIGN.md §12) on count/motifs/fsm and the simulator's\n\
          profiling pass; defaults to PIMMINER_THREADS or the machine's\n\
-         available parallelism. Results are bit-identical either way."
+         available parallelism. Results are bit-identical either way.\n\
+         \n\
+         observability (DESIGN.md §13): --profile prints a per-phase\n\
+         self-time table plus the metrics registry after the run;\n\
+         --trace-json <file> writes the span tree, metric dump, and run\n\
+         metadata as JSON (count/motifs/fsm/ladder/partition). Both are\n\
+         write-only side channels: results stay bit-identical with them\n\
+         on or off. PIMMINER_LOG=error|warn|info|debug sets stderr log\n\
+         verbosity (default warn)."
     );
 }
 
 fn load_graph(args: &Args) -> (CsrGraph, f64) {
-    if let Some(path) = args.get("graph") {
+    let _sp = trace::span("load");
+    let (g, sample) = if let Some(path) = args.get("graph") {
         let g = io::read_csr(std::path::Path::new(path)).expect("read graph file");
         let sample = args.get_f64("sample", 1.0);
         (sort_by_degree_desc(&g).graph, sample)
@@ -122,7 +199,16 @@ fn load_graph(args: &Args) -> (CsrGraph, f64) {
         let inst = spec.generate(args.get_bool("full") || datasets::full_scale());
         let sample = args.get_f64("sample", inst.sample_ratio);
         (inst.graph, sample)
-    }
+    };
+    trace::counter("vertices", g.num_vertices() as u64);
+    trace::counter("edges", g.num_edges() as u64);
+    obs_info!(
+        "loaded graph: |V|={} |E|={} max-degree={}",
+        g.num_vertices(),
+        g.num_edges(),
+        g.max_degree()
+    );
+    (g, sample)
 }
 
 fn options(args: &Args) -> SimOptions {
@@ -168,7 +254,7 @@ fn cpu_hubs(args: &Args, g: &CsrGraph) -> Option<pimminer::graph::HubBitmaps> {
 fn partitioner_arg(args: &Args) -> Option<PartitionStrategy> {
     args.get("partitioner").map(|s| {
         PartitionStrategy::parse(s).unwrap_or_else(|| {
-            eprintln!("unknown partitioner '{s}' (round-robin | streaming | refined)");
+            obs_error!("unknown partitioner '{s}' (round-robin | streaming | refined)");
             std::process::exit(2);
         })
     })
@@ -178,7 +264,7 @@ fn compile_or_exit(spec: &str, model: &CostModel, induced: bool) -> Compiled {
     match parse_pattern(spec).and_then(|p| compile_with(&p, model, induced)) {
         Ok(c) => c,
         Err(e) => {
-            eprintln!("pattern error: {e}");
+            obs_error!("pattern error: {e}");
             std::process::exit(2);
         }
     }
@@ -334,13 +420,13 @@ fn motifs(args: &Args) {
     let (g, _) = load_graph(args);
     let k = args.get_usize("k", 4);
     if !(2..=5).contains(&k) {
-        eprintln!("motifs error: -k must be between 2 and 5 (classifier table sizes), got {k}");
+        obs_error!("motifs error: -k must be between 2 and 5 (classifier table sizes), got {k}");
         std::process::exit(2);
     }
     let sample = args.get_f64("sample", 1.0);
     if sample < 1.0 {
         if args.get_bool("check") {
-            eprintln!("motifs error: --check needs the full census (drop --sample)");
+            obs_error!("motifs error: --check needs the full census (drop --sample)");
             std::process::exit(2);
         }
         println!(
@@ -441,7 +527,7 @@ fn check_census(g: &CsrGraph, census: &pimminer::mine::MotifCensus) {
         let compiled = compile_with(m, &model, true).expect("motifs compile");
         let expected = cpu::count_plan(g, &compiled.plan, &all, CpuFlavor::AutoMineOpt);
         if census.counts[i] != expected {
-            eprintln!(
+            obs_error!(
                 "MISMATCH {}: census {} vs compiled plan {}",
                 m.name, census.counts[i], expected
             );
@@ -449,7 +535,7 @@ fn check_census(g: &CsrGraph, census: &pimminer::mine::MotifCensus) {
         }
     }
     if failures > 0 {
-        eprintln!("motif check FAILED: {failures} patterns disagree");
+        obs_error!("motif check FAILED: {failures} patterns disagree");
         std::process::exit(1);
     }
     println!(
@@ -472,14 +558,14 @@ fn fsm(args: &Args) {
                 }
             }
             _ => {
-                eprintln!("fsm error: --labels must be a positive integer, got '{v}'");
+                obs_error!("fsm error: --labels must be a positive integer, got '{v}'");
                 std::process::exit(2);
             }
         }
     }
     let max_size = args.get_usize("max-size", 4);
     if !(2..=8).contains(&max_size) {
-        eprintln!("fsm error: --max-size must be between 2 and 8, got {max_size}");
+        obs_error!("fsm error: --max-size must be between 2 and 8, got {max_size}");
         std::process::exit(2);
     }
     let cfg = FsmConfig {
@@ -575,7 +661,7 @@ fn partition_cmd(args: &Args) {
         let p = part::partition(&g, &cfg, s);
         if check {
             if let Err(e) = p.check(&g, &cfg) {
-                eprintln!("partition check FAILED [{}]: {e}", s.name());
+                obs_error!("partition check FAILED [{}]: {e}", s.name());
                 failures += 1;
             }
         }
@@ -593,7 +679,7 @@ fn partition_cmd(args: &Args) {
             for u in 0..cfg.num_units() {
                 let set_bytes: u64 = plan.sets[u].iter().map(|&v| g.neighbor_bytes(v)).sum();
                 if set_bytes != plan.replica_bytes[u] || owned[u] + set_bytes > cap.max(owned[u]) {
-                    eprintln!(
+                    obs_error!(
                         "partition check FAILED [{}]: unit {u} replica plan over budget",
                         s.name()
                     );
@@ -632,12 +718,12 @@ fn partition_cmd(args: &Args) {
             get(PartitionStrategy::Refined),
         ) {
             if rf > st {
-                eprintln!("partition check FAILED: refinement raised the cut ({rf} > {st})");
+                obs_error!("partition check FAILED: refinement raised the cut ({rf} > {st})");
                 failures += 1;
             }
         }
         if failures > 0 {
-            eprintln!("partition check FAILED: {failures} violations");
+            obs_error!("partition check FAILED: {failures} violations");
             std::process::exit(1);
         }
         println!("partition check OK: all invariants hold for {} strategies", strategies.len());
@@ -657,7 +743,7 @@ fn partition_cmd(args: &Args) {
 /// `plan --pattern <spec>`: compile and pretty-print without running.
 fn plan_cmd(args: &Args) {
     let Some(spec) = args.get("pattern") else {
-        eprintln!("plan requires --pattern <edgelist|name>");
+        obs_error!("plan requires --pattern <edgelist|name>");
         std::process::exit(2);
     };
     // Fit the cost model to a graph only when one was explicitly given.
@@ -765,7 +851,7 @@ fn verify(args: &Args) {
     }
     t.print();
     if failures > 0 {
-        eprintln!("verify FAILED: {failures} mismatching runs");
+        obs_error!("verify FAILED: {failures} mismatching runs");
         std::process::exit(1);
     }
     println!("verify OK: every compiled plan matches the brute-force reference");

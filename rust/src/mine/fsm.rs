@@ -26,6 +26,7 @@
 use crate::exec::enumerate::{compute_candidates, EnumSink, NullSink};
 use crate::exec::setops::{intersect_into_hybrid, ScanCost, NO_BOUND};
 use crate::graph::{CsrGraph, HubBitmaps, VertexId};
+use crate::obs::trace;
 use crate::pattern::fuse::{PlanTrie, TrieLevel};
 use crate::pattern::pattern::{permute_all, Pattern, MAX_PATTERN};
 use crate::util::{threads, ws};
@@ -646,7 +647,11 @@ pub fn fsm_mine_with(
             break;
         }
         result.candidates_per_level.push(candidates.len());
-        let stats = exec.run_level(g, &candidates);
+        let stats = {
+            let _sp = trace::span(&format!("fsm-level-{level_edges}"));
+            trace::counter("candidates", candidates.len() as u64);
+            exec.run_level(g, &candidates)
+        };
         let mut frequent_now = Vec::new();
         for (cand, stat) in candidates.iter().zip(&stats) {
             if stat.support >= cfg.min_support {
@@ -658,6 +663,11 @@ pub fn fsm_mine_with(
                 });
             }
         }
+        crate::obs_debug!(
+            "fsm level {level_edges}: {} candidates, {} frequent",
+            candidates.len(),
+            frequent_now.len()
+        );
         if frequent_now.is_empty() || level_edges == max_edges {
             break;
         }

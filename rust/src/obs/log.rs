@@ -1,0 +1,163 @@
+//! `PIMMINER_LOG` leveled stderr logger — the replacement for the
+//! scattered `eprintln!` diagnostics (DESIGN.md §13).
+//!
+//! Levels order `error < warn < info < debug`; a record is emitted when
+//! its level is at or above the threshold parsed once from
+//! `PIMMINER_LOG` (default [`Level::Warn`], so existing error/warning
+//! output is unchanged). The threshold is cached in a relaxed atomic so
+//! the check behind the [`obs_error!`](crate::obs_error)-family macros
+//! is one load; tests pin it with [`set_threshold`] instead of mutating
+//! the environment (setenv races getenv in multithreaded test binaries —
+//! see `util::threads`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ordered most- to least-severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// The run cannot produce what was asked (bad flag, failed check).
+    Error = 0,
+    /// Suspicious but non-fatal; the default threshold.
+    Warn = 1,
+    /// Phase-level progress (per query, per FSM level).
+    Info = 2,
+    /// Scheduling/dispatch detail.
+    Debug = 3,
+}
+
+impl Level {
+    /// Parse a `PIMMINER_LOG` value (case-insensitive); `None` when
+    /// unrecognized.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    /// Tag printed in the record prefix.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+const UNSET: u8 = u8::MAX;
+static THRESHOLD: AtomicU8 = AtomicU8::new(UNSET);
+
+fn from_u8(v: u8) -> Level {
+    match v {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// The active threshold: `PIMMINER_LOG` parsed on first use, default
+/// [`Level::Warn`].
+pub fn threshold() -> Level {
+    let raw = THRESHOLD.load(Ordering::Relaxed);
+    if raw != UNSET {
+        return from_u8(raw);
+    }
+    let lvl = std::env::var("PIMMINER_LOG")
+        .ok()
+        .and_then(|v| Level::parse(&v))
+        .unwrap_or(Level::Warn);
+    THRESHOLD.store(lvl as u8, Ordering::Relaxed);
+    lvl
+}
+
+/// Pin the threshold, overriding `PIMMINER_LOG` (tests and
+/// embedding callers).
+pub fn set_threshold(level: Level) {
+    THRESHOLD.store(level as u8, Ordering::Relaxed);
+}
+
+/// Whether records at `level` are emitted.
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    level <= threshold()
+}
+
+/// Emit one record to stderr (used via the `obs_*!` macros).
+pub fn emit(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("pimminer[{}] {}", level.name(), args);
+    }
+}
+
+/// Log at [`Level::Error`]: the run cannot produce what was asked.
+#[macro_export]
+macro_rules! obs_error {
+    ($($arg:tt)*) => {
+        $crate::obs::log::emit($crate::obs::log::Level::Error, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Warn`]: suspicious but non-fatal (emitted by default).
+#[macro_export]
+macro_rules! obs_warn {
+    ($($arg:tt)*) => {
+        $crate::obs::log::emit($crate::obs::log::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Info`]: phase-level progress (silent by default).
+#[macro_export]
+macro_rules! obs_info {
+    ($($arg:tt)*) => {
+        $crate::obs::log::emit($crate::obs::log::Level::Info, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Debug`]: scheduling/dispatch detail (silent by default).
+#[macro_export]
+macro_rules! obs_debug {
+    ($($arg:tt)*) => {
+        $crate::obs::log::emit($crate::obs::log::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_levels_and_rejects_junk() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse(" WARN "), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("verbose"), None);
+        assert_eq!(Level::parse(""), None);
+    }
+
+    #[test]
+    fn severity_orders_error_first() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert_eq!(from_u8(Level::Info as u8), Level::Info);
+    }
+
+    #[test]
+    fn set_threshold_gates_enabled() {
+        set_threshold(Level::Info);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_threshold(Level::Warn);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+    }
+}

@@ -1,0 +1,411 @@
+//! Sharded metrics registry (DESIGN.md §13): named atomic counters and
+//! log2-bucket histograms threaded through the hot layers — set-op
+//! kernel dispatch mix (`exec::setops`), candidate-set and
+//! neighbor-list length distributions (`exec::enumerate`),
+//! steal/latency telemetry (`util::ws`), access-class bytes and
+//! per-unit busy cycles (`pim::sim`), and partition/replica stats
+//! (`part` via `pim::sim::build_placement`).
+//!
+//! Cost model: every gated hook ([`Counter::add`], [`Histogram::record`])
+//! opens with one relaxed load of a static `AtomicBool` and returns
+//! immediately when the registry is disabled — no bucket math, no
+//! shared-line traffic; the `parallel` bench asserts the amortized
+//! disabled-hook cost stays in the nanosecond range. Enabled, writes go
+//! to one of [`SHARDS`] cache-line-aligned shards picked per thread, so
+//! concurrent workers do not bounce a shared line; reads
+//! ([`Counter::get`], [`Histogram::snapshot`]) sum shards in fixed
+//! index order. u64 addition is commutative, so totals are
+//! schedule-independent for a deterministic workload — and nothing in
+//! the engine ever *reads* a metric, so enabling the registry cannot
+//! perturb results (`tests/prop_parallel.rs` pins both properties).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+/// Shards per metric; a power of two comfortably above typical worker
+/// counts so per-thread shard indices rarely collide.
+pub const SHARDS: usize = 16;
+
+/// Histogram bucket count: bucket 0 holds zeros, bucket `i` holds
+/// `[2^(i-1), 2^i)`, and the last bucket everything `>= 2^30`.
+pub const BUCKETS: usize = 32;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Whether the registry is recording — the static check every gated
+/// hook opens with.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the registry on or off (the CLI's `--profile`/`--trace-json`
+/// path; the neutrality tests).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static SHARD: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+/// This thread's shard index, assigned round-robin on first use.
+#[inline]
+fn shard_index() -> usize {
+    SHARD.with(|s| {
+        let v = s.get();
+        if v != usize::MAX {
+            v
+        } else {
+            let v = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) % SHARDS;
+            s.set(v);
+            v
+        }
+    })
+}
+
+/// One cache line per shard so concurrent increments never false-share.
+#[repr(align(64))]
+struct Shard(AtomicU64);
+
+impl Shard {
+    // Interior-mutable const is intentional: it is the array repeat
+    // operand that materializes a fresh atomic per slot.
+    #[allow(clippy::declare_interior_mutable_const)]
+    const ZERO: Shard = Shard(AtomicU64::new(0));
+}
+
+/// A sharded monotonic counter.
+pub struct Counter {
+    shards: [Shard; SHARDS],
+}
+
+impl Counter {
+    /// A zeroed counter (const: usable in statics).
+    pub const fn new() -> Counter {
+        Counter {
+            shards: [Shard::ZERO; SHARDS],
+        }
+    }
+
+    /// Add `n` if the registry is enabled — the hot-path hook.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.bump(n);
+        }
+    }
+
+    /// Add `n` unconditionally (callers that already checked
+    /// [`enabled`], and the shard-conservation tests).
+    #[inline]
+    pub fn bump(&self, n: u64) {
+        self.shards[shard_index()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Total across shards, summed in fixed index order.
+    pub fn get(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.0.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Zero all shards.
+    pub fn reset(&self) {
+        for s in &self.shards {
+            s.0.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter::new()
+    }
+}
+
+/// Bucket index for a sample: 0 for 0, else `64 - leading_zeros`,
+/// clamped to the top bucket.
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    ((64 - v.leading_zeros()) as usize).min(BUCKETS - 1)
+}
+
+/// Human label for bucket `i`: `"0"`, `"1"`, `"2-3"`, …, `">=…"`.
+pub fn bucket_label(i: usize) -> String {
+    assert!(i < BUCKETS);
+    match i {
+        0 => "0".to_string(),
+        1 => "1".to_string(),
+        i if i == BUCKETS - 1 => format!(">={}", 1u64 << (BUCKETS - 2)),
+        i => format!("{}-{}", 1u64 << (i - 1), (1u64 << i) - 1),
+    }
+}
+
+#[repr(align(64))]
+struct HistShard {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl HistShard {
+    // Same repeat-operand idiom as `Shard::ZERO`.
+    #[allow(clippy::declare_interior_mutable_const)]
+    const ZERO: HistShard = {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const Z: AtomicU64 = AtomicU64::new(0);
+        HistShard {
+            buckets: [Z; BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    };
+}
+
+/// A sharded log2-bucket histogram: per-shard bucket tallies plus a
+/// sample count and sum.
+pub struct Histogram {
+    shards: [HistShard; SHARDS],
+}
+
+impl Histogram {
+    /// A zeroed histogram (const: usable in statics).
+    pub const fn new() -> Histogram {
+        Histogram {
+            shards: [HistShard::ZERO; SHARDS],
+        }
+    }
+
+    /// Record a sample if the registry is enabled — the hot-path hook;
+    /// no bucket math happens when off.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if enabled() {
+            self.record_always(v);
+        }
+    }
+
+    /// Record unconditionally (callers that already checked
+    /// [`enabled`], and the shard-conservation tests).
+    #[inline]
+    pub fn record_always(&self, v: u64) {
+        let s = &self.shards[shard_index()];
+        s.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        s.count.fetch_add(1, Ordering::Relaxed);
+        s.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Merge shards (fixed index order) into an owned snapshot.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut snap = HistSnapshot {
+            count: 0,
+            sum: 0,
+            buckets: [0; BUCKETS],
+        };
+        for s in &self.shards {
+            snap.count += s.count.load(Ordering::Relaxed);
+            snap.sum += s.sum.load(Ordering::Relaxed);
+            for (b, a) in snap.buckets.iter_mut().zip(&s.buckets) {
+                *b += a.load(Ordering::Relaxed);
+            }
+        }
+        snap
+    }
+
+    /// Zero all shards.
+    pub fn reset(&self) {
+        for s in &self.shards {
+            s.count.store(0, Ordering::Relaxed);
+            s.sum.store(0, Ordering::Relaxed);
+            for b in &s.buckets {
+                b.store(0, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// Owned, merged view of a [`Histogram`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Number of samples.
+    pub count: u64,
+    /// Sum of samples.
+    pub sum: u64,
+    /// Per-bucket sample tallies (bounds per [`bucket_label`]).
+    pub buckets: [u64; BUCKETS],
+}
+
+impl HistSnapshot {
+    /// Mean sample (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+// ---- the registry: every named metric the engine records ----
+
+/// `exec::setops` hybrid dispatch — ops resolved to a dense bitmap kernel.
+pub static SETOP_DENSE: Counter = Counter::new();
+/// `exec::setops` hybrid dispatch — ops resolved to a hash-probe kernel.
+pub static SETOP_PROBE: Counter = Counter::new();
+/// `exec::setops` hybrid dispatch — ops resolved to a sorted-merge kernel.
+pub static SETOP_MERGE: Counter = Counter::new();
+/// `exec::enumerate` — candidate-set lengths after each level's set ops.
+pub static CAND_LEN: Histogram = Histogram::new();
+/// `exec::enumerate` — neighbor-list lengths fetched at emit sites.
+pub static NBR_LEN: Histogram = Histogram::new();
+/// `util::ws` — tasks executed across runs.
+pub static WS_TASKS: Counter = Counter::new();
+/// `util::ws` — tasks a worker popped from its own deque.
+pub static WS_LOCAL_POPS: Counter = Counter::new();
+/// `util::ws` — successful steals.
+pub static WS_STEALS: Counter = Counter::new();
+/// `util::ws` — steal attempts, including lost races and empty victims.
+pub static WS_STEAL_ATTEMPTS: Counter = Counter::new();
+/// `util::ws` — per-task wall latency in nanoseconds.
+pub static WS_TASK_NS: Histogram = Histogram::new();
+/// `pim::sim` — near (in-bank) bytes, Table 2's access-class split.
+pub static SIM_NEAR_BYTES: Counter = Counter::new();
+/// `pim::sim` — intra-channel remote bytes.
+pub static SIM_INTRA_BYTES: Counter = Counter::new();
+/// `pim::sim` — inter-channel remote bytes.
+pub static SIM_INTER_BYTES: Counter = Counter::new();
+/// `pim::sim` — per-unit busy cycles sampled at each simulation's end.
+pub static SIM_UNIT_BUSY: Histogram = Histogram::new();
+/// `part` — weighted inter-channel cut bytes of the chosen owner map.
+pub static PART_CUT_INTER_BYTES: Counter = Counter::new();
+/// `part` — replica bytes placed by selective duplication.
+pub static PART_REPLICA_BYTES: Counter = Counter::new();
+/// `part` — replicated (non-owned) neighbor lists placed.
+pub static PART_REPLICA_VERTICES: Counter = Counter::new();
+
+/// Name/total pairs for every registry counter, in registry order.
+pub fn counters() -> Vec<(&'static str, u64)> {
+    vec![
+        ("setops.dense", SETOP_DENSE.get()),
+        ("setops.probe", SETOP_PROBE.get()),
+        ("setops.merge", SETOP_MERGE.get()),
+        ("ws.tasks", WS_TASKS.get()),
+        ("ws.local_pops", WS_LOCAL_POPS.get()),
+        ("ws.steals", WS_STEALS.get()),
+        ("ws.steal_attempts", WS_STEAL_ATTEMPTS.get()),
+        ("sim.near_bytes", SIM_NEAR_BYTES.get()),
+        ("sim.intra_bytes", SIM_INTRA_BYTES.get()),
+        ("sim.inter_bytes", SIM_INTER_BYTES.get()),
+        ("part.cut_inter_bytes", PART_CUT_INTER_BYTES.get()),
+        ("part.replica_bytes", PART_REPLICA_BYTES.get()),
+        ("part.replica_vertices", PART_REPLICA_VERTICES.get()),
+    ]
+}
+
+/// Name/snapshot pairs for every registry histogram, in registry order.
+pub fn histograms() -> Vec<(&'static str, HistSnapshot)> {
+    vec![
+        ("enum.candidate_len", CAND_LEN.snapshot()),
+        ("enum.neighbor_len", NBR_LEN.snapshot()),
+        ("ws.task_ns", WS_TASK_NS.snapshot()),
+        ("sim.unit_busy_cycles", SIM_UNIT_BUSY.snapshot()),
+    ]
+}
+
+/// Zero every registry metric (start of a profiled query).
+pub fn reset() {
+    for c in [
+        &SETOP_DENSE,
+        &SETOP_PROBE,
+        &SETOP_MERGE,
+        &WS_TASKS,
+        &WS_LOCAL_POPS,
+        &WS_STEALS,
+        &WS_STEAL_ATTEMPTS,
+        &SIM_NEAR_BYTES,
+        &SIM_INTRA_BYTES,
+        &SIM_INTER_BYTES,
+        &PART_CUT_INTER_BYTES,
+        &PART_REPLICA_BYTES,
+        &PART_REPLICA_VERTICES,
+    ] {
+        c.reset();
+    }
+    for h in [&CAND_LEN, &NBR_LEN, &WS_TASK_NS, &SIM_UNIT_BUSY] {
+        h.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1 << 29), 30);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        assert_eq!(bucket_label(0), "0");
+        assert_eq!(bucket_label(1), "1");
+        assert_eq!(bucket_label(2), "2-3");
+        assert_eq!(bucket_label(3), "4-7");
+        assert_eq!(bucket_label(BUCKETS - 1), ">=1073741824");
+    }
+
+    #[test]
+    fn counter_and_histogram_accumulate_locally() {
+        let c = Counter::new();
+        c.bump(3);
+        c.bump(4);
+        assert_eq!(c.get(), 7);
+        c.reset();
+        assert_eq!(c.get(), 0);
+
+        let h = Histogram::new();
+        for v in [0u64, 1, 5, 5, 1000] {
+            h.record_always(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 1011);
+        assert_eq!(s.buckets[0], 1);
+        assert_eq!(s.buckets[bucket_of(5)], 2);
+        assert!((s.mean() - 202.2).abs() < 1e-9);
+        h.reset();
+        assert_eq!(h.snapshot().count, 0);
+    }
+
+    #[test]
+    fn shards_merge_across_threads() {
+        static C: Counter = Counter::new();
+        static H: Histogram = Histogram::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for i in 0..1000u64 {
+                        C.bump(1);
+                        H.record_always(i % 7);
+                    }
+                });
+            }
+        });
+        assert_eq!(C.get(), 8000);
+        let snap = H.snapshot();
+        assert_eq!(snap.count, 8000);
+        assert_eq!(snap.buckets.iter().sum::<u64>(), 8000);
+    }
+}

@@ -1,0 +1,151 @@
+//! Query-level observability (DESIGN.md §13): a leveled stderr logger
+//! ([`log`]), a registry of sharded atomic counters and fixed-bucket
+//! histograms threaded through the hot layers ([`metrics`]), and a
+//! nested span tracer with self/total phase times ([`trace`]) — all
+//! dependency-free (the offline policy, DESIGN.md §4) and near-zero
+//! cost when disabled: every hot-path hook opens with one relaxed load
+//! of a static `AtomicBool` and returns immediately when observability
+//! is off (the `parallel` bench gates the disabled-path cost).
+//!
+//! Neutrality: metrics and spans are write-only side channels — no
+//! enumeration, scheduling, or simulation decision ever reads them —
+//! so enabling observability cannot perturb results; and shard totals
+//! merge by commutative u64 addition read in fixed index order, so the
+//! *reported* totals are schedule-independent for a deterministic
+//! workload. `tests/prop_parallel.rs` pins bit-identical counts, FSM
+//! supports, and `SimResult`s with observability enabled vs disabled
+//! across 1/2/4/8 workers.
+//!
+//! The CLI surfaces all of it: `--profile` prints the span self-time
+//! table and the non-zero metrics, `--trace-json PATH` writes the full
+//! JSON document assembled by [`report_json`], and `PIMMINER_LOG`
+//! selects the logger threshold.
+
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+use crate::report::{json, Table};
+
+/// Schema version stamped into every `--trace-json` document.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+/// Assemble the `--trace-json` document: `{schema_version, meta:{…},
+/// spans:<tree|null>, metrics:[…]}`. `meta` carries the run metadata
+/// (command, threads, hub settings, partitioner, fused flag); `spans`
+/// is the [`trace::Span`] tree when a trace ran; `metrics` dumps every
+/// registry counter and histogram. DESIGN.md §13 documents the schema.
+pub fn report_json(meta: &[(String, String)], root: Option<&trace::Span>) -> String {
+    let meta_obj = meta
+        .iter()
+        .fold(json::Obj::new(), |o, (k, v)| o.str(k, v))
+        .render();
+    let spans = match root {
+        Some(r) => r.to_json(),
+        None => "null".to_string(),
+    };
+    let mut entries: Vec<String> = metrics::counters()
+        .into_iter()
+        .map(|(name, value)| {
+            json::Obj::new()
+                .str("name", name)
+                .str("kind", "counter")
+                .u64("value", value)
+                .render()
+        })
+        .collect();
+    entries.extend(metrics::histograms().into_iter().map(|(name, snap)| {
+        let buckets: Vec<String> = snap.buckets.iter().map(|b| b.to_string()).collect();
+        json::Obj::new()
+            .str("name", name)
+            .str("kind", "histogram")
+            .u64("count", snap.count)
+            .u64("sum", snap.sum)
+            .f64("mean", snap.mean())
+            .raw("buckets", &json::array(&buckets))
+            .render()
+    }));
+    json::Obj::new()
+        .u64("schema_version", TRACE_SCHEMA_VERSION)
+        .raw("meta", &meta_obj)
+        .raw("spans", &spans)
+        .raw("metrics", &json::array(&entries))
+        .render()
+}
+
+/// Render the `--profile` human view: the span self-time table (when a
+/// trace ran) followed by the non-zero registry metrics.
+pub fn render_profile(root: Option<&trace::Span>) -> String {
+    let mut out = String::new();
+    if let Some(r) = root {
+        out.push_str(&r.render_table());
+    }
+    let mut table = Table::new(
+        "metrics registry (non-zero)",
+        &["Metric", "Kind", "Count", "Sum", "Mean"],
+    );
+    let mut rows = 0usize;
+    for (name, value) in metrics::counters() {
+        if value == 0 {
+            continue;
+        }
+        rows += 1;
+        table.row(vec![
+            name.to_string(),
+            "counter".to_string(),
+            String::new(),
+            value.to_string(),
+            String::new(),
+        ]);
+    }
+    for (name, snap) in metrics::histograms() {
+        if snap.count == 0 {
+            continue;
+        }
+        rows += 1;
+        table.row(vec![
+            name.to_string(),
+            "histogram".to_string(),
+            snap.count.to_string(),
+            snap.sum.to_string(),
+            format!("{:.1}", snap.mean()),
+        ]);
+    }
+    if rows > 0 {
+        out.push_str(&table.render());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_has_schema_meta_and_metrics() {
+        let meta = vec![
+            ("command".to_string(), "count".to_string()),
+            ("threads".to_string(), "4".to_string()),
+        ];
+        let doc = report_json(&meta, None);
+        assert!(doc.starts_with("{\"schema_version\":1,"));
+        assert!(doc.contains("\"meta\":{\"command\":\"count\",\"threads\":\"4\"}"));
+        assert!(doc.contains("\"spans\":null"));
+        assert!(doc.contains("\"name\":\"setops.dense\""));
+        assert!(doc.contains("\"kind\":\"histogram\""));
+        assert!(doc.contains("\"buckets\":["));
+        assert!(doc.ends_with("]}"));
+    }
+
+    #[test]
+    fn render_profile_includes_span_table_when_present() {
+        let span = trace::Span {
+            name: "count".to_string(),
+            total_ns: 1000,
+            counters: vec![("n".to_string(), 3u64)],
+            children: Vec::new(),
+        };
+        let out = render_profile(Some(&span));
+        assert!(out.contains("query profile — count"));
+    }
+}

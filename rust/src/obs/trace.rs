@@ -1,0 +1,307 @@
+//! Nested span tracer (DESIGN.md §13): per-query wall-clock phase
+//! timings with attached counters, rendered as a self-time table
+//! (`--profile`) or a JSON tree (`--trace-json`).
+//!
+//! One trace is active per process at a time ([`begin`]/[`finish`]),
+//! and spans open at host-phase granularity from the coordinating
+//! thread — load → partition → plan/fuse → enumerate → merge, plus one
+//! span per FSM BFS level — never inside per-vertex recursion, so the
+//! mutex guarding the arena is uncontended and off the hot path. When
+//! no trace is active, [`span`] is one relaxed atomic load returning an
+//! inert guard, and [`counter`] returns immediately.
+//!
+//! Self-times telescope: a span's self time is its total minus its
+//! children's totals, so summed over the whole tree the self times
+//! reproduce the root total exactly — the CI profile-smoke step checks
+//! this on real `--trace-json` output.
+
+use crate::report::{self, json, Table};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<TraceState>> = Mutex::new(None);
+
+fn state() -> MutexGuard<'static, Option<TraceState>> {
+    STATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Whether a trace is active.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+struct Node {
+    name: String,
+    start: Instant,
+    total_ns: u64,
+    counters: Vec<(String, u64)>,
+    children: Vec<usize>,
+}
+
+impl Node {
+    fn open(name: &str) -> Node {
+        Node {
+            name: name.to_string(),
+            start: Instant::now(),
+            total_ns: 0,
+            counters: Vec::new(),
+            children: Vec::new(),
+        }
+    }
+}
+
+struct TraceState {
+    nodes: Vec<Node>,
+    /// Indices of the open spans, root first.
+    stack: Vec<usize>,
+}
+
+impl TraceState {
+    fn new(root: &str) -> TraceState {
+        TraceState {
+            nodes: vec![Node::open(root)],
+            stack: vec![0],
+        }
+    }
+
+    fn open(&mut self, name: &str) {
+        let id = self.nodes.len();
+        self.nodes.push(Node::open(name));
+        let parent = *self.stack.last().expect("root span always open");
+        self.nodes[parent].children.push(id);
+        self.stack.push(id);
+    }
+
+    fn close(&mut self) {
+        // The root (stack[0]) only closes in `into_span`.
+        if self.stack.len() <= 1 {
+            return;
+        }
+        let id = self.stack.pop().expect("checked non-empty");
+        self.nodes[id].total_ns = self.nodes[id].start.elapsed().as_nanos() as u64;
+    }
+
+    fn counter(&mut self, name: &str, value: u64) {
+        let id = *self.stack.last().expect("root span always open");
+        self.nodes[id].counters.push((name.to_string(), value));
+    }
+
+    fn into_span(mut self) -> Span {
+        while self.stack.len() > 1 {
+            self.close();
+        }
+        self.nodes[0].total_ns = self.nodes[0].start.elapsed().as_nanos() as u64;
+        build(&self.nodes, 0)
+    }
+}
+
+fn build(nodes: &[Node], id: usize) -> Span {
+    let n = &nodes[id];
+    Span {
+        name: n.name.clone(),
+        total_ns: n.total_ns,
+        counters: n.counters.clone(),
+        children: n.children.iter().map(|&c| build(nodes, c)).collect(),
+    }
+}
+
+/// Start a new trace: clears any previous one and opens the root span.
+pub fn begin(root: &str) {
+    let mut st = state();
+    *st = Some(TraceState::new(root));
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Close the trace and return the finished span tree; `None` when no
+/// trace was active. Spans still open (including the root) close at
+/// their current elapsed time.
+pub fn finish() -> Option<Span> {
+    ENABLED.store(false, Ordering::Relaxed);
+    state().take().map(TraceState::into_span)
+}
+
+/// RAII guard for one span: opened by [`span`], closed on drop.
+pub struct SpanGuard {
+    active: bool,
+}
+
+/// Open a nested span under the innermost open one. Inert (one atomic
+/// load, no lock) when no trace is active.
+#[must_use = "the span closes when the guard drops"]
+pub fn span(name: &str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { active: false };
+    }
+    let mut st = state();
+    match st.as_mut() {
+        Some(t) => {
+            t.open(name);
+            SpanGuard { active: true }
+        }
+        None => SpanGuard { active: false },
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        if let Some(t) = state().as_mut() {
+            t.close();
+        }
+    }
+}
+
+/// Attach a named counter to the innermost open span (no-op when no
+/// trace is active).
+pub fn counter(name: &str, value: u64) {
+    if !enabled() {
+        return;
+    }
+    if let Some(t) = state().as_mut() {
+        t.counter(name, value);
+    }
+}
+
+/// A finished span: total wall time, nested children, attached counters.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Phase name (the root carries the CLI command).
+    pub name: String,
+    /// Wall time from open to close, nanoseconds.
+    pub total_ns: u64,
+    /// Counters attached while the span was innermost.
+    pub counters: Vec<(String, u64)>,
+    /// Nested spans, in open order.
+    pub children: Vec<Span>,
+}
+
+impl Span {
+    /// Time spent in this span but outside its children:
+    /// `total − Σ children.total`.
+    pub fn self_ns(&self) -> u64 {
+        self.total_ns
+            .saturating_sub(self.children.iter().map(|c| c.total_ns).sum())
+    }
+
+    /// Number of spans in the subtree, self included.
+    pub fn num_spans(&self) -> usize {
+        1 + self.children.iter().map(Span::num_spans).sum::<usize>()
+    }
+
+    /// JSON object for this subtree (`report::json` conventions):
+    /// `{name, total_ns, self_ns, counters:{…}, children:[…]}`.
+    pub fn to_json(&self) -> String {
+        let kids: Vec<String> = self.children.iter().map(Span::to_json).collect();
+        let counters = self
+            .counters
+            .iter()
+            .fold(json::Obj::new(), |o, (k, v)| o.u64(k, *v));
+        json::Obj::new()
+            .str("name", &self.name)
+            .u64("total_ns", self.total_ns)
+            .u64("self_ns", self.self_ns())
+            .raw("counters", &counters.render())
+            .raw("children", &json::array(&kids))
+            .render()
+    }
+
+    /// Human self-time table (the `--profile` rendering): one row per
+    /// span, names indented by depth, self time as a share of the root.
+    pub fn render_table(&self) -> String {
+        fn walk(s: &Span, depth: usize, root_total: f64, table: &mut Table) {
+            let counters = s
+                .counters
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            table.row(vec![
+                format!("{}{}", "  ".repeat(depth), s.name),
+                report::s(s.total_ns as f64 / 1e9),
+                report::s(s.self_ns() as f64 / 1e9),
+                format!("{:.1}%", s.self_ns() as f64 / root_total * 100.0),
+                counters,
+            ]);
+            for c in &s.children {
+                walk(c, depth + 1, root_total, table);
+            }
+        }
+        let mut table = Table::new(
+            &format!("query profile — {}", self.name),
+            &["Span", "Total", "Self", "Self%", "Counters"],
+        );
+        walk(self, 0, self.total_ns.max(1) as f64, &mut table);
+        table.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn self_sum(s: &Span) -> u64 {
+        s.self_ns() + s.children.iter().map(self_sum).sum::<u64>()
+    }
+
+    fn find(s: &Span, name: &str) -> bool {
+        s.name == name || s.children.iter().any(|c| find(c, name))
+    }
+
+    #[test]
+    fn span_tree_self_times_telescope() {
+        let mut t = TraceState::new("root");
+        t.open("load");
+        t.close();
+        t.open("enumerate");
+        t.counter("roots", 42);
+        t.open("level-1");
+        t.close();
+        t.close();
+        let span = t.into_span();
+        assert_eq!(span.name, "root");
+        assert_eq!(span.children.len(), 2);
+        assert_eq!(span.num_spans(), 4);
+        assert_eq!(span.children[1].counters, vec![("roots".to_string(), 42)]);
+        assert_eq!(self_sum(&span), span.total_ns);
+        let js = span.to_json();
+        assert!(js.contains("\"name\":\"root\""));
+        assert!(js.contains("\"children\":[{"));
+        assert!(js.contains("\"roots\":42"));
+        let txt = span.render_table();
+        assert!(txt.contains("enumerate"));
+        assert!(txt.contains("Self%"));
+    }
+
+    #[test]
+    fn unbalanced_trace_closes_open_spans() {
+        let mut t = TraceState::new("root");
+        t.open("a");
+        t.open("b"); // never closed explicitly
+        let span = t.into_span();
+        assert_eq!(span.children.len(), 1);
+        assert_eq!(span.children[0].children.len(), 1);
+        assert_eq!(self_sum(&span), span.total_ns);
+    }
+
+    #[test]
+    fn global_trace_round_trip() {
+        begin("q");
+        {
+            let _g = span("phase");
+            counter("k", 7);
+        }
+        let root = finish().expect("trace active");
+        assert_eq!(root.name, "q");
+        assert!(find(&root, "phase"));
+        assert!(finish().is_none());
+        // inert when no trace is active
+        let g = span("nothing");
+        drop(g);
+        counter("x", 1);
+    }
+}

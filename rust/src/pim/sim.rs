@@ -33,6 +33,7 @@ use crate::mine::fsm::{
     self, CandShape, CandidateStats, FsmConfig, FsmResult, LabeledPattern, LevelAcc,
     LevelExecutor, MatchScratch,
 };
+use crate::obs::{metrics, trace};
 use crate::part::{self, PartitionStrategy};
 use crate::pattern::fuse::PlanTrie;
 use crate::pattern::plan::{Application, Plan};
@@ -679,6 +680,12 @@ pub fn build_placement(g: &CsrGraph, opts: &SimOptions, cfg: &PimConfig) -> Plac
     };
     let partitioning = part::partition(g, cfg, strategy);
     let mut placement = Placement::from_partitioning(&partitioning);
+    if metrics::enabled() {
+        // Write-only telemetry: the cut scan is an extra O(E) pass that
+        // never feeds back into the placement.
+        let cut = part::objective::cut_stats(g, cfg, &placement.owner);
+        metrics::PART_CUT_INTER_BYTES.bump(cut.inter_bytes);
+    }
     if opts.duplication && opts.remap {
         // The hub-bitmap rows (DESIGN.md §10) are replicated into every
         // unit's bank group, so their bytes come out of the same per-unit
@@ -700,6 +707,11 @@ pub fn build_placement(g: &CsrGraph, opts: &SimOptions, cfg: &PimConfig) -> Plac
             }
         };
     }
+    if metrics::enabled() {
+        let rep = placement.replica_report(g);
+        metrics::PART_REPLICA_BYTES.bump(rep.total_bytes);
+        metrics::PART_REPLICA_VERTICES.bump(rep.unit_replicas.iter().sum::<usize>() as u64);
+    }
     placement
 }
 
@@ -715,6 +727,7 @@ struct SimSetup {
 
 impl SimSetup {
     fn new(g: &CsrGraph, opts: &SimOptions, cfg: &PimConfig) -> Self {
+        let _sp = trace::span("partition");
         let placement = build_placement(g, opts, cfg);
         let v_b_min = placement.v_b.iter().copied().min().unwrap_or(0);
         let hubs = opts
@@ -793,6 +806,8 @@ fn profile_pass<R: TaskRunner>(
     setup: &SimSetup,
 ) -> (GlobalAcc, Vec<TaskProfile>, Vec<R::Worker>) {
     let ntasks = roots.len();
+    let _sp = trace::span("enumerate");
+    trace::counter("roots", ntasks as u64);
     let workers = threads::resolve(opts.threads).min(ntasks.max(1));
     let chunk = opts.chunk.unwrap_or(16).max(1);
     let order = crate::exec::cpu::degree_order(g, roots);
@@ -926,6 +941,7 @@ fn finish_sim(
     setup: &SimSetup,
     agg: Option<AggSpec>,
 ) -> SimResult {
+    let _sp = trace::span("merge");
     let mut queues: Vec<VecDeque<Piece>> = vec![VecDeque::new(); cfg.num_units()];
     for (i, prof) in profiles.iter().enumerate() {
         queues[setup.assign(opts, cfg, i, roots[i])].push_back(Piece {
@@ -962,6 +978,15 @@ fn finish_sim(
     let total_cycles = sched.makespan.max(bank_bound).max(link_bound) + agg_cycles;
     let avg_busy =
         sched.unit_busy.iter().sum::<u64>() as f64 / sched.unit_busy.len().max(1) as f64;
+
+    if metrics::enabled() {
+        metrics::SIM_NEAR_BYTES.bump(acc.access_f[0].round() as u64);
+        metrics::SIM_INTRA_BYTES.bump(acc.access_f[1].round() as u64);
+        metrics::SIM_INTER_BYTES.bump(acc.access_f[2].round() as u64);
+        for &busy in &sched.unit_busy {
+            metrics::SIM_UNIT_BUSY.record_always(busy);
+        }
+    }
 
     SimResult {
         count: acc.count,
@@ -1060,7 +1085,11 @@ pub fn simulate_plans_fused(
         }
     }
     let setup = SimSetup::new(g, opts, cfg);
-    let trie = PlanTrie::build(plans);
+    let trie = {
+        let _sp = trace::span("plan/fuse");
+        trace::counter("plans", plans.len() as u64);
+        PlanTrie::build(plans)
+    };
     let runner = FusedRunner {
         g,
         trie: &trie,

@@ -110,6 +110,18 @@ pub mod json {
         out
     }
 
+    /// Render an f64 as a JSON number literal. JSON has no NaN/Inf, so
+    /// non-finite values clamp to `null` — every f64 emission path
+    /// ([`Obj::f64`], callers building `raw` fragments) must go through
+    /// here to stay parseable.
+    pub fn num(v: f64) -> String {
+        if v.is_finite() {
+            format!("{v}")
+        } else {
+            "null".to_string()
+        }
+    }
+
     /// Incremental `{...}` builder. Values passed to `raw` must already
     /// be valid JSON (nested objects, arrays, numbers).
     #[derive(Default)]
@@ -130,13 +142,7 @@ pub mod json {
             self
         }
         pub fn f64(mut self, k: &str, v: f64) -> Obj {
-            // JSON has no NaN/Inf; clamp to null
-            let lit = if v.is_finite() {
-                format!("{v}")
-            } else {
-                "null".to_string()
-            };
-            self.parts.push(format!("\"{}\":{lit}", escape(k)));
+            self.parts.push(format!("\"{}\":{}", escape(k), num(v)));
             self
         }
         pub fn bool(mut self, k: &str, v: bool) -> Obj {
@@ -228,6 +234,50 @@ mod tests {
         assert!(obj.starts_with("{\"name\":\"x\\\"y\","));
         assert!(obj.contains("\"rows\":[{\"a\":1,"));
         assert!(obj.ends_with("\"nan\":null}"));
+    }
+
+    #[test]
+    fn json_number_emission_is_always_valid() {
+        // finite values round-trip as plain literals
+        assert_eq!(json::num(0.5), "0.5");
+        assert_eq!(json::num(-3.0), "-3");
+        assert_eq!(json::num(0.0), "0");
+        assert_eq!(json::num(-0.0), "-0");
+        // extreme magnitudes stay plain decimal literals that round-trip
+        assert_eq!(json::num(1.5e300).parse::<f64>(), Ok(1.5e300));
+        assert_eq!(json::num(5e-324).parse::<f64>(), Ok(5e-324));
+        // non-finite values have no JSON representation: clamp to null
+        assert_eq!(json::num(f64::NAN), "null");
+        assert_eq!(json::num(f64::INFINITY), "null");
+        assert_eq!(json::num(f64::NEG_INFINITY), "null");
+        // and the builder goes through the same path
+        let obj = json::Obj::new()
+            .f64("inf", f64::INFINITY)
+            .f64("ninf", f64::NEG_INFINITY)
+            .f64("nan", f64::NAN)
+            .f64("ok", 2.25)
+            .render();
+        assert_eq!(
+            obj,
+            "{\"inf\":null,\"ninf\":null,\"nan\":null,\"ok\":2.25}"
+        );
+    }
+
+    #[test]
+    fn json_string_escaping_covers_specials_and_controls() {
+        assert_eq!(json::escape("plain"), "plain");
+        assert_eq!(json::escape("a\"b"), "a\\\"b");
+        assert_eq!(json::escape("a\\b"), "a\\\\b");
+        assert_eq!(json::escape("a\nb"), "a\\nb");
+        // other control characters become \u escapes
+        assert_eq!(json::escape("a\tb"), "a\\u0009b");
+        assert_eq!(json::escape("a\rb"), "a\\u000db");
+        assert_eq!(json::escape("\u{1}"), "\\u0001");
+        // non-ASCII passes through untouched
+        assert_eq!(json::escape("héllo"), "héllo");
+        // keys are escaped too
+        let obj = json::Obj::new().u64("k\n1", 2).render();
+        assert_eq!(obj, "{\"k\\n1\":2}");
     }
 
     #[test]

@@ -35,6 +35,7 @@
 //! task queues can reuse the runtime with dynamic task creation.
 
 use super::rng::Rng;
+use crate::obs::metrics;
 use std::ops::Range;
 use std::sync::atomic::{fence, AtomicIsize, AtomicU64, AtomicUsize, Ordering};
 
@@ -182,6 +183,19 @@ pub struct WsStats {
 /// affects results (see module docs) — this only decorrelates contention.
 static RUN_COUNTER: AtomicU64 = AtomicU64::new(0);
 
+/// Mirror a run's [`WsStats`] into the metrics registry (DESIGN.md §13).
+/// Catches every scheduling call site, including the ones that drop the
+/// returned stats (e.g. the simulator's profiling pass).
+fn record_stats(stats: &WsStats) {
+    if !metrics::enabled() {
+        return;
+    }
+    metrics::WS_TASKS.bump(stats.tasks);
+    metrics::WS_LOCAL_POPS.bump(stats.local_pops);
+    metrics::WS_STEALS.bump(stats.steals);
+    metrics::WS_STEAL_ATTEMPTS.bump(stats.steal_attempts);
+}
+
 /// Run tasks `0..ntasks` across `workers` workers with Chase–Lev work
 /// stealing. `init(w)` builds worker `w`'s private state; `body(state,
 /// task)` executes one task. Returns the per-worker states in
@@ -200,10 +214,22 @@ pub fn run_tasks<S: Send>(
     body: impl Fn(&mut S, usize) + Sync,
 ) -> (Vec<S>, WsStats) {
     let workers = workers.max(1).min(ntasks.max(1));
+    // Per-task latency sampling is decided once up front: one flag read,
+    // and the disabled path calls `body` directly with no clock reads.
+    let timed = metrics::enabled();
+    let run_one = |state: &mut S, t: usize| {
+        if timed {
+            let t0 = std::time::Instant::now();
+            body(state, t);
+            metrics::WS_TASK_NS.record_always(t0.elapsed().as_nanos() as u64);
+        } else {
+            body(state, t);
+        }
+    };
     if workers == 1 {
         let mut state = init(0);
         for t in 0..ntasks {
-            body(&mut state, t);
+            run_one(&mut state, t);
         }
         let stats = WsStats {
             workers: 1,
@@ -211,6 +237,7 @@ pub fn run_tasks<S: Send>(
             local_pops: ntasks as u64,
             ..WsStats::default()
         };
+        record_stats(&stats);
         return (vec![state], stats);
     }
     // Seed: deal task t to deque t % workers, pushing in descending task
@@ -227,7 +254,7 @@ pub fn run_tasks<S: Send>(
     let states: Vec<S> = std::thread::scope(|s| {
         let deques = &deques;
         let init = &init;
-        let body = &body;
+        let run_one = &run_one;
         let pops = &pops;
         let steals = &steals;
         let attempts = &attempts;
@@ -247,7 +274,7 @@ pub fn run_tasks<S: Send>(
                         // Drain the local deque LIFO.
                         while let Some(t) = deques[w].pop() {
                             my_pops += 1;
-                            body(&mut state, t);
+                            run_one(&mut state, t);
                         }
                         // Empty: sweep victims from a random start until a
                         // steal lands or every deque reads Empty.
@@ -273,7 +300,7 @@ pub fn run_tasks<S: Send>(
                             match stolen {
                                 Some(t) => {
                                     my_steals += 1;
-                                    body(&mut state, t);
+                                    run_one(&mut state, t);
                                     // Future-proofing: if `body` ever
                                     // pushes follow-on tasks, drain the
                                     // local deque before stealing again.
@@ -305,6 +332,7 @@ pub fn run_tasks<S: Send>(
         steals: steals.load(Ordering::Relaxed),
         steal_attempts: attempts.load(Ordering::Relaxed),
     };
+    record_stats(&stats);
     (states, stats)
 }
 
