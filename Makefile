@@ -3,7 +3,7 @@
 
 PYTHON ?= python3
 
-.PHONY: build test bench artifacts doc fmt verify
+.PHONY: build test bench bench-diff artifacts doc fmt verify
 
 build:
 	cargo build --release
@@ -25,6 +25,14 @@ bench:
 	cargo bench --bench perf_micro -- --json
 	cargo bench --bench fusion -- --json
 	cargo bench --bench parallel -- --json
+
+# Regression gate over two bench sessions (tools/bench_diff.py): fails
+# when any shared timing regresses beyond the threshold (default 10%).
+#   make bench-diff OLD=baseline/BENCH_micro.json NEW=BENCH_micro.json
+# Extra gates ride through DIFF_FLAGS, e.g.
+#   DIFF_FLAGS='--timing-threshold 5 --metric "disabled-hook ns=-25"'
+bench-diff:
+	$(PYTHON) tools/bench_diff.py $(OLD) $(NEW) $(DIFF_FLAGS)
 
 # AOT-lower the Pallas/jnp set-operation kernels to HLO text under
 # artifacts/ at the repo root (where runtime::artifacts_dir finds them).

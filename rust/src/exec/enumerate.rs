@@ -24,6 +24,13 @@ use crate::pattern::plan::Plan;
 
 /// Observer of enumeration work. All methods default to no-ops.
 pub trait EnumSink {
+    /// The enumeration moved to node `node` — a plan level for
+    /// [`Enumerator`], a trie node id for [`MultiEnumerator`]. Subsequent
+    /// callbacks belong to that node until the next `on_node`. The PIM
+    /// `SimSink` uses this for per-plan-node attribution (`--explain`);
+    /// counting sinks ignore it.
+    #[inline]
+    fn on_node(&mut self, _node: u32) {}
     /// `N(v)` was loaded after binding `f(level) = v`. `full` is the
     /// degree; `prefix` the filter-eligible length (elements `< th`).
     #[inline]
@@ -310,12 +317,14 @@ impl<'g> Enumerator<'g> {
     ) -> u64 {
         let n = self.plan.size();
         self.bound[0] = root;
+        sink.on_node(0);
         self.emit_fetch(0, root, sink);
         if n == 1 {
             sink.on_embeddings(1);
             return 1;
         }
         // Materialize level-1 candidates.
+        sink.on_node(1);
         let mut cands = std::mem::take(&mut self.bufs[1].0);
         let cost = self.build_candidates(1, &mut cands);
         sink.on_scan(1, cost.elems);
@@ -334,6 +343,7 @@ impl<'g> Enumerator<'g> {
             let mut total = 0u64;
             for &c in &cands[lo..hi] {
                 self.bound[1] = c;
+                sink.on_node(1); // re-enter after the child descend
                 self.emit_fetch(1, c, sink);
                 total += self.descend(2, sink);
             }
@@ -356,6 +366,7 @@ impl<'g> Enumerator<'g> {
     fn descend(&mut self, level: usize, sink: &mut impl EnumSink) -> u64 {
         let n = self.plan.size();
         debug_assert!(level >= 2 && level < n);
+        sink.on_node(level as u32);
         let mut cands = std::mem::take(&mut self.bufs[level].0);
         let cost = self.build_candidates(level, &mut cands);
         sink.on_scan(level, cost.elems);
@@ -372,6 +383,7 @@ impl<'g> Enumerator<'g> {
             let mut total = 0u64;
             for &c in &cands {
                 self.bound[level] = c;
+                sink.on_node(level as u32); // re-enter after the child descend
                 self.emit_fetch(level, c, sink);
                 total += self.descend(level + 1, sink);
             }
@@ -595,6 +607,7 @@ impl<'g> MultiEnumerator<'g> {
         }
         let trie = self.trie;
         self.bound[0] = root;
+        sink.on_node(0);
         self.emit_fetch(0, root, sink);
         let mut total = 0u64;
         let root_node = &trie.nodes[0];
@@ -619,6 +632,7 @@ impl<'g> MultiEnumerator<'g> {
     fn descend(&mut self, x: usize, sink: &mut impl EnumSink, counts: &mut [u64]) -> u64 {
         let trie = self.trie;
         let node = &trie.nodes[x];
+        sink.on_node(x as u32);
         let depth = node.depth;
         let op = &node.op;
         let ub = op
@@ -663,6 +677,7 @@ impl<'g> MultiEnumerator<'g> {
                         continue;
                     }
                     self.bound[depth] = cand;
+                    sink.on_node(x as u32); // re-enter after the child descend
                     self.emit_fetch(x, cand, sink);
                     for &child in &node.children {
                         total += self.descend(child, sink, counts);
@@ -703,6 +718,7 @@ impl<'g> MultiEnumerator<'g> {
         if !node.children.is_empty() {
             for &cand in &cands {
                 self.bound[depth] = cand;
+                sink.on_node(x as u32); // re-enter after the child descend
                 self.emit_fetch(x, cand, sink);
                 for &child in &node.children {
                     total += self.descend(child, sink, counts);

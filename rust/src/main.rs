@@ -9,6 +9,7 @@
 //!   motifs    --dataset MI -k 4 [--system pim|cpu] [--check] [--fused]
 //!   fsm       --dataset MI --support 100 --max-size 4 [--labels 4]
 //!   partition --dataset MI [--partitioner refined] [--check] [--json out.json]
+//!   explain   --dataset MI (--app 4-CC | --pattern <spec>) [--top 10]
 //!   plan      --pattern <edgelist|name>             print the compiled plan
 //!   verify    [--pattern <spec>] [--seeds 3]        compiled plans vs brute force
 //!   ladder    --dataset MI (--app 4-CC | --pattern <spec>)   Fig. 9 ladder
@@ -29,7 +30,7 @@ use pimminer::exec::brute_force_count;
 use pimminer::exec::cpu::{self, CpuFlavor};
 use pimminer::graph::{gen, io, sort_by_degree_desc, CsrGraph};
 use pimminer::mine::{self, FsmConfig};
-use pimminer::obs::{self, metrics, trace};
+use pimminer::obs::{self, attr, metrics, timeline, trace};
 use pimminer::part::{self, PartitionStrategy};
 use pimminer::pattern::compile::{compile_with, parse_pattern, Compiled, CostModel};
 use pimminer::pattern::fuse::PlanTrie;
@@ -57,46 +58,92 @@ fn main() {
         "plan" => plan_cmd(&args),
         "verify" => verify(&args),
         "ladder" => ladder(&args),
+        "explain" => explain(&args),
         "info" => info(),
         _ => help(),
     }
     finish_observability(&args, cmd);
 }
 
-/// `--profile` / `--trace-json`: whether query observability is armed
-/// for this run.
-fn obs_on(args: &Args) -> bool {
-    args.get_bool("profile") || args.get("trace-json").is_some()
+/// Whether any query observability surface is armed for this run:
+/// `--profile`, `--trace-json`, `--timeline`, `--explain`, or the
+/// `explain` subcommand.
+fn obs_on(args: &Args, cmd: &str) -> bool {
+    args.get_bool("profile")
+        || args.get("trace-json").is_some()
+        || args.get("timeline").is_some()
+        || explain_on(args, cmd)
 }
 
-/// Arm the tracer and metrics registry before the command body runs —
-/// the root span opens here so the `load` span (and everything after)
-/// nests inside it. A no-op without `--profile` / `--trace-json`, so
-/// the instrumented hot paths stay on their disabled fast path.
+/// Whether the per-plan-node attribution view was requested (the
+/// `--explain` rider flag or the `explain` subcommand).
+fn explain_on(args: &Args, cmd: &str) -> bool {
+    args.get_bool("explain") || cmd == "explain"
+}
+
+/// Whether the attribution collector should arm: every surface that
+/// consumes it — the explain view, the `--profile` heatmap, and the
+/// schema-v2 `--trace-json` attribution block.
+fn attr_on(args: &Args, cmd: &str) -> bool {
+    explain_on(args, cmd) || args.get_bool("profile") || args.get("trace-json").is_some()
+}
+
+/// Arm the requested collectors before the command body runs — the root
+/// span opens here so the `load` span (and everything after) nests
+/// inside it. Metrics arm for `--profile`/`--trace-json`; the timeline
+/// recorder for `--timeline`; the attribution collector per [`attr_on`].
+/// A no-op without any observability flag, so the instrumented hot
+/// paths stay on their disabled fast path.
 fn begin_observability(args: &Args, cmd: &str) {
-    if !obs_on(args) {
+    if !obs_on(args, cmd) {
         return;
     }
-    metrics::reset();
-    metrics::set_enabled(true);
+    if args.get_bool("profile") || args.get("trace-json").is_some() {
+        metrics::reset();
+        metrics::set_enabled(true);
+    }
     trace::begin(cmd);
+    if args.get("timeline").is_some() {
+        timeline::begin();
+    }
+    if attr_on(args, cmd) {
+        attr::begin();
+    }
 }
 
 /// Close the root span and emit whatever was asked for: the
-/// human-readable self-time table (`--profile`) and/or the machine-
-/// readable span-tree + metrics document (`--trace-json <file>`).
+/// human-readable self-time table plus traffic heatmap (`--profile`),
+/// the top-k plan-node breakdown (`--explain` / `explain`), the
+/// machine-readable span-tree + metrics + attribution document
+/// (`--trace-json <file>`), and the Chrome-trace device timeline
+/// (`--timeline <file>`).
 fn finish_observability(args: &Args, cmd: &str) {
-    if !obs_on(args) {
+    if !obs_on(args, cmd) {
         return;
     }
     let root = trace::finish();
+    let attribution = if attr_on(args, cmd) { attr::finish() } else { None };
     if args.get_bool("profile") {
         print!("{}", obs::render_profile(root.as_ref()));
     }
+    if let Some(a) = &attribution {
+        if explain_on(args, cmd) {
+            print!("{}", a.render_explain(args.get_usize("top", 10)));
+        } else if args.get_bool("profile") {
+            print!("{}", a.render_matrix());
+        }
+    }
     if let Some(path) = args.get("trace-json") {
         let meta = obs_meta(args, cmd);
-        std::fs::write(path, obs::report_json(&meta, root.as_ref())).expect("write trace json");
+        std::fs::write(path, obs::report_json(&meta, root.as_ref(), attribution.as_ref()))
+            .expect("write trace json");
         println!("wrote {path}");
+    }
+    if let Some(path) = args.get("timeline") {
+        if let Some(tl) = timeline::finish() {
+            std::fs::write(path, tl.to_chrome_trace(root.as_ref())).expect("write timeline");
+            println!("wrote {path} ({} device passes)", tl.device_passes);
+        }
     }
     metrics::set_enabled(false);
 }
@@ -130,7 +177,7 @@ fn help() {
     println!(
         "pimminer — PIM architecture-aware graph mining (paper reproduction)\n\
          \n\
-         usage: pimminer <generate|count|motifs|fsm|plan|verify|ladder|info> [flags]\n\
+         usage: pimminer <generate|count|motifs|fsm|plan|verify|ladder|explain|info> [flags]\n\
          \n\
          generate --dataset <CI|PP|AS|MI|YT|PA|LJ> [--full] --out <file.csr>\n\
          count    (--dataset <abbrev> | --graph <file.csr>)\n\
@@ -151,6 +198,8 @@ fn help() {
          plan     --pattern <edgelist|name> [--graph|--dataset ...] [--non-induced]\n\
          verify   [--pattern <spec>] [--seeds <k>] [--n <verts>] [--edges <m>]\n\
          ladder   (--dataset | --graph) (--app <name> | --pattern <spec>) [--sample <ratio>]\n\
+         explain  (--dataset | --graph) (--app <name> | --pattern <spec>) [--top <k>]\n\
+                  run the PIM sim and print the per-plan-node cost breakdown\n\
          info\n\
          \n\
          pattern specs: edge lists like \"0-1,1-2,2-0,2-3\" (a tailed triangle)\n\
@@ -177,10 +226,16 @@ fn help() {
          profiling pass; defaults to PIMMINER_THREADS or the machine's\n\
          available parallelism. Results are bit-identical either way.\n\
          \n\
-         observability (DESIGN.md §13): --profile prints a per-phase\n\
-         self-time table plus the metrics registry after the run;\n\
-         --trace-json <file> writes the span tree, metric dump, and run\n\
-         metadata as JSON (count/motifs/fsm/ladder/partition). Both are\n\
+         observability (DESIGN.md §13-14): --profile prints a per-phase\n\
+         self-time table, the metrics registry, and the channel traffic\n\
+         heatmap after the run; --trace-json <file> writes the span tree,\n\
+         metric dump, attribution block, and run metadata as schema-v2\n\
+         JSON (count/motifs/fsm/ladder/partition); --timeline <file>\n\
+         writes a Chrome Trace Format timeline (host phases + dynamic-\n\
+         chunk claims + per-PIM-unit busy intervals + steal events) for\n\
+         Perfetto / chrome://tracing; --explain [--top <k>] prints the\n\
+         per-plan-node cycles/traffic/sharing breakdown on any command\n\
+         (the `explain` subcommand is the standalone form). All are\n\
          write-only side channels: results stay bit-identical with them\n\
          on or off. PIMMINER_LOG=error|warn|info|debug sets stderr log\n\
          verbosity (default warn)."
@@ -900,6 +955,36 @@ fn ladder(args: &Args) {
         ]);
     }
     t.print();
+}
+
+/// `explain`: run the PIM simulation for an application or compiled
+/// pattern with the attribution collector armed and print the per-
+/// plan-node cost breakdown plus the channel traffic heatmap
+/// (DESIGN.md §14). `--top <k>` bounds the node table (default 10);
+/// the same breakdown rides along any other command via `--explain`.
+/// The rendering itself happens in [`finish_observability`] — this
+/// body only drives the simulation that feeds the collector.
+fn explain(args: &Args) {
+    let (g, sample) = load_graph(args);
+    let roots = cpu::sampled_roots(g.num_vertices(), sample);
+    let cfg = PimConfig::default();
+    let r = if let Some(spec) = args.get("pattern") {
+        let induced = !args.get_bool("non-induced");
+        let compiled = compile_or_exit(spec, &CostModel::for_graph(&g), induced);
+        simulate_plan(&g, &compiled.plan, &roots, &options(args), &cfg)
+    } else {
+        let app = application(args.get_or("app", "4-CC")).expect("unknown application");
+        pimminer::pim::simulate_app(&g, &app, &roots, &options(args), &cfg)
+    };
+    println!(
+        "explain: count={} time={} (avg core {}) near={} steals={}",
+        r.count,
+        report::s(r.seconds),
+        report::s(r.avg_unit_seconds),
+        report::pct(r.access.near_frac()),
+        r.steals
+    );
+    print_fusion(&r);
 }
 
 fn info() {

@@ -1,0 +1,379 @@
+//! Traffic & plan-node attribution (DESIGN.md §14): where the simulated
+//! cycles and bytes actually came from.
+//!
+//! The simulator's access-classification sites (`pim::sim::SimSink`)
+//! already know the `(owner, requester)` unit pair of every fetch and
+//! the plan/trie node driving it — this module is the sink those sites
+//! report into once a query arms it (`--explain`, the `explain`
+//! subcommand, or `--trace-json` schema v2):
+//!
+//! - a **channel×channel traffic matrix** (row = owning/source channel,
+//!   column = requesting channel) plus per-unit fetched-byte totals, and
+//! - **per-plan-node stats**: cycles, access-class bytes, shared-fetch
+//!   savings, and fetch counts keyed by a human label ("which loop
+//!   level / trie node is hot").
+//!
+//! Like `obs::timeline`, the collector is a `thread_local` on the query
+//! thread: worker threads accumulate into their private `GlobalAcc`
+//! shards (merged in worker-index order), and the sim entry points
+//! publish the merged result here — deterministic, race-free, and free
+//! when disarmed.
+
+use crate::report::{self, json, Table};
+use std::cell::RefCell;
+
+/// Attribution for one plan/trie node.
+#[derive(Clone, Debug, Default)]
+pub struct NodeStat {
+    /// Human label ("4-MC/L2 int[0,1]", "T3@d2 …", "fsm-L2", …).
+    pub label: String,
+    /// Simulated cycles charged while this node was current.
+    pub cycles: u64,
+    /// Near/intra/inter access-class bytes fetched for this node.
+    pub access: [f64; 3],
+    /// Per-plan fetches elided by fused prefix sharing at this node.
+    pub shared_saved: u64,
+    /// Neighbor-list fetches issued at this node.
+    pub fetches: u64,
+}
+
+/// A finished attribution report.
+#[derive(Clone, Debug, Default)]
+pub struct AttrReport {
+    /// Channel count (matrix is `channels × channels`, row-major).
+    pub channels: usize,
+    /// Bytes moved from source channel (row) to requesting channel
+    /// (column); the diagonal is channel-local traffic.
+    pub matrix: Vec<f64>,
+    /// Total bytes fetched by each requesting unit.
+    pub unit_bytes: Vec<f64>,
+    /// Per-node stats in first-recorded order.
+    pub nodes: Vec<NodeStat>,
+}
+
+thread_local! {
+    static STATE: RefCell<Option<AttrReport>> = const { RefCell::new(None) };
+}
+
+/// Arm the collector on this thread, clearing any previous report.
+pub fn begin() {
+    STATE.with(|s| *s.borrow_mut() = Some(AttrReport::default()));
+}
+
+/// Whether the collector is armed on this thread. The profiling pass
+/// reads this once per simulation (never per event) and threads the
+/// answer into its per-worker sinks.
+pub fn armed() -> bool {
+    STATE.with(|s| s.borrow().is_some())
+}
+
+/// Publish one pass's labeled node stats, merging by label so repeated
+/// passes (per-plan runs, FSM levels sharing a label) accumulate.
+pub fn record_nodes(nodes: Vec<NodeStat>) {
+    STATE.with(|s| {
+        if let Some(st) = s.borrow_mut().as_mut() {
+            for n in nodes {
+                match st.nodes.iter_mut().find(|e| e.label == n.label) {
+                    Some(e) => {
+                        e.cycles += n.cycles;
+                        for (a, b) in e.access.iter_mut().zip(n.access) {
+                            *a += b;
+                        }
+                        e.shared_saved += n.shared_saved;
+                        e.fetches += n.fetches;
+                    }
+                    None => st.nodes.push(n),
+                }
+            }
+        }
+    });
+}
+
+/// Publish one pass's channel matrix and per-unit byte totals,
+/// element-wise added onto what earlier passes recorded.
+pub fn record_traffic(channels: usize, matrix: &[f64], unit_bytes: &[f64]) {
+    STATE.with(|s| {
+        if let Some(st) = s.borrow_mut().as_mut() {
+            if st.channels < channels {
+                // Re-layout is unnecessary: a query runs one PimConfig,
+                // so the first record fixes the dimensions.
+                debug_assert!(st.channels == 0, "channel count changed mid-query");
+                st.channels = channels;
+                st.matrix.resize(channels * channels, 0.0);
+            }
+            for (a, b) in st.matrix.iter_mut().zip(matrix) {
+                *a += b;
+            }
+            if st.unit_bytes.len() < unit_bytes.len() {
+                st.unit_bytes.resize(unit_bytes.len(), 0.0);
+            }
+            for (a, b) in st.unit_bytes.iter_mut().zip(unit_bytes) {
+                *a += b;
+            }
+        }
+    });
+}
+
+/// Disarm and return the collected report; `None` when not armed.
+pub fn finish() -> Option<AttrReport> {
+    STATE.with(|s| s.borrow_mut().take())
+}
+
+fn fbytes(v: f64) -> String {
+    report::bytes(v.round().max(0.0) as u64)
+}
+
+impl AttrReport {
+    /// Total cycles attributed across nodes (reconciles with
+    /// `Σ SimResult.unit_busy − 2·steal_overhead·steals`).
+    pub fn total_cycles(&self) -> u64 {
+        self.nodes.iter().map(|n| n.cycles).sum()
+    }
+
+    /// Node indices sorted by cycles descending, label ascending on
+    /// ties — the deterministic "top-k" order.
+    fn ranked(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.nodes.len()).collect();
+        idx.sort_by(|&a, &b| {
+            let (na, nb) = (&self.nodes[a], &self.nodes[b]);
+            nb.cycles.cmp(&na.cycles).then(na.label.cmp(&nb.label))
+        });
+        idx
+    }
+
+    /// The top-k plan-node table: cycles (with share), access-class
+    /// bytes, inter share, shared-fetch savings, fetch counts.
+    pub fn render_nodes(&self, top_k: usize) -> String {
+        let total = self.total_cycles().max(1) as f64;
+        let mut t = Table::new(
+            &format!(
+                "plan-node attribution — top {} of {} nodes by cycles",
+                top_k.min(self.nodes.len()),
+                self.nodes.len()
+            ),
+            &["Node", "Cycles", "Cyc%", "Near", "Intra", "Inter", "Inter%", "Saved", "Fetches"],
+        );
+        for &i in self.ranked().iter().take(top_k) {
+            let n = &self.nodes[i];
+            let bytes_total: f64 = n.access.iter().sum::<f64>().max(1.0);
+            t.row(vec![
+                n.label.clone(),
+                n.cycles.to_string(),
+                report::pct(n.cycles as f64 / total),
+                fbytes(n.access[0]),
+                fbytes(n.access[1]),
+                fbytes(n.access[2]),
+                report::pct(n.access[2] / bytes_total),
+                n.shared_saved.to_string(),
+                n.fetches.to_string(),
+            ]);
+        }
+        t.render()
+    }
+
+    /// The channel-traffic heatmap: a full `src × dst` table when the
+    /// channel count is small enough to read, else the diagonal total
+    /// plus the top cross-channel pairs; followed by the hottest
+    /// requesting units.
+    pub fn render_matrix(&self) -> String {
+        let c = self.channels;
+        if c == 0 {
+            return String::new();
+        }
+        let cell = |s: usize, d: usize| self.matrix[s * c + d];
+        let grand: f64 = self.matrix.iter().sum::<f64>().max(1.0);
+        let mut out = String::new();
+        if c <= 16 {
+            let headers: Vec<String> = std::iter::once("src\\dst".to_string())
+                .chain((0..c).map(|d| format!("ch{d}")))
+                .collect();
+            let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
+            let mut t = Table::new("channel traffic matrix (bytes src→dst)", &hrefs);
+            for s in 0..c {
+                let mut row = vec![format!("ch{s}")];
+                row.extend((0..c).map(|d| fbytes(cell(s, d))));
+                t.row(row);
+            }
+            out.push_str(&t.render());
+        } else {
+            let diag: f64 = (0..c).map(|i| cell(i, i)).sum();
+            let mut pairs: Vec<(usize, usize)> = (0..c)
+                .flat_map(|s| (0..c).map(move |d| (s, d)))
+                .filter(|&(s, d)| s != d && cell(s, d) > 0.0)
+                .collect();
+            pairs.sort_by(|&a, &b| {
+                cell(b.0, b.1).total_cmp(&cell(a.0, a.1)).then(a.cmp(&b))
+            });
+            let mut t = Table::new(
+                &format!(
+                    "channel traffic — {} channels, local {} ({}), top cross-channel pairs",
+                    c,
+                    fbytes(diag),
+                    report::pct(diag / grand)
+                ),
+                &["Src", "Dst", "Bytes", "Share"],
+            );
+            for &(s, d) in pairs.iter().take(20) {
+                t.row(vec![
+                    format!("ch{s}"),
+                    format!("ch{d}"),
+                    fbytes(cell(s, d)),
+                    report::pct(cell(s, d) / grand),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+        if !self.unit_bytes.is_empty() {
+            let total: f64 = self.unit_bytes.iter().sum::<f64>().max(1.0);
+            let mut idx: Vec<usize> = (0..self.unit_bytes.len()).collect();
+            idx.sort_by(|&a, &b| {
+                self.unit_bytes[b].total_cmp(&self.unit_bytes[a]).then(a.cmp(&b))
+            });
+            let mut t = Table::new(
+                "per-unit fetched bytes (top 8 requesters)",
+                &["Unit", "Bytes", "Share"],
+            );
+            for &u in idx.iter().take(8) {
+                t.row(vec![
+                    format!("u{u}"),
+                    fbytes(self.unit_bytes[u]),
+                    report::pct(self.unit_bytes[u] / total),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+        out
+    }
+
+    /// The `explain` rendering: node table, then the traffic heatmap.
+    pub fn render_explain(&self, top_k: usize) -> String {
+        let mut out = self.render_nodes(top_k);
+        out.push_str(&self.render_matrix());
+        out
+    }
+
+    /// Schema-v2 JSON fragment: `{channels, matrix:[[…]], unit_bytes,
+    /// nodes:[{label, cycles, near/intra/inter_bytes, …}]}`.
+    pub fn to_json(&self) -> String {
+        let c = self.channels;
+        let rows: Vec<String> = (0..c)
+            .map(|s| {
+                let row: Vec<String> =
+                    (0..c).map(|d| json::num(self.matrix[s * c + d])).collect();
+                json::array(&row)
+            })
+            .collect();
+        let units: Vec<String> = self.unit_bytes.iter().map(|&v| json::num(v)).collect();
+        let nodes: Vec<String> = self
+            .ranked()
+            .into_iter()
+            .map(|i| {
+                let n = &self.nodes[i];
+                json::Obj::new()
+                    .str("label", &n.label)
+                    .u64("cycles", n.cycles)
+                    .f64("near_bytes", n.access[0])
+                    .f64("intra_bytes", n.access[1])
+                    .f64("inter_bytes", n.access[2])
+                    .u64("shared_saved", n.shared_saved)
+                    .u64("fetches", n.fetches)
+                    .render()
+            })
+            .collect();
+        json::Obj::new()
+            .u64("channels", c as u64)
+            .raw("matrix", &json::array(&rows))
+            .raw("unit_bytes", &json::array(&units))
+            .raw("nodes", &json::array(&nodes))
+            .render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node(label: &str, cycles: u64, inter: f64) -> NodeStat {
+        NodeStat {
+            label: label.to_string(),
+            cycles,
+            access: [0.0, 0.0, inter],
+            shared_saved: 1,
+            fetches: 2,
+        }
+    }
+
+    #[test]
+    fn nodes_merge_by_label_and_rank_by_cycles() {
+        begin();
+        assert!(armed());
+        record_nodes(vec![node("L1", 10, 4.0), node("L2", 50, 1.0)]);
+        record_nodes(vec![node("L1", 5, 2.0)]);
+        record_traffic(2, &[1.0, 2.0, 3.0, 4.0], &[7.0, 3.0]);
+        record_traffic(2, &[1.0, 0.0, 0.0, 0.0], &[1.0, 0.0]);
+        let r = finish().expect("armed");
+        assert!(!armed());
+        assert!(finish().is_none());
+        assert_eq!(r.nodes.len(), 2);
+        let l1 = r.nodes.iter().find(|n| n.label == "L1").unwrap();
+        assert_eq!(l1.cycles, 15);
+        assert_eq!(l1.access[2], 6.0);
+        assert_eq!(l1.shared_saved, 2);
+        assert_eq!(l1.fetches, 4);
+        assert_eq!(r.total_cycles(), 65);
+        assert_eq!(r.matrix, vec![2.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.unit_bytes, vec![8.0, 3.0]);
+        // Ranked order puts the hotter node first.
+        let txt = r.render_nodes(10);
+        let (p1, p2) = (txt.find("L2").unwrap(), txt.find("L1").unwrap());
+        assert!(p1 < p2, "L2 (50 cycles) must rank above L1 (15):\n{txt}");
+        let heat = r.render_matrix();
+        assert!(heat.contains("channel traffic matrix"));
+        assert!(heat.contains("per-unit fetched bytes"));
+    }
+
+    #[test]
+    fn wide_matrix_falls_back_to_top_pairs() {
+        let c = 32;
+        let mut m = vec![0.0; c * c];
+        m[0] = 100.0; // ch0→ch0 diagonal
+        m[3 * c + 7] = 50.0;
+        m[9 * c + 1] = 25.0;
+        let r = AttrReport {
+            channels: c,
+            matrix: m,
+            unit_bytes: vec![1.0; 4],
+            nodes: vec![],
+        };
+        let txt = r.render_matrix();
+        assert!(txt.contains("top cross-channel pairs"));
+        assert!(txt.contains("ch3"));
+        assert!(txt.contains("ch7"));
+        // diagonal is summarized in the title, not listed as a pair
+        assert!(!txt.contains("ch0  ch0"));
+    }
+
+    #[test]
+    fn json_fragment_shape() {
+        let r = AttrReport {
+            channels: 2,
+            matrix: vec![1.0, 0.5, 0.0, 2.0],
+            unit_bytes: vec![1.5],
+            nodes: vec![node("L1", 3, 9.0)],
+        };
+        let js = r.to_json();
+        assert!(js.contains("\"channels\":2"));
+        assert!(js.contains("\"matrix\":[[1,0.5],[0,2]]"));
+        assert!(js.contains("\"unit_bytes\":[1.5]"));
+        assert!(js.contains("\"label\":\"L1\""));
+        assert!(js.contains("\"inter_bytes\":9"));
+    }
+
+    #[test]
+    fn disarmed_recording_is_a_no_op() {
+        assert!(!armed());
+        record_nodes(vec![node("x", 1, 0.0)]);
+        record_traffic(1, &[1.0], &[1.0]);
+        assert!(finish().is_none());
+    }
+}

@@ -150,6 +150,7 @@ struct HistShard {
     buckets: [AtomicU64; BUCKETS],
     count: AtomicU64,
     sum: AtomicU64,
+    max: AtomicU64,
 }
 
 impl HistShard {
@@ -162,6 +163,7 @@ impl HistShard {
             buckets: [Z; BUCKETS],
             count: AtomicU64::new(0),
             sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
         }
     };
 }
@@ -197,6 +199,7 @@ impl Histogram {
         s.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
         s.count.fetch_add(1, Ordering::Relaxed);
         s.sum.fetch_add(v, Ordering::Relaxed);
+        s.max.fetch_max(v, Ordering::Relaxed);
     }
 
     /// Merge shards (fixed index order) into an owned snapshot.
@@ -204,11 +207,13 @@ impl Histogram {
         let mut snap = HistSnapshot {
             count: 0,
             sum: 0,
+            max: 0,
             buckets: [0; BUCKETS],
         };
         for s in &self.shards {
             snap.count += s.count.load(Ordering::Relaxed);
             snap.sum += s.sum.load(Ordering::Relaxed);
+            snap.max = snap.max.max(s.max.load(Ordering::Relaxed));
             for (b, a) in snap.buckets.iter_mut().zip(&s.buckets) {
                 *b += a.load(Ordering::Relaxed);
             }
@@ -221,6 +226,7 @@ impl Histogram {
         for s in &self.shards {
             s.count.store(0, Ordering::Relaxed);
             s.sum.store(0, Ordering::Relaxed);
+            s.max.store(0, Ordering::Relaxed);
             for b in &s.buckets {
                 b.store(0, Ordering::Relaxed);
             }
@@ -241,6 +247,8 @@ pub struct HistSnapshot {
     pub count: u64,
     /// Sum of samples.
     pub sum: u64,
+    /// Largest sample seen (0 when empty).
+    pub max: u64,
     /// Per-bucket sample tallies (bounds per [`bucket_label`]).
     pub buckets: [u64; BUCKETS],
 }
@@ -253,6 +261,49 @@ impl HistSnapshot {
         } else {
             self.sum as f64 / self.count as f64
         }
+    }
+
+    /// The `q`-quantile (`0 < q <= 1`), resolved to the upper bound of
+    /// the log2 bucket holding the rank-`ceil(q·count)` sample and
+    /// clamped by the tracked exact [`max`](HistSnapshot::max) — so the
+    /// estimate never overstates the tail by more than one bucket width
+    /// and p100 is exact. Returns 0 when the histogram is empty.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= rank {
+                if i == 0 {
+                    return 0;
+                }
+                if i == BUCKETS - 1 {
+                    // The open-ended top bucket: the exact max is the
+                    // only honest bound.
+                    return self.max;
+                }
+                return ((1u64 << i) - 1).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Median estimate (see [`percentile`](HistSnapshot::percentile)).
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+
+    /// 90th-percentile estimate.
+    pub fn p90(&self) -> u64 {
+        self.percentile(0.90)
+    }
+
+    /// 99th-percentile estimate.
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
     }
 }
 
@@ -286,6 +337,10 @@ pub static SIM_INTRA_BYTES: Counter = Counter::new();
 pub static SIM_INTER_BYTES: Counter = Counter::new();
 /// `pim::sim` — per-unit busy cycles sampled at each simulation's end.
 pub static SIM_UNIT_BUSY: Histogram = Histogram::new();
+/// `pim::stealing` — successful device-side steals in the scheduling pass.
+pub static SIM_STEALS: Counter = Counter::new();
+/// `pim::stealing` — cycles charged to steal overhead (thief + victim).
+pub static SIM_STEAL_OVERHEAD_CYCLES: Counter = Counter::new();
 /// `part` — weighted inter-channel cut bytes of the chosen owner map.
 pub static PART_CUT_INTER_BYTES: Counter = Counter::new();
 /// `part` — replica bytes placed by selective duplication.
@@ -306,6 +361,8 @@ pub fn counters() -> Vec<(&'static str, u64)> {
         ("sim.near_bytes", SIM_NEAR_BYTES.get()),
         ("sim.intra_bytes", SIM_INTRA_BYTES.get()),
         ("sim.inter_bytes", SIM_INTER_BYTES.get()),
+        ("sim.steals", SIM_STEALS.get()),
+        ("sim.steal_overhead_cycles", SIM_STEAL_OVERHEAD_CYCLES.get()),
         ("part.cut_inter_bytes", PART_CUT_INTER_BYTES.get()),
         ("part.replica_bytes", PART_REPLICA_BYTES.get()),
         ("part.replica_vertices", PART_REPLICA_VERTICES.get()),
@@ -335,6 +392,8 @@ pub fn reset() {
         &SIM_NEAR_BYTES,
         &SIM_INTRA_BYTES,
         &SIM_INTER_BYTES,
+        &SIM_STEALS,
+        &SIM_STEAL_OVERHEAD_CYCLES,
         &PART_CUT_INTER_BYTES,
         &PART_REPLICA_BYTES,
         &PART_REPLICA_VERTICES,
@@ -387,6 +446,50 @@ mod tests {
         assert!((s.mean() - 202.2).abs() < 1e-9);
         h.reset();
         assert_eq!(h.snapshot().count, 0);
+    }
+
+    #[test]
+    fn percentiles_on_known_distributions() {
+        // 1..=100 uniform: p50 lands in bucket [33,64] → upper bound 63,
+        // p90/p99 in [65,128) → clamped by the exact max 100.
+        let h = Histogram::new();
+        for v in 1..=100u64 {
+            h.record_always(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.max, 100);
+        assert_eq!(s.p50(), 63);
+        assert_eq!(s.p90(), 100);
+        assert_eq!(s.p99(), 100);
+        assert_eq!(s.percentile(1.0), 100);
+
+        // Constant distribution: every quantile is the bucket holding
+        // the constant, clamped to it exactly.
+        let h = Histogram::new();
+        for _ in 0..1000 {
+            h.record_always(7);
+        }
+        let s = h.snapshot();
+        assert_eq!((s.p50(), s.p90(), s.p99()), (7, 7, 7));
+
+        // Heavy zero mass with a rare tail: the median is exact (0),
+        // the p99 (rank 990 of 1000, past the 989 zeros) resolves to
+        // the tail bucket, clamped by the exact max.
+        let h = Histogram::new();
+        for _ in 0..989 {
+            h.record_always(0);
+        }
+        for _ in 0..11 {
+            h.record_always(1_000_000);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.p50(), 0);
+        assert_eq!(s.p90(), 0);
+        assert_eq!(s.p99(), 1_000_000);
+
+        // Empty histogram: all quantiles are 0, no division by zero.
+        let s = Histogram::new().snapshot();
+        assert_eq!((s.p50(), s.p99(), s.max), (0, 0, 0));
     }
 
     #[test]

@@ -1,41 +1,59 @@
-//! Query-level observability (DESIGN.md §13): a leveled stderr logger
-//! ([`log`]), a registry of sharded atomic counters and fixed-bucket
-//! histograms threaded through the hot layers ([`metrics`]), and a
-//! nested span tracer with self/total phase times ([`trace`]) — all
-//! dependency-free (the offline policy, DESIGN.md §4) and near-zero
-//! cost when disabled: every hot-path hook opens with one relaxed load
-//! of a static `AtomicBool` and returns immediately when observability
-//! is off (the `parallel` bench gates the disabled-path cost).
+//! Query-level observability (DESIGN.md §13–14): a leveled stderr
+//! logger ([`log`]), a registry of sharded atomic counters and
+//! fixed-bucket histograms threaded through the hot layers
+//! ([`metrics`]), a nested span tracer with self/total phase times
+//! ([`trace`]), a device-level timeline recorder merging simulated
+//! per-unit activity with the host spans into Chrome Trace Format
+//! ([`timeline`]), and a traffic/plan-node attribution collector
+//! ([`attr`]) — all dependency-free (the offline policy, DESIGN.md §4)
+//! and near-zero cost when disabled: every hot-path hook opens with one
+//! relaxed load of a static `AtomicBool` (or, for the per-query
+//! thread-local collectors, is consulted once per simulation) and
+//! returns immediately when observability is off (the `parallel` bench
+//! gates the disabled-path cost).
 //!
-//! Neutrality: metrics and spans are write-only side channels — no
-//! enumeration, scheduling, or simulation decision ever reads them —
-//! so enabling observability cannot perturb results; and shard totals
-//! merge by commutative u64 addition read in fixed index order, so the
-//! *reported* totals are schedule-independent for a deterministic
-//! workload. `tests/prop_parallel.rs` pins bit-identical counts, FSM
-//! supports, and `SimResult`s with observability enabled vs disabled
-//! across 1/2/4/8 workers.
+//! Neutrality: metrics, spans, timelines, and attribution are
+//! write-only side channels — no enumeration, scheduling, or simulation
+//! decision ever reads them — so enabling observability cannot perturb
+//! results; and shard totals merge by commutative u64 addition read in
+//! fixed index order, so the *reported* totals are schedule-independent
+//! for a deterministic workload. `tests/prop_parallel.rs` pins
+//! bit-identical counts, FSM supports, and `SimResult`s with
+//! observability enabled vs disabled across 1/2/4/8 workers.
 //!
 //! The CLI surfaces all of it: `--profile` prints the span self-time
-//! table and the non-zero metrics, `--trace-json PATH` writes the full
-//! JSON document assembled by [`report_json`], and `PIMMINER_LOG`
+//! table, the non-zero metrics (name-sorted, with p50/p90/p99/max
+//! columns), and the traffic heatmap; `--trace-json PATH` writes the
+//! schema-v2 JSON document assembled by [`report_json`]; `--timeline
+//! PATH` writes the Chrome trace; `--explain` / the `explain`
+//! subcommand print the top-k plan-node attribution; and `PIMMINER_LOG`
 //! selects the logger threshold.
 
+pub mod attr;
 pub mod log;
 pub mod metrics;
+pub mod timeline;
 pub mod trace;
 
 use crate::report::{json, Table};
 
-/// Schema version stamped into every `--trace-json` document.
-pub const TRACE_SCHEMA_VERSION: u64 = 1;
+/// Schema version stamped into every `--trace-json` document. v2 adds
+/// span `start_ns`, histogram `max`/`p50`/`p90`/`p99`, and the
+/// `attribution` block (channel matrix, per-unit bytes, plan nodes).
+pub const TRACE_SCHEMA_VERSION: u64 = 2;
 
 /// Assemble the `--trace-json` document: `{schema_version, meta:{…},
-/// spans:<tree|null>, metrics:[…]}`. `meta` carries the run metadata
-/// (command, threads, hub settings, partitioner, fused flag); `spans`
-/// is the [`trace::Span`] tree when a trace ran; `metrics` dumps every
-/// registry counter and histogram. DESIGN.md §13 documents the schema.
-pub fn report_json(meta: &[(String, String)], root: Option<&trace::Span>) -> String {
+/// spans:<tree|null>, metrics:[…], attribution:<obj|null>}`. `meta`
+/// carries the run metadata (command, threads, hub settings,
+/// partitioner, fused flag); `spans` is the [`trace::Span`] tree when a
+/// trace ran; `metrics` dumps every registry counter and histogram;
+/// `attribution` is the [`attr::AttrReport`] when the collector was
+/// armed. DESIGN.md §14 documents the schema.
+pub fn report_json(
+    meta: &[(String, String)],
+    root: Option<&trace::Span>,
+    attribution: Option<&attr::AttrReport>,
+) -> String {
     let meta_obj = meta
         .iter()
         .fold(json::Obj::new(), |o, (k, v)| o.str(k, v))
@@ -62,59 +80,101 @@ pub fn report_json(meta: &[(String, String)], root: Option<&trace::Span>) -> Str
             .u64("count", snap.count)
             .u64("sum", snap.sum)
             .f64("mean", snap.mean())
+            .u64("p50", snap.p50())
+            .u64("p90", snap.p90())
+            .u64("p99", snap.p99())
+            .u64("max", snap.max)
             .raw("buckets", &json::array(&buckets))
             .render()
     }));
+    let attr_json = match attribution {
+        Some(a) => a.to_json(),
+        None => "null".to_string(),
+    };
     json::Obj::new()
         .u64("schema_version", TRACE_SCHEMA_VERSION)
         .raw("meta", &meta_obj)
         .raw("spans", &spans)
         .raw("metrics", &json::array(&entries))
+        .raw("attribution", &attr_json)
         .render()
+}
+
+/// Render the `--profile` registry table from explicit inputs — split
+/// out from [`render_profile`] so the golden-output test can pin the
+/// exact rendering on fixed data, independent of the global registry.
+/// Rows are sorted by metric name (counters and histograms interleave)
+/// so repeated runs diff cleanly; zero metrics are dropped.
+pub fn render_profile_from(
+    root: Option<&trace::Span>,
+    counters: &[(&str, u64)],
+    histograms: &[(&str, metrics::HistSnapshot)],
+) -> String {
+    let mut out = String::new();
+    if let Some(r) = root {
+        out.push_str(&r.render_table());
+    }
+    enum Row<'a> {
+        Counter(u64),
+        Hist(&'a metrics::HistSnapshot),
+    }
+    let mut rows: Vec<(&str, Row)> = Vec::new();
+    for &(name, value) in counters {
+        if value > 0 {
+            rows.push((name, Row::Counter(value)));
+        }
+    }
+    for (name, snap) in histograms {
+        if snap.count > 0 {
+            rows.push((name, Row::Hist(snap)));
+        }
+    }
+    rows.sort_by(|a, b| a.0.cmp(b.0));
+    if rows.is_empty() {
+        return out;
+    }
+    let mut table = Table::new(
+        "metrics registry (non-zero, name-sorted)",
+        &["Metric", "Kind", "Count", "Sum", "Mean", "P50", "P90", "P99", "Max"],
+    );
+    for (name, row) in rows {
+        match row {
+            Row::Counter(value) => {
+                table.row(vec![
+                    name.to_string(),
+                    "counter".to_string(),
+                    String::new(),
+                    value.to_string(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                ]);
+            }
+            Row::Hist(snap) => {
+                table.row(vec![
+                    name.to_string(),
+                    "histogram".to_string(),
+                    snap.count.to_string(),
+                    snap.sum.to_string(),
+                    format!("{:.1}", snap.mean()),
+                    snap.p50().to_string(),
+                    snap.p90().to_string(),
+                    snap.p99().to_string(),
+                    snap.max.to_string(),
+                ]);
+            }
+        }
+    }
+    out.push_str(&table.render());
+    out
 }
 
 /// Render the `--profile` human view: the span self-time table (when a
 /// trace ran) followed by the non-zero registry metrics.
 pub fn render_profile(root: Option<&trace::Span>) -> String {
-    let mut out = String::new();
-    if let Some(r) = root {
-        out.push_str(&r.render_table());
-    }
-    let mut table = Table::new(
-        "metrics registry (non-zero)",
-        &["Metric", "Kind", "Count", "Sum", "Mean"],
-    );
-    let mut rows = 0usize;
-    for (name, value) in metrics::counters() {
-        if value == 0 {
-            continue;
-        }
-        rows += 1;
-        table.row(vec![
-            name.to_string(),
-            "counter".to_string(),
-            String::new(),
-            value.to_string(),
-            String::new(),
-        ]);
-    }
-    for (name, snap) in metrics::histograms() {
-        if snap.count == 0 {
-            continue;
-        }
-        rows += 1;
-        table.row(vec![
-            name.to_string(),
-            "histogram".to_string(),
-            snap.count.to_string(),
-            snap.sum.to_string(),
-            format!("{:.1}", snap.mean()),
-        ]);
-    }
-    if rows > 0 {
-        out.push_str(&table.render());
-    }
-    out
+    render_profile_from(root, &metrics::counters(), &metrics::histograms())
 }
 
 #[cfg(test)]
@@ -127,25 +187,79 @@ mod tests {
             ("command".to_string(), "count".to_string()),
             ("threads".to_string(), "4".to_string()),
         ];
-        let doc = report_json(&meta, None);
-        assert!(doc.starts_with("{\"schema_version\":1,"));
+        let doc = report_json(&meta, None, None);
+        assert!(doc.starts_with("{\"schema_version\":2,"));
         assert!(doc.contains("\"meta\":{\"command\":\"count\",\"threads\":\"4\"}"));
         assert!(doc.contains("\"spans\":null"));
         assert!(doc.contains("\"name\":\"setops.dense\""));
+        assert!(doc.contains("\"name\":\"sim.steals\""));
         assert!(doc.contains("\"kind\":\"histogram\""));
+        assert!(doc.contains("\"p99\":"));
         assert!(doc.contains("\"buckets\":["));
-        assert!(doc.ends_with("]}"));
+        assert!(doc.ends_with("\"attribution\":null}"));
+    }
+
+    #[test]
+    fn report_json_embeds_attribution_when_armed() {
+        let a = attr::AttrReport {
+            channels: 1,
+            matrix: vec![2.5],
+            unit_bytes: vec![2.5],
+            nodes: vec![attr::NodeStat {
+                label: "L1".to_string(),
+                cycles: 9,
+                access: [0.0, 0.0, 2.5],
+                shared_saved: 0,
+                fetches: 1,
+            }],
+        };
+        let doc = report_json(&[], None, Some(&a));
+        assert!(doc.contains("\"attribution\":{\"channels\":1,"));
+        assert!(doc.contains("\"label\":\"L1\""));
     }
 
     #[test]
     fn render_profile_includes_span_table_when_present() {
         let span = trace::Span {
             name: "count".to_string(),
+            start_ns: 0,
             total_ns: 1000,
             counters: vec![("n".to_string(), 3u64)],
             children: Vec::new(),
         };
         let out = render_profile(Some(&span));
         assert!(out.contains("query profile — count"));
+    }
+
+    /// Golden output: the registry table layout is part of the CLI
+    /// contract (`--profile` must diff cleanly in CI), so the exact
+    /// rendering — name sort, column set, blank cells for counters —
+    /// is pinned here on fixed inputs.
+    #[test]
+    fn render_profile_golden_output() {
+        let mut snap = metrics::HistSnapshot {
+            count: 0,
+            sum: 0,
+            max: 0,
+            buckets: [0; metrics::BUCKETS],
+        };
+        // Four samples of 5 and one of 40: count 5, sum 60, mean 12.
+        snap.count = 5;
+        snap.sum = 60;
+        snap.max = 40;
+        snap.buckets[3] = 4; // 5 → bucket [4,7]
+        snap.buckets[6] = 1; // 40 → bucket [32,63]
+        let counters = [("ws.tasks", 7u64), ("setops.merge", 3u64), ("idle.zero", 0u64)];
+        let hists = [("enum.candidate_len", snap)];
+        let got = render_profile_from(None, &counters, &hists);
+        let want = concat!(
+            "== metrics registry (non-zero, name-sorted) ==\n",
+            "            Metric       Kind  Count  Sum  Mean  P50  P90  P99  Max\n",
+            "-------------------------------------------------------------------\n",
+            "enum.candidate_len  histogram      5   60  12.0    7   40   40   40\n",
+            "      setops.merge    counter           3                          \n",
+            "          ws.tasks    counter           7                          \n",
+        );
+        assert_eq!(got, want, "got:\n{got}");
     }
 }

@@ -1,0 +1,348 @@
+//! Device-level timeline recorder (DESIGN.md §14): per-unit busy
+//! intervals and steal events from the scheduling pass
+//! (`pim::stealing::schedule_traced`) plus dynamic-chunk claims from the
+//! profiling pass (`pim::sim::profile_pass`), merged with the host span
+//! tree (`obs::trace`) into one Chrome Trace Format JSON that Perfetto
+//! or `chrome://tracing` loads directly (`--timeline PATH`).
+//!
+//! Arming is per *query thread*: the CLI drives one simulation from one
+//! thread, and both `schedule` and the post-pass merge run on that
+//! caller thread, so the collector is a `thread_local` — no cross-test
+//! pollution under `cargo test`'s shared process, no locks, and a
+//! disarmed run costs one thread-local read per simulation (not per
+//! event). Worker threads never touch this state: the profiling pass
+//! captures [`start_instant`] once before spawning and each worker
+//! timestamps its claims privately; the caller merges them afterwards
+//! in worker-index order, so recording is deterministic and race-free.
+//!
+//! Time bases: host spans and chunk claims are wall-clock nanoseconds
+//! from the trace root; device intervals are *simulated cycles* mapped
+//! 1 cycle → 1 µs onto their own process track. Successive scheduling
+//! passes (per-plan runs, FSM levels) are laid end to end by a cycle
+//! cursor so tracks never overlap while per-unit duration sums still
+//! equal `SimResult.unit_busy` exactly (`tests/prop_parallel.rs` pins
+//! both invariants).
+
+use crate::obs::trace;
+use crate::report::json;
+use std::cell::RefCell;
+use std::time::Instant;
+
+/// Raw per-pass device activity out of `pim::stealing::schedule_traced`.
+#[derive(Clone, Debug, Default)]
+pub struct DeviceTimeline {
+    /// Per unit: `(start_cycle, duration_cycles)` execution intervals in
+    /// completion order. Non-overlapping (a unit executes serially) and
+    /// the durations sum to that unit's busy cycles.
+    pub intervals: Vec<Vec<(u64, u64)>>,
+    /// `(cycle, thief, victim)` for every successful steal.
+    pub steals: Vec<(u64, u32, u32)>,
+}
+
+/// One dynamic-scheduling chunk claim by a host worker during the
+/// profiling pass: wall-clock placement plus the claimed task span.
+#[derive(Clone, Debug)]
+pub struct ChunkClaim {
+    /// Host worker index that executed the chunk.
+    pub worker: usize,
+    /// Claim start, nanoseconds from [`begin`].
+    pub start_ns: u64,
+    /// Chunk execution wall time, nanoseconds.
+    pub dur_ns: u64,
+    /// Claimed task range `lo..hi` (indices into the root order).
+    pub lo: usize,
+    /// Exclusive end of the claimed range.
+    pub hi: usize,
+}
+
+/// A finished timeline: everything recorded between [`begin`] and
+/// [`finish`], device passes already laid end to end on the cycle axis.
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    /// Per-unit busy intervals, cursor-offset across passes.
+    pub units: Vec<Vec<(u64, u64)>>,
+    /// Steal instants `(cycle, thief, victim)`, cursor-offset.
+    pub steals: Vec<(u64, u32, u32)>,
+    /// Host chunk claims in worker-index order per pass.
+    pub claims: Vec<ChunkClaim>,
+    /// Number of scheduling passes recorded.
+    pub device_passes: u64,
+}
+
+struct State {
+    start: Instant,
+    cursor: u64,
+    tl: Timeline,
+}
+
+thread_local! {
+    static STATE: RefCell<Option<State>> = const { RefCell::new(None) };
+}
+
+/// Arm the recorder on this thread, clearing any previous timeline.
+pub fn begin() {
+    STATE.with(|s| {
+        *s.borrow_mut() = Some(State {
+            start: Instant::now(),
+            cursor: 0,
+            tl: Timeline::default(),
+        });
+    });
+}
+
+/// Whether the recorder is armed on this thread.
+pub fn armed() -> bool {
+    STATE.with(|s| s.borrow().is_some())
+}
+
+/// The arming instant — the time base for [`ChunkClaim`] timestamps.
+/// The profiling pass captures this once before spawning workers so the
+/// workers never touch the thread-local themselves.
+pub fn start_instant() -> Option<Instant> {
+    STATE.with(|s| s.borrow().as_ref().map(|st| st.start))
+}
+
+/// Append one scheduling pass: intervals and steals are shifted by the
+/// cycle cursor, which then advances by the pass makespan so the next
+/// pass starts where this one ended.
+pub fn record_device(dt: DeviceTimeline, makespan: u64) {
+    STATE.with(|s| {
+        if let Some(st) = s.borrow_mut().as_mut() {
+            let off = st.cursor;
+            if st.tl.units.len() < dt.intervals.len() {
+                st.tl.units.resize(dt.intervals.len(), Vec::new());
+            }
+            for (u, iv) in dt.intervals.into_iter().enumerate() {
+                st.tl.units[u].extend(iv.into_iter().map(|(t, d)| (t + off, d)));
+            }
+            st.tl
+                .steals
+                .extend(dt.steals.into_iter().map(|(t, a, b)| (t + off, a, b)));
+            st.tl.device_passes += 1;
+            st.cursor = off.saturating_add(makespan);
+        }
+    });
+}
+
+/// Append one profiling pass's chunk claims (already merged by the
+/// caller in worker-index order).
+pub fn record_claims<I: IntoIterator<Item = ChunkClaim>>(claims: I) {
+    STATE.with(|s| {
+        if let Some(st) = s.borrow_mut().as_mut() {
+            st.tl.claims.extend(claims);
+        }
+    });
+}
+
+/// Disarm and return the recorded timeline; `None` when not armed.
+pub fn finish() -> Option<Timeline> {
+    STATE.with(|s| s.borrow_mut().take().map(|st| st.tl))
+}
+
+fn meta_event(name: &str, pid: u64, tid: u64, value: &str) -> String {
+    json::Obj::new()
+        .str("name", name)
+        .str("ph", "M")
+        .u64("pid", pid)
+        .u64("tid", tid)
+        .raw("args", &json::Obj::new().str("name", value).render())
+        .render()
+}
+
+fn emit_span(s: &trace::Span, ev: &mut Vec<String>) {
+    ev.push(
+        json::Obj::new()
+            .str("name", &s.name)
+            .str("ph", "B")
+            .f64("ts", s.start_ns as f64 / 1000.0)
+            .u64("pid", 0)
+            .u64("tid", 0)
+            .render(),
+    );
+    for c in &s.children {
+        emit_span(c, ev);
+    }
+    ev.push(
+        json::Obj::new()
+            .str("name", &s.name)
+            .str("ph", "E")
+            .f64("ts", (s.start_ns + s.total_ns) as f64 / 1000.0)
+            .u64("pid", 0)
+            .u64("tid", 0)
+            .render(),
+    );
+}
+
+impl Timeline {
+    /// Render the Chrome Trace Format document: host phases (pid 0,
+    /// tid 0, `B`/`E` pairs from the span tree), per-worker chunk-claim
+    /// tracks (pid 0, tid 1+worker, `X`), one track per PIM unit
+    /// (pid 1, `X` busy slices, 1 simulated cycle = 1 µs), and steal
+    /// instants (`i`) on the thief's track.
+    pub fn to_chrome_trace(&self, host: Option<&trace::Span>) -> String {
+        let mut ev: Vec<String> = Vec::new();
+        ev.push(meta_event("process_name", 0, 0, "host"));
+        ev.push(meta_event("thread_name", 0, 0, "phases"));
+        let workers = self.claims.iter().map(|c| c.worker + 1).max().unwrap_or(0);
+        for w in 0..workers {
+            ev.push(meta_event("thread_name", 0, 1 + w as u64, &format!("worker {w}")));
+        }
+        if !self.units.is_empty() {
+            ev.push(meta_event("process_name", 1, 0, "pim-device"));
+            for u in 0..self.units.len() {
+                ev.push(meta_event("thread_name", 1, u as u64, &format!("unit {u}")));
+            }
+        }
+        if let Some(root) = host {
+            emit_span(root, &mut ev);
+        }
+        for c in &self.claims {
+            ev.push(
+                json::Obj::new()
+                    .str("name", &format!("claim {}..{}", c.lo, c.hi))
+                    .str("ph", "X")
+                    .f64("ts", c.start_ns as f64 / 1000.0)
+                    .f64("dur", c.dur_ns as f64 / 1000.0)
+                    .u64("pid", 0)
+                    .u64("tid", 1 + c.worker as u64)
+                    .raw(
+                        "args",
+                        &json::Obj::new().u64("tasks", (c.hi - c.lo) as u64).render(),
+                    )
+                    .render(),
+            );
+        }
+        for (u, iv) in self.units.iter().enumerate() {
+            for &(t, d) in iv {
+                ev.push(
+                    json::Obj::new()
+                        .str("name", "busy")
+                        .str("ph", "X")
+                        .f64("ts", t as f64)
+                        .f64("dur", d as f64)
+                        .u64("pid", 1)
+                        .u64("tid", u as u64)
+                        .raw("args", &json::Obj::new().u64("cycles", d).render())
+                        .render(),
+                );
+            }
+        }
+        for &(t, thief, victim) in &self.steals {
+            ev.push(
+                json::Obj::new()
+                    .str("name", "steal")
+                    .str("ph", "i")
+                    .f64("ts", t as f64)
+                    .u64("pid", 1)
+                    .u64("tid", thief as u64)
+                    .str("s", "t")
+                    .raw("args", &json::Obj::new().u64("victim", victim as u64).render())
+                    .render(),
+            );
+        }
+        format!(
+            "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":{}}}",
+            json::array(&ev)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_lay_end_to_end_on_the_cycle_axis() {
+        begin();
+        assert!(armed());
+        assert!(start_instant().is_some());
+        record_device(
+            DeviceTimeline {
+                intervals: vec![vec![(0, 5), (5, 3)], vec![(2, 4)]],
+                steals: vec![(5, 1, 0)],
+            },
+            8,
+        );
+        record_device(
+            DeviceTimeline {
+                intervals: vec![vec![(1, 2)], vec![]],
+                steals: vec![],
+            },
+            3,
+        );
+        record_claims(vec![ChunkClaim {
+            worker: 0,
+            start_ns: 10,
+            dur_ns: 100,
+            lo: 0,
+            hi: 16,
+        }]);
+        let tl = finish().expect("armed");
+        assert!(!armed());
+        assert!(finish().is_none());
+        // Second pass's interval is shifted past the first's makespan.
+        assert_eq!(tl.units[0], vec![(0, 5), (5, 3), (9, 2)]);
+        assert_eq!(tl.units[1], vec![(2, 4)]);
+        assert_eq!(tl.steals, vec![(5, 1, 0)]);
+        assert_eq!(tl.device_passes, 2);
+        assert_eq!(tl.claims.len(), 1);
+        // Intervals per unit stay non-overlapping across passes.
+        for iv in &tl.units {
+            for w in iv.windows(2) {
+                assert!(w[0].0 + w[0].1 <= w[1].0, "overlap: {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn disarmed_recording_is_a_no_op() {
+        assert!(!armed());
+        record_device(DeviceTimeline::default(), 10);
+        record_claims(vec![]);
+        assert!(finish().is_none());
+        assert!(start_instant().is_none());
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let tl = Timeline {
+            units: vec![vec![(0, 7)], vec![(3, 2)]],
+            steals: vec![(3, 1, 0)],
+            claims: vec![ChunkClaim {
+                worker: 1,
+                start_ns: 2_000,
+                dur_ns: 1_000,
+                lo: 4,
+                hi: 8,
+            }],
+            device_passes: 1,
+        };
+        let host = trace::Span {
+            name: "count".to_string(),
+            start_ns: 0,
+            total_ns: 9_000,
+            counters: Vec::new(),
+            children: vec![trace::Span {
+                name: "load".to_string(),
+                start_ns: 1_000,
+                total_ns: 2_000,
+                counters: Vec::new(),
+                children: Vec::new(),
+            }],
+        };
+        let doc = tl.to_chrome_trace(Some(&host));
+        assert!(doc.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+        assert!(doc.ends_with("]}"));
+        // Balanced B/E pairs: two spans → two of each.
+        assert_eq!(doc.matches("\"ph\":\"B\"").count(), 2);
+        assert_eq!(doc.matches("\"ph\":\"E\"").count(), 2);
+        // One busy slice per unit plus the claim → three X events.
+        assert_eq!(doc.matches("\"ph\":\"X\"").count(), 3);
+        assert_eq!(doc.matches("\"ph\":\"i\"").count(), 1);
+        assert!(doc.contains("\"name\":\"pim-device\""));
+        assert!(doc.contains("\"name\":\"unit 1\""));
+        assert!(doc.contains("\"name\":\"worker 1\""));
+        assert!(doc.contains("\"victim\":0"));
+        assert!(doc.contains("\"name\":\"claim 4..8\""));
+    }
+}

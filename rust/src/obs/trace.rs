@@ -36,16 +36,20 @@ pub fn enabled() -> bool {
 struct Node {
     name: String,
     start: Instant,
+    /// Open time relative to the root span's open, nanoseconds (0 for
+    /// the root itself) — the timeline export places spans with it.
+    start_ns: u64,
     total_ns: u64,
     counters: Vec<(String, u64)>,
     children: Vec<usize>,
 }
 
 impl Node {
-    fn open(name: &str) -> Node {
+    fn open(name: &str, start_ns: u64) -> Node {
         Node {
             name: name.to_string(),
             start: Instant::now(),
+            start_ns,
             total_ns: 0,
             counters: Vec::new(),
             children: Vec::new(),
@@ -62,14 +66,15 @@ struct TraceState {
 impl TraceState {
     fn new(root: &str) -> TraceState {
         TraceState {
-            nodes: vec![Node::open(root)],
+            nodes: vec![Node::open(root, 0)],
             stack: vec![0],
         }
     }
 
     fn open(&mut self, name: &str) {
         let id = self.nodes.len();
-        self.nodes.push(Node::open(name));
+        let offset = self.nodes[0].start.elapsed().as_nanos() as u64;
+        self.nodes.push(Node::open(name, offset));
         let parent = *self.stack.last().expect("root span always open");
         self.nodes[parent].children.push(id);
         self.stack.push(id);
@@ -102,6 +107,7 @@ fn build(nodes: &[Node], id: usize) -> Span {
     let n = &nodes[id];
     Span {
         name: n.name.clone(),
+        start_ns: n.start_ns,
         total_ns: n.total_ns,
         counters: n.counters.clone(),
         children: n.children.iter().map(|&c| build(nodes, c)).collect(),
@@ -172,6 +178,8 @@ pub fn counter(name: &str, value: u64) {
 pub struct Span {
     /// Phase name (the root carries the CLI command).
     pub name: String,
+    /// Open time relative to the trace root's open, nanoseconds.
+    pub start_ns: u64,
     /// Wall time from open to close, nanoseconds.
     pub total_ns: u64,
     /// Counters attached while the span was innermost.
@@ -203,6 +211,7 @@ impl Span {
             .fold(json::Obj::new(), |o, (k, v)| o.u64(k, *v));
         json::Obj::new()
             .str("name", &self.name)
+            .u64("start_ns", self.start_ns)
             .u64("total_ns", self.total_ns)
             .u64("self_ns", self.self_ns())
             .raw("counters", &counters.render())
@@ -268,7 +277,12 @@ mod tests {
         assert_eq!(span.num_spans(), 4);
         assert_eq!(span.children[1].counters, vec![("roots".to_string(), 42)]);
         assert_eq!(self_sum(&span), span.total_ns);
+        // Open offsets are relative to the root and ordered by open time.
+        assert_eq!(span.start_ns, 0);
+        assert!(span.children[0].start_ns <= span.children[1].start_ns);
+        assert!(span.children[1].children[0].start_ns >= span.children[1].start_ns);
         let js = span.to_json();
+        assert!(js.contains("\"start_ns\":0"));
         assert!(js.contains("\"name\":\"root\""));
         assert!(js.contains("\"children\":[{"));
         assert!(js.contains("\"roots\":42"));

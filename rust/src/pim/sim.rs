@@ -24,7 +24,7 @@
 use super::addrmap::{split_access, startup_latency, AddrMap};
 use super::config::PimConfig;
 use super::placement::Placement;
-use super::stealing::{schedule, Piece};
+use super::stealing::{schedule_traced, Piece};
 use crate::exec::enumerate::{EnumSink, Enumerator, MultiEnumerator};
 use crate::graph::{CsrGraph, HubBitmaps, VertexId};
 use crate::mine::census::{CensusEngine, MotifCensus};
@@ -33,7 +33,7 @@ use crate::mine::fsm::{
     self, CandShape, CandidateStats, FsmConfig, FsmResult, LabeledPattern, LevelAcc,
     LevelExecutor, MatchScratch,
 };
-use crate::obs::{metrics, trace};
+use crate::obs::{attr, metrics, timeline, trace};
 use crate::part::{self, PartitionStrategy};
 use crate::pattern::fuse::PlanTrie;
 use crate::pattern::plan::{Application, Plan};
@@ -353,6 +353,18 @@ struct GlobalAcc {
     bitmap_words: u64,
     /// Fetches elided by fused traversals (DESIGN.md §11).
     shared_fetches: u64,
+    /// Per-plan-node attribution (DESIGN.md §14), indexed by the
+    /// [`EnumSink::on_node`] id and grown lazily; populated only while
+    /// `obs::attr` is armed, so the disarmed path never touches them.
+    node_cycles: Vec<u64>,
+    node_access: Vec<[f64; 3]>,
+    node_shared: Vec<u64>,
+    node_fetches: Vec<u64>,
+    /// Channel×channel traffic matrix (row = source channel, column =
+    /// requesting channel) and per-unit fetched-byte totals — also
+    /// armed-only.
+    chan_matrix: Vec<f64>,
+    unit_bytes: Vec<f64>,
 }
 
 impl GlobalAcc {
@@ -360,6 +372,8 @@ impl GlobalAcc {
         GlobalAcc {
             unit_bank_occ: vec![0; cfg.num_units()],
             link_occ: vec![0; cfg.channels],
+            chan_matrix: vec![0.0; cfg.channels * cfg.channels],
+            unit_bytes: vec![0.0; cfg.num_units()],
             ..Default::default()
         }
     }
@@ -385,6 +399,28 @@ impl GlobalAcc {
         self.scan_elems += o.scan_elems;
         self.bitmap_words += o.bitmap_words;
         self.shared_fetches += o.shared_fetches;
+        fn merge_grow<T: Copy + Default>(a: &mut Vec<T>, b: &[T], add: impl Fn(&mut T, T)) {
+            if a.len() < b.len() {
+                a.resize(b.len(), T::default());
+            }
+            for (x, &y) in a.iter_mut().zip(b) {
+                add(x, y);
+            }
+        }
+        merge_grow(&mut self.node_cycles, &o.node_cycles, |a, b| *a += b);
+        merge_grow(&mut self.node_access, &o.node_access, |a, b| {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        });
+        merge_grow(&mut self.node_shared, &o.node_shared, |a, b| *a += b);
+        merge_grow(&mut self.node_fetches, &o.node_fetches, |a, b| *a += b);
+        for (a, b) in self.chan_matrix.iter_mut().zip(&o.chan_matrix) {
+            *a += *b;
+        }
+        for (a, b) in self.unit_bytes.iter_mut().zip(&o.unit_bytes) {
+            *a += *b;
+        }
     }
 }
 
@@ -426,6 +462,48 @@ fn accumulate_access(
     }
 }
 
+/// Accumulate `bytes` of an `(owner, requester)` access into the
+/// channel×channel traffic matrix (row = source channel, column =
+/// requesting channel) and the per-unit fetched-byte totals — the
+/// attribution analogue of [`accumulate_access`]. Local-first traffic
+/// lands on one cell; the default interleave stripes every list, so its
+/// channel-local share goes to the diagonal and the remote share spreads
+/// evenly over the other source channels.
+fn accumulate_traffic(
+    cfg: &PimConfig,
+    map: AddrMap,
+    owner: usize,
+    requester: usize,
+    bytes: u64,
+    local_copy: bool,
+    matrix: &mut [f64],
+    unit_bytes: &mut [f64],
+) {
+    let c = cfg.channels;
+    let rc = cfg.channel_of(requester);
+    let b = bytes as f64;
+    match map {
+        AddrMap::LocalFirst => {
+            let src = if local_copy { rc } else { cfg.channel_of(owner) };
+            matrix[src * c + rc] += b;
+        }
+        AddrMap::DefaultInterleave => {
+            let local_frac = cfg.banks_per_channel as f64 / cfg.num_banks() as f64;
+            let local = b * local_frac;
+            matrix[rc * c + rc] += local;
+            if c > 1 {
+                let spread = (b - local) / (c - 1) as f64;
+                for s in 0..c {
+                    if s != rc {
+                        matrix[s * c + rc] += spread;
+                    }
+                }
+            }
+        }
+    }
+    unit_bytes[requester] += b;
+}
+
 /// The instrumentation sink: charges one task's costs (see module docs).
 struct SimSink<'a> {
     cfg: &'a PimConfig,
@@ -435,6 +513,11 @@ struct SimSink<'a> {
     requester: usize,
     task_cycles: u64,
     lvl1_chunks: u64,
+    /// Current plan/trie node ([`EnumSink::on_node`]) for attribution.
+    cur_node: usize,
+    /// Whether `obs::attr` was armed when the pass started (read once on
+    /// the caller thread, threaded into every worker's sinks).
+    attr: bool,
     /// Shard-level accumulator (borrowed: one per worker thread, not per
     /// task — §Perf: per-task GlobalAcc allocation was 20% of sim time).
     acc: &'a mut GlobalAcc,
@@ -472,25 +555,76 @@ impl SimSink<'_> {
             local_copy,
             &mut self.acc.access_f,
         );
+        self.attr_access(owner, requester, bytes, local_copy);
+    }
+
+    /// Charge cycles to the task (and, when armed, to the current node).
+    #[inline]
+    fn charge(&mut self, cycles: u64) {
+        self.task_cycles += cycles;
+        if self.attr {
+            let i = self.cur_node;
+            if self.acc.node_cycles.len() <= i {
+                self.acc.node_cycles.resize(i + 1, 0);
+            }
+            self.acc.node_cycles[i] += cycles;
+        }
+    }
+
+    /// Armed-only attribution: per-node access-class bytes plus the
+    /// channel matrix and per-unit byte totals.
+    fn attr_access(&mut self, owner: usize, requester: usize, bytes: u64, local_copy: bool) {
+        if !self.attr {
+            return;
+        }
+        let i = self.cur_node;
+        if self.acc.node_access.len() <= i {
+            self.acc.node_access.resize(i + 1, [0.0; 3]);
+        }
+        let mut dest = self.acc.node_access[i];
+        accumulate_access(self.cfg, self.map, owner, requester, bytes, local_copy, &mut dest);
+        self.acc.node_access[i] = dest;
+        accumulate_traffic(
+            self.cfg,
+            self.map,
+            owner,
+            requester,
+            bytes,
+            local_copy,
+            &mut self.acc.chan_matrix,
+            &mut self.acc.unit_bytes,
+        );
     }
 }
 
 impl EnumSink for SimSink<'_> {
+    #[inline]
+    fn on_node(&mut self, node: u32) {
+        self.cur_node = node as usize;
+    }
+
     fn on_fetch(&mut self, level: usize, v: VertexId, full: usize, prefix: usize) {
         if level == 1 {
             self.lvl1_chunks += 1;
+        }
+        if self.attr {
+            let i = self.cur_node;
+            if self.acc.node_fetches.len() <= i {
+                self.acc.node_fetches.resize(i + 1, 0);
+            }
+            self.acc.node_fetches[i] += 1;
         }
         let cfg = self.cfg;
         // L1D: hot-prefix residents and previously-fetched prefixes are
         // served from cache — no memory traffic, no bank service.
         let need = if self.opts.filter { prefix } else { full } as u64;
         if v < self.hot_k {
-            self.task_cycles += cfg.l1_hit_latency;
+            self.charge(cfg.l1_hit_latency);
             return;
         }
         if let Some(&cached) = self.l1.get(&v) {
             if cached >= need {
-                self.task_cycles += cfg.l1_hit_latency;
+                self.charge(cfg.l1_hit_latency);
                 return;
             }
         }
@@ -520,7 +654,7 @@ impl EnumSink for SimSink<'_> {
             0
         };
         let stream = transfer.max(scan_occ);
-        self.task_cycles += startup + stream;
+        self.charge(startup + stream);
 
         // Bank service: the serving bank group is busy for the row
         // activation plus the streaming time.
@@ -570,7 +704,7 @@ impl EnumSink for SimSink<'_> {
         let startup = startup_latency(cfg, split.dominant()) / cfg.mshr_overlap.max(1);
         let compute = elems as u64 / cfg.scan_elems_per_cycle.max(1);
         let transfer = bytes.div_ceil(cfg.link_bytes_per_cycle);
-        self.task_cycles += startup + compute.max(transfer);
+        self.charge(startup + compute.max(transfer));
 
         match self.map {
             AddrMap::LocalFirst => {
@@ -604,14 +738,14 @@ impl EnumSink for SimSink<'_> {
         let compute = (words as u64).div_ceil(cfg.bitmap_words_per_cycle.max(1));
         match self.map {
             AddrMap::LocalFirst => {
-                self.task_cycles += startup + compute;
+                self.charge(startup + compute);
                 self.acc.unit_bank_occ[self.requester] += compute;
             }
             AddrMap::DefaultInterleave => {
                 // Striped rows cross the fabric: the stream is capped by
                 // the external link, not the internal row buffer.
                 let transfer = bytes.div_ceil(cfg.link_bytes_per_cycle);
-                self.task_cycles += startup + compute.max(transfer);
+                self.charge(startup + compute.max(transfer));
                 self.acc.uniform_bank_occ += transfer;
                 self.acc.uniform_link_occ += transfer;
             }
@@ -624,6 +758,13 @@ impl EnumSink for SimSink<'_> {
 
     fn on_shared_fetch(&mut self, saved: usize) {
         self.acc.shared_fetches += saved as u64;
+        if self.attr {
+            let i = self.cur_node;
+            if self.acc.node_shared.len() <= i {
+                self.acc.node_shared.resize(i + 1, 0);
+            }
+            self.acc.node_shared[i] += saved as u64;
+        }
     }
 
     fn on_aggregate(&mut self, _key: usize, bytes: u64) {
@@ -643,10 +784,11 @@ impl EnumSink for SimSink<'_> {
             false,
             &mut self.acc.agg_f,
         );
+        self.attr_access(self.requester, self.requester, bytes, false);
         let split = split_access(cfg, self.map, self.requester, self.requester, bytes, false);
         let startup = startup_latency(cfg, split.dominant()) / cfg.mshr_overlap.max(1);
         let transfer = bytes.div_ceil(cfg.link_bytes_per_cycle);
-        self.task_cycles += startup + transfer;
+        self.charge(startup + transfer);
         match self.map {
             AddrMap::LocalFirst => {
                 self.acc.unit_bank_occ[self.requester] += transfer;
@@ -811,24 +953,35 @@ fn profile_pass<R: TaskRunner>(
     let workers = threads::resolve(opts.threads).min(ntasks.max(1));
     let chunk = opts.chunk.unwrap_or(16).max(1);
     let order = crate::exec::cpu::degree_order(g, roots);
+    // Read both per-query collectors once on the caller thread: workers
+    // never touch the thread-locals (timestamps come from the captured
+    // base instant; attribution lands in the per-worker shards).
+    let attr_on = attr::armed();
+    let tl_base = timeline::start_instant();
     struct Shard<W> {
+        widx: usize,
         profiles: Vec<(usize, TaskProfile)>,
         acc: GlobalAcc,
         worker: W,
         l1: std::collections::HashMap<VertexId, u64>,
+        claims: Vec<timeline::ChunkClaim>,
     }
     let (shards, _ws_stats) = ws::run_chunks(
         workers,
         ntasks,
         chunk,
-        |_| Shard {
+        |w| Shard {
+            widx: w,
             profiles: Vec::new(),
             acc: GlobalAcc::new(cfg),
             worker: runner.worker(),
             l1: std::collections::HashMap::new(),
+            claims: Vec::new(),
         },
         |shard, span| {
-            for &i in &order[span] {
+            let (lo, hi) = (span.start, span.end);
+            let claim_start = tl_base.map(|base| base.elapsed().as_nanos() as u64);
+            for &i in &order[lo..hi] {
                 let root = roots[i];
                 shard.l1.clear();
                 let mut sink = SimSink {
@@ -839,6 +992,8 @@ fn profile_pass<R: TaskRunner>(
                     requester: setup.assign(opts, cfg, i, root),
                     task_cycles: 0,
                     lvl1_chunks: 0,
+                    cur_node: 0,
+                    attr: attr_on,
                     acc: &mut shard.acc,
                     hot_k: setup.hot_k,
                     l1: &mut shard.l1,
@@ -849,24 +1004,61 @@ fn profile_pass<R: TaskRunner>(
                 let chunks = sink.lvl1_chunks.max(1);
                 shard.profiles.push((i, TaskProfile { cycles, chunks }));
             }
+            if let (Some(base), Some(start_ns)) = (tl_base, claim_start) {
+                let end_ns = base.elapsed().as_nanos() as u64;
+                shard.claims.push(timeline::ChunkClaim {
+                    worker: shard.widx,
+                    start_ns,
+                    dur_ns: end_ns.saturating_sub(start_ns),
+                    lo,
+                    hi,
+                });
+            }
         },
     );
 
     let mut acc = GlobalAcc::new(cfg);
     let mut profiles: Vec<Option<TaskProfile>> = (0..ntasks).map(|_| None).collect();
     let mut workers = Vec::with_capacity(shards.len());
+    let mut claims = Vec::new();
     for shard in shards {
         acc.merge(shard.acc);
         for (i, p) in shard.profiles {
             profiles[i] = Some(p);
         }
         workers.push(shard.worker);
+        claims.extend(shard.claims);
+    }
+    if !claims.is_empty() {
+        timeline::record_claims(claims);
     }
     let profiles = profiles
         .into_iter()
         .map(|p| p.expect("every task profiled"))
         .collect();
     (acc, profiles, workers)
+}
+
+/// Assemble labeled per-node attribution stats from a merged accumulator
+/// for [`attr::record_nodes`]. The entry points call this (armed-only)
+/// before handing the accumulator to [`finish_sim`], labeling node `i`
+/// with their own scheme (plan level, trie node, FSM level).
+fn node_stats(acc: &GlobalAcc, label: impl Fn(usize) -> String) -> Vec<attr::NodeStat> {
+    let n = acc
+        .node_cycles
+        .len()
+        .max(acc.node_access.len())
+        .max(acc.node_shared.len())
+        .max(acc.node_fetches.len());
+    (0..n)
+        .map(|i| attr::NodeStat {
+            label: label(i),
+            cycles: acc.node_cycles.get(i).copied().unwrap_or(0),
+            access: acc.node_access.get(i).copied().unwrap_or([0.0; 3]),
+            shared_saved: acc.node_shared.get(i).copied().unwrap_or(0),
+            fetches: acc.node_fetches.get(i).copied().unwrap_or(0),
+        })
+        .collect()
 }
 
 /// Sizing of the end-of-kernel support-map merge: entries each
@@ -888,6 +1080,7 @@ fn merge_aggregation(
     active: &[bool],
     spec: &AggSpec,
     agg_f: &mut [f64; 3],
+    mut traffic: Option<(&mut Vec<f64>, &mut Vec<f64>)>,
 ) -> (u64, u64) {
     let map_bytes = spec.entries * spec.entry_bytes;
     if map_bytes == 0 {
@@ -910,6 +1103,9 @@ fn merge_aggregation(
         for &u in rest {
             total += map_bytes;
             accumulate_access(cfg, map, leader, u, map_bytes, false, agg_f);
+            if let Some((matrix, unit_bytes)) = traffic.as_mut() {
+                accumulate_traffic(cfg, map, leader, u, map_bytes, false, matrix, unit_bytes);
+            }
             let split = split_access(cfg, map, leader, u, map_bytes, false);
             ch_cycles += startup_latency(cfg, split.dominant())
                 + map_bytes.div_ceil(cfg.link_bytes_per_cycle);
@@ -921,6 +1117,9 @@ fn merge_aggregation(
         for &l in rest {
             total += map_bytes;
             accumulate_access(cfg, map, global, l, map_bytes, false, agg_f);
+            if let Some((matrix, unit_bytes)) = traffic.as_mut() {
+                accumulate_traffic(cfg, map, global, l, map_bytes, false, matrix, unit_bytes);
+            }
             let split = split_access(cfg, map, global, l, map_bytes, false);
             stage2 += startup_latency(cfg, split.dominant())
                 + map_bytes.div_ceil(cfg.link_bytes_per_cycle);
@@ -951,7 +1150,10 @@ fn finish_sim(
     }
     // Units holding mining state = units that ran at least one task.
     let active: Vec<bool> = queues.iter().map(|q| !q.is_empty()).collect();
-    let sched = schedule(cfg, queues, opts.stealing);
+    let (sched, device_tl) = schedule_traced(cfg, queues, opts.stealing, timeline::armed());
+    if let Some(dt) = device_tl {
+        timeline::record_device(dt, sched.makespan);
+    }
 
     // -------- Congestion bounds --------
     let bank_bound = match opts.addr_map() {
@@ -968,10 +1170,21 @@ fn finish_sim(
         AddrMap::DefaultInterleave => acc.uniform_link_occ / cfg.channels as u64,
     };
 
+    let attr_on = attr::armed();
     let (agg_merge_bytes, agg_cycles) = match &agg {
-        Some(spec) => merge_aggregation(cfg, opts.addr_map(), &active, spec, &mut acc.agg_f),
+        Some(spec) => {
+            let traffic = if attr_on {
+                Some((&mut acc.chan_matrix, &mut acc.unit_bytes))
+            } else {
+                None
+            };
+            merge_aggregation(cfg, opts.addr_map(), &active, spec, &mut acc.agg_f, traffic)
+        }
         None => (0, 0),
     };
+    if attr_on {
+        attr::record_traffic(cfg.channels, &acc.chan_matrix, &acc.unit_bytes);
+    }
 
     // The merge is a barrier after the enumeration phase: its critical
     // path adds to whichever bound dominated the kernel.
@@ -983,6 +1196,8 @@ fn finish_sim(
         metrics::SIM_NEAR_BYTES.bump(acc.access_f[0].round() as u64);
         metrics::SIM_INTRA_BYTES.bump(acc.access_f[1].round() as u64);
         metrics::SIM_INTER_BYTES.bump(acc.access_f[2].round() as u64);
+        metrics::SIM_STEALS.bump(sched.steals);
+        metrics::SIM_STEAL_OVERHEAD_CYCLES.bump(2 * cfg.steal_overhead * sched.steals);
         for &busy in &sched.unit_busy {
             metrics::SIM_UNIT_BUSY.record_always(busy);
         }
@@ -1050,6 +1265,15 @@ pub fn simulate_plan(
         hubs: setup.hubs.as_ref(),
     };
     let (acc, profiles, _) = profile_pass(g, &runner, roots, opts, cfg, &setup);
+    if attr::armed() {
+        attr::record_nodes(node_stats(&acc, |i| match plan.levels.get(i) {
+            Some(lp) => format!(
+                "{}/L{} int{:?} sub{:?}",
+                plan.pattern.name, i, lp.intersect, lp.subtract
+            ),
+            None => format!("{}/L{}", plan.pattern.name, i),
+        }));
+    }
     finish_sim(roots, profiles, acc, opts, cfg, &setup, None)
 }
 
@@ -1102,6 +1326,19 @@ pub fn simulate_plans_fused(
             *a += *b;
         }
     }
+    if attr::armed() {
+        attr::record_nodes(node_stats(&acc, |i| match trie.nodes.get(i) {
+            Some(n) => format!(
+                "trie{}@d{} int{:?} sub{:?} plans{}",
+                i,
+                n.depth,
+                n.op.intersect,
+                n.op.subtract,
+                n.terminals.len()
+            ),
+            None => format!("trie{i}"),
+        }));
+    }
     let mut result = finish_sim(roots, profiles, acc, opts, cfg, &setup, None);
     result.fused_plans = trie.num_plans as u64;
     (result, per_plan)
@@ -1147,6 +1384,9 @@ pub fn simulate_motifs(
         for (a, b) in counts.iter_mut().zip(&w.counts) {
             *a += *b;
         }
+    }
+    if attr::armed() {
+        attr::record_nodes(node_stats(&acc, |_| format!("{k}-motif esu-census")));
     }
     let spec = AggSpec {
         entries: cls.num_patterns() as u64,
@@ -1260,6 +1500,12 @@ pub fn simulate_fsm(
                 .map(|(acc, _)| acc)
                 .reduce(LevelAcc::merge)
                 .unwrap_or_else(|| LevelAcc::new(candidates));
+            if attr::armed() {
+                let (level, ncands) = (self.levels.len(), candidates.len());
+                attr::record_nodes(node_stats(&acc, |_| {
+                    format!("fsm-L{level} ({ncands} cands)")
+                }));
+            }
             // MNI domains are *sets* of distinct images (counts are not
             // additive across units), so each unit ships its whole local
             // domain map. Size the merge by the merged domain

@@ -18,6 +18,7 @@
 //! event heap orders by (time, unit, sequence).
 
 use super::config::PimConfig;
+use crate::obs::timeline::DeviceTimeline;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
@@ -61,6 +62,23 @@ struct Current {
 
 /// Run the schedule. `queues[u]` is unit `u`'s initial Schedule Table.
 pub fn schedule(cfg: &PimConfig, queues: Vec<VecDeque<Piece>>, stealing: bool) -> ScheduleOutcome {
+    schedule_traced(cfg, queues, stealing, false).0
+}
+
+/// [`schedule`] with optional event recording for the `--timeline`
+/// Chrome-trace export. When `record` is true, every completed execution
+/// interval `(start_cycle, cycles)` is logged per unit and every
+/// successful steal as `(cycle, thief, victim)`. The interval start is
+/// recovered as `finish − exec`, which is invariant under the overhead
+/// adjustments `take_work` applies to an in-flight piece (both `finish`
+/// and `exec` shift by the same amount), so per-unit interval sums equal
+/// `unit_busy` exactly and intervals never overlap.
+pub fn schedule_traced(
+    cfg: &PimConfig,
+    queues: Vec<VecDeque<Piece>>,
+    stealing: bool,
+    record: bool,
+) -> (ScheduleOutcome, Option<DeviceTimeline>) {
     let n = queues.len();
     assert_eq!(n, cfg.num_units());
     let mut units: Vec<UnitState> = queues
@@ -85,6 +103,14 @@ pub fn schedule(cfg: &PimConfig, queues: Vec<VecDeque<Piece>>, stealing: bool) -
     let mut makespan = 0u64;
     let mut steals = 0u64;
     let mut failed = 0u64;
+    let mut tl = if record {
+        Some(DeviceTimeline {
+            intervals: vec![Vec::new(); n],
+            steals: Vec::new(),
+        })
+    } else {
+        None
+    };
 
     while let Some(Reverse((t, u, ver))) = heap.pop() {
         if units[u].version != ver || units[u].terminated {
@@ -95,6 +121,11 @@ pub fn schedule(cfg: &PimConfig, queues: Vec<VecDeque<Piece>>, stealing: bool) -
         if let Some(cur) = units[u].current.take() {
             debug_assert_eq!(cur.finish, t);
             units[u].busy += cur.exec;
+            if let Some(tl) = tl.as_mut() {
+                if cur.exec > 0 {
+                    tl.intervals[u].push((t.saturating_sub(cur.exec), cur.exec));
+                }
+            }
         }
         // Start the next queued piece.
         if start_next(&mut units[u], t) {
@@ -111,6 +142,9 @@ pub fn schedule(cfg: &PimConfig, queues: Vec<VecDeque<Piece>>, stealing: bool) -
         match find_victim(cfg, &units, u, t) {
             Some(victim) => {
                 steals += 1;
+                if let Some(tl) = tl.as_mut() {
+                    tl.steals.push((t, u as u32, victim as u32));
+                }
                 let overhead = cfg.steal_overhead;
                 let mut stolen = take_work(&mut units, victim, t, overhead);
                 // Thief pays overhead, then executes the first stolen
@@ -142,12 +176,15 @@ pub fn schedule(cfg: &PimConfig, queues: Vec<VecDeque<Piece>>, stealing: bool) -
         }
     }
 
-    ScheduleOutcome {
-        makespan,
-        unit_busy: units.iter().map(|s| s.busy).collect(),
-        steals,
-        failed_steals: failed,
-    }
+    (
+        ScheduleOutcome {
+            makespan,
+            unit_busy: units.iter().map(|s| s.busy).collect(),
+            steals,
+            failed_steals: failed,
+        },
+        tl,
+    )
 }
 
 fn event_time(s: &UnitState, now: u64) -> u64 {
@@ -356,6 +393,44 @@ mod tests {
         let out = schedule(&cfg, vec![VecDeque::new(); 8], true);
         assert_eq!(out.makespan, 0);
         assert_eq!(out.steals, 0);
+    }
+
+    #[test]
+    fn traced_intervals_tile_unit_busy() {
+        let cfg = tiny();
+        let mut q = vec![VecDeque::new(); 8];
+        for i in 0..48 {
+            q[i % 3].push_back(Piece {
+                cycles: 500 + (i as u64 * 313) % 3000,
+                chunks: (i as u64 % 5) + 1,
+            });
+        }
+        let (plain, none) = schedule_traced(&cfg, q.clone(), true, false);
+        assert!(none.is_none(), "record=false must not allocate a timeline");
+        let (out, tl) = schedule_traced(&cfg, q, true, true);
+        // Recording is a pure side channel: same outcome either way.
+        assert_eq!(out.makespan, plain.makespan);
+        assert_eq!(out.unit_busy, plain.unit_busy);
+        assert_eq!(out.steals, plain.steals);
+        let tl = tl.expect("record=true must return a timeline");
+        assert_eq!(tl.intervals.len(), 8);
+        assert_eq!(tl.steals.len() as u64, out.steals);
+        assert!(out.steals > 0, "workload should provoke steals");
+        for (u, ivs) in tl.intervals.iter().enumerate() {
+            let sum: u64 = ivs.iter().map(|&(_, d)| d).sum();
+            assert_eq!(sum, out.unit_busy[u], "unit {u} interval sum");
+            let mut prev_end = 0u64;
+            for &(start, dur) in ivs {
+                assert!(start >= prev_end, "unit {u} intervals overlap");
+                prev_end = start + dur;
+            }
+            assert!(prev_end <= out.makespan);
+        }
+        for &(t, thief, victim) in &tl.steals {
+            assert!(t <= out.makespan);
+            assert_ne!(thief, victim);
+            assert!((thief as usize) < 8 && (victim as usize) < 8);
+        }
     }
 
     #[test]

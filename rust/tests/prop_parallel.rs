@@ -16,7 +16,7 @@
 use pimminer::exec::cpu::{self, CpuFlavor};
 use pimminer::graph::{gen, sort_by_degree_desc, CsrGraph, HubBitmaps};
 use pimminer::mine::{self, fsm::FsmConfig};
-use pimminer::obs::{metrics, trace};
+use pimminer::obs::{attr, metrics, timeline, trace};
 use pimminer::pattern::fuse::PlanTrie;
 use pimminer::pattern::plan::application;
 use pimminer::pim::{simulate_app, PimConfig, SimOptions};
@@ -399,6 +399,74 @@ fn observability_side_channels_never_perturb_results() {
     assert!(span.num_spans() > 1, "no spans were recorded");
     let recorded: u64 = metrics::counters().iter().map(|&(_, v)| v).sum();
     assert!(recorded > 0, "instrumented paths recorded nothing");
+}
+
+/// The device timeline and attribution collectors (DESIGN.md §14) are
+/// write-only too, and what they record obeys the scheduler's
+/// accounting: with both armed, every `SimResult` stays bit-identical
+/// to the disarmed baseline at every worker count; per-unit busy
+/// intervals never overlap and their durations sum exactly to that
+/// unit's reported busy cycles (cursor-offset across passes); and the
+/// per-node cycle ledger plus the 2×overhead-per-steal surcharge
+/// reproduces the scheduler's total busy time to the cycle.
+#[test]
+fn timeline_and_attribution_are_neutral_and_tile_unit_busy() {
+    prop::check("obs-timeline-attr-neutrality", 0xE5, 6, |rng| {
+        let g = random_graph(rng);
+        let roots = cpu::sampled_roots(g.num_vertices(), 1.0);
+        let cfg = PimConfig::default();
+        let app = application(["3-CC", "4-CC", "4-MC"][rng.below_usize(3)]).unwrap();
+        let opts = SimOptions {
+            fused: rng.chance(0.5),
+            stealing: rng.chance(0.5),
+            chunk: rng.chance(0.5).then(|| rng.range(1, 48) as usize),
+            threads: Some(1),
+            ..SimOptions::all()
+        };
+        let base = format!("{:?}", simulate_app(&g, &app, &roots, &opts, &cfg));
+        for t in THREADS {
+            let pinned = SimOptions {
+                threads: Some(t),
+                ..opts
+            };
+            timeline::begin();
+            attr::begin();
+            let r = simulate_app(&g, &app, &roots, &pinned, &cfg);
+            let tl = timeline::finish().expect("timeline armed");
+            let a = attr::finish().expect("attribution armed");
+            assert_eq!(
+                format!("{r:?}"),
+                base,
+                "{} SimResult moved with timeline+attr armed at {t} threads",
+                app.name
+            );
+            assert!(tl.device_passes >= 1, "no scheduling pass recorded");
+            assert_eq!(tl.units.len(), r.unit_busy.len());
+            for (u, iv) in tl.units.iter().enumerate() {
+                let mut prev_end = 0u64;
+                let mut sum = 0u64;
+                for &(start, dur) in iv {
+                    assert!(start >= prev_end, "unit {u} intervals overlap at {t} threads");
+                    assert!(dur > 0, "unit {u} recorded an empty interval");
+                    prev_end = start + dur;
+                    sum += dur;
+                }
+                assert_eq!(sum, r.unit_busy[u], "unit {u} interval sum at {t} threads");
+            }
+            let busy: u64 = r.unit_busy.iter().sum();
+            assert_eq!(
+                a.total_cycles() + 2 * cfg.steal_overhead * r.steals,
+                busy,
+                "attribution cycle ledger diverged at {t} threads"
+            );
+            // Chunk claims come from the armed profiling pass: spans must
+            // stay inside the root order and workers inside the pool.
+            for c in &tl.claims {
+                assert!(c.lo < c.hi && c.hi <= roots.len());
+                assert!(c.worker < t, "claim from worker {} of {t}", c.worker);
+            }
+        }
+    });
 }
 
 /// Registry sharding under real contention: every worker bumps the same

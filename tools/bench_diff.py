@@ -1,0 +1,158 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_*.json documents and gate on regressions.
+
+The bench harness (rust/src/bench.rs) writes schema-v2 session
+documents: ``{bench, quick, meta:{schema_version, threads, ...},
+timings:[{label, mean_s, stddev_s, iters}], metrics:[{label, value}]}``.
+This tool diffs an old (baseline) and a new (candidate) document:
+
+* every timing present in both is compared by mean; a regression is
+  ``new_mean > old_mean * (1 + threshold)`` (default 10%, set with
+  ``--timing-threshold PCT``);
+* metrics are informational by default — pass ``--metric LABEL=PCT``
+  (repeatable) to gate a specific metric, where a *drop* beyond PCT
+  regresses for higher-is-better metrics and ``--metric LABEL=-PCT``
+  gates a *rise* instead (for lower-is-better metrics);
+* labels present on only one side are reported but never gate (benches
+  gain and lose cases across PRs).
+
+Exit status: 0 when clean (or ``--warn-only``), 1 on any regression,
+2 on malformed input. Stdlib only — no third-party imports.
+
+Usage:
+  python3 tools/bench_diff.py OLD.json NEW.json \
+      [--timing-threshold 10] [--metric LABEL=PCT ...] [--warn-only]
+"""
+
+import argparse
+import json
+import sys
+
+
+def die(msg):
+    print(f"bench_diff: {msg}", file=sys.stderr)
+    sys.exit(2)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        die(f"cannot read {path}: {e}")
+    for key in ("bench", "timings", "metrics"):
+        if key not in doc:
+            die(f"{path}: missing '{key}' (not a bench session document?)")
+    version = doc.get("meta", {}).get("schema_version")
+    if version != 2:
+        die(f"{path}: unsupported schema_version {version!r} (want 2)")
+    return doc
+
+
+def by_label(rows, value_key):
+    out = {}
+    for row in rows:
+        out[row["label"]] = row[value_key]
+    return out
+
+
+def fmt_s(seconds):
+    if seconds >= 1.0:
+        return f"{seconds:.3f}s"
+    if seconds >= 1e-3:
+        return f"{seconds * 1e3:.3f}ms"
+    return f"{seconds * 1e6:.3f}us"
+
+
+def parse_metric_specs(specs):
+    gates = {}
+    for spec in specs or []:
+        label, sep, pct = spec.rpartition("=")
+        if not sep or not label:
+            die(f"bad --metric spec '{spec}' (want LABEL=PCT)")
+        try:
+            gates[label] = float(pct)
+        except ValueError:
+            die(f"bad --metric threshold in '{spec}'")
+    return gates
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old", help="baseline BENCH_*.json")
+    ap.add_argument("new", help="candidate BENCH_*.json")
+    ap.add_argument("--timing-threshold", type=float, default=10.0, metavar="PCT",
+                    help="allowed mean-time growth per timing (default 10%%)")
+    ap.add_argument("--metric", action="append", metavar="LABEL=PCT",
+                    help="gate a metric: PCT>0 bounds a drop (higher-is-better), "
+                         "PCT<0 bounds a rise (lower-is-better)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but always exit 0")
+    args = ap.parse_args()
+
+    old_doc, new_doc = load(args.old), load(args.new)
+    if old_doc["bench"] != new_doc["bench"]:
+        print(f"bench_diff: note: comparing different sessions "
+              f"'{old_doc['bench']}' vs '{new_doc['bench']}'")
+    if old_doc.get("quick") != new_doc.get("quick"):
+        print("bench_diff: note: quick-mode flags differ — timings are not comparable iteration counts")
+
+    regressions = []
+    timing_limit = args.timing_threshold / 100.0
+
+    old_t = by_label(old_doc["timings"], "mean_s")
+    new_t = by_label(new_doc["timings"], "mean_s")
+    for label in sorted(old_t.keys() | new_t.keys()):
+        if label not in old_t:
+            print(f"  NEW        timing {label}: {fmt_s(new_t[label])} (no baseline)")
+            continue
+        if label not in new_t:
+            print(f"  DROPPED    timing {label}: baseline {fmt_s(old_t[label])}")
+            continue
+        old_v, new_v = old_t[label], new_t[label]
+        ratio = new_v / old_v if old_v > 0 else float("inf")
+        delta = (ratio - 1.0) * 100.0
+        status = "ok"
+        if old_v > 0 and ratio > 1.0 + timing_limit:
+            status = "REGRESSION"
+            regressions.append(f"timing {label}: {fmt_s(old_v)} -> {fmt_s(new_v)} "
+                               f"(+{delta:.1f}% > {args.timing_threshold:.1f}%)")
+        print(f"  {status:<11}timing {label}: {fmt_s(old_v)} -> {fmt_s(new_v)} ({delta:+.1f}%)")
+
+    gates = parse_metric_specs(args.metric)
+    old_m = by_label(old_doc["metrics"], "value")
+    new_m = by_label(new_doc["metrics"], "value")
+    for label in sorted(old_m.keys() | new_m.keys()):
+        if label not in old_m or label not in new_m:
+            side = "no baseline" if label not in old_m else "dropped"
+            print(f"  NOTE       metric {label}: {side}")
+            continue
+        old_v, new_v = old_m[label], new_m[label]
+        delta = ((new_v / old_v) - 1.0) * 100.0 if old_v else 0.0
+        status = "ok"
+        if label in gates:
+            pct = gates[label]
+            if pct >= 0 and delta < -pct:
+                status = "REGRESSION"
+                regressions.append(f"metric {label}: {old_v:.3f} -> {new_v:.3f} "
+                                   f"({delta:+.1f}% drop > {pct:.1f}%)")
+            elif pct < 0 and delta > -pct:
+                status = "REGRESSION"
+                regressions.append(f"metric {label}: {old_v:.3f} -> {new_v:.3f} "
+                                   f"({delta:+.1f}% rise > {-pct:.1f}%)")
+        print(f"  {status:<11}metric {label}: {old_v:.3f} -> {new_v:.3f} ({delta:+.1f}%)")
+
+    if regressions:
+        print(f"\nbench_diff: {len(regressions)} regression(s):")
+        for r in regressions:
+            print(f"  {r}")
+        if args.warn_only:
+            print("bench_diff: --warn-only set, exiting 0")
+            return 0
+        return 1
+    print("\nbench_diff: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
