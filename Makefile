@@ -15,16 +15,19 @@ test:
 # PIMMINER_BENCH_QUICK=1 trims iteration counts, PIMMINER_THREADS=<n>
 # pins the worker count for reproducible runs on shared machines. The
 # trailing invocations refresh the machine-readable perf trajectory
-# seeds (BENCH_micro.json, BENCH_fusion.json, and BENCH_parallel.json
-# at the repo root); every document carries a meta block
-# (schema_version 2: threads, host cores, per-bench config — DESIGN.md
-# §13) so runs from different machines/configs are distinguishable.
-# The parallel bench also gates the observability overhead budget.
+# seeds (BENCH_micro.json, BENCH_fusion.json, BENCH_parallel.json, and
+# BENCH_faults.json at the repo root); every document carries a meta
+# block (schema_version 2: threads, host cores, per-bench config —
+# DESIGN.md §13) so runs from different machines/configs are
+# distinguishable. The parallel bench also gates the observability
+# overhead and zero-fault overhead budgets; the faults bench reports
+# recovery overhead vs fault rate (DESIGN.md §15).
 bench:
 	cargo bench
 	cargo bench --bench perf_micro -- --json
 	cargo bench --bench fusion -- --json
 	cargo bench --bench parallel -- --json
+	cargo bench --bench faults -- --json
 
 # Regression gate over two bench sessions (tools/bench_diff.py): fails
 # when any shared timing regresses beyond the threshold (default 10%).

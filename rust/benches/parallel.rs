@@ -14,6 +14,7 @@ use pimminer::graph::{gen, sort_by_degree_desc};
 use pimminer::obs::metrics;
 use pimminer::pattern::fuse::PlanTrie;
 use pimminer::pattern::plan::application;
+use pimminer::pim::{simulate_app_checked, FaultSpec, PimConfig, SimOptions};
 use pimminer::report::{self, Table};
 use pimminer::util::ws;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -173,6 +174,52 @@ fn main() {
             ratio <= 1.5,
             "enabled observability slowed the fused run {ratio:.2}x (budget 1.5x)"
         );
+    }
+
+    // Zero-fault overhead gate (DESIGN.md §15): a benign fault spec
+    // (no fail-stop, transient p = 0) must ride the fault-free fast
+    // path — the whole SimResult bit-identical to `faults: None`, and
+    // min-of-N wall time within 1.05×. Wall assert only in full mode;
+    // quick mode's runs are too short to measure a 5% band honestly.
+    {
+        let app = application("3-CC").unwrap();
+        let cfg = PimConfig::default();
+        let sim_roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+        let clean_opts = SimOptions {
+            threads: Some(cores.min(4)),
+            ..SimOptions::all()
+        };
+        let benign_opts = SimOptions {
+            faults: Some(FaultSpec::default()),
+            ..clean_opts
+        };
+        let reps = if bench.quick() { 3 } else { 5 };
+        let min_wall = |opts: &SimOptions| {
+            let mut best = f64::INFINITY;
+            let mut out = None;
+            for _ in 0..reps {
+                let t0 = std::time::Instant::now();
+                let r = simulate_app_checked(&g, &app, &sim_roots, opts, &cfg).unwrap();
+                best = best.min(t0.elapsed().as_secs_f64());
+                out = Some(r);
+            }
+            (best, out.unwrap())
+        };
+        let (t_clean, r_clean) = min_wall(&clean_opts);
+        let (t_benign, r_benign) = min_wall(&benign_opts);
+        assert_eq!(
+            format!("{r_benign:?}"),
+            format!("{r_clean:?}"),
+            "benign fault spec perturbed the simulation result"
+        );
+        let ratio = t_benign / t_clean;
+        bench.metric("zero_fault_overhead", ratio, "x");
+        if !bench.quick() {
+            assert!(
+                ratio <= 1.05,
+                "benign fault plumbing costs {ratio:.3}x wall time, budget is 1.05x"
+            );
+        }
     }
 
     table.print();

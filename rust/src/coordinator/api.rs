@@ -26,12 +26,14 @@ use crate::graph::{CsrGraph, HubBitmaps, VertexId};
 use crate::mine::fsm::{FsmConfig, FsmResult};
 use crate::pattern::plan::Application;
 use crate::pim::config::PimConfig;
+use crate::pim::fault::FaultError;
 use crate::pim::filter::Cmp;
 use crate::pim::placement::Placement;
 use crate::pim::sim::{
-    build_placement, simulate_app, simulate_fsm, simulate_motifs, MotifSimResult, SimOptions,
-    SimResult,
+    build_placement, simulate_app_checked, simulate_fsm_checked, simulate_motifs_checked,
+    MotifSimResult, SimOptions, SimResult,
 };
+use crate::util::ws;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::path::Path;
@@ -62,6 +64,8 @@ pub struct PimMiner {
     opts: SimOptions,
     device: PimDevice,
     loaded: Option<LoadedGraph>,
+    timeout_ms: Option<u64>,
+    max_memory_mb: Option<u64>,
 }
 
 impl PimMiner {
@@ -75,7 +79,31 @@ impl PimMiner {
             opts,
             device,
             loaded: None,
+            timeout_ms: None,
+            max_memory_mb: None,
         }
+    }
+
+    /// Configure per-query execution budgets (DESIGN.md §15): a
+    /// wall-clock timeout and/or a resident-set ceiling. Each query
+    /// entry point installs the budget for its duration and returns a
+    /// typed [`FaultError`] (`Timeout` / `MemoryBudget`, exit code 3)
+    /// instead of a partial result when it trips. `None` disables the
+    /// respective limit.
+    pub fn set_budget(&mut self, timeout_ms: Option<u64>, max_memory_mb: Option<u64>) {
+        self.timeout_ms = timeout_ms;
+        self.max_memory_mb = max_memory_mb;
+    }
+
+    /// Run one query under this miner's budget: install the process-wide
+    /// limits, execute, and surface the typed fault error. The guard
+    /// clears the budget on every exit path. With no budget configured
+    /// nothing is installed, so an ambient budget (e.g. the CLI's
+    /// `--timeout-ms`) stays in force.
+    fn budgeted<T>(&self, run: impl FnOnce() -> Result<T, FaultError>) -> Result<T> {
+        let _guard = (self.timeout_ms.is_some() || self.max_memory_mb.is_some())
+            .then(|| ws::set_budget(self.timeout_ms, self.max_memory_mb));
+        Ok(run()?)
     }
 
     pub fn config(&self) -> &PimConfig {
@@ -206,13 +234,13 @@ impl PimMiner {
     pub fn pattern_count(&self, app: &Application, sample_ratio: f64) -> Result<SimResult> {
         let loaded = self.require_loaded("PIMPatternCount")?;
         let roots = sampled_roots(loaded.graph.num_vertices(), sample_ratio);
-        Ok(simulate_app(&loaded.graph, app, &roots, &self.opts, &self.cfg))
+        self.budgeted(|| simulate_app_checked(&loaded.graph, app, &roots, &self.opts, &self.cfg))
     }
 
     /// `LaunchPIMKernel`-style generic launch over explicit roots.
     pub fn launch(&self, app: &Application, roots: &[VertexId]) -> Result<SimResult> {
         let loaded = self.require_loaded("LaunchPIMKernel")?;
-        Ok(simulate_app(&loaded.graph, app, roots, &self.opts, &self.cfg))
+        self.budgeted(|| simulate_app_checked(&loaded.graph, app, roots, &self.opts, &self.cfg))
     }
 
     /// `PIMMotifCount` (DESIGN.md §8): one-pass census of every connected
@@ -223,7 +251,9 @@ impl PimMiner {
     pub fn motif_count(&self, k: usize, sample_ratio: f64) -> Result<MotifSimResult> {
         let loaded = self.require_loaded("PIMMotifCount")?;
         let roots = sampled_roots(loaded.graph.num_vertices(), sample_ratio);
-        Ok(simulate_motifs(&loaded.graph, k, &roots, &self.opts, &self.cfg))
+        self.budgeted(|| {
+            simulate_motifs_checked(&loaded.graph, k, &roots, &self.opts, &self.cfg)
+        })
     }
 
     /// `PIMFrequentMine` (DESIGN.md §8): BFS edge-extension FSM with
@@ -231,7 +261,7 @@ impl PimMiner {
     /// domain maps are the aggregation state the fabric must merge.
     pub fn frequent_mine(&self, fsm: &FsmConfig) -> Result<(FsmResult, SimResult)> {
         let loaded = self.require_loaded("PIMFrequentMine")?;
-        Ok(simulate_fsm(&loaded.graph, fsm, &self.opts, &self.cfg))
+        self.budgeted(|| simulate_fsm_checked(&loaded.graph, fsm, &self.opts, &self.cfg))
     }
 
     fn require_loaded(&self, what: &str) -> Result<&LoadedGraph> {
@@ -393,6 +423,50 @@ mod tests {
         assert!(plain.loaded().unwrap().hub_bitmaps.is_none());
         assert_eq!(r.count, plain.pattern_count(&app, 1.0).unwrap().count);
         assert!(r.bitmap_words > 0, "hub roots must hit the dense path");
+    }
+
+    #[test]
+    fn recoverable_fault_plan_preserves_counts_via_api() {
+        use crate::pim::fault::FaultSpec;
+        let app = application("3-CC").unwrap();
+        let mut clean = PimMiner::new(tiny_cfg(), SimOptions::all());
+        clean.load_graph(graph()).unwrap();
+        let want = clean.pattern_count(&app, 1.0).unwrap().count;
+        // tiny cfg fully duplicates the 600-vertex graph, so losing unit 0
+        // at cycle 0 is recoverable: replicas serve its data and recovery
+        // steals re-dispatch its queue.
+        let mut opts = SimOptions::all();
+        opts.faults = Some(FaultSpec {
+            seed: 7,
+            fail_stop: Some((0, 0)),
+            transient: 0.0,
+        });
+        let mut faulty = PimMiner::new(tiny_cfg(), opts);
+        faulty.load_graph(graph()).unwrap();
+        let r = faulty.pattern_count(&app, 1.0).unwrap();
+        assert_eq!(r.count, want, "recovery must not change counts");
+        assert!(r.faults_injected >= 1);
+        assert!(r.recovery_steals >= 1);
+    }
+
+    #[test]
+    fn unrecoverable_fault_plan_is_a_typed_error() {
+        use crate::pim::fault::FaultSpec;
+        // BASELINE places no replicas: losing a unit strands the vertices
+        // it owns, which the pre-flight check rejects with exit code 4.
+        let mut opts = SimOptions::BASELINE;
+        opts.faults = Some(FaultSpec {
+            seed: 1,
+            fail_stop: Some((0, 0)),
+            transient: 0.0,
+        });
+        let mut m = PimMiner::new(tiny_cfg(), opts);
+        m.load_graph(graph()).unwrap();
+        let app = application("3-CC").unwrap();
+        let err = m.pattern_count(&app, 1.0).unwrap_err();
+        let fe = err.downcast_ref::<FaultError>().expect("typed FaultError");
+        assert!(matches!(fe, FaultError::UnrecoverableUnitLoss { unit: 0, .. }), "{fe}");
+        assert_eq!(fe.exit_code(), 4);
     }
 
     #[test]

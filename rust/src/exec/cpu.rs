@@ -25,6 +25,15 @@
 //!
 //! The absolute times are machine-local; Table 5's reproduction target is
 //! the *relative* shape (see DESIGN.md §2).
+//!
+//! **Cancellation** (DESIGN.md §15): every executor here runs on
+//! [`ws::run_chunks`]/[`ws::run_tasks`], which poll the process-wide
+//! budget (`--timeout-ms` / `--max-memory-mb`) between tasks and drain
+//! cooperatively once it trips. A drained run returns a *partial*
+//! count, so callers that surface results must gate on
+//! [`fault::check_budget`](crate::pim::fault::check_budget) and refuse
+//! to report when the budget tripped (the CLI does; the simulator's
+//! checked entry points do it internally).
 
 use super::enumerate::{Enumerator, MultiEnumerator, NullSink, ParallelSink};
 use crate::graph::{CsrGraph, HubBitmaps, VertexId};

@@ -141,8 +141,13 @@ impl CsrGraph {
 
     /// Validate the CSR invariants the rest of the system depends on:
     /// monotone row_ptr, sorted + deduplicated neighbor lists, no
-    /// self-loops, and symmetry (b ∈ N(a) ⇔ a ∈ N(b)).
+    /// self-loops, and symmetry (b ∈ N(a) ⇔ a ∈ N(b)). Total — returns
+    /// `Err` on any malformed input, never panics — so the loaders can
+    /// gate untrusted files on it (`graph::io`).
     pub fn check_invariants(&self) -> Result<(), String> {
+        if self.row_ptr.is_empty() {
+            return Err("row_ptr is empty (needs |V|+1 entries)".into());
+        }
         let n = self.num_vertices();
         if self.row_ptr[0] != 0 {
             return Err("row_ptr[0] != 0".into());
@@ -158,6 +163,9 @@ impl CsrGraph {
         for v in 0..n {
             if self.row_ptr[v + 1] < self.row_ptr[v] {
                 return Err(format!("row_ptr not monotone at {v}"));
+            }
+            if self.row_ptr[v + 1] as usize > self.col_idx.len() {
+                return Err(format!("row_ptr[{}] overruns col_idx", v + 1));
             }
             let ns = self.neighbors(v as VertexId);
             for w in ns.windows(2) {

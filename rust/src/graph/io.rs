@@ -45,11 +45,21 @@ pub fn write_csr(g: &CsrGraph, path: &Path) -> Result<()> {
 }
 
 /// Read the whole binary CSR file (either magic).
+///
+/// Hostile-input hardened: the header's declared sizes are validated
+/// against the real file length *before* any sized allocation, and the
+/// resulting graph must pass [`CsrGraph::check_invariants`] — a corrupt
+/// or truncated file yields `Err`, never a panic, a wrong graph, or a
+/// huge speculative allocation.
 pub fn read_csr(path: &Path) -> Result<CsrGraph> {
     let file = std::fs::File::open(path)
         .with_context(|| format!("open {}", path.display()))?;
+    let file_len = file
+        .metadata()
+        .with_context(|| format!("stat {}", path.display()))?
+        .len();
     let mut r = BufReader::new(file);
-    let header = read_csr_header(&mut r)?;
+    let header = read_csr_header(&mut r, file_len)?;
     let row_ptr = read_u64s(&mut r, header.n + 1)?;
     let col_idx = read_u32s(&mut r, header.nnz)?;
     let labels = if header.labeled {
@@ -71,9 +81,14 @@ pub fn read_csr(path: &Path) -> Result<CsrGraph> {
 pub fn read_csr_row_ptr(path: &Path) -> Result<(usize, Vec<u64>)> {
     let file = std::fs::File::open(path)
         .with_context(|| format!("open {}", path.display()))?;
+    let file_len = file
+        .metadata()
+        .with_context(|| format!("stat {}", path.display()))?
+        .len();
     let mut r = BufReader::new(file);
-    let header = read_csr_header(&mut r)?;
+    let header = read_csr_header(&mut r, file_len)?;
     let row_ptr = read_u64s(&mut r, header.n + 1)?;
+    check_row_ptr(&row_ptr, header.nnz)?;
     Ok((header.n, row_ptr))
 }
 
@@ -91,9 +106,14 @@ impl NeighborListReader {
     pub fn open(path: &Path) -> Result<Self> {
         let file = std::fs::File::open(path)
             .with_context(|| format!("open {}", path.display()))?;
+        let file_len = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
         let mut reader = BufReader::new(file);
-        let header = read_csr_header(&mut reader)?;
+        let header = read_csr_header(&mut reader, file_len)?;
         let row_ptr = read_u64s(&mut reader, header.n + 1)?;
+        check_row_ptr(&row_ptr, header.nnz)?;
         Ok(NeighborListReader {
             reader,
             row_ptr,
@@ -170,7 +190,9 @@ pub fn read_edge_list(path: &Path) -> Result<CsrGraph> {
     if edges.is_empty() {
         bail!("no edges in {}", path.display());
     }
-    Ok(CsrGraph::from_edges(max_id as usize + 1, &edges))
+    let g = CsrGraph::from_edges(max_id as usize + 1, &edges);
+    g.check_invariants().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(g)
 }
 
 /// Write a text edge list (each undirected edge once, `a < b`).
@@ -194,9 +216,13 @@ struct CsrHeader {
     labeled: bool,
 }
 
-fn read_csr_header(r: &mut impl Read) -> Result<CsrHeader> {
+/// Parse and validate the fixed header. `file_len` is the real on-disk
+/// size: the declared `|V|`/`|adj|` must account (in checked arithmetic)
+/// for exactly the bytes present, so a corrupt, truncated, or hostile
+/// header is rejected *before* it can size an allocation.
+fn read_csr_header(r: &mut impl Read, file_len: u64) -> Result<CsrHeader> {
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
+    r.read_exact(&mut magic).context("read magic")?;
     let labeled = if &magic == MAGIC {
         false
     } else if &magic == MAGIC_LABELED {
@@ -205,29 +231,84 @@ fn read_csr_header(r: &mut impl Read) -> Result<CsrHeader> {
         bail!("bad magic: not a PIMCSR01/PIMCSR02 file");
     };
     let mut buf = [0u8; 8];
-    r.read_exact(&mut buf)?;
-    let n = u64::from_le_bytes(buf) as usize;
-    r.read_exact(&mut buf)?;
-    let nnz = u64::from_le_bytes(buf) as usize;
-    Ok(CsrHeader { n, nnz, labeled })
+    r.read_exact(&mut buf).context("read vertex count")?;
+    let n = u64::from_le_bytes(buf);
+    r.read_exact(&mut buf).context("read adjacency length")?;
+    let nnz = u64::from_le_bytes(buf);
+    if n > VertexId::MAX as u64 {
+        bail!("header declares |V|={n}, beyond the u32 vertex-id space");
+    }
+    let expected = (|| {
+        let row_ptr = n.checked_add(1)?.checked_mul(8)?;
+        let col_idx = nnz.checked_mul(4)?;
+        let labels = if labeled { n.checked_mul(4)? } else { 0 };
+        24u64
+            .checked_add(row_ptr)?
+            .checked_add(col_idx)?
+            .checked_add(labels)
+    })()
+    .ok_or_else(|| anyhow::anyhow!("header sizes |V|={n} |adj|={nnz} overflow"))?;
+    if expected != file_len {
+        bail!(
+            "header declares |V|={n} |adj|={nnz} ({expected} bytes{}) but the file \
+             is {file_len} bytes",
+            if labeled { ", labeled" } else { "" }
+        );
+    }
+    Ok(CsrHeader {
+        n: n as usize,
+        nnz: nnz as usize,
+        labeled,
+    })
+}
+
+/// RowPtr must start at 0, be monotone non-decreasing, and end exactly at
+/// the declared adjacency length — otherwise the per-vertex list lengths
+/// derived from its differences would underflow into huge reads.
+fn check_row_ptr(row_ptr: &[u64], nnz: usize) -> Result<()> {
+    if row_ptr.first() != Some(&0) {
+        bail!("corrupt RowPtr: does not start at 0");
+    }
+    if let Some(w) = row_ptr.windows(2).position(|w| w[0] > w[1]) {
+        bail!("corrupt RowPtr: decreases at vertex {w}");
+    }
+    if row_ptr.last() != Some(&(nnz as u64)) {
+        bail!(
+            "corrupt RowPtr: ends at {} but the header declares |adj|={nnz}",
+            row_ptr.last().copied().unwrap_or(0)
+        );
+    }
+    Ok(())
 }
 
 fn read_u64s(r: &mut impl Read, count: usize) -> Result<Vec<u64>> {
-    let mut bytes = vec![0u8; count * 8];
-    r.read_exact(&mut bytes)?;
-    Ok(bytes
-        .chunks_exact(8)
-        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
-        .collect())
+    let len = count
+        .checked_mul(8)
+        .ok_or_else(|| anyhow::anyhow!("u64 section of {count} entries overflows"))?;
+    let mut bytes = vec![0u8; len];
+    r.read_exact(&mut bytes).context("file truncated")?;
+    let mut out = Vec::with_capacity(count);
+    for c in bytes.chunks_exact(8) {
+        let mut word = [0u8; 8];
+        word.copy_from_slice(c);
+        out.push(u64::from_le_bytes(word));
+    }
+    Ok(out)
 }
 
 fn read_u32s(r: &mut impl Read, count: usize) -> Result<Vec<u32>> {
-    let mut bytes = vec![0u8; count * 4];
-    r.read_exact(&mut bytes)?;
-    Ok(bytes
-        .chunks_exact(4)
-        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
-        .collect())
+    let len = count
+        .checked_mul(4)
+        .ok_or_else(|| anyhow::anyhow!("u32 section of {count} entries overflows"))?;
+    let mut bytes = vec![0u8; len];
+    r.read_exact(&mut bytes).context("file truncated")?;
+    let mut out = Vec::with_capacity(count);
+    for c in bytes.chunks_exact(4) {
+        let mut word = [0u8; 4];
+        word.copy_from_slice(c);
+        out.push(u32::from_le_bytes(word));
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -312,5 +393,79 @@ mod tests {
         let p = tmp("bad.csr");
         std::fs::write(&p, b"NOTMAGIC________").unwrap();
         assert!(read_csr(&p).is_err());
+    }
+
+    #[test]
+    fn truncation_always_rejected() {
+        let g = gen::erdos_renyi(40, 120, 3);
+        let p = tmp("trunc_src.csr");
+        write_csr(&g, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let q = tmp("trunc_cut.csr");
+        for cut in [0, 7, 10, 23, 24, 40, bytes.len() / 2, bytes.len() - 1] {
+            std::fs::write(&q, &bytes[..cut]).unwrap();
+            assert!(read_csr(&q).is_err(), "cut at {cut} must fail");
+            assert!(read_csr_row_ptr(&q).is_err(), "cut at {cut} must fail");
+            assert!(NeighborListReader::open(&q).is_err(), "cut at {cut} must fail");
+        }
+        // trailing garbage is a size mismatch, not a silent ignore
+        let mut padded = bytes.clone();
+        padded.extend_from_slice(&[0u8; 9]);
+        std::fs::write(&q, &padded).unwrap();
+        assert!(read_csr(&q).is_err(), "trailing bytes must fail");
+    }
+
+    #[test]
+    fn hostile_header_fails_fast_without_allocating() {
+        let q = tmp("hostile.csr");
+        // |V| = u64::MAX: rejected on the vertex-id-space bound
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&q, &bytes).unwrap();
+        assert!(read_csr(&q).is_err());
+        assert!(NeighborListReader::open(&q).is_err());
+        // |V| small but |adj| = u64::MAX: the checked size arithmetic
+        // overflows before any allocation could be sized from it
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&8u64.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&q, &bytes).unwrap();
+        assert!(read_csr(&q).is_err());
+        // plausible-but-wrong sizes against a tiny file: length mismatch
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1_000_000u64.to_le_bytes());
+        bytes.extend_from_slice(&4_000_000u64.to_le_bytes());
+        std::fs::write(&q, &bytes).unwrap();
+        assert!(read_csr(&q).is_err());
+    }
+
+    #[test]
+    fn corrupt_row_ptr_rejected_by_both_loaders() {
+        let g = gen::erdos_renyi(30, 90, 1);
+        let p = tmp("rowptr_corrupt.csr");
+        write_csr(&g, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // row_ptr[1] lives at byte 32 (8 magic + 16 header + 8 for
+        // row_ptr[0]); an enormous value must not drive a huge read
+        bytes[32..40].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_csr(&p).is_err());
+        assert!(read_csr_row_ptr(&p).is_err());
+        assert!(NeighborListReader::open(&p).is_err());
+    }
+
+    #[test]
+    fn edge_list_output_is_validated() {
+        // the text loader gates on check_invariants like the binary one
+        let p = tmp("valid_edges.txt");
+        std::fs::write(&p, "0 1\n1 2\n2 0\n").unwrap();
+        assert!(read_edge_list(&p).unwrap().check_invariants().is_ok());
+        let q = tmp("junk_edges.txt");
+        std::fs::write(&q, "0 x\n").unwrap();
+        assert!(read_edge_list(&q).is_err());
     }
 }

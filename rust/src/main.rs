@@ -24,6 +24,7 @@
 //! discover patterns instead of counting a pre-compiled one, and on the
 //! PIM path report the support-aggregation traffic breakdown.
 
+use anyhow::{anyhow, bail, Context, Result};
 use pimminer::coordinator::PimMiner;
 use pimminer::datasets;
 use pimminer::exec::brute_force_count;
@@ -37,19 +38,28 @@ use pimminer::pattern::fuse::PlanTrie;
 use pimminer::pattern::motif::connected_motifs;
 use pimminer::pattern::plan::{application, Plan};
 use pimminer::pim::{
-    simulate_fsm, simulate_motifs, simulate_plan, simulate_plans_fused, PimConfig, SimOptions,
-    SimResult,
+    fault, simulate_app_checked, simulate_fsm_checked, simulate_motifs_checked,
+    simulate_plan_checked, simulate_plans_fused_checked, FaultError, FaultSpec, PimConfig,
+    SimOptions, SimResult,
 };
 use pimminer::report::{self, json, Table};
 use pimminer::util::cli::Args;
 use pimminer::util::threads;
+use pimminer::util::ws;
 use pimminer::{obs_error, obs_info};
+use std::sync::Mutex;
 
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    let (timeout_ms, max_memory_mb) = budget_args(&args);
+    // Global budget for the whole command — every work-stealing pool
+    // (host executors and the simulator's profiling pass) polls it and
+    // drains cooperatively once tripped; the entry points then surface
+    // the typed FaultError mapped to exit code 3 below.
+    let _budget = ws::set_budget(timeout_ms, max_memory_mb);
     begin_observability(&args, cmd);
-    match cmd {
+    let result = match cmd {
         "generate" => generate(&args),
         "count" => count(&args),
         "motifs" => motifs(&args),
@@ -59,10 +69,78 @@ fn main() {
         "verify" => verify(&args),
         "ladder" => ladder(&args),
         "explain" => explain(&args),
-        "info" => info(),
-        _ => help(),
+        "info" => {
+            info();
+            Ok(())
+        }
+        _ => {
+            help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        fail(&e);
     }
     finish_observability(&args, cmd);
+}
+
+/// Report a command failure and exit with its documented code (README
+/// "exit codes"): 2 = bad input, 3 = tripped `--timeout-ms` /
+/// `--max-memory-mb` budget, 4 = unrecoverable injected fault. No
+/// partial results are printed on the error path — callers return
+/// before their reporting code.
+fn fail(e: &anyhow::Error) -> ! {
+    obs_error!("{e:#}");
+    let code = e.downcast_ref::<FaultError>().map_or(2, FaultError::exit_code);
+    std::process::exit(code);
+}
+
+/// Parse `--timeout-ms` / `--max-memory-mb`; malformed values are bad
+/// input (exit 2) before any work starts.
+fn budget_args(args: &Args) -> (Option<u64>, Option<u64>) {
+    let parse = |flag: &str| {
+        args.get(flag).map(|v| {
+            v.parse::<u64>().unwrap_or_else(|_| {
+                obs_error!("--{flag} must be a non-negative integer of ms/MB, got '{v}'");
+                std::process::exit(2);
+            })
+        })
+    };
+    (parse("timeout-ms"), parse("max-memory-mb"))
+}
+
+/// Parse `--faults seed=N,fail=UNIT@CYCLE,transient=P` (DESIGN.md §15);
+/// a malformed spec is bad input (exit 2).
+fn faults_arg(args: &Args) -> Option<FaultSpec> {
+    args.get("faults").map(|s| match FaultSpec::parse(s) {
+        Ok(spec) => spec,
+        Err(e) => {
+            obs_error!("{e}");
+            std::process::exit(2);
+        }
+    })
+}
+
+/// Availability telemetry from the last faulty device run, picked up by
+/// `finish_observability` for the `--trace-json` document.
+static AVAILABILITY: Mutex<Option<obs::Availability>> = Mutex::new(None);
+
+/// Record the availability block after a successful simulation under
+/// `--faults` — how much was injected and what recovery cost.
+fn record_availability(args: &Args, cfg: &PimConfig, r: &SimResult) {
+    let Some(spec) = faults_arg(args) else {
+        return;
+    };
+    let block = obs::Availability {
+        spec: spec.to_string(),
+        units_total: cfg.num_units() as u64,
+        units_failed: u64::from(spec.fail_stop.is_some()),
+        faults_injected: r.faults_injected,
+        retries: r.retries,
+        recovery_steals: r.recovery_steals,
+        backoff_cycles: r.backoff_cycles,
+    };
+    *AVAILABILITY.lock().unwrap() = Some(block);
 }
 
 /// Whether any query observability surface is armed for this run:
@@ -135,14 +213,30 @@ fn finish_observability(args: &Args, cmd: &str) {
     }
     if let Some(path) = args.get("trace-json") {
         let meta = obs_meta(args, cmd);
-        std::fs::write(path, obs::report_json(&meta, root.as_ref(), attribution.as_ref()))
-            .expect("write trace json");
-        println!("wrote {path}");
+        let availability = AVAILABILITY.lock().unwrap().take();
+        let doc = obs::report_json(
+            &meta,
+            root.as_ref(),
+            availability.as_ref(),
+            attribution.as_ref(),
+        );
+        match std::fs::write(path, doc) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => {
+                obs_error!("write trace json {path}: {e}");
+                std::process::exit(2);
+            }
+        }
     }
     if let Some(path) = args.get("timeline") {
         if let Some(tl) = timeline::finish() {
-            std::fs::write(path, tl.to_chrome_trace(root.as_ref())).expect("write timeline");
-            println!("wrote {path} ({} device passes)", tl.device_passes);
+            match std::fs::write(path, tl.to_chrome_trace(root.as_ref())) {
+                Ok(()) => println!("wrote {path} ({} device passes)", tl.device_passes),
+                Err(e) => {
+                    obs_error!("write timeline {path}: {e}");
+                    std::process::exit(2);
+                }
+            }
         }
     }
     metrics::set_enabled(false);
@@ -238,19 +332,35 @@ fn help() {
          (the `explain` subcommand is the standalone form). All are\n\
          write-only side channels: results stay bit-identical with them\n\
          on or off. PIMMINER_LOG=error|warn|info|debug sets stderr log\n\
-         verbosity (default warn)."
+         verbosity (default warn).\n\
+         \n\
+         resilience (DESIGN.md §15): --faults seed=N,fail=UNIT@CYCLE,\n\
+         transient=P injects a deterministic fault plan into the device\n\
+         simulation (count/motifs/fsm/explain, PIM path): fail-stop of\n\
+         one unit plus a seeded transient inter-channel transfer error\n\
+         rate. Recoverable plans (replicas available) return counts\n\
+         bit-identical to the fault-free run; unrecoverable plans exit 4.\n\
+         --trace-json gains an `availability` block under --faults.\n\
+         --timeout-ms <ms> / --max-memory-mb <MB> bound any subcommand;\n\
+         a tripped budget cancels cooperatively, prints no partial\n\
+         result, and exits 3.\n\
+         \n\
+         exit codes: 0 ok; 1 check/verify mismatch; 2 bad input;\n\
+         3 timeout or memory budget exceeded; 4 unrecoverable fault."
     );
 }
 
-fn load_graph(args: &Args) -> (CsrGraph, f64) {
+fn load_graph(args: &Args) -> Result<(CsrGraph, f64)> {
     let _sp = trace::span("load");
     let (g, sample) = if let Some(path) = args.get("graph") {
-        let g = io::read_csr(std::path::Path::new(path)).expect("read graph file");
+        let g = io::read_csr(std::path::Path::new(path))
+            .with_context(|| format!("read graph file {path}"))?;
         let sample = args.get_f64("sample", 1.0);
         (sort_by_degree_desc(&g).graph, sample)
     } else {
         let abbrev = args.get_or("dataset", "CI");
-        let spec = datasets::by_abbrev(abbrev).expect("unknown dataset abbreviation");
+        let spec = datasets::by_abbrev(abbrev)
+            .ok_or_else(|| anyhow!("unknown dataset abbreviation '{abbrev}'"))?;
         let inst = spec.generate(args.get_bool("full") || datasets::full_scale());
         let sample = args.get_f64("sample", inst.sample_ratio);
         (inst.graph, sample)
@@ -263,7 +373,7 @@ fn load_graph(args: &Args) -> (CsrGraph, f64) {
         g.num_edges(),
         g.max_degree()
     );
-    (g, sample)
+    Ok((g, sample))
 }
 
 fn options(args: &Args) -> SimOptions {
@@ -279,6 +389,7 @@ fn options(args: &Args) -> SimOptions {
         fused: fused_arg(args),
         chunk: args.get("chunk").and_then(|v| v.parse().ok()),
         threads: threads_arg(args),
+        faults: faults_arg(args),
     }
 }
 
@@ -325,10 +436,10 @@ fn compile_or_exit(spec: &str, model: &CostModel, induced: bool) -> Compiled {
     }
 }
 
-fn generate(args: &Args) {
-    let (g, _) = load_graph(args);
+fn generate(args: &Args) -> Result<()> {
+    let (g, _) = load_graph(args)?;
     let out = args.get_or("out", "graph.csr");
-    io::write_csr(&g, std::path::Path::new(out)).expect("write graph");
+    io::write_csr(&g, std::path::Path::new(out))?;
     println!(
         "wrote {out}: |V|={} |E|={} max-degree={} ({})",
         g.num_vertices(),
@@ -336,15 +447,16 @@ fn generate(args: &Args) {
         g.max_degree(),
         report::bytes(g.total_bytes())
     );
+    Ok(())
 }
 
-fn count(args: &Args) {
-    let (g, sample) = load_graph(args);
+fn count(args: &Args) -> Result<()> {
+    let (g, sample) = load_graph(args)?;
     if let Some(spec) = args.get("pattern") {
-        count_pattern(args, &g, sample, spec);
-        return;
+        return count_pattern(args, &g, sample, spec);
     }
-    let app = application(args.get_or("app", "4-CC")).expect("unknown application");
+    let name = args.get_or("app", "4-CC");
+    let app = application(name).ok_or_else(|| anyhow!("unknown application '{name}'"))?;
     let system = args.get_or("system", "pim");
     match system {
         "cpu" => {
@@ -361,6 +473,9 @@ fn count(args: &Args) {
                 args.get("chunk").and_then(|v| v.parse().ok()),
                 threads_arg(args),
             );
+            // The pool drains cooperatively on a tripped budget — refuse
+            // to print the partial count it would leave behind.
+            fault::check_budget()?;
             println!(
                 "{} on CPU: count={} time={}{}",
                 app.name,
@@ -370,9 +485,11 @@ fn count(args: &Args) {
             );
         }
         _ => {
-            let mut miner = PimMiner::new(PimConfig::default(), options(args));
-            miner.load_graph(g).expect("PIMLoadGraph");
-            let r = miner.pattern_count(&app, sample).expect("PIMPatternCount");
+            let cfg = PimConfig::default();
+            let mut miner = PimMiner::new(cfg.clone(), options(args));
+            miner.load_graph(g).context("PIMLoadGraph")?;
+            let r = miner.pattern_count(&app, sample).context("PIMPatternCount")?;
+            record_availability(args, &cfg, &r);
             println!(
                 "{} on PIM: count={} time={} (avg core {}) near={} steals={}",
                 app.name,
@@ -392,6 +509,7 @@ fn count(args: &Args) {
             }
         }
     }
+    Ok(())
 }
 
 /// Render the plan-fusion telemetry (DESIGN.md §11) when the run
@@ -408,7 +526,7 @@ fn print_fusion(r: &SimResult) {
 /// `count --pattern <spec>`: the generalized-pattern path. The compiled
 /// plan goes straight into the existing executors — `cpu::count_plan` or
 /// `pim::simulate_plan` — no application catalogue involved.
-fn count_pattern(args: &Args, g: &CsrGraph, sample: f64, spec: &str) {
+fn count_pattern(args: &Args, g: &CsrGraph, sample: f64, spec: &str) -> Result<()> {
     let induced = !args.get_bool("non-induced");
     let compiled = compile_or_exit(spec, &CostModel::for_graph(g), induced);
     let name = compiled.plan.pattern.name.clone();
@@ -426,6 +544,7 @@ fn count_pattern(args: &Args, g: &CsrGraph, sample: f64, spec: &str) {
                 args.get("chunk").and_then(|v| v.parse().ok()),
                 threads_arg(args),
             );
+            fault::check_budget()?;
             println!(
                 "{name} on CPU: count={count} time={} (order {:?}, est cost {:.3e})",
                 report::s(t.elapsed().as_secs_f64()),
@@ -434,7 +553,9 @@ fn count_pattern(args: &Args, g: &CsrGraph, sample: f64, spec: &str) {
             );
         }
         _ => {
-            let r = simulate_plan(g, &compiled.plan, &roots, &options(args), &PimConfig::default());
+            let cfg = PimConfig::default();
+            let r = simulate_plan_checked(g, &compiled.plan, &roots, &options(args), &cfg)?;
+            record_availability(args, &cfg, &r);
             println!(
                 "{name} on PIM: count={} time={} (avg core {}) near={} steals={} (order {:?})",
                 r.count,
@@ -446,6 +567,7 @@ fn count_pattern(args: &Args, g: &CsrGraph, sample: f64, spec: &str) {
             );
         }
     }
+    Ok(())
 }
 
 /// Render the mining aggregation-traffic breakdown (DESIGN.md §8).
@@ -471,18 +593,16 @@ fn print_aggregation(r: &SimResult) {
 /// datasets with a default sampling ratio: a sampled census counts only
 /// subgraphs whose minimum vertex is sampled, which is not a fraction of
 /// the true counts. Sampling must be requested explicitly.
-fn motifs(args: &Args) {
-    let (g, _) = load_graph(args);
+fn motifs(args: &Args) -> Result<()> {
+    let (g, _) = load_graph(args)?;
     let k = args.get_usize("k", 4);
     if !(2..=5).contains(&k) {
-        obs_error!("motifs error: -k must be between 2 and 5 (classifier table sizes), got {k}");
-        std::process::exit(2);
+        bail!("motifs error: -k must be between 2 and 5 (classifier table sizes), got {k}");
     }
     let sample = args.get_f64("sample", 1.0);
     if sample < 1.0 {
         if args.get_bool("check") {
-            obs_error!("motifs error: --check needs the full census (drop --sample)");
-            std::process::exit(2);
+            bail!("motifs error: --check needs the full census (drop --sample)");
         }
         println!(
             "note: sampling restricts the census to subgraphs whose minimum \
@@ -498,6 +618,7 @@ fn motifs(args: &Args) {
         ("cpu", false) => {
             let t = std::time::Instant::now();
             let census = mine::motif_census_with(&g, k, &roots, threads_arg(args));
+            fault::check_budget()?;
             println!(
                 "{k}-motif census on CPU: {} subgraphs in {}",
                 census.total(),
@@ -520,6 +641,7 @@ fn motifs(args: &Args) {
                 args.get("chunk").and_then(|v| v.parse().ok()),
                 threads_arg(args),
             );
+            fault::check_budget()?;
             println!(
                 "{k}-motif census on CPU (fused {} plans, {} shared levels): {} subgraphs in {}",
                 trie.num_plans,
@@ -530,7 +652,9 @@ fn motifs(args: &Args) {
             pimminer::mine::MotifCensus { k, motifs, counts }
         }
         (_, false) => {
-            let r = simulate_motifs(&g, k, &roots, &options(args), &PimConfig::default());
+            let cfg = PimConfig::default();
+            let r = simulate_motifs_checked(&g, k, &roots, &options(args), &cfg)?;
+            record_availability(args, &cfg, &r.sim);
             println!(
                 "{k}-motif census on PIM: {} subgraphs, time={} near={} steals={}",
                 r.census.total(),
@@ -544,8 +668,10 @@ fn motifs(args: &Args) {
         (_, true) => {
             let motifs = connected_motifs(k);
             let plans: Vec<_> = motifs.iter().map(Plan::build).collect();
+            let cfg = PimConfig::default();
             let (sim, counts) =
-                simulate_plans_fused(&g, &plans, &roots, &options(args), &PimConfig::default());
+                simulate_plans_fused_checked(&g, &plans, &roots, &options(args), &cfg)?;
+            record_availability(args, &cfg, &sim);
             println!(
                 "{k}-motif census on PIM (fused plans): {} subgraphs, time={} near={} steals={}",
                 sim.count,
@@ -568,6 +694,7 @@ fn motifs(args: &Args) {
     if args.get_bool("check") {
         check_census(&g, &census);
     }
+    Ok(())
 }
 
 /// Cross-validate the census that actually ran (CPU or PIM-simulated)
@@ -601,8 +728,8 @@ fn check_census(g: &CsrGraph, census: &pimminer::mine::MotifCensus) {
 
 /// `fsm`: frequent subgraph mining (PIMFrequentMine). Unlabeled inputs
 /// can be given seeded labels with `--labels <L>`.
-fn fsm(args: &Args) {
-    let (mut g, _) = load_graph(args);
+fn fsm(args: &Args) -> Result<()> {
+    let (mut g, _) = load_graph(args)?;
     if let Some(v) = args.get("labels") {
         match v.parse::<u32>() {
             Ok(l) if l >= 1 => {
@@ -612,16 +739,12 @@ fn fsm(args: &Args) {
                     g = gen::with_random_labels(g, l, args.get_u64("label-seed", 42));
                 }
             }
-            _ => {
-                obs_error!("fsm error: --labels must be a positive integer, got '{v}'");
-                std::process::exit(2);
-            }
+            _ => bail!("fsm error: --labels must be a positive integer, got '{v}'"),
         }
     }
     let max_size = args.get_usize("max-size", 4);
     if !(2..=8).contains(&max_size) {
-        obs_error!("fsm error: --max-size must be between 2 and 8, got {max_size}");
-        std::process::exit(2);
+        bail!("fsm error: --max-size must be between 2 and 8, got {max_size}");
     }
     let cfg = FsmConfig {
         min_support: args.get_u64("support", 100),
@@ -633,6 +756,7 @@ fn fsm(args: &Args) {
             let hubs = cpu_hubs(args, &g);
             let fused = fused_arg(args);
             let r = mine::fsm_mine_opts(&g, &cfg, hubs.as_ref(), fused, threads_arg(args));
+            fault::check_budget()?;
             println!(
                 "FSM on CPU: {} frequent patterns (support ≥ {}) in {}{}",
                 r.frequent.len(),
@@ -643,7 +767,9 @@ fn fsm(args: &Args) {
             r
         }
         _ => {
-            let (r, sim) = simulate_fsm(&g, &cfg, &options(args), &PimConfig::default());
+            let pim_cfg = PimConfig::default();
+            let (r, sim) = simulate_fsm_checked(&g, &cfg, &options(args), &pim_cfg)?;
+            record_availability(args, &pim_cfg, &sim);
             println!(
                 "FSM on PIM: {} frequent patterns (support ≥ {}), time={} near={}",
                 r.frequent.len(),
@@ -675,6 +801,7 @@ fn fsm(args: &Args) {
         ]);
     }
     t.print();
+    Ok(())
 }
 
 /// `partition`: run the partitioning subsystem (DESIGN.md §9) and report,
@@ -685,8 +812,8 @@ fn fsm(args: &Args) {
 /// capacity) and exits non-zero on any violation — the CI smoke gate.
 /// `--json <file>` additionally writes the remote-byte shares machine-
 /// readably (the same shape the `table_partition` bench emits).
-fn partition_cmd(args: &Args) {
-    let (g, _) = load_graph(args);
+fn partition_cmd(args: &Args) -> Result<()> {
+    let (g, _) = load_graph(args)?;
     let cfg = PimConfig::default();
     let strategies: Vec<PartitionStrategy> = match partitioner_arg(args) {
         Some(s) => vec![s],
@@ -790,26 +917,27 @@ fn partition_cmd(args: &Args) {
             .u64("replica_budget_per_unit", cap)
             .raw("strategies", &json::array(&json_rows))
             .render();
-        std::fs::write(path, doc).expect("write partition json");
+        std::fs::write(path, doc).with_context(|| format!("write partition json {path}"))?;
         println!("wrote {path}");
     }
+    Ok(())
 }
 
 /// `plan --pattern <spec>`: compile and pretty-print without running.
-fn plan_cmd(args: &Args) {
+fn plan_cmd(args: &Args) -> Result<()> {
     let Some(spec) = args.get("pattern") else {
-        obs_error!("plan requires --pattern <edgelist|name>");
-        std::process::exit(2);
+        bail!("plan requires --pattern <edgelist|name>");
     };
     // Fit the cost model to a graph only when one was explicitly given.
     let model = if args.get("graph").is_some() || args.get("dataset").is_some() {
-        CostModel::for_graph(&load_graph(args).0)
+        CostModel::for_graph(&load_graph(args)?.0)
     } else {
         CostModel::default()
     };
     let induced = !args.get_bool("non-induced");
     let c = compile_or_exit(spec, &model, induced);
     print_compiled(&c, &model);
+    Ok(())
 }
 
 fn print_compiled(c: &Compiled, model: &CostModel) {
@@ -850,7 +978,7 @@ fn print_compiled(c: &Compiled, model: &CostModel) {
 /// path and the PIM `SimSink` path (baseline and full-stack options).
 /// Exits non-zero on any mismatch — CI and the acceptance criteria call
 /// this.
-fn verify(args: &Args) {
+fn verify(args: &Args) -> Result<()> {
     let suite: Vec<String> = match args.get("pattern") {
         Some(s) => vec![s.to_string()],
         None => [
@@ -886,8 +1014,10 @@ fn verify(args: &Args) {
             let expected = brute_force_count(&g, &c.plan.pattern);
             let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
             let cpu_count = cpu::count_plan(&g, &c.plan, &roots, CpuFlavor::AutoMineOpt);
-            let pim_base = simulate_plan(&g, &c.plan, &roots, &SimOptions::BASELINE, &cfg).count;
-            let pim_all = simulate_plan(&g, &c.plan, &roots, &SimOptions::all(), &cfg).count;
+            let pim_base =
+                simulate_plan_checked(&g, &c.plan, &roots, &SimOptions::BASELINE, &cfg)?.count;
+            let pim_all =
+                simulate_plan_checked(&g, &c.plan, &roots, &SimOptions::all(), &cfg)?.count;
             let ok = cpu_count == expected && pim_base == expected && pim_all == expected;
             if !ok {
                 failures += 1;
@@ -910,17 +1040,19 @@ fn verify(args: &Args) {
         std::process::exit(1);
     }
     println!("verify OK: every compiled plan matches the brute-force reference");
+    Ok(())
 }
 
-fn ladder(args: &Args) {
-    let (g, sample) = load_graph(args);
+fn ladder(args: &Args) -> Result<()> {
+    let (g, sample) = load_graph(args)?;
     let roots = cpu::sampled_roots(g.num_vertices(), sample);
     let cfg = PimConfig::default();
     let pattern_plan = args.get("pattern").map(|spec| {
         compile_or_exit(spec, &CostModel::for_graph(&g), !args.get_bool("non-induced")).plan
     });
     let app = if pattern_plan.is_none() {
-        Some(application(args.get_or("app", "4-CC")).expect("unknown application"))
+        let name = args.get_or("app", "4-CC");
+        Some(application(name).ok_or_else(|| anyhow!("unknown application '{name}'"))?)
     } else {
         None
     };
@@ -941,8 +1073,8 @@ fn ladder(args: &Args) {
         opts.hub_bitmaps = hub_bitmaps;
         opts.hub_threshold = hub_threshold;
         let r = match &pattern_plan {
-            Some(plan) => simulate_plan(&g, plan, &roots, &opts, &cfg),
-            None => pimminer::pim::simulate_app(&g, app.as_ref().unwrap(), &roots, &opts, &cfg),
+            Some(plan) => simulate_plan_checked(&g, plan, &roots, &opts, &cfg)?,
+            None => simulate_app_checked(&g, app.as_ref().unwrap(), &roots, &opts, &cfg)?,
         };
         let b = *base.get_or_insert(r.seconds);
         t.row(vec![
@@ -955,6 +1087,7 @@ fn ladder(args: &Args) {
         ]);
     }
     t.print();
+    Ok(())
 }
 
 /// `explain`: run the PIM simulation for an application or compiled
@@ -964,18 +1097,20 @@ fn ladder(args: &Args) {
 /// the same breakdown rides along any other command via `--explain`.
 /// The rendering itself happens in [`finish_observability`] — this
 /// body only drives the simulation that feeds the collector.
-fn explain(args: &Args) {
-    let (g, sample) = load_graph(args);
+fn explain(args: &Args) -> Result<()> {
+    let (g, sample) = load_graph(args)?;
     let roots = cpu::sampled_roots(g.num_vertices(), sample);
     let cfg = PimConfig::default();
     let r = if let Some(spec) = args.get("pattern") {
         let induced = !args.get_bool("non-induced");
         let compiled = compile_or_exit(spec, &CostModel::for_graph(&g), induced);
-        simulate_plan(&g, &compiled.plan, &roots, &options(args), &cfg)
+        simulate_plan_checked(&g, &compiled.plan, &roots, &options(args), &cfg)?
     } else {
-        let app = application(args.get_or("app", "4-CC")).expect("unknown application");
-        pimminer::pim::simulate_app(&g, &app, &roots, &options(args), &cfg)
+        let name = args.get_or("app", "4-CC");
+        let app = application(name).ok_or_else(|| anyhow!("unknown application '{name}'"))?;
+        simulate_app_checked(&g, &app, &roots, &options(args), &cfg)?
     };
+    record_availability(args, &cfg, &r);
     println!(
         "explain: count={} time={} (avg core {}) near={} steals={}",
         r.count,
@@ -985,6 +1120,7 @@ fn explain(args: &Args) {
         r.steals
     );
     print_fusion(&r);
+    Ok(())
 }
 
 fn info() {

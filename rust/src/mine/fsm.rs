@@ -22,6 +22,13 @@
 //!   ([`pim::sim::simulate_fsm`](crate::pim::sim::simulate_fsm)), where
 //!   per-unit domain maps are the aggregation state the fabric must merge
 //!   (DESIGN.md §8).
+//! * **Cancellation** (DESIGN.md §15): level evaluation runs on the
+//!   work-stealing pools, which drain cooperatively when the process
+//!   budget (`--timeout-ms` / `--max-memory-mb`) trips — a drained level
+//!   under-counts support, so callers gate on
+//!   [`fault::check_budget`](crate::pim::fault::check_budget) before
+//!   reporting (the PIM path's executor additionally latches the typed
+//!   error and aborts the remaining levels).
 
 use crate::exec::enumerate::{compute_candidates, EnumSink, NullSink};
 use crate::exec::setops::{intersect_into_hybrid, ScanCost, NO_BOUND};

@@ -341,6 +341,15 @@ pub static SIM_UNIT_BUSY: Histogram = Histogram::new();
 pub static SIM_STEALS: Counter = Counter::new();
 /// `pim::stealing` — cycles charged to steal overhead (thief + victim).
 pub static SIM_STEAL_OVERHEAD_CYCLES: Counter = Counter::new();
+/// `pim::fault` — faults injected by the §15 plan (fail-stops applied
+/// plus transient transfer errors rolled).
+pub static SIM_FAULTS_INJECTED: Counter = Counter::new();
+/// `pim::fault` — transient-link retransmissions performed.
+pub static SIM_RETRIES: Counter = Counter::new();
+/// `pim::fault` — recovery steals re-dispatching a dead unit's orphans.
+pub static SIM_RECOVERY_STEALS: Counter = Counter::new();
+/// `pim::fault` — exponential-backoff cycles charged for retries.
+pub static SIM_BACKOFF_CYCLES: Counter = Counter::new();
 /// `part` — weighted inter-channel cut bytes of the chosen owner map.
 pub static PART_CUT_INTER_BYTES: Counter = Counter::new();
 /// `part` — replica bytes placed by selective duplication.
@@ -363,6 +372,10 @@ pub fn counters() -> Vec<(&'static str, u64)> {
         ("sim.inter_bytes", SIM_INTER_BYTES.get()),
         ("sim.steals", SIM_STEALS.get()),
         ("sim.steal_overhead_cycles", SIM_STEAL_OVERHEAD_CYCLES.get()),
+        ("sim.faults_injected", SIM_FAULTS_INJECTED.get()),
+        ("sim.retries", SIM_RETRIES.get()),
+        ("sim.recovery_steals", SIM_RECOVERY_STEALS.get()),
+        ("sim.backoff_cycles", SIM_BACKOFF_CYCLES.get()),
         ("part.cut_inter_bytes", PART_CUT_INTER_BYTES.get()),
         ("part.replica_bytes", PART_REPLICA_BYTES.get()),
         ("part.replica_vertices", PART_REPLICA_VERTICES.get()),
@@ -394,6 +407,10 @@ pub fn reset() {
         &SIM_INTER_BYTES,
         &SIM_STEALS,
         &SIM_STEAL_OVERHEAD_CYCLES,
+        &SIM_FAULTS_INJECTED,
+        &SIM_RETRIES,
+        &SIM_RECOVERY_STEALS,
+        &SIM_BACKOFF_CYCLES,
         &PART_CUT_INTER_BYTES,
         &PART_REPLICA_BYTES,
         &PART_REPLICA_VERTICES,

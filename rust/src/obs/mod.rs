@@ -24,7 +24,7 @@
 //! The CLI surfaces all of it: `--profile` prints the span self-time
 //! table, the non-zero metrics (name-sorted, with p50/p90/p99/max
 //! columns), and the traffic heatmap; `--trace-json PATH` writes the
-//! schema-v2 JSON document assembled by [`report_json`]; `--timeline
+//! schema-v3 JSON document assembled by [`report_json`]; `--timeline
 //! PATH` writes the Chrome trace; `--explain` / the `explain`
 //! subcommand print the top-k plan-node attribution; and `PIMMINER_LOG`
 //! selects the logger threshold.
@@ -40,18 +40,58 @@ use crate::report::{json, Table};
 /// Schema version stamped into every `--trace-json` document. v2 adds
 /// span `start_ns`, histogram `max`/`p50`/`p90`/`p99`, and the
 /// `attribution` block (channel matrix, per-unit bytes, plan nodes).
-pub const TRACE_SCHEMA_VERSION: u64 = 2;
+/// v3 adds the `availability` block (DESIGN.md §15 fault/recovery
+/// accounting).
+pub const TRACE_SCHEMA_VERSION: u64 = 3;
+
+/// Fault-injection / recovery accounting for one query (DESIGN.md §15),
+/// surfaced as the `availability` block of the `--trace-json` document.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Availability {
+    /// The `--faults` plan, in [`FaultSpec`](crate::pim::FaultSpec)
+    /// round-trip syntax.
+    pub spec: String,
+    /// Units in the simulated machine.
+    pub units_total: u64,
+    /// Units fail-stopped by the plan (0 or 1 today).
+    pub units_failed: u64,
+    /// Faults injected: fail-stops applied + transient errors rolled.
+    pub faults_injected: u64,
+    /// Transient-link retransmissions performed.
+    pub retries: u64,
+    /// Orphaned pieces re-dispatched off dead units via recovery steals.
+    pub recovery_steals: u64,
+    /// Exponential-backoff cycles charged for the retransmissions.
+    pub backoff_cycles: u64,
+}
+
+impl Availability {
+    fn to_json(&self) -> String {
+        json::Obj::new()
+            .str("spec", &self.spec)
+            .u64("units_total", self.units_total)
+            .u64("units_failed", self.units_failed)
+            .u64("faults_injected", self.faults_injected)
+            .u64("retries", self.retries)
+            .u64("recovery_steals", self.recovery_steals)
+            .u64("backoff_cycles", self.backoff_cycles)
+            .render()
+    }
+}
 
 /// Assemble the `--trace-json` document: `{schema_version, meta:{…},
-/// spans:<tree|null>, metrics:[…], attribution:<obj|null>}`. `meta`
-/// carries the run metadata (command, threads, hub settings,
-/// partitioner, fused flag); `spans` is the [`trace::Span`] tree when a
-/// trace ran; `metrics` dumps every registry counter and histogram;
-/// `attribution` is the [`attr::AttrReport`] when the collector was
-/// armed. DESIGN.md §14 documents the schema.
+/// spans:<tree|null>, metrics:[…], availability:<obj|null>,
+/// attribution:<obj|null>}`. `meta` carries the run metadata (command,
+/// threads, hub settings, partitioner, fused flag); `spans` is the
+/// [`trace::Span`] tree when a trace ran; `metrics` dumps every
+/// registry counter and histogram; `availability` is the fault/recovery
+/// accounting when a `--faults` plan ran; `attribution` is the
+/// [`attr::AttrReport`] when the collector was armed. DESIGN.md §14
+/// documents the schema.
 pub fn report_json(
     meta: &[(String, String)],
     root: Option<&trace::Span>,
+    availability: Option<&Availability>,
     attribution: Option<&attr::AttrReport>,
 ) -> String {
     let meta_obj = meta
@@ -87,6 +127,10 @@ pub fn report_json(
             .raw("buckets", &json::array(&buckets))
             .render()
     }));
+    let avail_json = match availability {
+        Some(a) => a.to_json(),
+        None => "null".to_string(),
+    };
     let attr_json = match attribution {
         Some(a) => a.to_json(),
         None => "null".to_string(),
@@ -96,6 +140,7 @@ pub fn report_json(
         .raw("meta", &meta_obj)
         .raw("spans", &spans)
         .raw("metrics", &json::array(&entries))
+        .raw("availability", &avail_json)
         .raw("attribution", &attr_json)
         .render()
 }
@@ -187,16 +232,37 @@ mod tests {
             ("command".to_string(), "count".to_string()),
             ("threads".to_string(), "4".to_string()),
         ];
-        let doc = report_json(&meta, None, None);
-        assert!(doc.starts_with("{\"schema_version\":2,"));
+        let doc = report_json(&meta, None, None, None);
+        assert!(doc.starts_with("{\"schema_version\":3,"));
         assert!(doc.contains("\"meta\":{\"command\":\"count\",\"threads\":\"4\"}"));
         assert!(doc.contains("\"spans\":null"));
         assert!(doc.contains("\"name\":\"setops.dense\""));
         assert!(doc.contains("\"name\":\"sim.steals\""));
+        assert!(doc.contains("\"name\":\"sim.recovery_steals\""));
         assert!(doc.contains("\"kind\":\"histogram\""));
         assert!(doc.contains("\"p99\":"));
         assert!(doc.contains("\"buckets\":["));
+        assert!(doc.contains("\"availability\":null"));
         assert!(doc.ends_with("\"attribution\":null}"));
+    }
+
+    #[test]
+    fn report_json_embeds_availability_when_faults_ran() {
+        let avail = Availability {
+            spec: "seed=7,fail=3@1000,transient=0.01".to_string(),
+            units_total: 128,
+            units_failed: 1,
+            faults_injected: 5,
+            retries: 4,
+            recovery_steals: 2,
+            backoff_cycles: 960,
+        };
+        let doc = report_json(&[], None, Some(&avail), None);
+        assert!(doc.contains(
+            "\"availability\":{\"spec\":\"seed=7,fail=3@1000,transient=0.01\",\
+             \"units_total\":128,\"units_failed\":1,\"faults_injected\":5,\
+             \"retries\":4,\"recovery_steals\":2,\"backoff_cycles\":960}"
+        ));
     }
 
     #[test]
@@ -213,7 +279,7 @@ mod tests {
                 fetches: 1,
             }],
         };
-        let doc = report_json(&[], None, Some(&a));
+        let doc = report_json(&[], None, None, Some(&a));
         assert!(doc.contains("\"attribution\":{\"channels\":1,"));
         assert!(doc.contains("\"label\":\"L1\""));
     }

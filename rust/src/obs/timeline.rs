@@ -37,6 +37,10 @@ pub struct DeviceTimeline {
     pub intervals: Vec<Vec<(u64, u64)>>,
     /// `(cycle, thief, victim)` for every successful steal.
     pub steals: Vec<(u64, u32, u32)>,
+    /// `(cycle, unit)` fault instants (DESIGN.md §15): the fail-stop of
+    /// a unit plus every transient transfer error charged to it. Empty
+    /// without a fault spec.
+    pub faults: Vec<(u64, u32)>,
 }
 
 /// One dynamic-scheduling chunk claim by a host worker during the
@@ -63,6 +67,8 @@ pub struct Timeline {
     pub units: Vec<Vec<(u64, u64)>>,
     /// Steal instants `(cycle, thief, victim)`, cursor-offset.
     pub steals: Vec<(u64, u32, u32)>,
+    /// Fault instants `(cycle, unit)`, cursor-offset (DESIGN.md §15).
+    pub faults: Vec<(u64, u32)>,
     /// Host chunk claims in worker-index order per pass.
     pub claims: Vec<ChunkClaim>,
     /// Number of scheduling passes recorded.
@@ -118,6 +124,9 @@ pub fn record_device(dt: DeviceTimeline, makespan: u64) {
             st.tl
                 .steals
                 .extend(dt.steals.into_iter().map(|(t, a, b)| (t + off, a, b)));
+            st.tl
+                .faults
+                .extend(dt.faults.into_iter().map(|(t, u)| (t + off, u)));
             st.tl.device_passes += 1;
             st.cursor = off.saturating_add(makespan);
         }
@@ -177,8 +186,9 @@ impl Timeline {
     /// Render the Chrome Trace Format document: host phases (pid 0,
     /// tid 0, `B`/`E` pairs from the span tree), per-worker chunk-claim
     /// tracks (pid 0, tid 1+worker, `X`), one track per PIM unit
-    /// (pid 1, `X` busy slices, 1 simulated cycle = 1 µs), and steal
-    /// instants (`i`) on the thief's track.
+    /// (pid 1, `X` busy slices, 1 simulated cycle = 1 µs), steal
+    /// instants (`i`) on the thief's track, and fault instants (`i`) on
+    /// the affected unit's track (DESIGN.md §15).
     pub fn to_chrome_trace(&self, host: Option<&trace::Span>) -> String {
         let mut ev: Vec<String> = Vec::new();
         ev.push(meta_event("process_name", 0, 0, "host"));
@@ -240,6 +250,19 @@ impl Timeline {
                     .render(),
             );
         }
+        for &(t, unit) in &self.faults {
+            ev.push(
+                json::Obj::new()
+                    .str("name", "fault")
+                    .str("ph", "i")
+                    .f64("ts", t as f64)
+                    .u64("pid", 1)
+                    .u64("tid", unit as u64)
+                    .str("s", "t")
+                    .raw("args", &json::Obj::new().u64("unit", unit as u64).render())
+                    .render(),
+            );
+        }
         format!(
             "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":{}}}",
             json::array(&ev)
@@ -260,6 +283,7 @@ mod tests {
             DeviceTimeline {
                 intervals: vec![vec![(0, 5), (5, 3)], vec![(2, 4)]],
                 steals: vec![(5, 1, 0)],
+                faults: vec![(4, 1)],
             },
             8,
         );
@@ -267,6 +291,7 @@ mod tests {
             DeviceTimeline {
                 intervals: vec![vec![(1, 2)], vec![]],
                 steals: vec![],
+                faults: vec![(1, 0)],
             },
             3,
         );
@@ -284,6 +309,8 @@ mod tests {
         assert_eq!(tl.units[0], vec![(0, 5), (5, 3), (9, 2)]);
         assert_eq!(tl.units[1], vec![(2, 4)]);
         assert_eq!(tl.steals, vec![(5, 1, 0)]);
+        // Fault instants shift by the same cycle cursor as everything else.
+        assert_eq!(tl.faults, vec![(4, 1), (9, 0)]);
         assert_eq!(tl.device_passes, 2);
         assert_eq!(tl.claims.len(), 1);
         // Intervals per unit stay non-overlapping across passes.
@@ -308,6 +335,7 @@ mod tests {
         let tl = Timeline {
             units: vec![vec![(0, 7)], vec![(3, 2)]],
             steals: vec![(3, 1, 0)],
+            faults: vec![(5, 0)],
             claims: vec![ChunkClaim {
                 worker: 1,
                 start_ns: 2_000,
@@ -338,7 +366,9 @@ mod tests {
         assert_eq!(doc.matches("\"ph\":\"E\"").count(), 2);
         // One busy slice per unit plus the claim → three X events.
         assert_eq!(doc.matches("\"ph\":\"X\"").count(), 3);
-        assert_eq!(doc.matches("\"ph\":\"i\"").count(), 1);
+        // One steal instant + one fault instant.
+        assert_eq!(doc.matches("\"ph\":\"i\"").count(), 2);
+        assert!(doc.contains("\"name\":\"fault\""));
         assert!(doc.contains("\"name\":\"pim-device\""));
         assert!(doc.contains("\"name\":\"unit 1\""));
         assert!(doc.contains("\"name\":\"worker 1\""));

@@ -1,0 +1,381 @@
+//! Deterministic fault injection & recovery (DESIGN.md §15).
+//!
+//! A seeded [`FaultSpec`] describes the faults to inject into a device
+//! simulation: at most one **fail-stop** (unit `u` halts permanently at
+//! cycle `c`) and a **transient** inter-channel transfer-error
+//! probability `p`. The spec threads through
+//! [`SimOptions::faults`](super::SimOptions) into the scheduling pass,
+//! where recovery is co-designed with the existing machinery:
+//!
+//! * transient transfer errors are retried with exponential-backoff
+//!   cycle cost charged to the victim unit ([`TransientLink`]);
+//! * a fail-stopped unit's unfinished pieces are re-dispatched through
+//!   the stealing scheduler (*recovery steals*), and its owned data is
+//!   served from replicas via [`Placement`] (*replica promotion*).
+//!
+//! Everything is seeded: the same spec, graph, and options always
+//! produce the same schedule, the same retry sequence, and — for
+//! *recoverable* plans — bit-identical counts to the fault-free run
+//! (`tests/prop_faults.rs`). Unrecoverable plans surface a typed
+//! [`FaultError`] instead of a wrong answer.
+
+use super::config::PimConfig;
+use super::placement::Placement;
+use crate::util::rng::Rng;
+use std::fmt;
+
+/// Maximum consecutive retries of one transfer before the link is
+/// declared dead ([`FaultError::LinkFailure`]).
+pub const MAX_TRANSIENT_RETRIES: u32 = 8;
+
+/// Backoff charged for the first retry of a transfer; doubles on every
+/// further attempt (exponential backoff).
+pub const BACKOFF_BASE_CYCLES: u64 = 64;
+
+/// A deterministic fault plan for one device run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    /// Seed for the transient-error stream (the spec is `Copy`, so it
+    /// carries the seed, not the generator).
+    pub seed: u64,
+    /// Fail-stop: `(unit, cycle)` — the unit halts permanently at that
+    /// cycle and never executes another piece.
+    pub fail_stop: Option<(u32, u64)>,
+    /// Probability that an inter-channel transfer is corrupted and must
+    /// be retried. `0.0` disables transient injection.
+    pub transient: f64,
+}
+
+impl FaultSpec {
+    /// Parse the `--faults` CLI syntax: comma-separated
+    /// `seed=N`, `fail=UNIT@CYCLE`, `transient=P` clauses, e.g.
+    /// `--faults seed=7,fail=12@50000,transient=0.001`.
+    pub fn parse(s: &str) -> Result<FaultSpec, FaultError> {
+        let mut spec = FaultSpec::default();
+        for clause in s.split(',').filter(|c| !c.trim().is_empty()) {
+            let (key, val) = clause
+                .trim()
+                .split_once('=')
+                .ok_or_else(|| FaultError::BadSpec(format!("expected key=value, got `{clause}`")))?;
+            match key {
+                "seed" => {
+                    spec.seed = val
+                        .parse()
+                        .map_err(|_| FaultError::BadSpec(format!("bad seed `{val}`")))?;
+                }
+                "fail" => {
+                    let (u, c) = val.split_once('@').ok_or_else(|| {
+                        FaultError::BadSpec(format!("expected fail=UNIT@CYCLE, got `{val}`"))
+                    })?;
+                    let unit = u
+                        .parse()
+                        .map_err(|_| FaultError::BadSpec(format!("bad fail unit `{u}`")))?;
+                    let cycle = c
+                        .parse()
+                        .map_err(|_| FaultError::BadSpec(format!("bad fail cycle `{c}`")))?;
+                    spec.fail_stop = Some((unit, cycle));
+                }
+                "transient" => {
+                    spec.transient = val
+                        .parse()
+                        .map_err(|_| FaultError::BadSpec(format!("bad probability `{val}`")))?;
+                }
+                other => {
+                    return Err(FaultError::BadSpec(format!(
+                        "unknown fault clause `{other}` (expected seed/fail/transient)"
+                    )));
+                }
+            }
+        }
+        spec.validate_shape()?;
+        Ok(spec)
+    }
+
+    /// Structural validation independent of any machine: probability in
+    /// range. (Unit range is machine-dependent — see [`validate`].)
+    pub fn validate_shape(&self) -> Result<(), FaultError> {
+        if !(0.0..=1.0).contains(&self.transient) || self.transient.is_nan() {
+            return Err(FaultError::BadSpec(format!(
+                "transient probability {} outside [0, 1]",
+                self.transient
+            )));
+        }
+        Ok(())
+    }
+
+    /// True when the spec injects nothing — the zero-fault fast path.
+    pub fn is_benign(&self) -> bool {
+        self.fail_stop.is_none() && self.transient <= 0.0
+    }
+}
+
+impl fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "seed={}", self.seed)?;
+        if let Some((u, c)) = self.fail_stop {
+            write!(f, ",fail={u}@{c}")?;
+        }
+        if self.transient > 0.0 {
+            write!(f, ",transient={}", self.transient)?;
+        }
+        Ok(())
+    }
+}
+
+/// Typed fault/budget failure. Queries return this instead of a wrong
+/// answer; the CLI maps it to a distinct process exit code
+/// ([`FaultError::exit_code`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultError {
+    /// A fail-stopped unit owned a vertex no surviving unit holds a
+    /// replica of — its data cannot be promoted from anywhere.
+    UnrecoverableUnitLoss { unit: u32, vertex: u32 },
+    /// A transfer failed [`MAX_TRANSIENT_RETRIES`] consecutive retries.
+    LinkFailure { retries: u32 },
+    /// A fail-stop stranded unfinished pieces with no surviving unit to
+    /// re-dispatch them to.
+    WorkLost { unit: u32, pieces: usize },
+    /// The query exceeded its `--timeout-ms` budget.
+    Timeout { limit_ms: u64 },
+    /// The process exceeded its `--max-memory-mb` budget.
+    MemoryBudget { limit_mb: u64, observed_mb: u64 },
+    /// Malformed fault specification.
+    BadSpec(String),
+}
+
+impl FaultError {
+    /// Process exit code: 2 = bad input, 3 = timeout/budget,
+    /// 4 = unrecoverable fault (documented in README).
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            FaultError::Timeout { .. } | FaultError::MemoryBudget { .. } => 3,
+            FaultError::UnrecoverableUnitLoss { .. }
+            | FaultError::LinkFailure { .. }
+            | FaultError::WorkLost { .. } => 4,
+            FaultError::BadSpec(_) => 2,
+        }
+    }
+}
+
+impl fmt::Display for FaultError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultError::UnrecoverableUnitLoss { unit, vertex } => write!(
+                f,
+                "unrecoverable fault: unit {unit} fail-stopped but vertex {vertex} it owns \
+                 has no replica on any surviving unit (enable --duplication for replica \
+                 promotion)"
+            ),
+            FaultError::LinkFailure { retries } => write!(
+                f,
+                "link failure: inter-channel transfer still corrupt after {retries} retries"
+            ),
+            FaultError::WorkLost { unit, pieces } => write!(
+                f,
+                "unrecoverable fault: unit {unit} fail-stopped with {pieces} pieces left and \
+                 no surviving unit to re-dispatch them to"
+            ),
+            FaultError::Timeout { limit_ms } => {
+                write!(f, "query exceeded its {limit_ms} ms timeout budget")
+            }
+            FaultError::MemoryBudget {
+                limit_mb,
+                observed_mb,
+            } => write!(
+                f,
+                "process RSS {observed_mb} MB exceeded the {limit_mb} MB memory budget"
+            ),
+            FaultError::BadSpec(msg) => write!(f, "bad fault spec: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+/// Validate a fault plan against a machine + placement: the fail unit
+/// must exist, and its owned vertices must be recoverable — every one
+/// must have a replica on some surviving unit so the stealing scheduler
+/// can promote a replica owner instead of returning a wrong count.
+pub fn validate(
+    spec: &FaultSpec,
+    cfg: &PimConfig,
+    placement: &Placement,
+) -> Result<(), FaultError> {
+    spec.validate_shape()?;
+    let Some((unit, _cycle)) = spec.fail_stop else {
+        return Ok(());
+    };
+    if unit as usize >= cfg.num_units() {
+        return Err(FaultError::BadSpec(format!(
+            "fail unit {unit} out of range (machine has {} units)",
+            cfg.num_units()
+        )));
+    }
+    if let Some(vertex) = placement.uncovered_on_loss(unit as usize) {
+        return Err(FaultError::UnrecoverableUnitLoss { unit, vertex });
+    }
+    Ok(())
+}
+
+/// Convert a tripped host budget ([`crate::util::ws::cancel_cause`])
+/// into the typed error the entry points surface. `Ok(())` when no
+/// budget is installed or none has tripped.
+pub fn check_budget() -> Result<(), FaultError> {
+    use crate::util::ws::{self, CancelCause};
+    match ws::cancel_cause() {
+        None => Ok(()),
+        Some(CancelCause::Timeout { limit_ms }) => Err(FaultError::Timeout { limit_ms }),
+        Some(CancelCause::Memory {
+            limit_mb,
+            observed_mb,
+        }) => Err(FaultError::MemoryBudget {
+            limit_mb,
+            observed_mb,
+        }),
+    }
+}
+
+/// The seeded transient-error stream for one scheduling run. One roll
+/// per inter-channel transfer, in deterministic event order; each
+/// corrupt attempt charges an exponentially growing backoff.
+#[derive(Debug)]
+pub struct TransientLink {
+    rng: Rng,
+    p: f64,
+}
+
+/// Outcome of one (possibly retried) transfer.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Transfer {
+    /// Corrupt attempts before the transfer went through.
+    pub retries: u32,
+    /// Total backoff cycles charged for those retries.
+    pub backoff: u64,
+}
+
+impl TransientLink {
+    pub fn new(spec: &FaultSpec) -> TransientLink {
+        TransientLink {
+            rng: Rng::new(spec.seed ^ 0x5f41_u64.rotate_left(17)),
+            p: spec.transient,
+        }
+    }
+
+    /// Attempt one inter-channel transfer. Each failed attempt `k`
+    /// (1-based) charges `BACKOFF_BASE_CYCLES << (k-1)` cycles; after
+    /// [`MAX_TRANSIENT_RETRIES`] consecutive failures the link is
+    /// declared dead.
+    pub fn transfer(&mut self) -> Result<Transfer, FaultError> {
+        if self.p <= 0.0 {
+            return Ok(Transfer::default());
+        }
+        let mut out = Transfer::default();
+        while self.rng.chance(self.p) {
+            out.retries += 1;
+            if out.retries > MAX_TRANSIENT_RETRIES {
+                return Err(FaultError::LinkFailure {
+                    retries: out.retries - 1,
+                });
+            }
+            out.backoff += BACKOFF_BASE_CYCLES << (out.retries - 1);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let s = FaultSpec::parse("seed=7,fail=12@50000,transient=0.001").unwrap();
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.fail_stop, Some((12, 50_000)));
+        assert_eq!(s.transient, 0.001);
+        assert!(!s.is_benign());
+        // Display round-trips through parse
+        assert_eq!(FaultSpec::parse(&s.to_string()).unwrap(), s);
+    }
+
+    #[test]
+    fn parse_partial_and_empty() {
+        let s = FaultSpec::parse("transient=0.5").unwrap();
+        assert_eq!(s.fail_stop, None);
+        assert_eq!(s.transient, 0.5);
+        let e = FaultSpec::parse("").unwrap();
+        assert!(e.is_benign());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "nonsense",
+            "fail=3",
+            "fail=x@9",
+            "fail=3@y",
+            "seed=abc",
+            "transient=2.0",
+            "transient=-0.1",
+            "transient=NaN",
+            "bogus=1",
+        ] {
+            let r = FaultSpec::parse(bad);
+            assert!(matches!(r, Err(FaultError::BadSpec(_))), "{bad}: {r:?}");
+        }
+    }
+
+    #[test]
+    fn exit_codes_are_documented_values() {
+        assert_eq!(FaultError::Timeout { limit_ms: 1 }.exit_code(), 3);
+        assert_eq!(
+            FaultError::MemoryBudget {
+                limit_mb: 1,
+                observed_mb: 2
+            }
+            .exit_code(),
+            3
+        );
+        assert_eq!(
+            FaultError::UnrecoverableUnitLoss { unit: 0, vertex: 0 }.exit_code(),
+            4
+        );
+        assert_eq!(FaultError::LinkFailure { retries: 8 }.exit_code(), 4);
+        assert_eq!(FaultError::WorkLost { unit: 0, pieces: 1 }.exit_code(), 4);
+        assert_eq!(FaultError::BadSpec(String::new()).exit_code(), 2);
+    }
+
+    #[test]
+    fn transient_stream_is_deterministic_and_bounded() {
+        let spec = FaultSpec {
+            seed: 42,
+            transient: 0.3,
+            ..FaultSpec::default()
+        };
+        let roll = |n: usize| -> Vec<(u32, u64)> {
+            let mut link = TransientLink::new(&spec);
+            (0..n)
+                .map(|_| {
+                    let t = link.transfer().unwrap();
+                    (t.retries, t.backoff)
+                })
+                .collect()
+        };
+        assert_eq!(roll(200), roll(200));
+        // p=1 must trip the retry cap instead of looping forever
+        let mut dead = TransientLink::new(&FaultSpec {
+            transient: 1.0,
+            ..spec
+        });
+        assert_eq!(
+            dead.transfer(),
+            Err(FaultError::LinkFailure {
+                retries: MAX_TRANSIENT_RETRIES
+            })
+        );
+        // p=0 consumes no randomness and charges nothing
+        let mut clean = TransientLink::new(&FaultSpec::default());
+        let t = clean.transfer().unwrap();
+        assert_eq!((t.retries, t.backoff), (0, 0));
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod addrmap;
 pub mod config;
+pub mod fault;
 pub mod filter;
 pub mod placement;
 pub mod sim;
@@ -12,8 +13,11 @@ pub mod stealing;
 
 pub use addrmap::{AccessClass, AddrMap};
 pub use config::PimConfig;
+pub use fault::{FaultError, FaultSpec};
 pub use placement::{Placement, ReplicaReport};
 pub use sim::{
-    build_placement, simulate_app, simulate_fsm, simulate_motifs, simulate_plan,
-    simulate_plans_fused, AccessStats, MotifSimResult, SimOptions, SimResult,
+    build_placement, simulate_app, simulate_app_checked, simulate_fsm, simulate_fsm_checked,
+    simulate_motifs, simulate_motifs_checked, simulate_plan, simulate_plan_checked,
+    simulate_plans_fused, simulate_plans_fused_checked, AccessStats, MotifSimResult, SimOptions,
+    SimResult,
 };

@@ -139,6 +139,37 @@ impl Placement {
         }
     }
 
+    /// Recoverability probe for a fail-stop of `unit` (DESIGN.md §15):
+    /// the first vertex the unit owns whose list no *other* unit holds a
+    /// replica of, or `None` when every owned list can be served by
+    /// replica promotion. Units that lose a covered placement can
+    /// fail-stop without affecting results; an uncovered vertex makes
+    /// the loss unrecoverable.
+    pub fn uncovered_on_loss(&self, unit: usize) -> Option<VertexId> {
+        let units = self.owned_bytes.len();
+        // Prefix coverage from the *surviving* units: anything below the
+        // second-highest boundary is replicated somewhere else.
+        let max_other_vb = (0..units)
+            .filter(|&u| u != unit)
+            .map(|u| self.v_b[u])
+            .max()
+            .unwrap_or(0);
+        self.owner
+            .iter()
+            .enumerate()
+            .filter(|&(_, &o)| o as usize == unit)
+            .map(|(v, _)| v as VertexId)
+            .find(|&v| {
+                if v < max_other_vb {
+                    return false;
+                }
+                match &self.replica_sets {
+                    Some(sets) => !(0..units).any(|u| u != unit && sets.contains(u, v)),
+                    None => true,
+                }
+            })
+    }
+
     /// Fraction of vertices duplicated everywhere (min over units).
     pub fn duplication_fraction(&self, n: usize) -> f64 {
         if n == 0 {
@@ -300,6 +331,32 @@ mod tests {
             }
             // replicated_vertices round-trips the plan exactly
             assert_eq!(p.replicated_vertices(&g, u), plan.sets[u]);
+        }
+    }
+
+    #[test]
+    fn uncovered_on_loss_tracks_replica_coverage() {
+        let cfg = PimConfig::tiny();
+        let g = gen::erdos_renyi(500, 1500, 4);
+        // no replicas at all: losing any unit strands its first owned list
+        let bare = Placement::round_robin(&g, &cfg);
+        let v = bare.uncovered_on_loss(0).expect("no replicas → uncovered");
+        assert_eq!(bare.owner[v as usize], 0);
+        // full duplication: every unit's loss is recoverable
+        let full = Placement::round_robin(&g, &cfg).with_duplication(&g, &cfg, None);
+        for u in 0..cfg.num_units() {
+            assert_eq!(full.uncovered_on_loss(u), None, "unit {u}");
+        }
+        // partial duplication: a vertex above every surviving boundary is
+        // uncovered
+        let raw = sort_by_degree_desc(&gen::power_law(2_000, 10_000, 300, 8)).graph;
+        let total = raw.col_idx.len() as u64 * 4;
+        let cap = total / cfg.num_units() as u64 + total / 10;
+        let p = Placement::round_robin(&raw, &cfg).with_duplication(&raw, &cfg, Some(cap));
+        let v = p.uncovered_on_loss(0).expect("partial coverage → uncovered");
+        assert_eq!(p.owner[v as usize], 0);
+        for u in 1..cfg.num_units() {
+            assert!(!p.has_replica(u, v));
         }
     }
 

@@ -23,8 +23,9 @@
 
 use super::addrmap::{split_access, startup_latency, AddrMap};
 use super::config::PimConfig;
+use super::fault::{self, FaultError, FaultSpec};
 use super::placement::Placement;
-use super::stealing::{schedule_traced, Piece};
+use super::stealing::{schedule_faulty, Piece};
 use crate::exec::enumerate::{EnumSink, Enumerator, MultiEnumerator};
 use crate::graph::{CsrGraph, HubBitmaps, VertexId};
 use crate::mine::census::{CensusEngine, MotifCensus};
@@ -96,6 +97,12 @@ pub struct SimOptions {
     /// Simulated results are bit-identical for every worker count
     /// (`tests/prop_parallel.rs`) — this only moves host wall clock.
     pub threads: Option<usize>,
+    /// DESIGN.md §15 deterministic fault plan (`--faults`): seeded
+    /// fail-stop and transient-link errors injected into the scheduling
+    /// pass. `None` (and any [`FaultSpec::is_benign`] spec) is
+    /// bit-identical to the fault-free simulator; recoverable plans
+    /// change cycles but never counts (`tests/prop_faults.rs`).
+    pub faults: Option<FaultSpec>,
 }
 
 impl SimOptions {
@@ -111,6 +118,7 @@ impl SimOptions {
         fused: false,
         chunk: None,
         threads: None,
+        faults: None,
     };
 
     pub fn all() -> SimOptions {
@@ -241,6 +249,19 @@ pub struct SimResult {
     /// Plans (patterns / FSM candidates) evaluated through fused
     /// traversals in this run; zero for per-plan execution.
     pub fused_plans: u64,
+    /// Faults injected by the DESIGN.md §15 plan: fail-stops applied plus
+    /// transient transfer errors rolled. Zero on the fault-free path.
+    pub faults_injected: u64,
+    /// Transient-link retransmissions performed (each also counts in
+    /// `faults_injected`).
+    pub retries: u64,
+    /// Steals forced by recovery — orphaned pieces re-dispatched off a
+    /// fail-stopped unit's queue, counted separately from load-balancing
+    /// `steals`.
+    pub recovery_steals: u64,
+    /// Exponential-backoff cycles charged for transient retries (already
+    /// inside `total_cycles` via the victims' busy time).
+    pub backoff_cycles: u64,
 }
 
 impl SimResult {
@@ -288,6 +309,10 @@ impl SimResult {
         self.bitmap_words += o.bitmap_words;
         self.shared_fetches += o.shared_fetches;
         self.fused_plans += o.fused_plans;
+        self.faults_injected += o.faults_injected;
+        self.retries += o.retries;
+        self.recovery_steals += o.recovery_steals;
+        self.backoff_cycles += o.backoff_cycles;
     }
 
     /// The all-zero identity for [`add`](Self::add) (`v_b_min` saturated
@@ -315,6 +340,10 @@ impl SimResult {
             bitmap_words: 0,
             shared_fetches: 0,
             fused_plans: 0,
+            faults_injected: 0,
+            retries: 0,
+            recovery_steals: 0,
+            backoff_cycles: 0,
         }
     }
 }
@@ -1130,7 +1159,9 @@ fn merge_aggregation(
 
 /// Phase 2 + assembly: schedule the profiled tasks on the units, apply
 /// the congestion bounds, and (mining workloads) charge the cross-unit
-/// support-map merge.
+/// support-map merge. `Err` only with an unrecoverable fault plan
+/// ([`SimOptions::faults`]) or a tripped execution budget
+/// (`ws::set_budget`) — never on the fault-free path.
 fn finish_sim(
     roots: &[VertexId],
     profiles: Vec<TaskProfile>,
@@ -1139,7 +1170,10 @@ fn finish_sim(
     cfg: &PimConfig,
     setup: &SimSetup,
     agg: Option<AggSpec>,
-) -> SimResult {
+) -> Result<SimResult, FaultError> {
+    // The profiling pass drains early when a budget trips; refuse to
+    // schedule (and report) a partial profile.
+    fault::check_budget()?;
     let _sp = trace::span("merge");
     let mut queues: Vec<VecDeque<Piece>> = vec![VecDeque::new(); cfg.num_units()];
     for (i, prof) in profiles.iter().enumerate() {
@@ -1150,7 +1184,11 @@ fn finish_sim(
     }
     // Units holding mining state = units that ran at least one task.
     let active: Vec<bool> = queues.iter().map(|q| !q.is_empty()).collect();
-    let (sched, device_tl) = schedule_traced(cfg, queues, opts.stealing, timeline::armed());
+    // Benign specs take the fault-free fast path — bit-identical either
+    // way, but this keeps the zero-fault overhead at two branch tests.
+    let faults = opts.faults.filter(|f| !f.is_benign());
+    let (sched, device_tl) =
+        schedule_faulty(cfg, queues, opts.stealing, timeline::armed(), faults)?;
     if let Some(dt) = device_tl {
         timeline::record_device(dt, sched.makespan);
     }
@@ -1198,12 +1236,16 @@ fn finish_sim(
         metrics::SIM_INTER_BYTES.bump(acc.access_f[2].round() as u64);
         metrics::SIM_STEALS.bump(sched.steals);
         metrics::SIM_STEAL_OVERHEAD_CYCLES.bump(2 * cfg.steal_overhead * sched.steals);
+        metrics::SIM_FAULTS_INJECTED.bump(sched.faults_injected);
+        metrics::SIM_RETRIES.bump(sched.retries);
+        metrics::SIM_RECOVERY_STEALS.bump(sched.recovery_steals);
+        metrics::SIM_BACKOFF_CYCLES.bump(sched.backoff_cycles);
         for &busy in &sched.unit_busy {
             metrics::SIM_UNIT_BUSY.record_always(busy);
         }
     }
 
-    SimResult {
+    Ok(SimResult {
         count: acc.count,
         total_cycles,
         seconds: cfg.cycles_to_seconds(total_cycles),
@@ -1233,10 +1275,42 @@ fn finish_sim(
         bitmap_words: acc.bitmap_words,
         shared_fetches: acc.shared_fetches,
         fused_plans: 0,
+        faults_injected: sched.faults_injected,
+        retries: sched.retries,
+        recovery_steals: sched.recovery_steals,
+        backoff_cycles: sched.backoff_cycles,
+    })
+}
+
+/// Pre-flight a run's fault plan against the machine and placement: a
+/// fail-stopped unit must not be the sole holder of any vertex it owns
+/// (DESIGN.md §15). `Ok` when no plan is set.
+fn preflight_faults(
+    opts: &SimOptions,
+    cfg: &PimConfig,
+    setup: &SimSetup,
+) -> Result<(), FaultError> {
+    match &opts.faults {
+        Some(spec) => fault::validate(spec, cfg, &setup.placement),
+        None => Ok(()),
     }
 }
 
-/// Simulate one plan over the given root tasks.
+/// Unwrap a checked simulation result on the fault-free path. Legacy
+/// `simulate_*` entry points keep their infallible signatures by going
+/// through this; they are only sound without [`SimOptions::faults`] and
+/// without an installed `ws::set_budget` — the CLI and coordinator use
+/// the `*_checked` variants.
+fn expect_fault_free<T>(r: Result<T, FaultError>) -> T {
+    match r {
+        Ok(v) => v,
+        Err(e) => panic!("fault-free simulation failed ({e}); use the *_checked entry points"),
+    }
+}
+
+/// Simulate one plan over the given root tasks. Fault-free convenience
+/// wrapper over [`simulate_plan_checked`]; panics if `opts.faults` is
+/// unrecoverable or an execution budget trips.
 pub fn simulate_plan(
     g: &CsrGraph,
     plan: &Plan,
@@ -1244,6 +1318,17 @@ pub fn simulate_plan(
     opts: &SimOptions,
     cfg: &PimConfig,
 ) -> SimResult {
+    expect_fault_free(simulate_plan_checked(g, plan, roots, opts, cfg))
+}
+
+/// [`simulate_plan`] with typed fault/budget errors (DESIGN.md §15).
+pub fn simulate_plan_checked(
+    g: &CsrGraph,
+    plan: &Plan,
+    roots: &[VertexId],
+    opts: &SimOptions,
+    cfg: &PimConfig,
+) -> Result<SimResult, FaultError> {
     struct PlanRunner<'g> {
         g: &'g CsrGraph,
         plan: &'g Plan,
@@ -1259,6 +1344,7 @@ pub fn simulate_plan(
         }
     }
     let setup = SimSetup::new(g, opts, cfg);
+    preflight_faults(opts, cfg, &setup)?;
     let runner = PlanRunner {
         g,
         plan,
@@ -1290,6 +1376,18 @@ pub fn simulate_plans_fused(
     opts: &SimOptions,
     cfg: &PimConfig,
 ) -> (SimResult, Vec<u64>) {
+    expect_fault_free(simulate_plans_fused_checked(g, plans, roots, opts, cfg))
+}
+
+/// [`simulate_plans_fused`] with typed fault/budget errors
+/// (DESIGN.md §15).
+pub fn simulate_plans_fused_checked(
+    g: &CsrGraph,
+    plans: &[Plan],
+    roots: &[VertexId],
+    opts: &SimOptions,
+    cfg: &PimConfig,
+) -> Result<(SimResult, Vec<u64>), FaultError> {
     struct FusedRunner<'a> {
         g: &'a CsrGraph,
         trie: &'a PlanTrie,
@@ -1309,6 +1407,7 @@ pub fn simulate_plans_fused(
         }
     }
     let setup = SimSetup::new(g, opts, cfg);
+    preflight_faults(opts, cfg, &setup)?;
     let trie = {
         let _sp = trace::span("plan/fuse");
         trace::counter("plans", plans.len() as u64);
@@ -1339,9 +1438,9 @@ pub fn simulate_plans_fused(
             None => format!("trie{i}"),
         }));
     }
-    let mut result = finish_sim(roots, profiles, acc, opts, cfg, &setup, None);
+    let mut result = finish_sim(roots, profiles, acc, opts, cfg, &setup, None)?;
     result.fused_plans = trie.num_plans as u64;
-    (result, per_plan)
+    Ok((result, per_plan))
 }
 
 /// Outcome of `PIMMotifCount`: the census plus the simulated timing.
@@ -1362,6 +1461,17 @@ pub fn simulate_motifs(
     opts: &SimOptions,
     cfg: &PimConfig,
 ) -> MotifSimResult {
+    expect_fault_free(simulate_motifs_checked(g, k, roots, opts, cfg))
+}
+
+/// [`simulate_motifs`] with typed fault/budget errors (DESIGN.md §15).
+pub fn simulate_motifs_checked(
+    g: &CsrGraph,
+    k: usize,
+    roots: &[VertexId],
+    opts: &SimOptions,
+    cfg: &PimConfig,
+) -> Result<MotifSimResult, FaultError> {
     struct CensusRunner<'g> {
         g: &'g CsrGraph,
         cls: &'g PatternClassifier,
@@ -1377,6 +1487,7 @@ pub fn simulate_motifs(
     }
     let cls = PatternClassifier::new(k);
     let setup = SimSetup::new(g, opts, cfg);
+    preflight_faults(opts, cfg, &setup)?;
     let (acc, profiles, workers) =
         profile_pass(g, &CensusRunner { g, cls: &cls }, roots, opts, cfg, &setup);
     let mut counts = vec![0u64; cls.num_patterns()];
@@ -1392,15 +1503,15 @@ pub fn simulate_motifs(
         entries: cls.num_patterns() as u64,
         entry_bytes: 8, // one u64 counter slot per pattern
     };
-    let sim = finish_sim(roots, profiles, acc, opts, cfg, &setup, Some(spec));
-    MotifSimResult {
+    let sim = finish_sim(roots, profiles, acc, opts, cfg, &setup, Some(spec))?;
+    Ok(MotifSimResult {
         census: MotifCensus {
             k,
             motifs: cls.motifs().to_vec(),
             counts,
         },
         sim,
-    }
+    })
 }
 
 /// FSM on the simulated machine (`PIMFrequentMine`): every BFS level's
@@ -1414,6 +1525,19 @@ pub fn simulate_fsm(
     opts: &SimOptions,
     cfg: &PimConfig,
 ) -> (FsmResult, SimResult) {
+    expect_fault_free(simulate_fsm_checked(g, fsm_cfg, opts, cfg))
+}
+
+/// [`simulate_fsm`] with typed fault/budget errors (DESIGN.md §15). A
+/// fault or budget trip inside a BFS level voids that level's stats
+/// (reported as all-zero, which stops candidate expansion) and surfaces
+/// as `Err` — no partial mining result escapes.
+pub fn simulate_fsm_checked(
+    g: &CsrGraph,
+    fsm_cfg: &FsmConfig,
+    opts: &SimOptions,
+    cfg: &PimConfig,
+) -> Result<(FsmResult, SimResult), FaultError> {
     struct FsmLevelRunner<'a> {
         g: &'a CsrGraph,
         cands: &'a [LabeledPattern],
@@ -1471,6 +1595,9 @@ pub fn simulate_fsm(
         setup: SimSetup,
         roots: Vec<VertexId>,
         levels: Vec<SimResult>,
+        /// First fault/budget error; once set, remaining levels report
+        /// all-zero stats (nothing frequent) so mining winds down fast.
+        error: Option<FaultError>,
     }
     impl LevelExecutor for PimLevelExecutor<'_> {
         fn run_level(
@@ -1478,6 +1605,9 @@ pub fn simulate_fsm(
             g: &CsrGraph,
             candidates: &[LabeledPattern],
         ) -> Vec<CandidateStats> {
+            if self.error.is_some() {
+                return LevelAcc::new(candidates).into_stats();
+            }
             let (acc, profiles, workers) = if self.opts.fused {
                 let runner = FusedFsmLevelRunner {
                     g,
@@ -1519,7 +1649,7 @@ pub fn simulate_fsm(
                     .sum(),
                 entry_bytes: 16,
             };
-            let mut sim = finish_sim(
+            let mut sim = match finish_sim(
                 &self.roots,
                 profiles,
                 acc,
@@ -1527,7 +1657,13 @@ pub fn simulate_fsm(
                 self.cfg,
                 &self.setup,
                 Some(spec),
-            );
+            ) {
+                Ok(sim) => sim,
+                Err(e) => {
+                    self.error = Some(e);
+                    return LevelAcc::new(candidates).into_stats();
+                }
+            };
             if self.opts.fused {
                 sim.fused_plans = candidates.len() as u64;
             }
@@ -1536,6 +1672,7 @@ pub fn simulate_fsm(
         }
     }
     let setup = SimSetup::new(g, opts, cfg);
+    preflight_faults(opts, cfg, &setup)?;
     let v_b_min = setup.v_b_min;
     let mut exec = PimLevelExecutor {
         opts,
@@ -1543,8 +1680,12 @@ pub fn simulate_fsm(
         setup,
         roots: (0..g.num_vertices() as VertexId).collect(),
         levels: Vec::new(),
+        error: None,
     };
     let result = fsm::fsm_mine_with(g, fsm_cfg, &mut exec);
+    if let Some(e) = exec.error {
+        return Err(e);
+    }
     let mut total = SimResult::empty();
     for lvl in &exec.levels {
         total.add(lvl);
@@ -1553,7 +1694,7 @@ pub fn simulate_fsm(
         total.v_b_min = v_b_min;
         total.unit_busy = vec![0; cfg.num_units()];
     }
-    (result, total)
+    Ok((result, total))
 }
 
 /// Simulate a whole application. With [`SimOptions::fused`] the plans
@@ -1567,18 +1708,29 @@ pub fn simulate_app(
     opts: &SimOptions,
     cfg: &PimConfig,
 ) -> SimResult {
+    expect_fault_free(simulate_app_checked(g, app, roots, opts, cfg))
+}
+
+/// [`simulate_app`] with typed fault/budget errors (DESIGN.md §15).
+pub fn simulate_app_checked(
+    g: &CsrGraph,
+    app: &Application,
+    roots: &[VertexId],
+    opts: &SimOptions,
+    cfg: &PimConfig,
+) -> Result<SimResult, FaultError> {
     let plans = app.plans();
     if opts.fused {
-        return simulate_plans_fused(g, &plans, roots, opts, cfg).0;
+        return Ok(simulate_plans_fused_checked(g, &plans, roots, opts, cfg)?.0);
     }
     let mut it = plans.iter();
     let first = it.next().expect("application has at least one pattern");
-    let mut total = simulate_plan(g, first, roots, opts, cfg);
+    let mut total = simulate_plan_checked(g, first, roots, opts, cfg)?;
     for plan in it {
-        let r = simulate_plan(g, plan, roots, opts, cfg);
+        let r = simulate_plan_checked(g, plan, roots, opts, cfg)?;
         total.add(&r);
     }
-    total
+    Ok(total)
 }
 
 #[cfg(test)]

@@ -16,8 +16,20 @@
 //!
 //! The simulator is deterministic: ties are broken by unit id, and the
 //! event heap orders by (time, unit, sequence).
+//!
+//! **Fault injection (DESIGN.md §15).** [`schedule_faulty`] additionally
+//! accepts a seeded [`FaultSpec`]: a *fail-stop* halts a unit at a given
+//! cycle and re-dispatches its unfinished pieces through the stealing
+//! machinery (*recovery steals* — they bypass the profitability
+//! heuristics and the `stealing` flag, because moving orphaned work is
+//! correctness, not load balance), and *transient* inter-channel
+//! transfer errors are retried with exponential-backoff cycle cost
+//! charged to the victim unit. Both are deterministic under the spec's
+//! seed; an unrecoverable plan returns a typed
+//! [`FaultError`] instead of a wrong schedule.
 
 use super::config::PimConfig;
+use super::fault::{FaultError, FaultSpec, TransientLink};
 use crate::obs::timeline::DeviceTimeline;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
@@ -42,6 +54,15 @@ pub struct ScheduleOutcome {
     pub steals: u64,
     /// Steal attempts that found no work (the unit then terminated).
     pub failed_steals: u64,
+    /// Faults injected: fail-stops applied plus transient transfer
+    /// errors triggered (DESIGN.md §15). Zero without a fault spec.
+    pub faults_injected: u64,
+    /// Transfer retries caused by transient errors.
+    pub retries: u64,
+    /// Steals that re-dispatched a fail-stopped unit's orphaned pieces.
+    pub recovery_steals: u64,
+    /// Exponential-backoff cycles charged for transient retries.
+    pub backoff_cycles: u64,
 }
 
 struct UnitState {
@@ -50,6 +71,9 @@ struct UnitState {
     current: Option<Current>,
     busy: u64,
     terminated: bool,
+    /// Fail-stopped (DESIGN.md §15): never executes again, but its queue
+    /// may still hold orphaned pieces awaiting recovery steals.
+    failed: bool,
     version: u64,
 }
 
@@ -79,6 +103,25 @@ pub fn schedule_traced(
     stealing: bool,
     record: bool,
 ) -> (ScheduleOutcome, Option<DeviceTimeline>) {
+    match schedule_faulty(cfg, queues, stealing, record, None) {
+        Ok(out) => out,
+        Err(e) => unreachable!("fault-free schedule cannot fail: {e}"),
+    }
+}
+
+/// [`schedule_traced`] under a deterministic fault plan (DESIGN.md §15).
+/// With `faults: None` this is exactly the fault-free schedule. A
+/// recoverable plan perturbs only the *timing* (busy cycles, makespan,
+/// steal counts); an unrecoverable one — a transfer that stays corrupt
+/// past the retry cap, or orphaned work with no survivor to take it —
+/// returns a typed [`FaultError`] instead of a wrong schedule.
+pub fn schedule_faulty(
+    cfg: &PimConfig,
+    queues: Vec<VecDeque<Piece>>,
+    stealing: bool,
+    record: bool,
+    faults: Option<FaultSpec>,
+) -> Result<(ScheduleOutcome, Option<DeviceTimeline>), FaultError> {
     let n = queues.len();
     assert_eq!(n, cfg.num_units());
     let mut units: Vec<UnitState> = queues
@@ -88,6 +131,7 @@ pub fn schedule_traced(
             current: None,
             busy: 0,
             terminated: false,
+            failed: false,
             version: 0,
         })
         .collect();
@@ -103,16 +147,49 @@ pub fn schedule_traced(
     let mut makespan = 0u64;
     let mut steals = 0u64;
     let mut failed = 0u64;
+    let mut faults_injected = 0u64;
+    let mut retries = 0u64;
+    let mut recovery_steals = 0u64;
+    let mut backoff_cycles = 0u64;
+    // Seeded transient-error stream; one roll per inter-channel steal
+    // transfer, in deterministic event order.
+    let mut link = faults.map(|f| TransientLink::new(&f));
+    let mut pending_fail = faults.and_then(|f| f.fail_stop);
+    let have_faults = faults.is_some();
     let mut tl = if record {
         Some(DeviceTimeline {
             intervals: vec![Vec::new(); n],
             steals: Vec::new(),
+            faults: Vec::new(),
         })
     } else {
         None
     };
 
     while let Some(Reverse((t, u, ver))) = heap.pop() {
+        // Fail-stop triggers lazily at the first event reaching its
+        // cycle: apply it at exactly `fc`, wake terminated units so the
+        // orphaned pieces can be recovery-stolen, and re-deliver the
+        // popped event in time order.
+        if let Some((fu, fc)) = pending_fail {
+            if t >= fc && (fu as usize) < n {
+                pending_fail = None;
+                apply_fail_stop(&mut units, fu as usize, fc, tl.as_mut());
+                faults_injected += 1;
+                makespan = makespan.max(fc);
+                if !units[fu as usize].queue.is_empty() {
+                    for (w, s) in units.iter_mut().enumerate() {
+                        if w != fu as usize && s.terminated {
+                            s.terminated = false;
+                            s.version += 1;
+                            heap.push(Reverse((fc, w, s.version)));
+                        }
+                    }
+                }
+                heap.push(Reverse((t, u, ver)));
+                continue;
+            }
+        }
         if units[u].version != ver || units[u].terminated {
             continue; // stale event (unit was re-scheduled by a steal)
         }
@@ -134,32 +211,73 @@ pub fn schedule_traced(
             heap.push(Reverse((event_time(&units[u], t), u, v)));
             continue;
         }
-        if !stealing {
+        // Recovery steals bypass both the `stealing` flag and the
+        // profitability heuristics: orphaned pieces *must* move.
+        let recovery = if have_faults {
+            find_failed_victim(cfg, &units, u)
+        } else {
+            None
+        };
+        if recovery.is_none() && !stealing {
             units[u].terminated = true;
             continue;
         }
         // Steal: scan own channel first, then subsequent channels (§4.4.3).
-        match find_victim(cfg, &units, u, t) {
+        let victim = recovery.or_else(|| find_victim(cfg, &units, u, t));
+        match victim {
             Some(victim) => {
-                steals += 1;
+                if recovery.is_some() {
+                    recovery_steals += 1;
+                } else {
+                    steals += 1;
+                }
                 if let Some(tl) = tl.as_mut() {
                     tl.steals.push((t, u as u32, victim as u32));
                 }
                 let overhead = cfg.steal_overhead;
+                // Transient fault roll on the inter-channel index
+                // transfer: each corrupt attempt charges exponential
+                // backoff to the victim (it holds the transfer open); a
+                // dead or idle victim cannot absorb it, so the thief
+                // stalls instead.
+                let mut thief_backoff = 0u64;
+                if cfg.channel_of(u) != cfg.channel_of(victim) {
+                    if let Some(link) = link.as_mut() {
+                        let tr = link.transfer()?;
+                        if tr.retries > 0 {
+                            retries += tr.retries as u64;
+                            faults_injected += tr.retries as u64;
+                            backoff_cycles += tr.backoff;
+                            if let Some(tl) = tl.as_mut() {
+                                tl.faults.push((t, victim as u32));
+                            }
+                            let vic = &mut units[victim];
+                            match vic.current.as_mut() {
+                                Some(c) if !vic.failed => {
+                                    c.finish += tr.backoff;
+                                    c.exec += tr.backoff;
+                                    vic.version += 1;
+                                }
+                                _ => thief_backoff = tr.backoff,
+                            }
+                        }
+                    }
+                }
                 let mut stolen = take_work(&mut units, victim, t, overhead);
                 // Thief pays overhead, then executes the first stolen
                 // piece; any remainder lands in its schedule table.
                 let first = stolen.remove(0);
                 let thief = &mut units[u];
                 thief.queue.extend(stolen);
+                let exec = overhead + thief_backoff + first.cycles;
                 thief.current = Some(Current {
-                    finish: t + overhead + first.cycles,
-                    exec: overhead + first.cycles,
+                    finish: t + exec,
+                    exec,
                     chunks: first.chunks,
                 });
                 thief.version += 1;
                 let v = thief.version;
-                heap.push(Reverse((t + overhead + first.cycles, u, v)));
+                heap.push(Reverse((t + exec, u, v)));
                 // Victim's current piece (if running) was perturbed:
                 // refresh its event.
                 let vic = &units[victim];
@@ -176,15 +294,89 @@ pub fn schedule_traced(
         }
     }
 
-    (
+    // Safety net: orphaned pieces with no survivor to take them (e.g. a
+    // single-unit machine) must not silently vanish from the schedule.
+    for (u, s) in units.iter().enumerate() {
+        if s.failed && !s.queue.is_empty() {
+            return Err(FaultError::WorkLost {
+                unit: u as u32,
+                pieces: s.queue.len(),
+            });
+        }
+    }
+
+    Ok((
         ScheduleOutcome {
             makespan,
             unit_busy: units.iter().map(|s| s.busy).collect(),
             steals,
             failed_steals: failed,
+            faults_injected,
+            retries,
+            recovery_steals,
+            backoff_cycles,
         },
         tl,
-    )
+    ))
+}
+
+/// Halt `fu` permanently at cycle `fc`: credit the executed portion of
+/// its in-flight piece, push the remainder (cycles and proportional
+/// chunks) back onto its queue as an orphan, and bump its version so
+/// every in-flight event for it goes stale.
+fn apply_fail_stop(
+    units: &mut [UnitState],
+    fu: usize,
+    fc: u64,
+    tl: Option<&mut DeviceTimeline>,
+) {
+    let s = &mut units[fu];
+    s.failed = true;
+    s.terminated = true;
+    s.version += 1;
+    let mut truncated = None;
+    if let Some(cur) = s.current.take() {
+        let start = cur.finish - cur.exec;
+        let done = fc.saturating_sub(start).min(cur.exec);
+        let remaining = cur.exec - done;
+        s.busy += done;
+        truncated = Some((start, done));
+        if remaining > 0 {
+            // Chunks proportional to remaining cycles — the same
+            // uniform-chunk approximation `take_work` splits by.
+            let chunks = (cur.chunks * remaining / cur.exec.max(1)).max(1);
+            s.queue.push_front(Piece {
+                cycles: remaining,
+                chunks,
+            });
+        }
+    }
+    if let Some(tl) = tl {
+        if let Some((start, done)) = truncated {
+            if done > 0 {
+                tl.intervals[fu].push((start, done));
+            }
+        }
+        tl.faults.push((fc, fu as u32));
+    }
+}
+
+/// §4.4.3-order scan for a fail-stopped unit still holding orphaned
+/// pieces — the recovery analogue of [`find_victim`], with no
+/// profitability gate.
+fn find_failed_victim(cfg: &PimConfig, units: &[UnitState], thief: usize) -> Option<usize> {
+    let upc = cfg.units_per_channel;
+    let ch = cfg.channel_of(thief);
+    for dc in 0..cfg.channels {
+        let c = (ch + dc) % cfg.channels;
+        for slot in 0..upc {
+            let j = c * upc + slot;
+            if j != thief && units[j].failed && !units[j].queue.is_empty() {
+                return Some(j);
+            }
+        }
+    }
+    None
 }
 
 fn event_time(s: &UnitState, now: u64) -> u64 {
@@ -431,6 +623,179 @@ mod tests {
             assert_ne!(thief, victim);
             assert!((thief as usize) < 8 && (victim as usize) < 8);
         }
+    }
+
+    #[test]
+    fn benign_fault_spec_is_bit_identical_to_fault_free() {
+        let cfg = tiny();
+        let mut q = vec![VecDeque::new(); 8];
+        for i in 0..64 {
+            q[i % 5].push_back(Piece {
+                cycles: (i as u64 * 7919) % 4000 + 200,
+                chunks: (i as u64 % 6) + 1,
+            });
+        }
+        let spec = FaultSpec {
+            seed: 123,
+            fail_stop: None,
+            transient: 0.0,
+        };
+        let plain = schedule(&cfg, q.clone(), true);
+        let (faulty, _) = schedule_faulty(&cfg, q, true, false, Some(spec)).unwrap();
+        assert_eq!(faulty.makespan, plain.makespan);
+        assert_eq!(faulty.unit_busy, plain.unit_busy);
+        assert_eq!(faulty.steals, plain.steals);
+        assert_eq!(faulty.faults_injected, 0);
+        assert_eq!(faulty.retries, 0);
+        assert_eq!(faulty.recovery_steals, 0);
+        assert_eq!(faulty.backoff_cycles, 0);
+    }
+
+    #[test]
+    fn fail_stop_redispatches_orphans_via_recovery_steals() {
+        let cfg = tiny();
+        // Four pieces on unit 0; the unit dies mid-piece-two. Stealing is
+        // OFF: recovery steals alone must complete the remaining work.
+        let mut q = vec![VecDeque::new(); 8];
+        for _ in 0..4 {
+            q[0].push_back(Piece {
+                cycles: 100_000,
+                chunks: 4,
+            });
+        }
+        let spec = FaultSpec {
+            seed: 1,
+            fail_stop: Some((0, 150_000)),
+            transient: 0.0,
+        };
+        let (out, tl) = schedule_faulty(&cfg, q, false, true, Some(spec)).unwrap();
+        assert_eq!(out.faults_injected, 1);
+        assert!(out.recovery_steals > 0, "orphans must be recovery-stolen");
+        assert_eq!(out.steals, 0, "regular stealing was off");
+        // The failed unit executed exactly up to the fail cycle.
+        assert_eq!(out.unit_busy[0], 150_000);
+        // All 400k cycles of work complete; each recovery steal charges
+        // the thief (the victim is dead and pays nothing).
+        let busy: u64 = out.unit_busy.iter().sum();
+        assert_eq!(busy, 400_000 + cfg.steal_overhead * out.recovery_steals);
+        assert!(out.makespan > 150_000);
+        // Timeline: one fault instant at the fail cycle, intervals still
+        // tile unit_busy exactly, steals include the recovery steals.
+        let tl = tl.expect("record=true");
+        assert_eq!(tl.faults, vec![(150_000, 0)]);
+        assert_eq!(tl.steals.len() as u64, out.recovery_steals);
+        for (u, ivs) in tl.intervals.iter().enumerate() {
+            let sum: u64 = ivs.iter().map(|&(_, d)| d).sum();
+            assert_eq!(sum, out.unit_busy[u], "unit {u} interval sum");
+            let mut prev_end = 0u64;
+            for &(start, dur) in ivs {
+                assert!(start >= prev_end, "unit {u} intervals overlap");
+                prev_end = start + dur;
+            }
+        }
+    }
+
+    #[test]
+    fn fail_stop_after_completion_injects_nothing() {
+        let cfg = tiny();
+        let q = queues_from(&[(0, Piece { cycles: 1_000, chunks: 1 })], 8);
+        let spec = FaultSpec {
+            seed: 0,
+            fail_stop: Some((0, 1_000_000)),
+            transient: 0.0,
+        };
+        let (out, _) = schedule_faulty(&cfg, q, true, false, Some(spec)).unwrap();
+        assert_eq!(out.faults_injected, 0);
+        assert_eq!(out.recovery_steals, 0);
+        assert_eq!(out.makespan, 1_000);
+    }
+
+    #[test]
+    fn transient_retries_charge_backoff_and_conserve_busy() {
+        let cfg = tiny();
+        // All work on unit 0 with stealing on: thieves from other
+        // channels trigger inter-channel transfer rolls.
+        let mut q = vec![VecDeque::new(); 8];
+        for _ in 0..16 {
+            q[0].push_back(Piece {
+                cycles: 10_000,
+                chunks: 1,
+            });
+        }
+        let spec = FaultSpec {
+            seed: 9,
+            fail_stop: None,
+            transient: 0.4,
+        };
+        let (a, _) = schedule_faulty(&cfg, q.clone(), true, false, Some(spec)).unwrap();
+        let (b, _) = schedule_faulty(&cfg, q.clone(), true, false, Some(spec)).unwrap();
+        // Deterministic under the seed.
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.unit_busy, b.unit_busy);
+        assert_eq!(a.retries, b.retries);
+        assert_eq!(a.backoff_cycles, b.backoff_cycles);
+        assert!(a.retries > 0, "p=0.4 over many steals must trigger retries");
+        assert!(a.backoff_cycles > 0);
+        assert_eq!(a.faults_injected, a.retries);
+        // Busy conservation with faults: work + 2·overhead per steal +
+        // overhead per recovery steal + every backoff cycle.
+        let busy: u64 = a.unit_busy.iter().sum();
+        assert_eq!(
+            busy,
+            160_000
+                + 2 * cfg.steal_overhead * a.steals
+                + cfg.steal_overhead * a.recovery_steals
+                + a.backoff_cycles
+        );
+        // The perturbed schedule still beats the serial pile-up.
+        let serial = schedule(&cfg, q, false);
+        assert!(a.makespan < serial.makespan);
+    }
+
+    #[test]
+    fn dead_link_is_a_typed_error() {
+        let cfg = tiny();
+        let mut q = vec![VecDeque::new(); 8];
+        for _ in 0..16 {
+            q[0].push_back(Piece {
+                cycles: 10_000,
+                chunks: 1,
+            });
+        }
+        let spec = FaultSpec {
+            seed: 3,
+            fail_stop: None,
+            transient: 1.0,
+        };
+        let r = schedule_faulty(&cfg, q, true, false, Some(spec));
+        assert_eq!(
+            r.err(),
+            Some(FaultError::LinkFailure {
+                retries: super::super::fault::MAX_TRANSIENT_RETRIES
+            })
+        );
+    }
+
+    #[test]
+    fn stranded_orphans_are_a_typed_error() {
+        // A 1-unit machine cannot recover its own fail-stop: the orphaned
+        // piece has no surviving unit to land on.
+        let cfg = PimConfig {
+            channels: 1,
+            units_per_channel: 1,
+            ..PimConfig::tiny()
+        };
+        let q = queues_from(&[(0, Piece { cycles: 10_000, chunks: 4 })], 1);
+        let spec = FaultSpec {
+            seed: 0,
+            fail_stop: Some((0, 5_000)),
+            transient: 0.0,
+        };
+        let r = schedule_faulty(&cfg, q, true, false, Some(spec));
+        assert!(
+            matches!(r, Err(FaultError::WorkLost { unit: 0, pieces: 1 })),
+            "{r:?}"
+        );
     }
 
     #[test]

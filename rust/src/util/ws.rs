@@ -38,6 +38,8 @@ use super::rng::Rng;
 use crate::obs::metrics;
 use std::ops::Range;
 use std::sync::atomic::{fence, AtomicIsize, AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
 
 /// Outcome of a [`WsDeque::steal`] attempt.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -196,6 +198,162 @@ fn record_stats(stats: &WsStats) {
     metrics::WS_STEAL_ATTEMPTS.bump(stats.steal_attempts);
 }
 
+// ---------------------------------------------------------------------
+// Cooperative cancellation budgets (DESIGN.md §15).
+//
+// A budget is process-wide configuration — a wall-clock deadline and/or a
+// resident-set ceiling — installed by the CLI or the coordinator around
+// one query. The worker loops poll it between tasks: no task is ever
+// interrupted mid-body, so cancellation is cooperative and the drain is
+// deterministic (each worker finishes its current task, then stops taking
+// new ones). Callers that installed a budget must check
+// [`cancel_cause`] after the run and discard partial state — the
+// `pim::fault::check_budget` helper converts the cause into a typed
+// `FaultError` so no partial result ever escapes as an answer.
+//
+// `cancel_cause` is a *stateless* evaluation of the configured budget
+// against the clock and `/proc/self/statm`, not a sticky flag: dropping
+// the [`BudgetGuard`] restores the unlimited default immediately.
+
+/// Why a budgeted run was cancelled (see [`set_budget`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelCause {
+    /// The wall-clock deadline expired.
+    Timeout {
+        /// The configured limit, in milliseconds.
+        limit_ms: u64,
+    },
+    /// Resident-set size exceeded the configured ceiling.
+    Memory {
+        /// The configured ceiling, in MiB.
+        limit_mb: u64,
+        /// The resident-set size observed when the budget tripped, in MiB.
+        observed_mb: u64,
+    },
+}
+
+/// Sentinel for "no limit configured" in the atomics below.
+const UNSET: u64 = u64::MAX;
+/// Check RSS only every this-many budget polls — reading
+/// `/proc/self/statm` is a syscall, the deadline check is just a clock
+/// read.
+const MEM_POLL_PERIOD: u64 = 32;
+
+/// Deadline in milliseconds since [`anchor`], or [`UNSET`].
+static DEADLINE_MS: AtomicU64 = AtomicU64::new(UNSET);
+/// The configured timeout (for error reporting), in milliseconds.
+static TIMEOUT_LIMIT_MS: AtomicU64 = AtomicU64::new(UNSET);
+/// Resident-set ceiling in MiB, or [`UNSET`].
+static MEM_LIMIT_MB: AtomicU64 = AtomicU64::new(UNSET);
+/// Rolling poll counter used to throttle RSS reads.
+static POLL_TICK: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide monotonic time anchor for the deadline arithmetic.
+fn anchor() -> Instant {
+    static ANCHOR: OnceLock<Instant> = OnceLock::new();
+    *ANCHOR.get_or_init(Instant::now)
+}
+
+/// Milliseconds elapsed since the process anchor.
+fn now_ms() -> u64 {
+    anchor().elapsed().as_millis() as u64
+}
+
+/// Resident-set size in MiB from `/proc/self/statm` (field 2, in pages).
+/// `None` where procfs is unavailable — memory budgets are then inert.
+fn rss_mb() -> Option<u64> {
+    let statm = std::fs::read_to_string("/proc/self/statm").ok()?;
+    let pages: u64 = statm.split_whitespace().nth(1)?.parse().ok()?;
+    Some(pages * 4096 / (1024 * 1024))
+}
+
+/// Clears the budget installed by [`set_budget`] when dropped, so a
+/// panicking or early-returning query cannot leak its limits into the
+/// next one.
+#[must_use = "dropping the guard clears the budget"]
+pub struct BudgetGuard(());
+
+impl Drop for BudgetGuard {
+    fn drop(&mut self) {
+        clear_budget();
+    }
+}
+
+/// Install a process-wide execution budget: an optional wall-clock
+/// timeout (milliseconds, measured from now) and an optional resident-set
+/// ceiling (MiB). Returns a guard that restores the unlimited default on
+/// drop. Budgets are not nested — one query at a time holds the budget.
+pub fn set_budget(timeout_ms: Option<u64>, max_memory_mb: Option<u64>) -> BudgetGuard {
+    match timeout_ms {
+        Some(ms) => {
+            TIMEOUT_LIMIT_MS.store(ms, Ordering::SeqCst);
+            DEADLINE_MS.store(now_ms().saturating_add(ms), Ordering::SeqCst);
+        }
+        None => {
+            TIMEOUT_LIMIT_MS.store(UNSET, Ordering::SeqCst);
+            DEADLINE_MS.store(UNSET, Ordering::SeqCst);
+        }
+    }
+    MEM_LIMIT_MB.store(max_memory_mb.unwrap_or(UNSET), Ordering::SeqCst);
+    BudgetGuard(())
+}
+
+/// Remove any configured budget (also done by dropping the
+/// [`BudgetGuard`]).
+pub fn clear_budget() {
+    DEADLINE_MS.store(UNSET, Ordering::SeqCst);
+    TIMEOUT_LIMIT_MS.store(UNSET, Ordering::SeqCst);
+    MEM_LIMIT_MB.store(UNSET, Ordering::SeqCst);
+}
+
+/// Definitive budget check: `Some(cause)` iff a configured limit is
+/// currently exceeded. Reads the clock and (if a memory ceiling is set)
+/// `/proc/self/statm` unconditionally — call this at checkpoint
+/// boundaries, not per task; the worker loops use the throttled
+/// [`budget_tripped`].
+pub fn cancel_cause() -> Option<CancelCause> {
+    let dl = DEADLINE_MS.load(Ordering::SeqCst);
+    if dl != UNSET && now_ms() >= dl {
+        return Some(CancelCause::Timeout {
+            limit_ms: TIMEOUT_LIMIT_MS.load(Ordering::SeqCst),
+        });
+    }
+    let limit_mb = MEM_LIMIT_MB.load(Ordering::SeqCst);
+    if limit_mb != UNSET {
+        if let Some(observed_mb) = rss_mb() {
+            if observed_mb > limit_mb {
+                return Some(CancelCause::Memory {
+                    limit_mb,
+                    observed_mb,
+                });
+            }
+        }
+    }
+    None
+}
+
+/// Cheap per-task poll: deadline via one clock read, RSS only every
+/// [`MEM_POLL_PERIOD`]-th call. With no budget installed this is two
+/// relaxed loads.
+fn budget_tripped() -> bool {
+    let dl = DEADLINE_MS.load(Ordering::Relaxed);
+    let ml = MEM_LIMIT_MB.load(Ordering::Relaxed);
+    if dl == UNSET && ml == UNSET {
+        return false;
+    }
+    if dl != UNSET && now_ms() >= dl {
+        return true;
+    }
+    if ml != UNSET && POLL_TICK.fetch_add(1, Ordering::Relaxed) % MEM_POLL_PERIOD == 0 {
+        if let Some(mb) = rss_mb() {
+            if mb > ml {
+                return true;
+            }
+        }
+    }
+    false
+}
+
 /// Run tasks `0..ntasks` across `workers` workers with Chase–Lev work
 /// stealing. `init(w)` builds worker `w`'s private state; `body(state,
 /// task)` executes one task. Returns the per-worker states in
@@ -207,6 +365,11 @@ fn record_stats(stats: &WsStats) {
 /// via `degree_order`) and every worker starts on its heaviest task.
 /// With `workers <= 1` (or fewer tasks than workers, which clamps) the
 /// whole run executes inline on the calling thread.
+///
+/// If a [`set_budget`] budget trips mid-run, workers stop taking new
+/// tasks (the in-flight task always completes) and the run returns early
+/// with whatever states were accumulated — callers that installed a
+/// budget must treat the result as void when [`cancel_cause`] is `Some`.
 pub fn run_tasks<S: Send>(
     workers: usize,
     ntasks: usize,
@@ -229,6 +392,9 @@ pub fn run_tasks<S: Send>(
     if workers == 1 {
         let mut state = init(0);
         for t in 0..ntasks {
+            if budget_tripped() {
+                break;
+            }
             run_one(&mut state, t);
         }
         let stats = WsStats {
@@ -273,6 +439,9 @@ pub fn run_tasks<S: Send>(
                     'work: loop {
                         // Drain the local deque LIFO.
                         while let Some(t) = deques[w].pop() {
+                            if budget_tripped() {
+                                break 'work;
+                            }
                             my_pops += 1;
                             run_one(&mut state, t);
                         }
@@ -299,6 +468,9 @@ pub fn run_tasks<S: Send>(
                             }
                             match stolen {
                                 Some(t) => {
+                                    if budget_tripped() {
+                                        break 'work;
+                                    }
                                     my_steals += 1;
                                     run_one(&mut state, t);
                                     // Future-proofing: if `body` ever
@@ -445,6 +617,14 @@ mod tests {
         assert_eq!(states.pop().unwrap(), vec![0, 1, 2, 3, 4]);
         assert_eq!(stats.local_pops, 5);
         assert_eq!(stats.steals, 0);
+    }
+
+    // Budget-setting tests live in `tests/budget.rs`: the budget is
+    // process-wide, and lib tests run in parallel threads of one process,
+    // so tripping a budget here would cancel unrelated tests mid-run.
+    #[test]
+    fn cancel_cause_is_none_without_budget() {
+        assert_eq!(cancel_cause(), None);
     }
 
     #[test]

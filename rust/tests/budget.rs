@@ -1,0 +1,133 @@
+//! Budget-cancellation tests (DESIGN.md §15).
+//!
+//! `ws::set_budget` installs a **process-wide** budget, so these tests
+//! live in their own integration binary (their own process) and
+//! serialize on a mutex besides — `cargo test` runs the `#[test]` fns of
+//! one binary on parallel threads, and a budget installed by one test
+//! must never trip a neighbour.
+
+use pimminer::coordinator::PimMiner;
+use pimminer::exec::cpu::{self, CpuFlavor};
+use pimminer::graph::{gen, sort_by_degree_desc, CsrGraph};
+use pimminer::pattern::plan::application;
+use pimminer::pim::{fault, simulate_app_checked, FaultError, PimConfig, SimOptions};
+use pimminer::util::ws;
+use std::sync::Mutex;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serialized() -> std::sync::MutexGuard<'static, ()> {
+    // A poisoned lock just means another budget test panicked; the
+    // serialization is still what we want.
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn graph() -> CsrGraph {
+    sort_by_degree_desc(&gen::power_law(300, 1_500, 60, 9)).graph
+}
+
+/// An already-expired deadline surfaces as `FaultError::Timeout`
+/// (exit code 3) from the checked simulation entry points, and dropping
+/// the guard restores the unbudgeted world.
+#[test]
+fn expired_timeout_is_a_typed_error_with_exit_code_3() {
+    let _s = serialized();
+    let g = graph();
+    let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    let app = application("3-CC").unwrap();
+    let cfg = PimConfig::default();
+    let guard = ws::set_budget(Some(0), None);
+    let err = simulate_app_checked(&g, &app, &roots, &SimOptions::all(), &cfg).unwrap_err();
+    assert_eq!(err, FaultError::Timeout { limit_ms: 0 });
+    assert_eq!(err.exit_code(), 3);
+    drop(guard);
+    assert_eq!(ws::cancel_cause(), None, "guard drop clears the budget");
+    assert!(simulate_app_checked(&g, &app, &roots, &SimOptions::all(), &cfg).is_ok());
+}
+
+/// A zero memory ceiling trips on any observed RSS and surfaces as
+/// `FaultError::MemoryBudget` (exit code 3). On platforms without
+/// `/proc/self/statm` the ceiling is documented as inert, so the run
+/// must simply succeed there.
+#[test]
+fn zero_memory_ceiling_is_a_typed_error() {
+    let _s = serialized();
+    let g = graph();
+    let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    let app = application("3-CC").unwrap();
+    let cfg = PimConfig::default();
+    let _guard = ws::set_budget(None, Some(0));
+    let r = simulate_app_checked(&g, &app, &roots, &SimOptions::all(), &cfg);
+    if ws::cancel_cause().is_none() {
+        assert!(r.is_ok(), "inert memory budget must not fail the run");
+        return;
+    }
+    match r {
+        Err(FaultError::MemoryBudget {
+            limit_mb: 0,
+            observed_mb,
+        }) => {
+            assert!(observed_mb > 0);
+            assert_eq!(
+                FaultError::MemoryBudget {
+                    limit_mb: 0,
+                    observed_mb,
+                }
+                .exit_code(),
+                3
+            );
+        }
+        other => panic!("expected MemoryBudget, got {other:?}"),
+    }
+}
+
+/// The coordinator's budget is scoped to the query: `set_budget` +
+/// `pattern_count` yields a typed error that downcasts through the
+/// anyhow context chain, and nothing leaks into the process after the
+/// call returns.
+#[test]
+fn coordinator_budget_is_query_scoped() {
+    let _s = serialized();
+    let app = application("3-CC").unwrap();
+    let mut miner = PimMiner::new(PimConfig::default(), SimOptions::all());
+    miner.load_graph(graph()).unwrap();
+    miner.set_budget(Some(0), None);
+    let err = miner.pattern_count(&app, 1.0).unwrap_err();
+    let fe = err
+        .downcast_ref::<FaultError>()
+        .expect("typed fault error behind the context chain");
+    assert_eq!(*fe, FaultError::Timeout { limit_ms: 0 });
+    assert_eq!(fe.exit_code(), 3);
+    assert_eq!(
+        ws::cancel_cause(),
+        None,
+        "per-query guard must clear the budget on the error path"
+    );
+    miner.set_budget(None, None);
+    assert!(miner.pattern_count(&app, 1.0).is_ok());
+}
+
+/// Host CPU pools drain cooperatively under a tripped budget: the
+/// infallible executor returns (with a partial count) instead of
+/// running to completion, and `fault::check_budget` is how callers
+/// refuse to publish that partial result — exactly what the CLI does.
+#[test]
+fn tripped_budget_drains_cpu_pools_cooperatively() {
+    let _s = serialized();
+    let g = graph();
+    let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    let app = application("3-CC").unwrap();
+    let plans = app.plans();
+    let _guard = ws::set_budget(Some(0), None);
+    let _partial = cpu::count_plan_with(
+        &g,
+        &plans[0],
+        &roots,
+        CpuFlavor::AutoMineOpt,
+        None,
+        None,
+        Some(4),
+    );
+    let err = fault::check_budget().unwrap_err();
+    assert_eq!(err, FaultError::Timeout { limit_ms: 0 });
+}

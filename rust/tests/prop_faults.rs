@@ -1,0 +1,194 @@
+//! Fault-injection determinism suite (DESIGN.md §15).
+//!
+//! The resilience contract: a *recoverable* fault plan (replicas cover
+//! every fail-stopped unit's data) may change cycles — retries, backoff,
+//! recovery steals — but must return **bit-identical counts** to the
+//! fault-free run, for every fault seed and every host worker count.
+//! Unrecoverable plans must surface a typed [`FaultError`] instead of a
+//! wrong answer. And the loaders must treat corrupted files as errors,
+//! never as panics, wrong graphs, or huge speculative allocations.
+
+use pimminer::graph::{gen, io, sort_by_degree_desc, CsrGraph};
+use pimminer::pattern::plan::application;
+use pimminer::pim::{simulate_app_checked, FaultError, FaultSpec, PimConfig, SimOptions};
+use pimminer::util::{prop, rng::Rng};
+use std::cell::Cell;
+
+/// Host worker counts the determinism claims are pinned across.
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn random_graph(rng: &mut Rng) -> CsrGraph {
+    let n = rng.range(120, 400) as usize;
+    let m = rng.range((n * 2) as u64, (n * 6) as u64) as usize;
+    let dmax = rng.range(20, 120) as usize;
+    sort_by_degree_desc(&gen::power_law(n, m, dmax, rng.next_u64())).graph
+}
+
+/// Counts under a recoverable fault plan equal the fault-free counts
+/// bit-for-bit, across fault seeds × {1, 2, 4, 8} host workers; the
+/// entire faulty `SimResult` (through `Debug`, so every field including
+/// the recovery telemetry participates) is identical at every worker
+/// count, because the device schedule never depends on host threading.
+#[test]
+fn recoverable_fault_plans_preserve_counts_bit_identically() {
+    // `prop::check` takes `Fn`, so cross-iteration aggregates live in Cells.
+    let any_fail_stop_injected = Cell::new(false);
+    let any_transient_retry = Cell::new(false);
+    prop::check("faults-recoverable-identity", 0xF1, 8, |rng| {
+        let g = random_graph(rng);
+        let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+        let cfg = PimConfig::default();
+        let app = application(["3-CC", "4-MC", "4-CL"][rng.below_usize(3)]).unwrap();
+        let clean = simulate_app_checked(&g, &app, &roots, &SimOptions::all(), &cfg)
+            .expect("fault-free run");
+        // Full duplication at these graph sizes: every fail-stop is
+        // recoverable via replica promotion.
+        let spec = FaultSpec {
+            seed: rng.next_u64(),
+            fail_stop: Some((rng.below_usize(cfg.num_units()) as u32, rng.range(0, 2_000))),
+            transient: [0.0, 0.2, 0.4][rng.below_usize(3)],
+        };
+        let run = |threads: usize| {
+            let opts = SimOptions {
+                threads: Some(threads),
+                faults: Some(spec),
+                ..SimOptions::all()
+            };
+            simulate_app_checked(&g, &app, &roots, &opts, &cfg)
+        };
+        match run(1) {
+            Ok(r) => {
+                assert_eq!(r.count, clean.count, "{} under {spec}", app.name);
+                any_fail_stop_injected.set(any_fail_stop_injected.get() || r.faults_injected > 0);
+                any_transient_retry.set(any_transient_retry.get() || r.retries > 0);
+                // Busy-cycle accounting may grow under recovery, never shrink.
+                assert!(
+                    r.backoff_cycles == 0 || r.retries > 0,
+                    "backoff without retries"
+                );
+            }
+            // A seeded transient stream can legitimately kill a link
+            // outright; the determinism claim below still applies.
+            Err(FaultError::LinkFailure { .. }) if spec.transient > 0.0 => {}
+            Err(e) => panic!("recoverable plan errored: {e}"),
+        }
+        let base = format!("{:?}", run(1));
+        for t in THREADS {
+            assert_eq!(
+                format!("{:?}", run(t)),
+                base,
+                "{} faulty result diverged at {t} host threads under {spec}",
+                app.name
+            );
+        }
+    });
+    assert!(
+        any_fail_stop_injected.get(),
+        "no iteration ever injected a fail-stop"
+    );
+    assert!(
+        any_transient_retry.get(),
+        "no iteration ever exercised a transient retry"
+    );
+}
+
+/// A benign spec (`seed` only) takes the zero-fault fast path: the whole
+/// `SimResult` is bit-identical to `faults: None` — the structural form
+/// of the ≤1.05× overhead gate in the `parallel` bench.
+#[test]
+fn benign_spec_is_bit_identical_to_fault_free() {
+    let g = sort_by_degree_desc(&gen::power_law(300, 1_500, 70, 5)).graph;
+    let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    let cfg = PimConfig::default();
+    let app = application("4-MC").unwrap();
+    let mut opts = SimOptions::all();
+    opts.threads = Some(2);
+    let clean = format!(
+        "{:?}",
+        simulate_app_checked(&g, &app, &roots, &opts, &cfg).unwrap()
+    );
+    opts.faults = Some(FaultSpec {
+        seed: 42,
+        fail_stop: None,
+        transient: 0.0,
+    });
+    let benign = format!(
+        "{:?}",
+        simulate_app_checked(&g, &app, &roots, &opts, &cfg).unwrap()
+    );
+    assert_eq!(benign, clean);
+}
+
+/// Unrecoverable plans are typed errors with the documented exit codes,
+/// raised by preflight *before* any simulation work: no replicas means a
+/// fail-stop loses data (exit 4); an out-of-range unit is bad input
+/// (exit 2).
+#[test]
+fn unrecoverable_plans_surface_typed_errors() {
+    let g = sort_by_degree_desc(&gen::power_law(250, 1_000, 50, 3)).graph;
+    let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    let cfg = PimConfig::default();
+    let app = application("3-CC").unwrap();
+    let mut opts = SimOptions::BASELINE;
+    opts.faults = Some(FaultSpec {
+        seed: 1,
+        fail_stop: Some((0, 0)),
+        transient: 0.0,
+    });
+    let err = simulate_app_checked(&g, &app, &roots, &opts, &cfg).unwrap_err();
+    assert!(
+        matches!(err, FaultError::UnrecoverableUnitLoss { unit: 0, .. }),
+        "{err:?}"
+    );
+    assert_eq!(err.exit_code(), 4);
+    opts.faults = Some(FaultSpec {
+        seed: 1,
+        fail_stop: Some((9_999, 0)),
+        transient: 0.0,
+    });
+    let err = simulate_app_checked(&g, &app, &roots, &opts, &cfg).unwrap_err();
+    assert!(matches!(err, FaultError::BadSpec(_)), "{err:?}");
+    assert_eq!(err.exit_code(), 2);
+}
+
+/// Fuzz-style loader corruption (satellite of DESIGN.md §15): seeded
+/// truncations and single-bit flips of valid `PIMCSR01`/`PIMCSR02`
+/// files must always yield `Err` — never a panic, a silently wrong
+/// graph, or a huge allocation. Flips are confined to the structural
+/// prefix (header + RowPtr + ColIdx): the label section is free-form
+/// payload with no checksum, so a flipped label is undetectable by
+/// design.
+#[test]
+fn corrupted_csr_files_always_error_never_panic() {
+    let dir = std::env::temp_dir().join("pimminer_fault_fuzz");
+    std::fs::create_dir_all(&dir).unwrap();
+    prop::check("loader-corruption-fuzz", 0xAB, 40, |rng| {
+        let n = rng.range(20, 120) as usize;
+        let m = rng.range(n as u64 * 2, n as u64 * 5) as usize;
+        let mut g = gen::power_law(n, m, 30, rng.next_u64());
+        let labeled = rng.chance(0.4);
+        if labeled {
+            g = gen::with_random_labels(g, rng.range(2, 6) as u32, rng.next_u64());
+        }
+        let path = dir.join(format!("fuzz_{:016x}.csr", rng.next_u64()));
+        io::write_csr(&g, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let structural = bytes.len() - if labeled { g.num_vertices() * 4 } else { 0 };
+        if rng.chance(0.5) {
+            // truncate to a strictly shorter prefix
+            let cut = rng.below_usize(bytes.len());
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+        } else {
+            // flip one bit somewhere in the structural prefix
+            let mut b = bytes.clone();
+            let at = rng.below_usize(structural);
+            b[at] ^= 1u8 << rng.below_usize(8);
+            std::fs::write(&path, &b).unwrap();
+        }
+        assert!(
+            io::read_csr(&path).is_err(),
+            "corrupted file parsed as a graph"
+        );
+        let _ = std::fs::remove_file(&path);
+    });
+}
