@@ -21,13 +21,16 @@ test:
 # DESIGN.md §13) so runs from different machines/configs are
 # distinguishable. The parallel bench also gates the observability
 # overhead and zero-fault overhead budgets; the faults bench reports
-# recovery overhead vs fault rate (DESIGN.md §15).
+# recovery overhead vs fault rate (DESIGN.md §15); the service bench
+# reports serving throughput under concurrency and injected faults and
+# refreshes BENCH_service.json (DESIGN.md §16).
 bench:
 	cargo bench
 	cargo bench --bench perf_micro -- --json
 	cargo bench --bench fusion -- --json
 	cargo bench --bench parallel -- --json
 	cargo bench --bench faults -- --json
+	cargo bench --bench service -- --json
 
 # Regression gate over two bench sessions (tools/bench_diff.py): fails
 # when any shared timing regresses beyond the threshold (default 10%).

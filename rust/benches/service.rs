@@ -1,0 +1,184 @@
+//! Serving throughput under concurrency and faults (DESIGN.md §16):
+//! queries/sec through the [`MiningService`] at 1/4/8 concurrent
+//! closed-loop clients, healthy vs fault-injected (every 4th query
+//! carries an unrecoverable fail-stop, so it degrades down the ladder
+//! to the CPU floor). Every successful count is asserted bit-identical
+//! to the serial fault-free CPU baseline — the ladder's parity
+//! contract — and fault-injected throughput is gated at ≥ 0.5× healthy
+//! per client level. `-- --json` writes `BENCH_service.json`
+//! (`make bench` refreshes it, CI uploads it as an artifact).
+
+use pimminer::bench::Bench;
+use pimminer::exec::cpu::{self, CpuFlavor};
+use pimminer::graph::{gen, sort_by_degree_desc};
+use pimminer::pattern::plan::application;
+use pimminer::pim::{FaultSpec, PimConfig, SimOptions};
+use pimminer::report::{self, Table};
+use pimminer::serve::{MiningService, QueryRequest, ServiceConfig};
+use std::time::Instant;
+
+const APP: &str = "3-CC";
+
+/// Drive `clients` closed-loop client threads, `per_client` queries
+/// each; every 4th query carries `spec` when `faulted`. Returns
+/// `(secs, ok, degraded, errors)` and asserts count parity for every
+/// success.
+fn run_fleet(
+    svc: &MiningService,
+    baseline: u64,
+    clients: usize,
+    per_client: usize,
+    faulted: bool,
+    spec: FaultSpec,
+) -> (f64, u64, u64, u64) {
+    let t0 = Instant::now();
+    let per_thread: Vec<(u64, u64, u64)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || {
+                    let who = format!("bench-{c}");
+                    let (mut ok, mut degraded, mut errors) = (0u64, 0u64, 0u64);
+                    for q in 0..per_client {
+                        let mut req = QueryRequest::new("pl", APP);
+                        // Global query index: a quarter of the fleet's
+                        // queries carry the fault at every client count.
+                        if faulted && (c * per_client + q) % 4 == 1 {
+                            req.faults = Some(spec);
+                        }
+                        let t = svc.submit(&who, req).expect("bounded fleet never sheds");
+                        match t.wait().result {
+                            Ok(o) => {
+                                assert_eq!(
+                                    o.count, baseline,
+                                    "every rung answers with the serial baseline count"
+                                );
+                                ok += 1;
+                                if o.degraded {
+                                    degraded += 1;
+                                }
+                            }
+                            Err(e) => {
+                                errors += 1;
+                                panic!("bench query failed: {e}");
+                            }
+                        }
+                    }
+                    (ok, degraded, errors)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client")).collect()
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let (mut ok, mut degraded, mut errors) = (0u64, 0u64, 0u64);
+    for (o, d, e) in per_thread {
+        ok += o;
+        degraded += d;
+        errors += e;
+    }
+    (secs, ok, degraded, errors)
+}
+
+fn main() {
+    let bench = Bench::new("service");
+    let (n, m, dmax, per_client) = if bench.quick() {
+        (1_000, 6_000, 120, 3)
+    } else {
+        (4_000, 32_000, 250, 6)
+    };
+    let g = sort_by_degree_desc(&gen::power_law(n, m, dmax, 42)).graph;
+    let app = application(APP).unwrap();
+    let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    let baseline =
+        cpu::run_application_with(&g, &app, &roots, CpuFlavor::AutoMineOpt, None, true, None, None)
+            .count;
+
+    // No duplication replicas: the injected fail-stop is then
+    // deterministically unrecoverable on the simulated rungs, so every
+    // faulted query exercises the full degradation ladder.
+    let svc = MiningService::start(ServiceConfig {
+        queue_depth: 64,
+        per_client_depth: 16,
+        opts: SimOptions {
+            duplication: false,
+            ..SimOptions::all()
+        },
+        cfg: PimConfig::default(),
+        ..ServiceConfig::default()
+    });
+    svc.load_graph("pl", g.clone()).unwrap();
+    let spec = FaultSpec {
+        seed: 7,
+        fail_stop: Some((17, 1_000)),
+        transient: 0.0,
+    };
+
+    bench.config("app", APP);
+    bench.config("graph", &format!("power_law({n},{m},{dmax},42)"));
+    bench.config("per_client_queries", &per_client.to_string());
+    bench.config("fault_mix", "every 4th query fail-stop u17@1k");
+    bench.metric("baseline_count", baseline as f64, "embeddings");
+
+    let mut table = Table::new(
+        &format!(
+            "service throughput — {APP}, |V|={} |E|={} ({} queries/client)",
+            g.num_vertices(),
+            g.num_edges(),
+            per_client
+        ),
+        &["Clients", "Mode", "Queries", "Degraded", "QPS", "Faulted/Healthy"],
+    );
+
+    for &clients in &[1usize, 4, 8] {
+        let (healthy_secs, ok_h, deg_h, err_h) =
+            run_fleet(&svc, baseline, clients, per_client, false, spec);
+        assert_eq!(err_h, 0);
+        assert_eq!(deg_h, 0, "healthy fleet stays on the top rung");
+        let qps_h = ok_h as f64 / healthy_secs.max(1e-9);
+
+        let (faulted_secs, ok_f, deg_f, err_f) =
+            run_fleet(&svc, baseline, clients, per_client, true, spec);
+        assert_eq!(err_f, 0, "the ladder absorbs every injected fault");
+        assert!(deg_f > 0, "fault-injected fleet must actually degrade");
+        let qps_f = ok_f as f64 / faulted_secs.max(1e-9);
+
+        let ratio = qps_f / qps_h;
+        bench.metric(&format!("qps/{clients}-clients/healthy"), qps_h, "qps");
+        bench.metric(&format!("qps/{clients}-clients/faulted"), qps_f, "qps");
+        bench.metric(&format!("qps/{clients}-clients/ratio"), ratio, "x");
+        table.row(vec![
+            clients.to_string(),
+            "healthy".to_string(),
+            ok_h.to_string(),
+            deg_h.to_string(),
+            format!("{qps_h:.2}"),
+            "-".to_string(),
+        ]);
+        table.row(vec![
+            clients.to_string(),
+            "faulted".to_string(),
+            ok_f.to_string(),
+            deg_f.to_string(),
+            format!("{qps_f:.2}"),
+            report::x(ratio),
+        ]);
+        assert!(
+            ratio >= 0.5,
+            "{clients} clients: fault-injected throughput {qps_f:.2} qps fell below \
+             0.5x healthy {qps_h:.2} qps (ratio {ratio:.3})"
+        );
+    }
+
+    let health = svc.health();
+    bench.metric("completed", health.completed as f64, "queries");
+    bench.metric("degraded", health.degraded as f64, "queries");
+    bench.metric("breaker_trips", health.rungs.iter().map(|r| r.2).sum::<u64>() as f64, "trips");
+    assert_eq!(health.failed, 0);
+    assert_eq!(health.shed_overload, 0);
+
+    table.print();
+    print!("{}", health.render());
+    if Bench::json_requested() {
+        bench.write_json("BENCH_service.json").unwrap();
+    }
+}

@@ -243,6 +243,35 @@ impl PimMiner {
         self.budgeted(|| simulate_app_checked(&loaded.graph, app, roots, &self.opts, &self.cfg))
     }
 
+    /// [`pattern_count`](PimMiner::pattern_count) with per-call
+    /// [`SimOptions`] — the serving layer's degradation-ladder hook
+    /// (DESIGN.md §16): the fused and per-plan rungs run the same loaded
+    /// graph with only schedule-level fields changed. Callers must keep
+    /// the placement-affecting fields (`remap`, `duplication`,
+    /// `partitioner`, `capacity_per_unit`, `hub_bitmaps`) identical to
+    /// the load-time options — the graph was placed under those; counts
+    /// are bit-identical across `fused`/`chunk`/`threads`/`faults`
+    /// variations (`tests/prop_fuse.rs`, `tests/prop_parallel.rs`,
+    /// `tests/prop_faults.rs`).
+    pub fn pattern_count_with(
+        &self,
+        app: &Application,
+        sample_ratio: f64,
+        opts: &SimOptions,
+    ) -> Result<SimResult> {
+        let loaded = self.require_loaded("PIMPatternCount")?;
+        let roots = sampled_roots(loaded.graph.num_vertices(), sample_ratio);
+        self.budgeted(|| simulate_app_checked(&loaded.graph, app, &roots, opts, &self.cfg))
+    }
+
+    /// Host-memory bytes of the resident graph's CSR (0 when nothing is
+    /// loaded) — the registry's accounting unit for load/evict decisions
+    /// (DESIGN.md §16). Device-side replica bytes are budgeted
+    /// separately, against each unit's capacity, by `build_placement`.
+    pub fn resident_bytes(&self) -> u64 {
+        self.loaded.as_ref().map_or(0, |l| l.graph.total_bytes())
+    }
+
     /// `PIMMotifCount` (DESIGN.md §8): one-pass census of every connected
     /// induced `k`-subgraph, with per-unit pattern-support counters merged
     /// over the inter-channel fabric at kernel end. Exact per-pattern
@@ -467,6 +496,26 @@ mod tests {
         let fe = err.downcast_ref::<FaultError>().expect("typed FaultError");
         assert!(matches!(fe, FaultError::UnrecoverableUnitLoss { unit: 0, .. }), "{fe}");
         assert_eq!(fe.exit_code(), 4);
+    }
+
+    #[test]
+    fn pattern_count_with_matches_default_options_count() {
+        let mut m = PimMiner::new(tiny_cfg(), SimOptions::all());
+        m.load_graph(graph()).unwrap();
+        assert!(m.resident_bytes() > 0);
+        let app = application("3-MC").unwrap();
+        let fused = m.pattern_count(&app, 1.0).unwrap();
+        // The degradation ladder's per-plan rung: same placement, fused
+        // off — counts must be bit-identical.
+        let per_plan = SimOptions {
+            fused: false,
+            ..SimOptions::all()
+        };
+        let r = m.pattern_count_with(&app, 1.0, &per_plan).unwrap();
+        assert_eq!(r.count, fused.count);
+        let unloaded = PimMiner::new(tiny_cfg(), SimOptions::all());
+        assert_eq!(unloaded.resident_bytes(), 0);
+        assert!(unloaded.pattern_count_with(&app, 1.0, &per_plan).is_err());
     }
 
     #[test]

@@ -29,7 +29,11 @@
 //! **Cancellation** (DESIGN.md §15): every executor here runs on
 //! [`ws::run_chunks`]/[`ws::run_tasks`], which poll the process-wide
 //! budget (`--timeout-ms` / `--max-memory-mb`) between tasks and drain
-//! cooperatively once it trips. A drained run returns a *partial*
+//! cooperatively once it trips; the dynamic executors additionally poll
+//! [`ws::poll_tripped`] between roots inside each chunk (and the
+//! enumerator polls inside a root's level-1 candidate loop), so
+//! cancellation latency is bounded by one candidate subtree rather than
+//! one whole chunk of hubs. A drained run returns a *partial*
 //! count, so callers that surface results must gate on
 //! [`fault::check_budget`](crate::pim::fault::check_budget) and refuse
 //! to report when the budget tripped (the CLI does; the simulator's
@@ -303,6 +307,12 @@ fn dynamic_count(
         |state, span| {
             let (e, sink) = state;
             for &i in &order[span] {
+                // Per-root cancellation checkpoint (DESIGN.md §15): the
+                // runtime only polls between chunks, so without this a
+                // whole chunk of heavy hubs could outlive the deadline.
+                if ws::poll_tripped() {
+                    break;
+                }
                 e.count_root(roots[i], sink);
             }
         },
@@ -342,6 +352,10 @@ fn fused_dynamic(
         |state, span| {
             let (e, counts, sink) = state;
             for &i in &order[span] {
+                // Same per-root checkpoint as `dynamic_count`.
+                if ws::poll_tripped() {
+                    break;
+                }
                 e.count_root(roots[i], sink, counts);
             }
         },

@@ -19,6 +19,7 @@ use super::setops::{
 };
 use crate::graph::{CsrGraph, HubBitmaps, VertexId};
 use crate::obs::metrics;
+use crate::util::ws;
 use crate::pattern::fuse::PlanTrie;
 use crate::pattern::plan::Plan;
 
@@ -342,6 +343,13 @@ impl<'g> Enumerator<'g> {
         } else {
             let mut total = 0u64;
             for &c in &cands[lo..hi] {
+                // Intra-root cancellation checkpoint (DESIGN.md §15):
+                // bounds the cancellation latency to one level-1
+                // candidate's subtree even for a pathological hub root.
+                // With no budget installed this is two relaxed loads.
+                if ws::poll_tripped() {
+                    break;
+                }
                 self.bound[1] = c;
                 sink.on_node(1); // re-enter after the child descend
                 self.emit_fetch(1, c, sink);
@@ -673,6 +681,11 @@ impl<'g> MultiEnumerator<'g> {
             }
             if !node.children.is_empty() {
                 for &cand in prefix {
+                    // Level-1 cancellation checkpoint (see
+                    // `Enumerator::count_root_range`).
+                    if depth == 1 && ws::poll_tripped() {
+                        break;
+                    }
                     if self.bound[..depth].contains(&cand) {
                         continue;
                     }
@@ -717,6 +730,11 @@ impl<'g> MultiEnumerator<'g> {
         }
         if !node.children.is_empty() {
             for &cand in &cands {
+                // Level-1 cancellation checkpoint (see
+                // `Enumerator::count_root_range`).
+                if depth == 1 && ws::poll_tripped() {
+                    break;
+                }
                 self.bound[depth] = cand;
                 sink.on_node(x as u32); // re-enter after the child descend
                 self.emit_fetch(x, cand, sink);

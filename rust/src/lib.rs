@@ -25,7 +25,10 @@
 //! bitmap fast path over the high-degree prefix (DESIGN.md §10); and
 //! [`pattern::fuse`] merges multi-pattern workloads into one
 //! prefix-sharing trie so shared fetches and set operations run — and
-//! are charged — once (DESIGN.md §11):
+//! are charged — once (DESIGN.md §11); and [`serve`] lifts the
+//! single-query coordinator into a long-running multi-graph mining
+//! service with admission control, per-query deadlines, and a
+//! circuit-breaker degradation ladder (DESIGN.md §16):
 //!
 //! ```
 //! use pimminer::exec::cpu::{count_plan, sampled_roots, CpuFlavor};
@@ -61,4 +64,5 @@ pub mod pattern;
 pub mod pim;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -13,6 +13,9 @@
 //!   plan      --pattern <edgelist|name>             print the compiled plan
 //!   verify    [--pattern <spec>] [--seeds 3]        compiled plans vs brute force
 //!   ladder    --dataset MI (--app 4-CC | --pattern <spec>)   Fig. 9 ladder
+//!   serve     --datasets CI,PP [--clients 4] [--queries 8] [--apps 3-CC,3-MC]
+//!             [--deadline-ms n] [--queue-depth n] [--faults <spec>]
+//!             long-running multi-graph service + in-process client driver
 //!   info                                            print the simulated config
 //!
 //! `--graph path.csr` may replace `--dataset` anywhere (binary CSR file,
@@ -43,6 +46,7 @@ use pimminer::pim::{
     SimOptions, SimResult,
 };
 use pimminer::report::{self, json, Table};
+use pimminer::serve::{MiningService, QueryRequest, ServiceConfig, ServiceError};
 use pimminer::util::cli::Args;
 use pimminer::util::threads;
 use pimminer::util::ws;
@@ -69,6 +73,7 @@ fn main() {
         "verify" => verify(&args),
         "ladder" => ladder(&args),
         "explain" => explain(&args),
+        "serve" => serve_cmd(&args),
         "info" => {
             info();
             Ok(())
@@ -86,12 +91,16 @@ fn main() {
 
 /// Report a command failure and exit with its documented code (README
 /// "exit codes"): 2 = bad input, 3 = tripped `--timeout-ms` /
-/// `--max-memory-mb` budget, 4 = unrecoverable injected fault. No
-/// partial results are printed on the error path — callers return
-/// before their reporting code.
+/// `--max-memory-mb` budget, 4 = unrecoverable injected fault, 5 = shed
+/// by the serving layer (retriable). No partial results are printed on
+/// the error path — callers return before their reporting code.
 fn fail(e: &anyhow::Error) -> ! {
     obs_error!("{e:#}");
-    let code = e.downcast_ref::<FaultError>().map_or(2, FaultError::exit_code);
+    let code = e
+        .downcast_ref::<ServiceError>()
+        .map(ServiceError::exit_code)
+        .or_else(|| e.downcast_ref::<FaultError>().map(FaultError::exit_code))
+        .unwrap_or(2);
     std::process::exit(code);
 }
 
@@ -271,7 +280,7 @@ fn help() {
     println!(
         "pimminer — PIM architecture-aware graph mining (paper reproduction)\n\
          \n\
-         usage: pimminer <generate|count|motifs|fsm|plan|verify|ladder|explain|info> [flags]\n\
+         usage: pimminer <generate|count|motifs|fsm|plan|verify|ladder|explain|serve|info> [flags]\n\
          \n\
          generate --dataset <CI|PP|AS|MI|YT|PA|LJ> [--full] --out <file.csr>\n\
          count    (--dataset <abbrev> | --graph <file.csr>)\n\
@@ -294,6 +303,18 @@ fn help() {
          ladder   (--dataset | --graph) (--app <name> | --pattern <spec>) [--sample <ratio>]\n\
          explain  (--dataset | --graph) (--app <name> | --pattern <spec>) [--top <k>]\n\
                   run the PIM sim and print the per-plan-node cost breakdown\n\
+         serve    [--datasets CI,PP] [--clients <n>] [--queries <per-client>]\n\
+                  [--apps 3-CC,3-MC] [--deadline-ms <ms>] [--faults <spec>]\n\
+                  [--queue-depth <n>] [--per-client-depth <n>]\n\
+                  [--registry-budget-mb <MB>] [--breaker-threshold <k>]\n\
+                  [--breaker-probe <n>] [--json <file>]\n\
+                  start the resilient mining service (DESIGN.md §16) and\n\
+                  drive it with in-process concurrent clients: bounded\n\
+                  admission with typed shedding, per-query deadlines, a\n\
+                  circuit-breaker degradation ladder (fused PIM-sim →\n\
+                  per-plan PIM-sim → hybrid CPU, counts identical), and a\n\
+                  health report; every successful count is cross-checked\n\
+                  against a serial fault-free baseline (exit 1 on mismatch)\n\
          info\n\
          \n\
          pattern specs: edge lists like \"0-1,1-2,2-0,2-3\" (a tailed triangle)\n\
@@ -346,7 +367,8 @@ fn help() {
          result, and exits 3.\n\
          \n\
          exit codes: 0 ok; 1 check/verify mismatch; 2 bad input;\n\
-         3 timeout or memory budget exceeded; 4 unrecoverable fault."
+         3 timeout or memory budget exceeded; 4 unrecoverable fault;\n\
+         5 shed by the serving layer (overloaded/shutting down — retriable)."
     );
 }
 
@@ -1121,6 +1143,216 @@ fn explain(args: &Args) -> Result<()> {
     );
     print_fusion(&r);
     Ok(())
+}
+
+/// `serve`: start the resilient mining service (DESIGN.md §16) and
+/// drive it with in-process concurrent clients. The driver is also the
+/// CI smoke: it runs a deterministic overload probe (pause the
+/// dispatcher, fill the bounded queue, assert the typed shed), fans out
+/// `--clients` closed-loop client threads, cross-checks every
+/// successful count against a serial fault-free CPU baseline (exit 1 on
+/// mismatch — the degradation-ladder parity gate), and prints the
+/// health report.
+fn serve_cmd(args: &Args) -> Result<()> {
+    let svc_cfg = ServiceConfig {
+        queue_depth: args.get_usize("queue-depth", 16),
+        per_client_depth: args.get_usize("per-client-depth", 8),
+        registry_budget_bytes: args.get_u64("registry-budget-mb", 1024) << 20,
+        breaker_threshold: args.get_u64("breaker-threshold", 3) as u32,
+        breaker_probe_after: args.get_u64("breaker-probe", 4) as u32,
+        default_deadline_ms: args.get("deadline-ms").and_then(|v| v.parse().ok()),
+        max_memory_mb: args.get("max-memory-mb").and_then(|v| v.parse().ok()),
+        cfg: PimConfig::default(),
+        // `--faults` is a per-query mix applied by the driver below, not
+        // a property of every query the service runs.
+        opts: SimOptions {
+            faults: None,
+            ..options(args)
+        },
+    };
+    let mut service = MiningService::start(svc_cfg);
+
+    // Load one graph per dataset abbreviation, computing each serial
+    // fault-free baseline count before the graph moves into the
+    // registry. The ladder's parity contract says every rung — and
+    // therefore every successful service response — must match it.
+    let apps: Vec<String> = args
+        .get_or("apps", "3-CC,3-MC")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let mut graphs: Vec<String> = Vec::new();
+    let mut ratios: std::collections::HashMap<String, f64> = std::collections::HashMap::new();
+    let mut baseline: std::collections::HashMap<(String, String), u64> =
+        std::collections::HashMap::new();
+    for abbrev in args.get_or("datasets", "CI,PP").split(',') {
+        let abbrev = abbrev.trim();
+        let spec = datasets::by_abbrev(abbrev)
+            .ok_or_else(|| anyhow!("unknown dataset abbreviation '{abbrev}'"))?;
+        let inst = spec.generate(args.get_bool("full") || datasets::full_scale());
+        let sample = args.get_f64("sample", inst.sample_ratio);
+        let roots = cpu::sampled_roots(inst.graph.num_vertices(), sample);
+        for name in &apps {
+            let app =
+                application(name).ok_or_else(|| anyhow!("unknown application '{name}'"))?;
+            let r = cpu::run_application_with(
+                &inst.graph,
+                &app,
+                &roots,
+                CpuFlavor::AutoMineOpt,
+                None,
+                true,
+                None,
+                None,
+            );
+            baseline.insert((abbrev.to_string(), name.clone()), r.count);
+        }
+        println!(
+            "loaded {abbrev}: |V|={} |E|={} ({})",
+            inst.graph.num_vertices(),
+            inst.graph.num_edges(),
+            report::bytes(inst.graph.total_bytes())
+        );
+        service.load_graph(abbrev, inst.graph)?;
+        graphs.push(abbrev.to_string());
+        ratios.insert(abbrev.to_string(), sample);
+    }
+
+    // Deterministic overload probe: with the dispatcher paused, the
+    // bounded queue must shed past its depth with the typed error —
+    // never queue unboundedly, never panic. The admitted backlog then
+    // drains normally on resume.
+    service.pause();
+    let mut probe_tickets = Vec::new();
+    let mut probe_shed = None;
+    for i in 0..(service_probe_cap(args) + 1) {
+        let mut req = QueryRequest::new(&graphs[0], &apps[0]);
+        req.sample_ratio = ratios[&graphs[0]];
+        match service.submit(&format!("probe-{}", i % 4), req) {
+            Ok(t) => probe_tickets.push(t),
+            Err(e) => {
+                probe_shed = Some(e);
+                break;
+            }
+        }
+    }
+    match probe_shed {
+        Some(e @ ServiceError::Overloaded { .. }) => println!(
+            "overload probe: shed with typed error (exit code {}, retriable={}) \
+             after {} admissions: {e}",
+            e.exit_code(),
+            e.is_retriable(),
+            probe_tickets.len()
+        ),
+        other => {
+            obs_error!("overload probe FAILED: expected Overloaded, got {other:?}");
+            std::process::exit(1);
+        }
+    }
+    service.resume();
+    let mut mismatches = 0u64;
+    for t in probe_tickets {
+        let r = t.wait();
+        if let Ok(o) = r.result {
+            let key = (graphs[0].clone(), apps[0].clone());
+            if o.count != baseline[&key] {
+                mismatches += 1;
+            }
+        }
+    }
+
+    // Closed-loop client fleet: each client thread submits and waits,
+    // cycling graphs × apps, with the injected fault plan on every
+    // third query when `--faults` is given.
+    let clients = args.get_usize("clients", 4);
+    let queries = args.get_usize("queries", 8);
+    let faults = faults_arg(args);
+    let results: Vec<(usize, u64, u64, u64, u64, u64)> = std::thread::scope(|scope| {
+        let service = &service;
+        let graphs = &graphs;
+        let apps = &apps;
+        let baseline = &baseline;
+        let ratios = &ratios;
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || {
+                    let who = format!("client-{c}");
+                    let (mut ok, mut degraded, mut shed, mut errors, mut bad) =
+                        (0u64, 0u64, 0u64, 0u64, 0u64);
+                    for q in 0..queries {
+                        let graph = &graphs[(c + q) % graphs.len()];
+                        let app = &apps[(c * queries + q) % apps.len()];
+                        let mut req = QueryRequest::new(graph, app);
+                        req.sample_ratio = ratios[graph];
+                        if (c + q) % 3 == 2 {
+                            req.faults = faults;
+                        }
+                        match service.submit(&who, req) {
+                            Ok(t) => match t.wait().result {
+                                Ok(o) => {
+                                    ok += 1;
+                                    if o.degraded {
+                                        degraded += 1;
+                                    }
+                                    if o.count != baseline[&(graph.clone(), app.clone())] {
+                                        bad += 1;
+                                    }
+                                }
+                                Err(e) if e.is_retriable() => shed += 1,
+                                Err(_) => errors += 1,
+                            },
+                            Err(_) => shed += 1,
+                        }
+                    }
+                    (c, ok, degraded, shed, errors, bad)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+
+    let mut t = Table::new(
+        &format!("serve — {clients} clients × {queries} queries over {graphs:?} × {apps:?}"),
+        &["Client", "OK", "Degraded", "Shed/Deadline", "Errors", "Mismatch"],
+    );
+    let mut total_ok = 0u64;
+    for (c, ok, degraded, shed, errors, bad) in &results {
+        mismatches += bad;
+        total_ok += ok;
+        t.row(vec![
+            format!("client-{c}"),
+            ok.to_string(),
+            degraded.to_string(),
+            shed.to_string(),
+            errors.to_string(),
+            bad.to_string(),
+        ]);
+    }
+    t.print();
+    let health = service.health();
+    print!("{}", health.render());
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, health.to_json())
+            .with_context(|| format!("write service health json {path}"))?;
+        println!("wrote {path}");
+    }
+    service.shutdown();
+    if mismatches > 0 {
+        obs_error!("service parity FAILED: {mismatches} counts diverge from the serial baseline");
+        std::process::exit(1);
+    }
+    println!(
+        "service parity OK: {total_ok} successful counts match the serial fault-free baseline"
+    );
+    Ok(())
+}
+
+/// Upper bound on overload-probe submissions: enough to fill the queue
+/// however the per-client/total bounds interact (4 probe clients).
+fn service_probe_cap(args: &Args) -> usize {
+    args.get_usize("queue-depth", 16)
+        .min(4 * args.get_usize("per-client-depth", 8))
 }
 
 fn info() {

@@ -3,8 +3,9 @@
 //! kernel dispatch mix (`exec::setops`), candidate-set and
 //! neighbor-list length distributions (`exec::enumerate`),
 //! steal/latency telemetry (`util::ws`), access-class bytes and
-//! per-unit busy cycles (`pim::sim`), and partition/replica stats
-//! (`part` via `pim::sim::build_placement`).
+//! per-unit busy cycles (`pim::sim`), partition/replica stats
+//! (`part` via `pim::sim::build_placement`), and the mining service's
+//! admission/degradation counters (`serve`, DESIGN.md §16).
 //!
 //! Cost model: every gated hook ([`Counter::add`], [`Histogram::record`])
 //! opens with one relaxed load of a static `AtomicBool` and returns
@@ -356,6 +357,27 @@ pub static PART_CUT_INTER_BYTES: Counter = Counter::new();
 pub static PART_REPLICA_BYTES: Counter = Counter::new();
 /// `part` — replicated (non-owned) neighbor lists placed.
 pub static PART_REPLICA_VERTICES: Counter = Counter::new();
+/// `serve` — queries admitted into the service queue (DESIGN.md §16).
+pub static SRV_ADMITTED: Counter = Counter::new();
+/// `serve` — queries shed at admission with `ServiceError::Overloaded`.
+pub static SRV_SHED_OVERLOAD: Counter = Counter::new();
+/// `serve` — queries shed because their deadline expired while queued.
+pub static SRV_SHED_DEADLINE: Counter = Counter::new();
+/// `serve` — queries completed with a result.
+pub static SRV_COMPLETED: Counter = Counter::new();
+/// `serve` — queries that finished with an error response.
+pub static SRV_FAILED: Counter = Counter::new();
+/// `serve` — completed queries answered below the fused rung (the
+/// degradation ladder took over).
+pub static SRV_DEGRADED: Counter = Counter::new();
+/// `serve` — circuit-breaker trips (a backend rung taken out of rotation).
+pub static SRV_BREAKER_TRIPS: Counter = Counter::new();
+/// `serve` — half-open recovery probes sent through a tripped rung.
+pub static SRV_BREAKER_PROBES: Counter = Counter::new();
+/// `serve` — per-query queue wait in microseconds.
+pub static SRV_QUEUE_US: Histogram = Histogram::new();
+/// `serve` — per-query execution wall time in microseconds.
+pub static SRV_EXEC_US: Histogram = Histogram::new();
 
 /// Name/total pairs for every registry counter, in registry order.
 pub fn counters() -> Vec<(&'static str, u64)> {
@@ -379,6 +401,14 @@ pub fn counters() -> Vec<(&'static str, u64)> {
         ("part.cut_inter_bytes", PART_CUT_INTER_BYTES.get()),
         ("part.replica_bytes", PART_REPLICA_BYTES.get()),
         ("part.replica_vertices", PART_REPLICA_VERTICES.get()),
+        ("serve.admitted", SRV_ADMITTED.get()),
+        ("serve.shed_overload", SRV_SHED_OVERLOAD.get()),
+        ("serve.shed_deadline", SRV_SHED_DEADLINE.get()),
+        ("serve.completed", SRV_COMPLETED.get()),
+        ("serve.failed", SRV_FAILED.get()),
+        ("serve.degraded", SRV_DEGRADED.get()),
+        ("serve.breaker_trips", SRV_BREAKER_TRIPS.get()),
+        ("serve.breaker_probes", SRV_BREAKER_PROBES.get()),
     ]
 }
 
@@ -389,6 +419,8 @@ pub fn histograms() -> Vec<(&'static str, HistSnapshot)> {
         ("enum.neighbor_len", NBR_LEN.snapshot()),
         ("ws.task_ns", WS_TASK_NS.snapshot()),
         ("sim.unit_busy_cycles", SIM_UNIT_BUSY.snapshot()),
+        ("serve.queue_us", SRV_QUEUE_US.snapshot()),
+        ("serve.exec_us", SRV_EXEC_US.snapshot()),
     ]
 }
 
@@ -414,10 +446,18 @@ pub fn reset() {
         &PART_CUT_INTER_BYTES,
         &PART_REPLICA_BYTES,
         &PART_REPLICA_VERTICES,
+        &SRV_ADMITTED,
+        &SRV_SHED_OVERLOAD,
+        &SRV_SHED_DEADLINE,
+        &SRV_COMPLETED,
+        &SRV_FAILED,
+        &SRV_DEGRADED,
+        &SRV_BREAKER_TRIPS,
+        &SRV_BREAKER_PROBES,
     ] {
         c.reset();
     }
-    for h in [&CAND_LEN, &NBR_LEN, &WS_TASK_NS, &SIM_UNIT_BUSY] {
+    for h in [&CAND_LEN, &NBR_LEN, &WS_TASK_NS, &SIM_UNIT_BUSY, &SRV_QUEUE_US, &SRV_EXEC_US] {
         h.reset();
     }
 }

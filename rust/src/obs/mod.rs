@@ -28,6 +28,14 @@
 //! PATH` writes the Chrome trace; `--explain` / the `explain`
 //! subcommand print the top-k plan-node attribution; and `PIMMINER_LOG`
 //! selects the logger threshold.
+//!
+//! The mining service (DESIGN.md §16) reports through the same
+//! registry: `serve.*` counters cover admission, load-shedding,
+//! degradation, and circuit-breaker activity, and the `serve.queue_us`
+//! / `serve.exec_us` histograms cover per-query latency — all visible
+//! in `--profile` output and `--trace-json` documents like every other
+//! metric. The service's own [`Health`](crate::serve::Health) report is
+//! independent of the registry (always on, not gated by `enabled()`).
 
 pub mod attr;
 pub mod log;

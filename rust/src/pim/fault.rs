@@ -155,6 +155,35 @@ impl FaultError {
             FaultError::BadSpec(_) => 2,
         }
     }
+
+    /// Retry taxonomy for clients (and the serving layer): `true` means
+    /// the same request may succeed if simply submitted again, `false`
+    /// means retrying without changing something is pointless.
+    ///
+    /// * [`LinkFailure`](FaultError::LinkFailure) — a hostile transient
+    ///   stream; a re-run rolls a fresh schedule and usually clears.
+    /// * [`WorkLost`](FaultError::WorkLost) — every surviving unit was
+    ///   gone *at that point of that schedule*; a retry reschedules.
+    /// * [`Timeout`](FaultError::Timeout) — deadline pressure is a
+    ///   property of the moment (queue depth, machine load), not of the
+    ///   query.
+    /// * [`UnrecoverableUnitLoss`](FaultError::UnrecoverableUnitLoss) —
+    ///   a placement property: the same spec on the same placement
+    ///   fails identically until duplication/placement changes.
+    /// * [`MemoryBudget`](FaultError::MemoryBudget) — the same query
+    ///   exceeds the same ceiling again.
+    /// * [`BadSpec`](FaultError::BadSpec) — a client error; the request
+    ///   itself must change.
+    pub fn is_retriable(&self) -> bool {
+        match self {
+            FaultError::LinkFailure { .. }
+            | FaultError::WorkLost { .. }
+            | FaultError::Timeout { .. } => true,
+            FaultError::UnrecoverableUnitLoss { .. }
+            | FaultError::MemoryBudget { .. }
+            | FaultError::BadSpec(_) => false,
+        }
+    }
 }
 
 impl fmt::Display for FaultError {
@@ -343,6 +372,22 @@ mod tests {
         assert_eq!(FaultError::LinkFailure { retries: 8 }.exit_code(), 4);
         assert_eq!(FaultError::WorkLost { unit: 0, pieces: 1 }.exit_code(), 4);
         assert_eq!(FaultError::BadSpec(String::new()).exit_code(), 2);
+    }
+
+    #[test]
+    fn retriable_taxonomy_partitions_the_error_space() {
+        // Retriable: transient/scheduling conditions a re-run can clear.
+        assert!(FaultError::LinkFailure { retries: 8 }.is_retriable());
+        assert!(FaultError::WorkLost { unit: 0, pieces: 1 }.is_retriable());
+        assert!(FaultError::Timeout { limit_ms: 10 }.is_retriable());
+        // Fatal: deterministic properties of the request or placement.
+        assert!(!FaultError::UnrecoverableUnitLoss { unit: 0, vertex: 0 }.is_retriable());
+        assert!(!FaultError::MemoryBudget {
+            limit_mb: 1,
+            observed_mb: 2
+        }
+        .is_retriable());
+        assert!(!FaultError::BadSpec(String::new()).is_retriable());
     }
 
     #[test]

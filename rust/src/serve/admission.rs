@@ -1,0 +1,176 @@
+//! Bounded admission queue with per-client fairness (DESIGN.md §16).
+//!
+//! Each client gets its own FIFO; the dispatcher drains clients
+//! round-robin so a chatty client cannot starve a quiet one. Both the
+//! per-client depth and the total depth are bounded — a submission past
+//! either bound is *shed* with [`ServiceError::Overloaded`] rather than
+//! queued, keeping queueing delay (and therefore deadline misses)
+//! bounded under overload.
+
+use super::ServiceError;
+use std::collections::VecDeque;
+
+/// Per-client FIFOs drained round-robin, with typed load-shedding.
+pub struct Admission<T> {
+    per_client_depth: usize,
+    total_depth: usize,
+    /// One `(client, fifo)` pair per client that has ever submitted.
+    /// The vector is small (clients, not queries) so linear scans are
+    /// fine and keep iteration order deterministic.
+    queues: Vec<(String, VecDeque<T>)>,
+    /// Round-robin cursor into `queues` for the next pop.
+    cursor: usize,
+    len: usize,
+}
+
+impl<T> Admission<T> {
+    /// An empty queue shedding past `per_client_depth` queued items for
+    /// any one client or `total_depth` across all clients.
+    pub fn new(per_client_depth: usize, total_depth: usize) -> Admission<T> {
+        Admission {
+            per_client_depth,
+            total_depth,
+            queues: Vec::new(),
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    /// Admit `item` from `client`, or shed it with a typed error when
+    /// either bound is already met.
+    pub fn push(&mut self, client: &str, item: T) -> Result<(), ServiceError> {
+        if self.len >= self.total_depth {
+            return Err(ServiceError::Overloaded {
+                client: client.to_string(),
+                depth: self.len,
+            });
+        }
+        let idx = match self.queues.iter().position(|(c, _)| c.as_str() == client) {
+            Some(i) => i,
+            None => {
+                self.queues.push((client.to_string(), VecDeque::new()));
+                self.queues.len() - 1
+            }
+        };
+        let q = &mut self.queues[idx].1;
+        if q.len() >= self.per_client_depth {
+            let depth = q.len();
+            return Err(ServiceError::Overloaded {
+                client: client.to_string(),
+                depth,
+            });
+        }
+        q.push_back(item);
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Pop the next item, visiting clients round-robin: each pop serves
+    /// the first non-empty client FIFO at or after the cursor, then
+    /// advances the cursor past it.
+    pub fn pop(&mut self) -> Option<(String, T)> {
+        if self.len == 0 || self.queues.is_empty() {
+            return None;
+        }
+        let n = self.queues.len();
+        for step in 0..n {
+            let i = (self.cursor + step) % n;
+            if let Some(item) = self.queues[i].1.pop_front() {
+                self.cursor = (i + 1) % n;
+                self.len -= 1;
+                return Some((self.queues[i].0.clone(), item));
+            }
+        }
+        None
+    }
+
+    /// Drain every queued item (used at shutdown so each submission
+    /// still gets exactly one response).
+    pub fn drain(&mut self) -> Vec<(String, T)> {
+        let mut out = Vec::with_capacity(self.len);
+        while let Some(pair) = self.pop() {
+            out.push(pair);
+        }
+        out
+    }
+
+    /// Total queued items across all clients.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_within_a_single_client() {
+        let mut a: Admission<u32> = Admission::new(8, 8);
+        a.push("c", 1).unwrap();
+        a.push("c", 2).unwrap();
+        a.push("c", 3).unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.pop(), Some(("c".to_string(), 1)));
+        assert_eq!(a.pop(), Some(("c".to_string(), 2)));
+        assert_eq!(a.pop(), Some(("c".to_string(), 3)));
+        assert_eq!(a.pop(), None);
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn round_robin_interleaves_clients() {
+        let mut a: Admission<u32> = Admission::new(8, 32);
+        // `a` is chatty, `b` submits once; `b` must be served second,
+        // not after all of `a`'s backlog.
+        for i in 0..4 {
+            a.push("a", i).unwrap();
+        }
+        a.push("b", 100).unwrap();
+        let order: Vec<String> = std::iter::from_fn(|| a.pop()).map(|(c, _)| c).collect();
+        assert_eq!(order, ["a", "b", "a", "a", "a"]);
+    }
+
+    #[test]
+    fn per_client_bound_sheds_only_the_offender() {
+        let mut a: Admission<u32> = Admission::new(2, 32);
+        a.push("noisy", 1).unwrap();
+        a.push("noisy", 2).unwrap();
+        let err = a.push("noisy", 3).unwrap_err();
+        assert!(matches!(err, ServiceError::Overloaded { .. }), "{err}");
+        assert!(err.is_retriable());
+        // A different client is unaffected by noisy's full share.
+        a.push("quiet", 10).unwrap();
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn total_bound_sheds_everyone() {
+        let mut a: Admission<u32> = Admission::new(8, 2);
+        a.push("x", 1).unwrap();
+        a.push("y", 2).unwrap();
+        let err = a.push("z", 3).unwrap_err();
+        match err {
+            ServiceError::Overloaded { client, depth } => {
+                assert_eq!(client, "z");
+                assert_eq!(depth, 2);
+            }
+            other => panic!("expected Overloaded, got {other}"),
+        }
+    }
+
+    #[test]
+    fn drain_returns_everything_in_fair_order() {
+        let mut a: Admission<u32> = Admission::new(8, 32);
+        a.push("a", 1).unwrap();
+        a.push("b", 2).unwrap();
+        a.push("a", 3).unwrap();
+        let drained = a.drain();
+        assert_eq!(drained.len(), 3);
+        assert!(a.is_empty());
+    }
+}

@@ -1,0 +1,200 @@
+//! Circuit breaker per backend rung (DESIGN.md §16).
+//!
+//! Classic three-state breaker: `Closed` passes traffic and counts
+//! consecutive failures; after `threshold` of them it `Open`s, and the
+//! dispatcher routes queries to the next rung of the degradation
+//! ladder. After `probe_after` skipped queries the breaker goes
+//! `HalfOpen` and admits exactly one recovery probe: success re-closes
+//! it (the rung is re-promoted), failure re-opens it and the skip count
+//! starts over. The breaker itself is policy-free bookkeeping — *what*
+//! counts as a failure (unrecoverable device fault, deadline miss) is
+//! decided by the dispatcher in [`session`](super::session).
+
+use std::fmt;
+
+/// Breaker state machine position.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: traffic flows, consecutive failures are counted.
+    Closed,
+    /// Tripped: traffic is skipped until enough skips accumulate.
+    Open,
+    /// One recovery probe is in flight; its outcome decides the state.
+    HalfOpen,
+}
+
+impl fmt::Display for BreakerState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        })
+    }
+}
+
+/// Consecutive-failure circuit breaker with half-open recovery probes.
+pub struct Breaker {
+    threshold: u32,
+    probe_after: u32,
+    state: BreakerState,
+    /// Consecutive failures while `Closed`.
+    consecutive: u32,
+    /// Queries skipped while `Open`.
+    skipped: u32,
+    /// Lifetime trip count (for the health report).
+    trips: u64,
+    /// Lifetime recovery probes sent (for the health report).
+    probes: u64,
+}
+
+impl Breaker {
+    /// A closed breaker tripping after `threshold` consecutive failures
+    /// and probing after `probe_after` skipped queries. Both are
+    /// clamped to at least 1.
+    pub fn new(threshold: u32, probe_after: u32) -> Breaker {
+        Breaker {
+            threshold: threshold.max(1),
+            probe_after: probe_after.max(1),
+            state: BreakerState::Closed,
+            consecutive: 0,
+            skipped: 0,
+            trips: 0,
+            probes: 0,
+        }
+    }
+
+    /// Should the next query use this rung? `Closed` always passes.
+    /// `Open` counts the skip and, once `probe_after` skips accumulate,
+    /// transitions to `HalfOpen` and admits that query as the probe.
+    /// `HalfOpen` admits (the probe outcome will settle the state).
+    pub fn allow(&mut self) -> bool {
+        match self.state {
+            BreakerState::Closed => true,
+            BreakerState::HalfOpen => true,
+            BreakerState::Open => {
+                self.skipped += 1;
+                if self.skipped >= self.probe_after {
+                    self.state = BreakerState::HalfOpen;
+                    self.probes += 1;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a success on this rung: resets the failure streak and —
+    /// if this was a half-open probe — re-closes the breaker.
+    pub fn on_success(&mut self) {
+        self.consecutive = 0;
+        self.skipped = 0;
+        self.state = BreakerState::Closed;
+    }
+
+    /// Record a failure on this rung. While `Closed`, `threshold`
+    /// consecutive failures trip it `Open`; a failed half-open probe
+    /// re-opens immediately.
+    pub fn on_failure(&mut self) {
+        match self.state {
+            BreakerState::Closed => {
+                self.consecutive += 1;
+                if self.consecutive >= self.threshold {
+                    self.trip();
+                }
+            }
+            BreakerState::HalfOpen => self.trip(),
+            BreakerState::Open => {}
+        }
+    }
+
+    fn trip(&mut self) {
+        self.state = BreakerState::Open;
+        self.consecutive = 0;
+        self.skipped = 0;
+        self.trips += 1;
+    }
+
+    /// Current state (no side effects — use [`Breaker::allow`] on the
+    /// query path).
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Lifetime number of trips.
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+
+    /// Lifetime number of half-open recovery probes admitted.
+    pub fn probes(&self) -> u64 {
+        self.probes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trips_after_threshold_consecutive_failures() {
+        let mut b = Breaker::new(3, 2);
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.on_failure();
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Closed, "2 < threshold");
+        // A success resets the streak…
+        b.on_success();
+        b.on_failure();
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Closed);
+        // …so it takes 3 *consecutive* failures to trip.
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn open_skips_then_admits_a_probe() {
+        let mut b = Breaker::new(1, 3);
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        // probe_after = 3: two skips, then the third call admits a probe.
+        assert!(!b.allow());
+        assert!(!b.allow());
+        assert!(b.allow(), "third allow() is the recovery probe");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert_eq!(b.probes(), 1);
+    }
+
+    #[test]
+    fn successful_probe_recloses() {
+        let mut b = Breaker::new(1, 1);
+        b.on_failure();
+        assert!(b.allow(), "probe_after=1 admits immediately");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.on_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow());
+        // Healed: the old failure streak is gone.
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open, "threshold=1 re-trips");
+        assert_eq!(b.trips(), 2);
+    }
+
+    #[test]
+    fn failed_probe_reopens_and_restarts_the_skip_count() {
+        let mut b = Breaker::new(1, 2);
+        b.on_failure();
+        assert!(!b.allow());
+        assert!(b.allow());
+        b.on_failure(); // probe failed
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 2);
+        // Skip count restarted: one skip, then the next probe.
+        assert!(!b.allow());
+        assert!(b.allow());
+        assert_eq!(b.probes(), 2);
+    }
+}

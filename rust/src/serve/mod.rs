@@ -1,0 +1,226 @@
+//! Resilient mining service (DESIGN.md §16): a long-running multi-graph
+//! coordinator on top of [`PimMiner`](crate::coordinator::PimMiner).
+//!
+//! The paper's framework answers one query at a time; this layer makes
+//! it a *service* that stays correct and available when many clients
+//! share the device:
+//!
+//! * [`registry`] — a named multi-graph registry with resident-byte
+//!   accounting and LRU eviction under a memory budget;
+//! * [`admission`] — a bounded admission queue with per-client FIFOs,
+//!   round-robin fair scheduling, and typed load-shedding
+//!   ([`ServiceError::Overloaded`]) instead of unbounded growth;
+//! * [`breaker`] — a circuit breaker per backend rung that trips after
+//!   K consecutive unrecoverable faults or deadline misses and sends
+//!   half-open recovery probes to re-promote a healed path;
+//! * [`session`] — the [`MiningService`] itself: a single dispatcher
+//!   thread that owns the process-wide `util::ws` budget (budgets are
+//!   not nested — one query at a time holds it), executes each query on
+//!   the highest healthy rung of the degradation ladder
+//!   (fused PIM-sim → per-plan PIM-sim → hybrid CPU executor, counts
+//!   bit-identical at every rung), and surfaces a [`Health`] report.
+//!
+//! Every error a client can see is a typed [`ServiceError`] carrying
+//! the retriable-vs-fatal distinction ([`ServiceError::is_retriable`])
+//! and a documented process exit code, extending the CLI's existing
+//! `FaultError` contract (README "Serving" section).
+
+pub mod admission;
+pub mod breaker;
+pub mod registry;
+pub mod session;
+
+pub use admission::Admission;
+pub use breaker::{Breaker, BreakerState};
+pub use registry::GraphRegistry;
+pub use session::{
+    Health, MiningService, QueryOutcome, QueryRequest, QueryResponse, Rung, ServiceConfig, Ticket,
+    LADDER,
+};
+
+use crate::pim::FaultError;
+use std::fmt;
+
+/// Typed service-level failure: what a client's query (or load request)
+/// gets instead of a panic or a silent drop. Execution-layer faults are
+/// wrapped ([`ServiceError::Fault`]) so their taxonomy and exit codes
+/// pass through unchanged.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServiceError {
+    /// The admission queue (total or this client's share) is full — the
+    /// service shed the query instead of queueing unboundedly.
+    Overloaded {
+        /// Client whose submission was shed.
+        client: String,
+        /// Queue depth observed at the shed decision.
+        depth: usize,
+    },
+    /// The query's deadline expired (while queued, or mid-execution).
+    DeadlineExceeded {
+        /// The deadline budget the query carried, in milliseconds.
+        deadline_ms: u64,
+    },
+    /// The named graph is not resident in the registry.
+    UnknownGraph(String),
+    /// Loading the graph would exceed the registry's resident-byte
+    /// budget even after evicting everything else.
+    RegistryFull {
+        /// Bytes the graph needs resident.
+        need_bytes: u64,
+        /// The registry's configured budget.
+        budget_bytes: u64,
+    },
+    /// The service is shutting down; queued queries are drained with
+    /// this response so none are silently lost.
+    ShuttingDown,
+    /// An execution-layer fault surfaced to the client (device fault,
+    /// budget trip, bad spec) after the degradation ladder ran out of
+    /// rungs to absorb it.
+    Fault(FaultError),
+}
+
+impl ServiceError {
+    /// Retry taxonomy, aligned with [`FaultError::is_retriable`]:
+    /// `true` means resubmitting the same request may succeed.
+    /// Overload and deadline pressure are properties of the moment;
+    /// an unknown graph, an over-budget registry, or a shutdown need
+    /// operator action first; wrapped faults delegate.
+    pub fn is_retriable(&self) -> bool {
+        match self {
+            ServiceError::Overloaded { .. } | ServiceError::DeadlineExceeded { .. } => true,
+            ServiceError::UnknownGraph(_)
+            | ServiceError::RegistryFull { .. }
+            | ServiceError::ShuttingDown => false,
+            ServiceError::Fault(e) => e.is_retriable(),
+        }
+    }
+
+    /// Process exit code, extending the CLI contract (README): 2 = bad
+    /// input, 3 = deadline/budget, 5 = shed by the service (retriable
+    /// rejection — the query never ran). Wrapped faults keep their
+    /// [`FaultError::exit_code`].
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            ServiceError::Overloaded { .. } | ServiceError::ShuttingDown => 5,
+            ServiceError::DeadlineExceeded { .. } => 3,
+            ServiceError::UnknownGraph(_) | ServiceError::RegistryFull { .. } => 2,
+            ServiceError::Fault(e) => e.exit_code(),
+        }
+    }
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::Overloaded { client, depth } => write!(
+                f,
+                "overloaded: admission queue full (depth {depth}) — query from \
+                 client `{client}` shed; retry with backoff"
+            ),
+            ServiceError::DeadlineExceeded { deadline_ms } => {
+                write!(f, "deadline exceeded: query's {deadline_ms} ms budget expired")
+            }
+            ServiceError::UnknownGraph(name) => {
+                write!(f, "unknown graph `{name}`: not resident in the registry")
+            }
+            ServiceError::RegistryFull {
+                need_bytes,
+                budget_bytes,
+            } => write!(
+                f,
+                "registry full: graph needs {need_bytes} resident bytes but the \
+                 budget is {budget_bytes}"
+            ),
+            ServiceError::ShuttingDown => write!(f, "service is shutting down"),
+            ServiceError::Fault(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+impl From<FaultError> for ServiceError {
+    fn from(e: FaultError) -> ServiceError {
+        ServiceError::Fault(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retriable_mapping_covers_every_variant() {
+        // Service-level conditions of the moment are retriable…
+        assert!(ServiceError::Overloaded {
+            client: "c".into(),
+            depth: 4
+        }
+        .is_retriable());
+        assert!(ServiceError::DeadlineExceeded { deadline_ms: 5 }.is_retriable());
+        // …configuration problems are not…
+        assert!(!ServiceError::UnknownGraph("g".into()).is_retriable());
+        assert!(!ServiceError::RegistryFull {
+            need_bytes: 10,
+            budget_bytes: 5
+        }
+        .is_retriable());
+        assert!(!ServiceError::ShuttingDown.is_retriable());
+        // …and wrapped faults delegate to FaultError::is_retriable.
+        assert!(ServiceError::Fault(FaultError::Timeout { limit_ms: 1 }).is_retriable());
+        assert!(ServiceError::Fault(FaultError::LinkFailure { retries: 8 }).is_retriable());
+        assert!(
+            !ServiceError::Fault(FaultError::UnrecoverableUnitLoss { unit: 0, vertex: 0 })
+                .is_retriable()
+        );
+        assert!(!ServiceError::Fault(FaultError::BadSpec(String::new())).is_retriable());
+    }
+
+    #[test]
+    fn exit_codes_extend_the_cli_contract() {
+        // New code 5: shed by the service, query never ran.
+        assert_eq!(
+            ServiceError::Overloaded {
+                client: "c".into(),
+                depth: 1
+            }
+            .exit_code(),
+            5
+        );
+        assert_eq!(ServiceError::ShuttingDown.exit_code(), 5);
+        // Deadline maps onto the existing budget code.
+        assert_eq!(ServiceError::DeadlineExceeded { deadline_ms: 1 }.exit_code(), 3);
+        // Configuration problems are bad input.
+        assert_eq!(ServiceError::UnknownGraph("g".into()).exit_code(), 2);
+        assert_eq!(
+            ServiceError::RegistryFull {
+                need_bytes: 2,
+                budget_bytes: 1
+            }
+            .exit_code(),
+            2
+        );
+        // Wrapped faults keep their documented codes.
+        assert_eq!(
+            ServiceError::Fault(FaultError::Timeout { limit_ms: 1 }).exit_code(),
+            3
+        );
+        assert_eq!(
+            ServiceError::Fault(FaultError::WorkLost { unit: 0, pieces: 1 }).exit_code(),
+            4
+        );
+    }
+
+    #[test]
+    fn display_is_informative() {
+        let e = ServiceError::Overloaded {
+            client: "alice".into(),
+            depth: 16,
+        };
+        let s = e.to_string();
+        assert!(s.contains("overloaded"), "{s}");
+        assert!(s.contains("alice"), "{s}");
+        let f = ServiceError::from(FaultError::Timeout { limit_ms: 7 });
+        assert!(f.to_string().contains("7 ms"), "{f}");
+    }
+}

@@ -1,0 +1,229 @@
+//! Named multi-graph registry (DESIGN.md §16): each entry is a fully
+//! loaded [`PimMiner`] (graph placed, lists and replicas device-
+//! resident, hub bitmaps built), keyed by name, with resident-byte
+//! accounting against a host-memory budget. Loading past the budget
+//! evicts least-recently-used entries first; a graph that cannot fit
+//! even alone is refused with [`ServiceError::RegistryFull`].
+
+use super::ServiceError;
+use crate::coordinator::PimMiner;
+use crate::graph::CsrGraph;
+use crate::pim::{PimConfig, SimOptions};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One resident graph: its dedicated miner plus the accounting snapshot
+/// taken at load time.
+pub struct GraphEntry {
+    /// The coordinator holding this graph (placement, device lists,
+    /// replicas). Query entry points are `&self`, so the dispatcher can
+    /// execute against an entry without exclusive registry access.
+    pub miner: PimMiner,
+    /// Host CSR bytes charged against the registry budget.
+    pub bytes: u64,
+    /// Vertices (for the health report).
+    pub vertices: usize,
+    /// Edges (for the health report).
+    pub edges: usize,
+}
+
+/// The registry: insertion-ordered names for LRU bookkeeping plus the
+/// entries themselves.
+pub struct GraphRegistry {
+    budget_bytes: u64,
+    /// `Arc` so the dispatcher can clone a handle under the service
+    /// lock and execute the query without holding it (queries only need
+    /// `&PimMiner`).
+    entries: HashMap<String, Arc<GraphEntry>>,
+    /// Least-recently-used first. `touch` moves a name to the back.
+    lru: Vec<String>,
+}
+
+impl GraphRegistry {
+    /// An empty registry with a resident-byte budget (the sum of all
+    /// entries' CSR bytes stays `<= budget_bytes`).
+    pub fn new(budget_bytes: u64) -> GraphRegistry {
+        GraphRegistry {
+            budget_bytes,
+            entries: HashMap::new(),
+            lru: Vec::new(),
+        }
+    }
+
+    /// Load `graph` under `name`, building a fresh miner with the given
+    /// device config and options. Evicts LRU entries until the new
+    /// graph fits; refuses ([`ServiceError::RegistryFull`]) if it can
+    /// never fit. Reloading an existing name replaces the old entry.
+    pub fn load(
+        &mut self,
+        name: &str,
+        graph: CsrGraph,
+        cfg: &PimConfig,
+        opts: &SimOptions,
+    ) -> Result<(), ServiceError> {
+        let bytes = graph.total_bytes();
+        if bytes > self.budget_bytes {
+            return Err(ServiceError::RegistryFull {
+                need_bytes: bytes,
+                budget_bytes: self.budget_bytes,
+            });
+        }
+        self.evict_name(name);
+        while self.resident_bytes() + bytes > self.budget_bytes {
+            let victim = self.lru[0].clone();
+            self.evict_name(&victim);
+        }
+        let vertices = graph.num_vertices();
+        let edges = graph.num_edges();
+        let mut miner = PimMiner::new(cfg.clone(), *opts);
+        miner.load_graph(graph).map_err(|e| {
+            // A device-side allocation failure while placing the graph
+            // is a capacity problem too; surface the host bytes we
+            // tried to admit.
+            crate::obs_warn!("registry load `{}` failed: {}", name, e);
+            ServiceError::RegistryFull {
+                need_bytes: bytes,
+                budget_bytes: self.budget_bytes,
+            }
+        })?;
+        self.entries.insert(
+            name.to_string(),
+            Arc::new(GraphEntry {
+                miner,
+                bytes,
+                vertices,
+                edges,
+            }),
+        );
+        self.lru.push(name.to_string());
+        Ok(())
+    }
+
+    /// Evict `name`. Returns whether it was resident.
+    pub fn evict(&mut self, name: &str) -> bool {
+        self.evict_name(name)
+    }
+
+    fn evict_name(&mut self, name: &str) -> bool {
+        if self.entries.remove(name).is_some() {
+            self.lru.retain(|n| n != name);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Clone an entry handle, marking it most-recently-used. The `Arc`
+    /// lets the caller drop the registry lock before executing.
+    pub fn touch(&mut self, name: &str) -> Option<Arc<GraphEntry>> {
+        if !self.entries.contains_key(name) {
+            return None;
+        }
+        if let Some(pos) = self.lru.iter().position(|n| n == name) {
+            let n = self.lru.remove(pos);
+            self.lru.push(n);
+        }
+        self.entries.get(name).cloned()
+    }
+
+    /// Borrow an entry without LRU side effects.
+    pub fn get(&self, name: &str) -> Option<&GraphEntry> {
+        self.entries.get(name).map(|e| e.as_ref())
+    }
+
+    /// Sum of resident entries' CSR bytes.
+    pub fn resident_bytes(&self) -> u64 {
+        self.entries.values().map(|e| e.bytes).sum()
+    }
+
+    /// The configured budget.
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Resident graph names, least-recently-used first.
+    pub fn names(&self) -> &[String] {
+        &self.lru
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen;
+
+    fn small(seed: u64) -> CsrGraph {
+        gen::erdos_renyi(60, 240, seed)
+    }
+
+    fn reg(budget: u64) -> GraphRegistry {
+        GraphRegistry::new(budget)
+    }
+
+    #[test]
+    fn load_get_evict_accounting() {
+        let g = small(1);
+        let bytes = g.total_bytes();
+        let mut r = reg(10 * bytes);
+        r.load("a", g, &PimConfig::tiny(), &SimOptions::all()).unwrap();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.resident_bytes(), bytes);
+        assert!(r.get("a").is_some());
+        assert!(r.get("a").unwrap().miner.loaded().is_some());
+        assert_eq!(r.get("a").unwrap().vertices, 60);
+        assert!(r.get("b").is_none());
+        assert!(r.evict("a"));
+        assert!(!r.evict("a"));
+        assert_eq!(r.resident_bytes(), 0);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn over_budget_load_evicts_lru_first() {
+        let bytes = small(1).total_bytes();
+        // Budget fits exactly two of the equal-sized graphs.
+        let mut r = reg(2 * bytes + bytes / 2);
+        r.load("a", small(1), &PimConfig::tiny(), &SimOptions::all()).unwrap();
+        r.load("b", small(2), &PimConfig::tiny(), &SimOptions::all()).unwrap();
+        // Touch `a` so `b` becomes the LRU victim.
+        assert!(r.touch("a").is_some());
+        r.load("c", small(3), &PimConfig::tiny(), &SimOptions::all()).unwrap();
+        assert_eq!(r.len(), 2);
+        assert!(r.get("a").is_some(), "recently used survives");
+        assert!(r.get("b").is_none(), "LRU evicted");
+        assert!(r.get("c").is_some());
+        assert!(r.resident_bytes() <= r.budget_bytes());
+    }
+
+    #[test]
+    fn oversized_graph_is_refused_typed() {
+        let g = small(1);
+        let mut r = reg(g.total_bytes() - 1);
+        let err = r
+            .load("big", g, &PimConfig::tiny(), &SimOptions::all())
+            .unwrap_err();
+        assert!(matches!(err, ServiceError::RegistryFull { .. }), "{err}");
+        assert!(!err.is_retriable());
+        assert_eq!(err.exit_code(), 2);
+        assert!(r.is_empty(), "failed load leaves no residue");
+    }
+
+    #[test]
+    fn reload_replaces_without_double_counting() {
+        let bytes = small(1).total_bytes();
+        let mut r = reg(3 * bytes);
+        r.load("a", small(1), &PimConfig::tiny(), &SimOptions::all()).unwrap();
+        r.load("a", small(2), &PimConfig::tiny(), &SimOptions::all()).unwrap();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.resident_bytes(), small(2).total_bytes());
+        assert_eq!(r.names(), &["a".to_string()]);
+    }
+}

@@ -1,0 +1,933 @@
+//! The [`MiningService`] itself (DESIGN.md §16): a single dispatcher
+//! thread draining the admission queue and executing each query on the
+//! highest healthy rung of the degradation ladder.
+//!
+//! One dispatcher, not a pool, because the `util::ws` cancellation
+//! budget is process-wide and non-nested — exactly one query at a time
+//! may own it, and the executors already parallelise *inside* a query.
+//! Client concurrency therefore lives entirely at the submission layer:
+//! `submit` is cheap (a bounded queue push) and returns a [`Ticket`]
+//! the client blocks on.
+//!
+//! The degradation [`LADDER`] is ordered fastest-first and every rung
+//! computes the *same count* for the same request (pinned by
+//! `tests/prop_fuse.rs`, `tests/prop_parallel.rs`, `tests/prop_faults.rs`
+//! and re-checked end-to-end by `tests/soak_service.rs`), so degrading
+//! trades latency/fidelity of the simulated timing — never correctness:
+//!
+//! 1. [`Rung::Fused`] — fused multi-pattern PIM simulation;
+//! 2. [`Rung::PerPlan`] — per-plan PIM simulation (no trie fusion);
+//! 3. [`Rung::Cpu`] — the hybrid CPU executor, a fault-free floor that
+//!    is immune to injected device faults by construction.
+//!
+//! Each simulated rung carries a [`Breaker`]; an unrecoverable device
+//! fault charges the rung and the query falls through to the next one
+//! in the *same* dispatch, so a single query observes at most one
+//! device-fault detour per rung. Deadline misses also charge the
+//! breaker (a rung that keeps blowing budgets is not healthy) but the
+//! query is answered with the typed error — its budget is spent.
+
+use super::breaker::{Breaker, BreakerState};
+use super::registry::{GraphEntry, GraphRegistry};
+use super::{Admission, ServiceError};
+use crate::exec::cpu::{self, sampled_roots, CpuFlavor};
+use crate::graph::CsrGraph;
+use crate::obs::metrics as m;
+use crate::pattern::plan::{application, Application};
+use crate::pim::{fault, FaultError, FaultSpec, PimConfig, SimOptions};
+use crate::report::json::Obj;
+use crate::util::ws;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One rung of the degradation ladder. Counts are bit-identical across
+/// rungs; only simulated-timing fidelity and host cost differ.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rung {
+    /// Fused multi-pattern PIM simulation (full fidelity, fastest).
+    Fused,
+    /// Per-plan PIM simulation (no trie fusion).
+    PerPlan,
+    /// Hybrid CPU executor — the fault-immune floor.
+    Cpu,
+}
+
+impl Rung {
+    /// Stable short name (health report, bench JSON, logs).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rung::Fused => "pim-fused",
+            Rung::PerPlan => "pim-per-plan",
+            Rung::Cpu => "cpu-hybrid",
+        }
+    }
+}
+
+/// The documented degradation ladder, healthiest rung first.
+pub const LADDER: [Rung; 3] = [Rung::Fused, Rung::PerPlan, Rung::Cpu];
+
+/// Everything the service needs at construction time.
+#[derive(Clone)]
+pub struct ServiceConfig {
+    /// Total admission-queue bound across all clients.
+    pub queue_depth: usize,
+    /// Per-client admission bound (fair share).
+    pub per_client_depth: usize,
+    /// Registry resident-byte budget (host CSR bytes).
+    pub registry_budget_bytes: u64,
+    /// Breaker: consecutive failures before a rung trips.
+    pub breaker_threshold: u32,
+    /// Breaker: skipped queries before a recovery probe.
+    pub breaker_probe_after: u32,
+    /// Deadline applied to queries that do not carry their own.
+    pub default_deadline_ms: Option<u64>,
+    /// Process memory budget installed alongside each query's deadline.
+    pub max_memory_mb: Option<u64>,
+    /// Device config for every loaded graph's miner.
+    pub cfg: PimConfig,
+    /// Base simulation options; the ladder only varies `fused` (and the
+    /// request varies `faults`), so placement-affecting fields stay
+    /// exactly as loaded.
+    pub opts: SimOptions,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            queue_depth: 64,
+            per_client_depth: 16,
+            registry_budget_bytes: 1 << 30,
+            breaker_threshold: 3,
+            breaker_probe_after: 4,
+            default_deadline_ms: None,
+            max_memory_mb: None,
+            cfg: PimConfig::default(),
+            opts: SimOptions::all(),
+        }
+    }
+}
+
+/// One client query.
+#[derive(Clone, Debug)]
+pub struct QueryRequest {
+    /// Registry name of the graph to mine.
+    pub graph: String,
+    /// Application name from the paper catalogue (e.g. `"3-MC"`).
+    pub pattern: String,
+    /// Root sampling ratio (1.0 = exact).
+    pub sample_ratio: f64,
+    /// Per-query deadline; `None` falls back to the service default.
+    pub deadline_ms: Option<u64>,
+    /// Injected fault plan for this query (testing/soak).
+    pub faults: Option<FaultSpec>,
+}
+
+impl QueryRequest {
+    /// An exact, fault-free, no-deadline query.
+    pub fn new(graph: &str, pattern: &str) -> QueryRequest {
+        QueryRequest {
+            graph: graph.to_string(),
+            pattern: pattern.to_string(),
+            sample_ratio: 1.0,
+            deadline_ms: None,
+            faults: None,
+        }
+    }
+}
+
+/// A successful query's answer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueryOutcome {
+    /// Embedding count — identical on every rung.
+    pub count: u64,
+    /// The rung that produced the answer.
+    pub rung: Rung,
+    /// `true` when a rung below [`Rung::Fused`] answered.
+    pub degraded: bool,
+    /// Time spent queued, milliseconds.
+    pub queue_ms: f64,
+    /// Time spent executing (all attempted rungs), milliseconds.
+    pub exec_ms: f64,
+}
+
+/// Exactly one of these is delivered per admitted submission.
+#[derive(Debug)]
+pub struct QueryResponse {
+    /// The id handed back by `submit` (via the [`Ticket`]).
+    pub id: u64,
+    /// The answer or the typed reason there is none.
+    pub result: Result<QueryOutcome, ServiceError>,
+}
+
+/// Handle for one admitted query; blocks until its response arrives.
+pub struct Ticket {
+    /// Query id (matches [`QueryResponse::id`]).
+    pub id: u64,
+    rx: Receiver<QueryResponse>,
+}
+
+impl Ticket {
+    /// Block until the dispatcher answers. A dispatcher that vanished
+    /// (service dropped mid-flight) reads as shutdown, never a hang
+    /// with a lost response.
+    pub fn wait(self) -> QueryResponse {
+        self.rx.recv().unwrap_or(QueryResponse {
+            id: self.id,
+            result: Err(ServiceError::ShuttingDown),
+        })
+    }
+}
+
+/// Point-in-time service health: registry occupancy, lifetime counters,
+/// and per-rung breaker state. Counters are plain (always on), mirrored
+/// into the gated `obs` metrics registry as `serve.*`.
+#[derive(Clone, Debug)]
+pub struct Health {
+    /// Resident graphs, `(name, bytes)`, least-recently-used first.
+    pub graphs: Vec<(String, u64)>,
+    /// Sum of resident CSR bytes.
+    pub resident_bytes: u64,
+    /// Registry budget.
+    pub budget_bytes: u64,
+    /// Queries currently queued.
+    pub queue_depth: usize,
+    /// Lifetime admissions.
+    pub admitted: u64,
+    /// Lifetime sheds at admission (queue full).
+    pub shed_overload: u64,
+    /// Lifetime sheds at dispatch (deadline already expired in queue).
+    pub shed_deadline: u64,
+    /// Lifetime successful responses.
+    pub completed: u64,
+    /// Lifetime error responses (after shedding).
+    pub failed: u64,
+    /// Lifetime successes answered below the top rung.
+    pub degraded: u64,
+    /// Per-rung `(name, state, trips, probes)` for the breaker-carrying
+    /// rungs (the CPU floor has no breaker).
+    pub rungs: Vec<(&'static str, BreakerState, u64, u64)>,
+}
+
+impl Health {
+    /// `true` when every breaker-carrying rung is closed.
+    pub fn all_rungs_healthy(&self) -> bool {
+        self.rungs
+            .iter()
+            .all(|(_, s, _, _)| *s == BreakerState::Closed)
+    }
+
+    /// Human-readable multi-line report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "graphs {}/{} bytes ({} resident)\n",
+            self.resident_bytes,
+            self.budget_bytes,
+            self.graphs.len()
+        ));
+        for (name, bytes) in &self.graphs {
+            out.push_str(&format!("  graph {name}: {bytes} bytes\n"));
+        }
+        out.push_str(&format!(
+            "queue depth {} | admitted {} | shed overload {} deadline {}\n",
+            self.queue_depth, self.admitted, self.shed_overload, self.shed_deadline
+        ));
+        out.push_str(&format!(
+            "completed {} ({} degraded) | failed {}\n",
+            self.completed, self.degraded, self.failed
+        ));
+        for (name, state, trips, probes) in &self.rungs {
+            out.push_str(&format!(
+                "rung {name}: {state} (trips {trips}, probes {probes})\n"
+            ));
+        }
+        out
+    }
+
+    /// JSON object (for `serve --json` and the bench harness).
+    pub fn to_json(&self) -> String {
+        let graphs: Vec<String> = self
+            .graphs
+            .iter()
+            .map(|(n, b)| Obj::new().str("name", n).u64("bytes", *b).render())
+            .collect();
+        let rungs: Vec<String> = self
+            .rungs
+            .iter()
+            .map(|(n, s, t, p)| {
+                Obj::new()
+                    .str("rung", n)
+                    .str("state", &s.to_string())
+                    .u64("trips", *t)
+                    .u64("probes", *p)
+                    .render()
+            })
+            .collect();
+        Obj::new()
+            .raw("graphs", &crate::report::json::array(&graphs))
+            .u64("resident_bytes", self.resident_bytes)
+            .u64("budget_bytes", self.budget_bytes)
+            .u64("queue_depth", self.queue_depth as u64)
+            .u64("admitted", self.admitted)
+            .u64("shed_overload", self.shed_overload)
+            .u64("shed_deadline", self.shed_deadline)
+            .u64("completed", self.completed)
+            .u64("failed", self.failed)
+            .u64("degraded", self.degraded)
+            .bool("healthy", self.all_rungs_healthy())
+            .raw("rungs", &crate::report::json::array(&rungs))
+            .render()
+    }
+}
+
+/// Lifetime counters (always on — the `obs` registry mirror is gated).
+#[derive(Clone, Copy, Default)]
+struct Stats {
+    admitted: u64,
+    shed_overload: u64,
+    shed_deadline: u64,
+    completed: u64,
+    failed: u64,
+    degraded: u64,
+}
+
+struct Job {
+    id: u64,
+    req: QueryRequest,
+    enqueued: Instant,
+    /// Absolute deadline (submit time + effective deadline_ms).
+    deadline: Option<Instant>,
+    /// The deadline budget as submitted (for the error message).
+    deadline_ms: Option<u64>,
+    tx: Sender<QueryResponse>,
+}
+
+struct Core {
+    registry: GraphRegistry,
+    queue: Admission<Job>,
+    /// Breakers for the simulated rungs, `LADDER` order (the CPU floor
+    /// carries none — it must always be allowed to answer).
+    breakers: [Breaker; 2],
+    stats: Stats,
+    paused: bool,
+    shutdown: bool,
+}
+
+type Shared = (Mutex<Core>, Condvar);
+
+/// The long-running multi-graph mining service.
+pub struct MiningService {
+    shared: Arc<Shared>,
+    cfg: ServiceConfig,
+    next_id: AtomicU64,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl MiningService {
+    /// Build the registry/queue/breakers and start the dispatcher.
+    pub fn start(cfg: ServiceConfig) -> MiningService {
+        let core = Core {
+            registry: GraphRegistry::new(cfg.registry_budget_bytes),
+            queue: Admission::new(cfg.per_client_depth, cfg.queue_depth),
+            breakers: [
+                Breaker::new(cfg.breaker_threshold, cfg.breaker_probe_after),
+                Breaker::new(cfg.breaker_threshold, cfg.breaker_probe_after),
+            ],
+            stats: Stats::default(),
+            paused: false,
+            shutdown: false,
+        };
+        let shared: Arc<Shared> = Arc::new((Mutex::new(core), Condvar::new()));
+        let dispatcher = {
+            let shared = Arc::clone(&shared);
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name("pimminer-serve".to_string())
+                .spawn(move || dispatcher_loop(&shared, &cfg))
+                .expect("spawn dispatcher")
+        };
+        MiningService {
+            shared,
+            cfg,
+            next_id: AtomicU64::new(1),
+            dispatcher: Some(dispatcher),
+        }
+    }
+
+    /// Load (or replace) a named graph; may evict LRU entries.
+    pub fn load_graph(&self, name: &str, graph: CsrGraph) -> Result<(), ServiceError> {
+        let mut core = self.lock();
+        if core.shutdown {
+            return Err(ServiceError::ShuttingDown);
+        }
+        core.registry
+            .load(name, graph, &self.cfg.cfg, &self.cfg.opts)
+    }
+
+    /// Evict a named graph. Returns whether it was resident.
+    pub fn evict_graph(&self, name: &str) -> bool {
+        self.lock().registry.evict(name)
+    }
+
+    /// Submit a query for `client`. Returns a [`Ticket`] on admission or
+    /// a typed shed/shutdown error immediately.
+    pub fn submit(&self, client: &str, req: QueryRequest) -> Result<Ticket, ServiceError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        let deadline_ms = req.deadline_ms.or(self.cfg.default_deadline_ms);
+        let job = Job {
+            id,
+            req,
+            enqueued: Instant::now(),
+            deadline: deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms)),
+            deadline_ms,
+            tx,
+        };
+        let (lock, cvar) = &*self.shared;
+        let mut core = lock.lock().unwrap_or_else(|p| p.into_inner());
+        if core.shutdown {
+            return Err(ServiceError::ShuttingDown);
+        }
+        match core.queue.push(client, job) {
+            Ok(()) => {
+                core.stats.admitted += 1;
+                m::SRV_ADMITTED.add(1);
+                cvar.notify_all();
+                Ok(Ticket { id, rx })
+            }
+            Err(e) => {
+                core.stats.shed_overload += 1;
+                m::SRV_SHED_OVERLOAD.add(1);
+                Err(e)
+            }
+        }
+    }
+
+    /// Point-in-time health snapshot.
+    pub fn health(&self) -> Health {
+        let core = self.lock();
+        let graphs = core
+            .registry
+            .names()
+            .iter()
+            .map(|n| {
+                let bytes = core.registry.get(n).map_or(0, |e| e.bytes);
+                (n.clone(), bytes)
+            })
+            .collect();
+        Health {
+            graphs,
+            resident_bytes: core.registry.resident_bytes(),
+            budget_bytes: core.registry.budget_bytes(),
+            queue_depth: core.queue.len(),
+            admitted: core.stats.admitted,
+            shed_overload: core.stats.shed_overload,
+            shed_deadline: core.stats.shed_deadline,
+            completed: core.stats.completed,
+            failed: core.stats.failed,
+            degraded: core.stats.degraded,
+            rungs: LADDER
+                .iter()
+                .take(core.breakers.len())
+                .enumerate()
+                .map(|(i, r)| {
+                    let b = &core.breakers[i];
+                    (r.name(), b.state(), b.trips(), b.probes())
+                })
+                .collect(),
+        }
+    }
+
+    /// Stop the dispatcher from popping (submissions still queue until
+    /// the bound, then shed) — the deterministic overload lever for
+    /// tests, the CI smoke step, and the bench harness.
+    pub fn pause(&self) {
+        self.lock().paused = true;
+        self.shared.1.notify_all();
+    }
+
+    /// Resume dispatching.
+    pub fn resume(&self) {
+        self.lock().paused = false;
+        self.shared.1.notify_all();
+    }
+
+    /// Stop accepting work, drain the queue with [`ServiceError::ShuttingDown`]
+    /// responses (exactly one response per admitted query, even now),
+    /// and join the dispatcher.
+    pub fn shutdown(&mut self) {
+        {
+            let mut core = self.lock();
+            core.shutdown = true;
+        }
+        self.shared.1.notify_all();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Core> {
+        self.shared.0.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+impl Drop for MiningService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn respond(job: &Job, result: Result<QueryOutcome, ServiceError>) {
+    // A client that dropped its ticket makes send fail; that is its
+    // choice — the dispatcher never blocks on delivery.
+    let _ = job.tx.send(QueryResponse { id: job.id, result });
+}
+
+fn dispatcher_loop(shared: &Arc<Shared>, cfg: &ServiceConfig) {
+    let (lock, cvar) = &**shared;
+    loop {
+        // Wait for work (or shutdown), honouring pause.
+        let job = {
+            let mut core = lock.lock().unwrap_or_else(|p| p.into_inner());
+            loop {
+                if core.shutdown {
+                    for (_, job) in core.queue.drain() {
+                        core.stats.failed += 1;
+                        m::SRV_FAILED.add(1);
+                        respond(&job, Err(ServiceError::ShuttingDown));
+                    }
+                    return;
+                }
+                if !core.paused {
+                    if let Some((_, job)) = core.queue.pop() {
+                        break job;
+                    }
+                }
+                core = cvar.wait(core).unwrap_or_else(|p| p.into_inner());
+            }
+        };
+
+        let popped = Instant::now();
+        let queue_ms = popped.duration_since(job.enqueued).as_secs_f64() * 1e3;
+        m::SRV_QUEUE_US.record((queue_ms * 1e3) as u64);
+
+        // Shed queries whose deadline already expired while queued —
+        // running them wastes the device on an answer nobody can use.
+        // Not a breaker charge: no rung failed.
+        if job.deadline.is_some_and(|dl| popped >= dl) {
+            let mut core = lock.lock().unwrap_or_else(|p| p.into_inner());
+            core.stats.shed_deadline += 1;
+            m::SRV_SHED_DEADLINE.add(1);
+            core.stats.failed += 1;
+            m::SRV_FAILED.add(1);
+            drop(core);
+            respond(
+                &job,
+                Err(ServiceError::DeadlineExceeded {
+                    deadline_ms: job.deadline_ms.unwrap_or(0),
+                }),
+            );
+            continue;
+        }
+
+        // Resolve graph (marks it most-recently-used) and application.
+        let entry = {
+            let mut core = lock.lock().unwrap_or_else(|p| p.into_inner());
+            core.registry.touch(&job.req.graph)
+        };
+        let Some(entry) = entry else {
+            let mut core = lock.lock().unwrap_or_else(|p| p.into_inner());
+            core.stats.failed += 1;
+            m::SRV_FAILED.add(1);
+            drop(core);
+            respond(
+                &job,
+                Err(ServiceError::UnknownGraph(job.req.graph.clone())),
+            );
+            continue;
+        };
+        let Some(app) = application(&job.req.pattern) else {
+            let mut core = lock.lock().unwrap_or_else(|p| p.into_inner());
+            core.stats.failed += 1;
+            m::SRV_FAILED.add(1);
+            drop(core);
+            respond(
+                &job,
+                Err(ServiceError::Fault(FaultError::BadSpec(format!(
+                    "unknown application `{}`",
+                    job.req.pattern
+                )))),
+            );
+            continue;
+        };
+
+        // Install the process-wide budget for this query: the remaining
+        // slice of its deadline plus the service memory bound. The
+        // per-root / per-candidate checkpoints (DESIGN.md §15) observe
+        // it on every rung, including the CPU floor.
+        let remaining_ms = job
+            .deadline
+            .map(|dl| dl.saturating_duration_since(popped).as_millis().max(1) as u64);
+        let guard = (remaining_ms.is_some() || cfg.max_memory_mb.is_some())
+            .then(|| ws::set_budget(remaining_ms, cfg.max_memory_mb));
+
+        let result = run_ladder(shared, cfg, &entry, &app, &job);
+        drop(guard);
+
+        let exec_ms = popped.elapsed().as_secs_f64() * 1e3;
+        m::SRV_EXEC_US.record((exec_ms * 1e3) as u64);
+
+        let result = result.map(|(count, rung)| QueryOutcome {
+            count,
+            rung,
+            degraded: rung != LADDER[0],
+            queue_ms,
+            exec_ms,
+        });
+        {
+            let mut core = lock.lock().unwrap_or_else(|p| p.into_inner());
+            match &result {
+                Ok(o) => {
+                    core.stats.completed += 1;
+                    m::SRV_COMPLETED.add(1);
+                    if o.degraded {
+                        core.stats.degraded += 1;
+                        m::SRV_DEGRADED.add(1);
+                    }
+                }
+                Err(_) => {
+                    core.stats.failed += 1;
+                    m::SRV_FAILED.add(1);
+                }
+            }
+        }
+        respond(&job, result);
+    }
+}
+
+/// Walk the ladder top-down; returns the count and the answering rung.
+fn run_ladder(
+    shared: &Arc<Shared>,
+    cfg: &ServiceConfig,
+    entry: &GraphEntry,
+    app: &Application,
+    job: &Job,
+) -> Result<(u64, Rung), ServiceError> {
+    let (lock, _) = &**shared;
+    for (i, rung) in LADDER.iter().enumerate() {
+        // The CPU floor (beyond the breaker array) is always allowed.
+        let allowed = i >= 2 || {
+            let mut core = lock.lock().unwrap_or_else(|p| p.into_inner());
+            let was_open = core.breakers[i].state() == BreakerState::Open;
+            let ok = core.breakers[i].allow();
+            if ok && was_open {
+                // Open -> HalfOpen transition: this query is the probe.
+                m::SRV_BREAKER_PROBES.add(1);
+            }
+            ok
+        };
+        if !allowed {
+            continue;
+        }
+        match run_rung(cfg, entry, app, job, *rung) {
+            Ok(count) => {
+                if i < 2 {
+                    let mut core = lock.lock().unwrap_or_else(|p| p.into_inner());
+                    core.breakers[i].on_success();
+                }
+                return Ok((count, *rung));
+            }
+            Err(fe) => {
+                let unrecoverable_device = fe.exit_code() == 4;
+                let budget_miss =
+                    matches!(fe, FaultError::Timeout { .. } | FaultError::MemoryBudget { .. });
+                if i < 2 && (unrecoverable_device || budget_miss) {
+                    let mut core = lock.lock().unwrap_or_else(|p| p.into_inner());
+                    let before = core.breakers[i].trips();
+                    core.breakers[i].on_failure();
+                    if core.breakers[i].trips() > before {
+                        m::SRV_BREAKER_TRIPS.add(1);
+                        crate::obs_warn!(
+                            "rung {} tripped open after repeated failures",
+                            rung.name()
+                        );
+                    }
+                }
+                if unrecoverable_device {
+                    // Fall through to the next rung in this same
+                    // dispatch — counts are identical there.
+                    continue;
+                }
+                // Budget misses and bad specs answer the client now.
+                return Err(match fe {
+                    FaultError::Timeout { .. } if job.deadline_ms.is_some() => {
+                        ServiceError::DeadlineExceeded {
+                            deadline_ms: job.deadline_ms.unwrap_or(0),
+                        }
+                    }
+                    other => ServiceError::Fault(other),
+                });
+            }
+        }
+    }
+    // Unreachable: the CPU floor is always allowed and only fails on
+    // budget trips, which return above. Kept as a typed answer anyway.
+    Err(ServiceError::Fault(FaultError::BadSpec(
+        "degradation ladder exhausted".to_string(),
+    )))
+}
+
+/// Execute one rung. Device faults and budget trips surface as
+/// [`FaultError`]; the CPU floor injects no faults and can only trip
+/// the budget.
+fn run_rung(
+    cfg: &ServiceConfig,
+    entry: &GraphEntry,
+    app: &Application,
+    job: &Job,
+    rung: Rung,
+) -> Result<u64, FaultError> {
+    match rung {
+        Rung::Fused | Rung::PerPlan => {
+            let mut opts = cfg.opts;
+            opts.fused = rung == Rung::Fused;
+            opts.faults = job.req.faults;
+            entry
+                .miner
+                .pattern_count_with(app, job.req.sample_ratio, &opts)
+                .map(|r| r.count)
+                .map_err(|e| match e.downcast::<FaultError>() {
+                    Ok(fe) => fe,
+                    Err(other) => FaultError::BadSpec(other.to_string()),
+                })
+        }
+        Rung::Cpu => {
+            let g = &entry
+                .miner
+                .loaded()
+                .expect("registry entries are always loaded")
+                .graph;
+            let roots = sampled_roots(g.num_vertices(), job.req.sample_ratio);
+            let r = cpu::run_application_with(
+                g,
+                app,
+                &roots,
+                CpuFlavor::AutoMineOpt,
+                None,
+                true,
+                None,
+                None,
+            );
+            // The CPU executor honours the budget cooperatively and
+            // returns a *partial* count when tripped — never surface
+            // that as an answer.
+            fault::check_budget()?;
+            Ok(r.count)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{gen, sort_by_degree_desc};
+
+    /// The process-wide ws budget means service tests must not overlap
+    /// with each other (each query installs a budget guard).
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    fn graph() -> CsrGraph {
+        sort_by_degree_desc(&gen::power_law(300, 1500, 77, 5)).graph
+    }
+
+    fn tiny_service(default_deadline_ms: Option<u64>) -> MiningService {
+        let cfg = ServiceConfig {
+            cfg: PimConfig::tiny(),
+            default_deadline_ms,
+            breaker_threshold: 2,
+            breaker_probe_after: 2,
+            // No duplication replicas: a fail-stopped unit's vertices
+            // have nowhere to be promoted from, so an injected unit
+            // loss is deterministically unrecoverable on the simulated
+            // rungs (the degradation test relies on this).
+            opts: SimOptions {
+                duplication: false,
+                ..SimOptions::all()
+            },
+            ..ServiceConfig::default()
+        };
+        MiningService::start(cfg)
+    }
+
+    fn baseline_count(pattern: &str) -> u64 {
+        let g = graph();
+        let app = application(pattern).unwrap();
+        let roots = sampled_roots(g.num_vertices(), 1.0);
+        cpu::run_application_with(&g, &app, &roots, CpuFlavor::AutoMineOpt, None, true, None, None)
+            .count
+    }
+
+    #[test]
+    fn basic_query_answers_on_the_top_rung() {
+        let _s = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        let svc = tiny_service(None);
+        svc.load_graph("g", graph()).unwrap();
+        let t = svc.submit("alice", QueryRequest::new("g", "3-MC")).unwrap();
+        let r = t.wait();
+        let out = r.result.expect("healthy query succeeds");
+        assert_eq!(out.rung, Rung::Fused);
+        assert!(!out.degraded);
+        assert_eq!(out.count, baseline_count("3-MC"));
+        let h = svc.health();
+        assert_eq!(h.completed, 1);
+        assert_eq!(h.failed, 0);
+        assert!(h.all_rungs_healthy());
+    }
+
+    #[test]
+    fn unknown_graph_and_pattern_are_typed_errors() {
+        let _s = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        let svc = tiny_service(None);
+        svc.load_graph("g", graph()).unwrap();
+        let r = svc
+            .submit("c", QueryRequest::new("nope", "3-MC"))
+            .unwrap()
+            .wait();
+        assert!(matches!(r.result, Err(ServiceError::UnknownGraph(_))));
+        let r = svc
+            .submit("c", QueryRequest::new("g", "not-an-app"))
+            .unwrap()
+            .wait();
+        match r.result {
+            Err(ServiceError::Fault(FaultError::BadSpec(msg))) => {
+                assert!(msg.contains("not-an-app"), "{msg}")
+            }
+            other => panic!("expected BadSpec, got {other:?}"),
+        }
+        assert_eq!(svc.health().failed, 2);
+    }
+
+    #[test]
+    fn fail_stop_fault_degrades_with_identical_count() {
+        let _s = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        let svc = tiny_service(None);
+        svc.load_graph("g", graph()).unwrap();
+        // An early fail-stop with no duplication replicas to promote
+        // from is unrecoverable on both simulated rungs; the CPU floor
+        // (fault-immune) must answer with the identical count.
+        let mut req = QueryRequest::new("g", "3-MC");
+        req.faults = Some(FaultSpec::parse("seed=1,fail=0@1").unwrap());
+        let out = svc.submit("c", req.clone()).unwrap().wait().result;
+        match out {
+            Ok(o) => {
+                assert_eq!(o.count, baseline_count("3-MC"), "counts identical at every rung");
+                assert!(o.degraded);
+            }
+            Err(e) => panic!("ladder should absorb the fault, got {e}"),
+        }
+        // Repeat until the fused breaker trips (threshold 2), then the
+        // health report shows the open rung.
+        let _ = svc.submit("c", req.clone()).unwrap().wait();
+        let h = svc.health();
+        assert!(!h.all_rungs_healthy(), "fused rung should have tripped:\n{}", h.render());
+        assert!(h.degraded >= 2);
+        // Fault-free queries now recover the top rung via half-open
+        // probes: two skipped dispatches, then a probe that succeeds.
+        // (The per-plan rung only sees traffic on fallthrough, so its
+        // breaker re-promotes the next time it is actually consulted.)
+        let clean = QueryRequest::new("g", "3-MC");
+        for _ in 0..4 {
+            let r = svc.submit("c", clean.clone()).unwrap().wait();
+            assert!(r.result.is_ok());
+        }
+        let h = svc.health();
+        assert_eq!(
+            h.rungs[0].1,
+            BreakerState::Closed,
+            "probe should re-close the fused rung:\n{}",
+            h.render()
+        );
+        assert!(h.rungs[0].2 >= 1, "trip count recorded");
+        let rendered = h.render();
+        assert!(rendered.contains("trips"), "{rendered}");
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_not_executed() {
+        let _s = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        let svc = tiny_service(None);
+        svc.load_graph("g", graph()).unwrap();
+        svc.pause();
+        let mut req = QueryRequest::new("g", "3-MC");
+        req.deadline_ms = Some(1);
+        let t = svc.submit("c", req).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        svc.resume();
+        let r = t.wait();
+        match r.result {
+            Err(ServiceError::DeadlineExceeded { deadline_ms }) => assert_eq!(deadline_ms, 1),
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        let h = svc.health();
+        assert_eq!(h.shed_deadline, 1);
+        assert!(h.all_rungs_healthy(), "queue sheds never charge breakers");
+    }
+
+    #[test]
+    fn overload_sheds_with_typed_error_and_drains_on_shutdown() {
+        let _s = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        let mut svc = MiningService::start(ServiceConfig {
+            cfg: PimConfig::tiny(),
+            queue_depth: 3,
+            per_client_depth: 3,
+            ..ServiceConfig::default()
+        });
+        svc.load_graph("g", graph()).unwrap();
+        svc.pause();
+        let mut tickets = Vec::new();
+        let mut shed = 0;
+        for _ in 0..6 {
+            match svc.submit("c", QueryRequest::new("g", "3-MC")) {
+                Ok(t) => tickets.push(t),
+                Err(e) => {
+                    assert!(matches!(e, ServiceError::Overloaded { .. }), "{e}");
+                    assert!(e.is_retriable());
+                    assert_eq!(e.exit_code(), 5);
+                    shed += 1;
+                }
+            }
+        }
+        assert_eq!(tickets.len(), 3, "bounded queue admits exactly its depth");
+        assert_eq!(shed, 3);
+        assert_eq!(svc.health().shed_overload, 3);
+        // Shutdown while paused: every admitted query still gets exactly
+        // one response (ShuttingDown), none are lost.
+        svc.shutdown();
+        for t in tickets {
+            let r = t.wait();
+            assert!(matches!(r.result, Err(ServiceError::ShuttingDown)));
+        }
+    }
+
+    #[test]
+    fn per_client_fairness_interleaves_under_backlog() {
+        let _s = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+        let svc = tiny_service(None);
+        svc.load_graph("g", graph()).unwrap();
+        svc.pause();
+        let mut tickets = Vec::new();
+        for i in 0..4 {
+            let who = if i < 3 { "chatty" } else { "quiet" };
+            tickets.push((who, svc.submit(who, QueryRequest::new("g", "3-CC")).unwrap()));
+        }
+        svc.resume();
+        let want = baseline_count("3-CC");
+        for (_, t) in tickets {
+            assert_eq!(t.wait().result.unwrap().count, want);
+        }
+        assert_eq!(svc.health().completed, 4);
+    }
+}

@@ -354,6 +354,19 @@ fn budget_tripped() -> bool {
     false
 }
 
+/// Cooperative checkpoint for *inside* long task bodies: the per-root
+/// loops of the CPU executors and the enumerator's candidate loops call
+/// this so a single pathologically heavy root cannot blow past a
+/// `--timeout-ms` deadline by the full cost of its own subtree (the
+/// worker loops only poll **between** tasks). Same throttled check as
+/// the scheduler's poll — with no budget installed it is two relaxed
+/// loads, so call sites may poll liberally. Returns `true` once the
+/// configured budget is exceeded; callers abandon their remaining work
+/// and let `fault::check_budget` refuse the partial result.
+pub fn poll_tripped() -> bool {
+    budget_tripped()
+}
+
 /// Run tasks `0..ntasks` across `workers` workers with Chase–Lev work
 /// stealing. `init(w)` builds worker `w`'s private state; `body(state,
 /// task)` executes one task. Returns the per-worker states in

@@ -13,6 +13,7 @@ use pimminer::pattern::plan::application;
 use pimminer::pim::{fault, simulate_app_checked, FaultError, PimConfig, SimOptions};
 use pimminer::util::ws;
 use std::sync::Mutex;
+use std::time::Instant;
 
 static SERIAL: Mutex<()> = Mutex::new(());
 
@@ -130,4 +131,62 @@ fn tripped_budget_drains_cpu_pools_cooperatively() {
     );
     let err = fault::check_budget().unwrap_err();
     assert_eq!(err, FaultError::Timeout { limit_ms: 0 });
+}
+
+/// Cancellation latency is bounded by ONE root's enumeration, not by a
+/// whole work chunk: with the entire root range forced into a single
+/// chunk (the worst case before the per-root checkpoints existed, where
+/// a worker would finish the full sweep before noticing the trip), a
+/// pre-expired deadline still abandons the sweep almost immediately.
+/// Self-calibrating: the budgeted run is pinned against an unbudgeted
+/// reference sweep of the same workload in the same process.
+#[test]
+fn cancellation_lands_within_one_root_not_one_chunk() {
+    let _s = serialized();
+    let g = sort_by_degree_desc(&gen::power_law(900, 9_000, 70, 21)).graph;
+    let roots: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    let app = application("4-MC").unwrap();
+    let plans = app.plans();
+    let one_chunk = Some(roots.len());
+
+    // Unbudgeted reference: single thread, single chunk.
+    let t0 = Instant::now();
+    let full: u64 = plans
+        .iter()
+        .map(|p| {
+            cpu::count_plan_with(&g, p, &roots, CpuFlavor::AutoMineOpt, None, one_chunk, Some(1))
+        })
+        .sum();
+    let full_elapsed = t0.elapsed();
+    assert!(full > 0, "reference sweep must find motifs");
+
+    // Same sweep under an already-expired deadline: the only exit
+    // points inside the chunk are the per-root checkpoints.
+    let guard = ws::set_budget(Some(0), None);
+    let t1 = Instant::now();
+    let partial: u64 = plans
+        .iter()
+        .map(|p| {
+            cpu::count_plan_with(&g, p, &roots, CpuFlavor::AutoMineOpt, None, one_chunk, Some(1))
+        })
+        .sum();
+    let cancel_elapsed = t1.elapsed();
+    let err = fault::check_budget().unwrap_err();
+    assert_eq!(err, FaultError::Timeout { limit_ms: 0 });
+    drop(guard);
+
+    assert!(
+        partial < full,
+        "tripped sweep must stop early (partial {partial} vs full {full})"
+    );
+    // The pin proper. The 80 ms floor keeps the ratio meaningful — on a
+    // machine where the whole reference sweep is near-instant, the
+    // partial-count assertion above already proves the early exit.
+    if full_elapsed.as_millis() >= 80 {
+        assert!(
+            cancel_elapsed * 4 <= full_elapsed,
+            "cancellation took {cancel_elapsed:?}, more than 1/4 of the \
+             {full_elapsed:?} uncancelled sweep — per-root checkpoints are not firing"
+        );
+    }
 }

@@ -1,0 +1,275 @@
+//! Service soak (DESIGN.md §16): randomized concurrent clients ×
+//! graphs × injected fault plans × deadlines, under fixed seeds.
+//! Invariants checked:
+//!
+//! * no panics anywhere (client threads, dispatcher);
+//! * exactly one response per admitted submission — none lost, none
+//!   duplicated, ids match;
+//! * every *successful* count is bit-identical to a serial fault-free
+//!   CPU baseline, whatever rung answered (the degradation ladder's
+//!   parity contract);
+//! * every error is one of the typed [`ServiceError`] variants with a
+//!   consistent retriable/exit-code taxonomy;
+//! * the health counters reconcile: admitted = completed + failed once
+//!   the queue drains.
+//!
+//! The `util::ws` budget is process-wide, so the tests in this binary
+//! serialize on a mutex (same idiom as `tests/budget.rs`).
+
+use pimminer::exec::cpu::{self, sampled_roots, CpuFlavor};
+use pimminer::graph::{gen, sort_by_degree_desc, CsrGraph};
+use pimminer::pattern::plan::application;
+use pimminer::pim::{FaultSpec, PimConfig, SimOptions};
+use pimminer::serve::{MiningService, QueryRequest, ServiceConfig, ServiceError};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+const APPS: [&str; 2] = ["3-CC", "3-MC"];
+
+fn graphs() -> Vec<(&'static str, CsrGraph)> {
+    vec![
+        ("pl", sort_by_degree_desc(&gen::power_law(300, 1_500, 80, 5)).graph),
+        ("er", sort_by_degree_desc(&gen::erdos_renyi(250, 1_000, 9)).graph),
+        ("dense", sort_by_degree_desc(&gen::erdos_renyi(120, 2_000, 3)).graph),
+    ]
+}
+
+fn baselines(gs: &[(&'static str, CsrGraph)]) -> HashMap<(String, String), u64> {
+    let mut map = HashMap::new();
+    for (name, g) in gs {
+        let roots = sampled_roots(g.num_vertices(), 1.0);
+        for app_name in APPS {
+            let app = application(app_name).unwrap();
+            let count = cpu::run_application_with(
+                g,
+                &app,
+                &roots,
+                CpuFlavor::AutoMineOpt,
+                None,
+                true,
+                None,
+                None,
+            )
+            .count;
+            map.insert((name.to_string(), app_name.to_string()), count);
+        }
+    }
+    map
+}
+
+/// Deterministic per-client pseudo-random stream (splitmix64).
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// The fault mix: none / benign / unrecoverable fail-stop / transient.
+fn fault_for(roll: u64) -> Option<FaultSpec> {
+    match roll % 4 {
+        0 | 1 => None,
+        2 => Some(FaultSpec {
+            seed: 7 + roll,
+            fail_stop: None,
+            transient: 0.0,
+        }),
+        // Unit ids stay inside PimConfig::tiny()'s 8 units so the spec
+        // validates; with duplication off the loss is unrecoverable and
+        // the query must ride the ladder down.
+        _ => Some(FaultSpec {
+            seed: roll,
+            fail_stop: Some(((roll % 8) as u32, 1 + roll % 5_000)),
+            transient: if roll % 8 == 3 { 0.02 } else { 0.0 },
+        }),
+    }
+}
+
+#[test]
+fn soak_eight_concurrent_clients() {
+    let _guard = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let gs = graphs();
+    let expected = baselines(&gs);
+
+    // No duplication replicas → injected unit losses are deterministically
+    // unrecoverable on the simulated rungs, exercising the full ladder.
+    let svc = MiningService::start(ServiceConfig {
+        cfg: PimConfig::tiny(),
+        queue_depth: 64,
+        per_client_depth: 16,
+        breaker_threshold: 2,
+        breaker_probe_after: 2,
+        opts: SimOptions {
+            duplication: false,
+            ..SimOptions::all()
+        },
+        ..ServiceConfig::default()
+    });
+    let names: Vec<&'static str> = gs.iter().map(|(n, _)| *n).collect();
+    for (name, g) in gs {
+        svc.load_graph(name, g).unwrap();
+    }
+
+    const CLIENTS: usize = 8;
+    const QUERIES: usize = 6;
+
+    // (admitted, ok, degraded, shed, mismatches) per client.
+    let per_client: Vec<(u64, u64, u64, u64, u64)> = std::thread::scope(|scope| {
+        let svc = &svc;
+        let names = &names;
+        let expected = &expected;
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                scope.spawn(move || {
+                    let mut rng = Lcg(0xD1B5_4A32_D192_ED03 ^ ((c as u64) << 17));
+                    let who = format!("soak-{c}");
+                    let (mut admitted, mut ok, mut degraded, mut shed, mut bad) =
+                        (0u64, 0u64, 0u64, 0u64, 0u64);
+                    for _ in 0..QUERIES {
+                        let graph = names[(rng.next() % names.len() as u64) as usize];
+                        let app = APPS[(rng.next() % APPS.len() as u64) as usize];
+                        let mut req = QueryRequest::new(graph, app);
+                        req.faults = fault_for(rng.next());
+                        // Mostly unbounded; occasionally a deadline so
+                        // tight it can expire in the queue or mid-run.
+                        req.deadline_ms = match rng.next() % 8 {
+                            0 => Some(1),
+                            1 => Some(10_000),
+                            _ => None,
+                        };
+                        match svc.submit(&who, req) {
+                            Ok(t) => {
+                                let id = t.id;
+                                admitted += 1;
+                                let resp = t.wait();
+                                // Exactly one response, for this query.
+                                assert_eq!(resp.id, id, "response routed to its ticket");
+                                match resp.result {
+                                    Ok(o) => {
+                                        ok += 1;
+                                        if o.degraded {
+                                            degraded += 1;
+                                        }
+                                        let key = (graph.to_string(), app.to_string());
+                                        if o.count != expected[&key] {
+                                            bad += 1;
+                                        }
+                                    }
+                                    Err(e) => {
+                                        // Typed, with a coherent taxonomy.
+                                        assert!(
+                                            matches!(
+                                                e.exit_code(),
+                                                2 | 3 | 4 | 5
+                                            ),
+                                            "undocumented exit code for {e}"
+                                        );
+                                        if matches!(e, ServiceError::Overloaded { .. }) {
+                                            shed += 1;
+                                        }
+                                    }
+                                }
+                            }
+                            Err(e) => {
+                                assert!(
+                                    matches!(
+                                        e,
+                                        ServiceError::Overloaded { .. }
+                                            | ServiceError::ShuttingDown
+                                    ),
+                                    "submit only sheds typed: {e}"
+                                );
+                                shed += 1;
+                            }
+                        }
+                    }
+                    (admitted, ok, degraded, shed, bad)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("soak client")).collect()
+    });
+
+    let (mut admitted, mut ok, mut degraded, mut shed, mut bad) = (0u64, 0u64, 0u64, 0u64, 0u64);
+    for (a, o, d, s, b) in per_client {
+        admitted += a;
+        ok += o;
+        degraded += d;
+        shed += s;
+        bad += b;
+    }
+    assert_eq!(bad, 0, "{bad} successful counts diverged from the serial baseline");
+    assert!(
+        ok + shed > 0,
+        "soak must complete or shed work, never wedge (ok={ok} shed={shed})"
+    );
+    assert!(
+        ok > 0,
+        "at least some queries must succeed outright (got {ok} of {admitted} admitted)"
+    );
+    // Unrecoverable fail-stops are a quarter of the mix; the ladder must
+    // have absorbed some of them below the top rung.
+    assert!(degraded > 0, "injected unit losses must exercise the ladder");
+
+    // Health reconciliation: every admitted query was answered (the
+    // clients all blocked on their tickets), so the queue is empty and
+    // the lifetime counters add up.
+    let h = svc.health();
+    assert_eq!(h.queue_depth, 0, "all tickets waited, queue drained");
+    assert_eq!(h.admitted, admitted, "service admitted what clients recorded");
+    assert_eq!(
+        h.completed + h.failed,
+        h.admitted,
+        "exactly one response per admitted query:\n{}",
+        h.render()
+    );
+    assert_eq!(h.completed, ok);
+    assert_eq!(h.degraded, degraded);
+    assert_eq!(h.graphs.len(), 3);
+    assert!(h.resident_bytes > 0 && h.resident_bytes <= h.budget_bytes);
+}
+
+#[test]
+fn soak_replays_identically_under_the_same_seeds() {
+    let _guard = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    // The fault mix and schedule derive from fixed seeds, so two
+    // single-client soak passes deliver identical outcome sequences —
+    // the determinism half of the soak contract.
+    let run = || -> Vec<Result<u64, String>> {
+        let gs = graphs();
+        let svc = MiningService::start(ServiceConfig {
+            cfg: PimConfig::tiny(),
+            opts: SimOptions {
+                duplication: false,
+                ..SimOptions::all()
+            },
+            ..ServiceConfig::default()
+        });
+        let names: Vec<&'static str> = gs.iter().map(|(n, _)| *n).collect();
+        for (name, g) in gs {
+            svc.load_graph(name, g).unwrap();
+        }
+        let mut rng = Lcg(42);
+        let mut out = Vec::new();
+        for _ in 0..8 {
+            let graph = names[(rng.next() % names.len() as u64) as usize];
+            let app = APPS[(rng.next() % APPS.len() as u64) as usize];
+            let mut req = QueryRequest::new(graph, app);
+            req.faults = fault_for(rng.next());
+            let resp = svc.submit("replay", req).unwrap().wait();
+            out.push(resp.result.map(|o| o.count).map_err(|e| e.to_string()));
+        }
+        out
+    };
+    let first = run();
+    let second = run();
+    assert_eq!(first, second, "fixed seeds must replay bit-identically");
+    assert!(first.iter().any(|r| r.is_ok()));
+}
